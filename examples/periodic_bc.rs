@@ -1,0 +1,111 @@
+//! Contribution #3 demo — ray-traced periodic boundary conditions.
+//!
+//! Validates that the gamma-ray scheme discovers exactly the minimum-image
+//! neighbor set (vs. the O(n²) oracle), then measures its overhead against
+//! wall BC on the same scene: the paper's claim is "no significant
+//! penalty".
+//!
+//! ```sh
+//! cargo run --release --example periodic_bc
+//! ```
+
+use std::sync::Arc;
+
+use orcs::coordinator::{Engine, EngineConfig};
+use orcs::core::config::{Boundary, ParticleDist, RadiusDist, SimConfig};
+use orcs::frnn::{brute, rt_common, ApproachKind, RustKernels};
+use orcs::physics::state::SimState;
+
+fn main() -> anyhow::Result<()> {
+    // --- Part 1: exactness of the gamma-ray neighbor discovery ---
+    let cfg = SimConfig {
+        n: 3_000,
+        box_l: 300.0,
+        particle_dist: ParticleDist::Disordered,
+        radius_dist: RadiusDist::Uniform(5.0, 30.0),
+        boundary: Boundary::Periodic,
+        seed: 2024,
+        ..SimConfig::default()
+    };
+    let state = SimState::from_config(&cfg);
+    let mut mgr =
+        rt_common::BvhManager::new(Box::new(orcs::gradient::GradientPolicy::new()));
+    let mut counts = orcs::rtcore::OpCounts::default();
+    mgr.prepare(&state.pos, &state.radius, &mut counts);
+
+    // A single particle's rays discover its *detection* set {j : |d| < r_j}
+    // (paper Fig. 5 — detection is asymmetric under variable radii). The
+    // pipelines complete the *interaction* set {j : |d| < max(r_i, r_j)}
+    // with the reverse edges (cross-inserts / the handler rule), so the
+    // completeness property to check is: rays(i) ∪ {j : i ∈ rays(j)} must
+    // equal the minimum-image interaction set, for every particle.
+    let mut stats = orcs::bvh::traverse::TraversalStats::default();
+    let mut gamma_buf = Vec::new();
+    let mut detected: Vec<Vec<usize>> = vec![Vec::new(); state.n()];
+    let mut boundary_particles = 0usize;
+    for i in 0..state.n() {
+        rt_common::launch_rays(
+            mgr.bvh(),
+            i,
+            &state.pos,
+            &state.radius,
+            state.boundary,
+            state.box_l,
+            state.r_max,
+            &mut gamma_buf,
+            &mut stats,
+            |j, _| detected[i].push(j),
+        );
+        if orcs::frnn::gamma::gamma_count(state.pos[i], state.r_max, state.box_l) > 0 {
+            boundary_particles += 1;
+        }
+    }
+    // union with reverse edges (what the pipelines' scatter rules provide)
+    let mut full: Vec<Vec<usize>> = detected.clone();
+    for i in 0..state.n() {
+        for &j in &detected[i] {
+            full[j].push(i);
+        }
+    }
+    let mut mismatches = 0usize;
+    for i in 0..state.n() {
+        full[i].sort_unstable();
+        full[i].dedup();
+        let want = brute::interaction_neighbors(
+            i,
+            &state.pos,
+            &state.radius,
+            state.boundary,
+            state.box_l,
+        );
+        if full[i] != want {
+            mismatches += 1;
+        }
+    }
+    println!("gamma-ray neighbor discovery vs minimum-image brute force:");
+    println!("  particles            : {}", state.n());
+    println!("  boundary particles   : {boundary_particles} (launch gamma rays)");
+    println!("  rays launched        : {} (primary {} + gamma {})",
+        stats.rays, state.n(), stats.rays as usize - state.n());
+    println!("  mismatches           : {mismatches}  <- must be 0");
+    assert_eq!(mismatches, 0, "gamma rays missed neighbors");
+
+    // --- Part 2: overhead of periodic vs wall BC (paper: insignificant) ---
+    println!("\nper-step simulated cost, ORCS-forces (same scene, both BCs):");
+    let mut results = Vec::new();
+    for boundary in [Boundary::Wall, Boundary::Periodic] {
+        let sim = SimConfig { boundary, ..cfg.clone() };
+        let ec = EngineConfig {
+            threads: orcs::parallel::num_threads(),
+            ..EngineConfig::new(sim, ApproachKind::OrcsForces)
+        };
+        let mut engine = Engine::new(ec, Arc::new(RustKernels { threads: 1 }))?;
+        let summary = engine.run(30, false)?;
+        println!("  {boundary:<9} : {:.4} ms/step  ({} interactions total)",
+            summary.avg_sim_ms, summary.total_interactions);
+        results.push(summary.avg_sim_ms);
+    }
+    let penalty = results[1] / results[0];
+    println!("  periodic/wall ratio : {penalty:.3}x (interaction sets differ; paper: no significant penalty)");
+    Ok(())
+}

@@ -1,0 +1,100 @@
+"""AOT pipeline: lower the L2 graphs to HLO *text* artifacts.
+
+Interchange format is HLO text, not serialized ``HloModuleProto``: jax >= 0.5
+emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (see `shapes.py` for the constants):
+
+    lj_forces_c{CHUNK}_k{K}.hlo.txt   for K in K_BUCKETS
+    lj_forces_ref_c{CHUNK}_k64.hlo.txt   (runtime cross-check)
+    integrate_c{CHUNK}.hlo.txt
+    manifest.txt
+
+Usage: ``python -m compile.aot --out ../artifacts``
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .shapes import CHUNK, K_BUCKETS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_lj_forces(c: int, k: int, fn=model.lj_forces_graph) -> str:
+    args = (
+        f32((c, 3)),       # pos
+        f32((c, k, 3)),    # nbr_pos
+        f32((c,)),         # rad
+        f32((c, k)),       # nbr_rad
+        f32((c, k)),       # mask
+        f32((4,)),         # (box_l, eps, sigma_factor, f_max)
+    )
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def lower_integrate(c: int) -> str:
+    args = (f32((c, 3)), f32((c, 3)), f32((c, 3)), f32((2,)))
+    return to_hlo_text(jax.jit(model.integrate_graph).lower(*args))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--chunk", type=int, default=CHUNK)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    c = args.chunk
+
+    manifest = []
+
+    for k in K_BUCKETS:
+        name = f"lj_forces_c{c}_k{k}.hlo.txt"
+        text = lower_lj_forces(c, k)
+        with open(os.path.join(args.out, name), "w") as f:
+            f.write(text)
+        manifest.append(f"{name} inputs=pos({c},3),nbr_pos({c},{k},3),rad({c},),"
+                        f"nbr_rad({c},{k}),mask({c},{k}),scal(4,) outputs=force({c},3),pe({c},)")
+        print(f"wrote {name} ({len(text)} chars)")
+
+    # pure-jnp variant of the K=64 bucket, for the runtime cross-check test
+    name = f"lj_forces_ref_c{c}_k64.hlo.txt"
+    text = lower_lj_forces(c, 64, fn=model.lj_forces_graph_ref)
+    with open(os.path.join(args.out, name), "w") as f:
+        f.write(text)
+    manifest.append(f"{name} (jnp reference of k=64 bucket)")
+    print(f"wrote {name} ({len(text)} chars)")
+
+    name = f"integrate_c{c}.hlo.txt"
+    text = lower_integrate(c)
+    with open(os.path.join(args.out, name), "w") as f:
+        f.write(text)
+    manifest.append(f"{name} inputs=pos({c},3),vel({c},3),force({c},3),scal(2,) "
+                    f"outputs=new_pos({c},3),new_vel({c},3)")
+    print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

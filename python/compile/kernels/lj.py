@@ -1,0 +1,105 @@
+"""L1 — the Pallas LJ neighbor-force kernel.
+
+The paper's hot spot is the per-neighbor force evaluation (its CUDA force
+kernel / intersection shaders). Here it is a Pallas kernel tiled
+(BLOCK_C particles) x (K neighbor slots): the BlockSpec expresses the
+HBM -> VMEM schedule that the paper's CUDA implementation expresses with
+threadblocks (DESIGN.md §Hardware-Adaptation). LJ is element-wise over the
+(C, K) pair lattice, so the kernel is VPU-shaped (no MXU): K is padded to
+lane multiples by construction (K in {16, 64, 256}).
+
+Lowered with ``interpret=True`` — mandatory for CPU-PJRT execution: a real
+TPU lowering emits a Mosaic custom-call the CPU plugin cannot run. The
+interpret path produces plain HLO that the Rust runtime compiles and runs.
+
+Scalar parameters (box_l, eps, sigma_factor, f_max) arrive as (1,)-shaped
+operands so one compiled artifact serves every scenario configuration.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..shapes import BLOCK_C, R2_MIN
+
+
+def _lj_kernel(pos_ref, nbr_pos_ref, rad_ref, nbr_rad_ref, mask_ref,
+               scal_ref, force_ref, pe_ref):
+    """One grid step: forces for a BLOCK_C-particle tile against all K slots.
+
+    scal_ref packs (box_l, eps, sigma_factor, f_max) as a (4,) vector.
+    """
+    box_l = scal_ref[0]
+    eps = scal_ref[1]
+    sigma_factor = scal_ref[2]
+    f_max = scal_ref[3]
+
+    pos = pos_ref[...]            # (BC, 3)
+    nbr_pos = nbr_pos_ref[...]    # (BC, K, 3)
+    rad = rad_ref[...]            # (BC,)
+    nbr_rad = nbr_rad_ref[...]    # (BC, K)
+    mask = mask_ref[...]          # (BC, K)
+
+    dx = pos[:, None, :] - nbr_pos                   # (BC, K, 3)
+    dx = dx - box_l * jnp.round(dx / box_l)          # minimum image
+    r2 = jnp.sum(dx * dx, axis=-1)                   # (BC, K)
+
+    sigma = (rad[:, None] + nbr_rad) * 0.5 / sigma_factor
+    cutoff = jnp.maximum(rad[:, None], nbr_rad)
+    valid = (mask > 0.0) & (r2 < cutoff * cutoff) & (r2 > 0.0)
+
+    r2s = jnp.maximum(r2, R2_MIN)
+    s2 = (sigma * sigma) / r2s
+    s6 = s2 * s2 * s2
+    force_scalar = 24.0 * eps * (2.0 * s6 * s6 - s6) / r2s
+    pe = 4.0 * eps * (s6 * s6 - s6)
+
+    fvec = jnp.clip(force_scalar[..., None] * dx, -f_max, f_max)
+    fvec = jnp.where(valid[..., None], fvec, 0.0)
+    pe = jnp.where(valid, pe, 0.0)
+
+    force_ref[...] = jnp.sum(fvec, axis=1)           # (BC, 3)
+    pe_ref[...] = jnp.sum(pe, axis=1)                # (BC,)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lj_forces_pallas(pos, nbr_pos, rad, nbr_rad, mask, scal, *, interpret=True):
+    """Pallas neighbor-force evaluation.
+
+    Args:
+      pos:     (C, 3) f32, C a multiple of BLOCK_C.
+      nbr_pos: (C, K, 3) f32 gathered neighbor positions.
+      rad:     (C,) f32.
+      nbr_rad: (C, K) f32.
+      mask:    (C, K) f32 (1 = valid slot).
+      scal:    (4,) f32 = (box_l, eps, sigma_factor, f_max).
+
+    Returns:
+      force (C, 3) f32, pe (C,) f32.
+    """
+    c, k = mask.shape
+    assert c % BLOCK_C == 0, f"C={c} must be a multiple of {BLOCK_C}"
+    grid = (c // BLOCK_C,)
+    return pl.pallas_call(
+        _lj_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_C, 3), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_C, k, 3), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BLOCK_C,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_C, k), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_C, k), lambda i: (i, 0)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_C, 3), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_C,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, 3), jnp.float32),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos, nbr_pos, rad, nbr_rad, mask, scal)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracle for the LJ neighbor-force computation.
+
+This is the correctness reference the Pallas kernel is validated against
+(pytest `test_kernel.py`), and the semantic mirror of the Rust oracle
+`rust/src/physics/lj.rs` — all three implementations must agree.
+
+Conventions (DESIGN.md §Physics):
+  sigma_ij  = (r_i + r_j) / 2 / sigma_factor
+  cutoff_ij = max(r_i, r_j)
+  F_ij      = 24 eps (2 (sigma/r)^12 - (sigma/r)^6) / r^2 * dx,   dx = p_i - p_j
+  per-pair force clamped component-wise to [-f_max, f_max]
+  r^2 floored at R2_MIN (overlap guard), pairs outside cutoff contribute 0
+"""
+
+import jax.numpy as jnp
+
+from ..shapes import R2_MIN
+
+
+def min_image(dx, box_l):
+    """Minimum-image displacement for a cubic box of side ``box_l``.
+
+    Pass ``WALL_BOX`` (1e30) to make the wrap a no-op (wall BC).
+    """
+    return dx - box_l * jnp.round(dx / box_l)
+
+
+def lj_pair_terms(r2, sigma, eps):
+    """Force scalar s (F = s * dx) and potential energy for squared
+    distance ``r2`` — *without* cutoff masking (caller masks)."""
+    r2s = jnp.maximum(r2, R2_MIN)
+    s2 = (sigma * sigma) / r2s
+    s6 = s2 * s2 * s2
+    force_scalar = 24.0 * eps * (2.0 * s6 * s6 - s6) / r2s
+    potential = 4.0 * eps * (s6 * s6 - s6)
+    return force_scalar, potential
+
+
+def lj_forces_ref(pos, nbr_pos, rad, nbr_rad, mask, box_l, eps, sigma_factor, f_max):
+    """Reference neighbor-force computation.
+
+    Args:
+      pos:      (C, 3)  particle positions.
+      nbr_pos:  (C, K, 3) gathered neighbor positions.
+      rad:      (C,)    particle search radii.
+      nbr_rad:  (C, K)  neighbor radii.
+      mask:     (C, K)  1.0 for valid slots, 0.0 for padding.
+      box_l, eps, sigma_factor, f_max: scalars.
+
+    Returns:
+      force: (C, 3) summed per-particle force.
+      pe:    (C,)   summed per-particle pair potential energy.
+    """
+    dx = min_image(pos[:, None, :] - nbr_pos, box_l)  # (C, K, 3)
+    r2 = jnp.sum(dx * dx, axis=-1)  # (C, K)
+    sigma = (rad[:, None] + nbr_rad) * 0.5 / sigma_factor
+    cutoff = jnp.maximum(rad[:, None], nbr_rad)
+    valid = (mask > 0.0) & (r2 < cutoff * cutoff) & (r2 > 0.0)
+    s, pe = lj_pair_terms(r2, sigma, eps)
+    fvec = jnp.clip(s[..., None] * dx, -f_max, f_max)
+    fvec = jnp.where(valid[..., None], fvec, 0.0)
+    pe = jnp.where(valid, pe, 0.0)
+    return jnp.sum(fvec, axis=1), jnp.sum(pe, axis=1)
+
+
+def integrate_ref(pos, vel, force, dt, f_max):
+    """Symplectic-Euler update (boundary handling stays in Rust)."""
+    f = jnp.clip(force, -f_max, f_max)
+    new_vel = vel + f * dt
+    new_pos = pos + new_vel * dt
+    return new_pos, new_vel

@@ -1,0 +1,43 @@
+"""L2 — the JAX compute graphs the Rust coordinator executes via PJRT.
+
+Two graphs, both lowered by `aot.py` to HLO text:
+
+* ``lj_forces_graph`` — the RT-REF "separate force kernel": per-particle LJ
+  force + potential energy from host-gathered neighbor slots. Wraps the L1
+  Pallas kernel (`kernels/lj.py`).
+* ``integrate_graph`` — the "apply forces" kernel: symplectic-Euler update
+  (boundary handling remains in Rust, see DESIGN.md §Three-layer).
+
+Python never runs at simulation time: these functions exist only to be
+lowered once by ``make artifacts``.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import lj as lj_kernel
+from .kernels import ref
+
+
+def lj_forces_graph(pos, nbr_pos, rad, nbr_rad, mask, scal):
+    """Neighbor-force graph (C, K static). scal = (box_l, eps, sigma_factor,
+    f_max). Returns (force (C,3), pe (C,))."""
+    force, pe = lj_kernel.lj_forces_pallas(pos, nbr_pos, rad, nbr_rad, mask, scal)
+    return force, pe
+
+
+def lj_forces_graph_ref(pos, nbr_pos, rad, nbr_rad, mask, scal):
+    """Same computation through the pure-jnp oracle (compiled for the
+    runtime cross-check test; not used on the hot path)."""
+    return ref.lj_forces_ref(
+        pos, nbr_pos, rad, nbr_rad, mask, scal[0], scal[1], scal[2], scal[3]
+    )
+
+
+def integrate_graph(pos, vel, force, scal):
+    """Integration kernel. scal = (dt, f_max). Returns (new_pos, new_vel)."""
+    dt = scal[0]
+    f_max = scal[1]
+    f = jnp.clip(force, -f_max, f_max)
+    new_vel = vel + f * dt
+    new_pos = pos + new_vel * dt
+    return new_pos, new_vel

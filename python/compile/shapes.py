@@ -1,0 +1,27 @@
+"""Static shapes shared by the AOT pipeline and the Rust runtime.
+
+The PJRT executables are compiled once per (chunk, K-bucket) shape; the Rust
+runtime chunks particles into `CHUNK`-sized blocks and pads neighbor lists
+into the smallest fitting `K_BUCKETS` entry (longer lists are split over
+multiple kernel invocations and the partial forces summed).
+
+These constants are mirrored in `rust/src/runtime/mod.rs`; change both
+together.
+"""
+
+# Particles per kernel invocation (grid-tiled inside the Pallas kernel).
+CHUNK = 4096
+
+# Neighbor-slot buckets.
+K_BUCKETS = (16, 64, 256)
+
+# Pallas block sizes (particles per grid step).
+BLOCK_C = 128
+
+# Physics guards — mirror rust/src/physics/lj.rs.
+R2_MIN = 1e-4
+
+# Sentinel box length used to disable minimum-image wrapping (wall BC).
+# Large enough that round(dx/box) == 0 for any real displacement, small
+# enough to stay finite in f32 arithmetic.
+WALL_BOX = 1e30

@@ -1,0 +1,129 @@
+"""L2 correctness: the model graphs against brute-force physics and the
+integration semantics the Rust coordinator expects."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.shapes import BLOCK_C, WALL_BOX
+
+
+def brute_forces(pos, rad, box_l, eps=1.0, sigma_factor=2.5, f_max=1e4):
+    """O(n^2) reference over *all pairs* with interaction cutoff
+    max(r_i, r_j) — mirrors rust/src/frnn/brute.rs."""
+    n = len(pos)
+    f = np.zeros((n, 3), np.float64)
+    pe = np.zeros(n, np.float64)
+    for i in range(n):
+        for j in range(n):
+            if i == j:
+                continue
+            dx = pos[i] - pos[j]
+            if box_l < WALL_BOX:
+                dx = dx - box_l * np.round(dx / box_l)
+            r2 = float(dx @ dx)
+            rc = max(rad[i], rad[j])
+            if r2 >= rc * rc or r2 == 0.0:
+                continue
+            r2s = max(r2, 1e-4)
+            sigma = (rad[i] + rad[j]) / 2 / sigma_factor
+            s6 = (sigma * sigma / r2s) ** 3
+            s = 24.0 * eps * (2.0 * s6 * s6 - s6) / r2s
+            f[i] += np.clip(s * dx, -f_max, f_max)
+            pe[i] += 4.0 * eps * (s6 * s6 - s6)
+    return f, pe
+
+
+@pytest.mark.parametrize("box_l", [200.0, WALL_BOX])
+def test_forces_graph_matches_brute(box_l):
+    """Gather neighbors into slots exactly as the Rust runtime does, then
+    check the graph's output against all-pairs physics."""
+    rng = np.random.default_rng(7)
+    n, k = 40, 16
+    real_box = 200.0
+    pos = rng.uniform(0, real_box, (n, 3)).astype(np.float32)
+    rad = rng.uniform(5.0, 30.0, (n,)).astype(np.float32)
+
+    # neighbor lists: all j with |dx| < max(ri, rj), like the backends build
+    c = BLOCK_C  # pad to one pallas block
+    nbr_pos = np.zeros((c, k, 3), np.float32)
+    nbr_rad = np.ones((c, k), np.float32)
+    mask = np.zeros((c, k), np.float32)
+    pos_p = np.zeros((c, 3), np.float32)
+    rad_p = np.ones((c,), np.float32)
+    pos_p[:n] = pos
+    rad_p[:n] = rad
+    for i in range(n):
+        slot = 0
+        for j in range(n):
+            if i == j:
+                continue
+            dx = pos[i] - pos[j]
+            if box_l < WALL_BOX:
+                dx = dx - box_l * np.round(dx / box_l)
+            if float(dx @ dx) < max(rad[i], rad[j]) ** 2:
+                nbr_pos[i, slot] = pos[j]
+                nbr_rad[i, slot] = rad[j]
+                mask[i, slot] = 1.0
+                slot += 1
+        assert slot <= k, "test scene too dense for K"
+
+    scal = np.array([box_l, 1.0, 2.5, 1e4], np.float32)
+    force, pe = jax.jit(model.lj_forces_graph)(pos_p, nbr_pos, rad_p, nbr_rad, mask, scal)
+    f_want, pe_want = brute_forces(pos, rad, box_l)
+    np.testing.assert_allclose(np.asarray(force)[:n], f_want, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(pe)[:n], pe_want, rtol=1e-4, atol=1e-3)
+    # padding rows untouched
+    assert np.all(np.asarray(force)[n:] == 0.0)
+
+
+def test_graph_and_ref_graph_agree():
+    rng = np.random.default_rng(9)
+    c, k = BLOCK_C, 64
+    args = (
+        rng.uniform(0, 1000, (c, 3)).astype(np.float32),
+        rng.uniform(0, 1000, (c, k, 3)).astype(np.float32),
+        rng.uniform(1, 160, (c,)).astype(np.float32),
+        rng.uniform(1, 160, (c, k)).astype(np.float32),
+        (rng.uniform(size=(c, k)) > 0.5).astype(np.float32),
+        np.array([1000.0, 1.0, 2.5, 1e4], np.float32),
+    )
+    f1, p1 = jax.jit(model.lj_forces_graph)(*args)
+    f2, p2 = jax.jit(model.lj_forces_graph_ref)(*args)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-5, atol=1e-4)
+
+
+def test_integrate_graph_semantics():
+    rng = np.random.default_rng(11)
+    c = 64
+    pos = rng.normal(size=(c, 3)).astype(np.float32)
+    vel = rng.normal(size=(c, 3)).astype(np.float32)
+    force = rng.normal(scale=100.0, size=(c, 3)).astype(np.float32)
+    dt, f_max = 0.01, 5.0
+    scal = np.array([dt, f_max], np.float32)
+    new_pos, new_vel = jax.jit(model.integrate_graph)(pos, vel, force, scal)
+    f = np.clip(force, -f_max, f_max)
+    want_vel = vel + f * dt
+    want_pos = pos + want_vel * dt
+    np.testing.assert_allclose(np.asarray(new_vel), want_vel, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(new_pos), want_pos, rtol=1e-6)
+
+
+def test_forces_graph_shapes_all_buckets():
+    for k in (16, 64, 256):
+        c = BLOCK_C
+        z = np.zeros
+        force, pe = jax.jit(model.lj_forces_graph)(
+            z((c, 3), np.float32),
+            z((c, k, 3), np.float32),
+            np.ones((c,), np.float32),
+            np.ones((c, k), np.float32),
+            z((c, k), np.float32),
+            np.array([1000.0, 1.0, 2.5, 1e4], np.float32),
+        )
+        assert force.shape == (c, 3)
+        assert pe.shape == (c,)

@@ -1,0 +1,7 @@
+//! `cargo bench --bench fig10_speedup_periodic [-- --quick]`
+//! Regenerates paper Fig. 10 (speedup vs CPU-CELL@64c, periodic BC).
+fn main() {
+    let opts = orcs::benchsuite::common::BenchOpts::from_env().expect("bench options");
+    orcs::benchsuite::fig9_10::run(&opts, orcs::core::config::Boundary::Periodic)
+        .expect("fig10 bench");
+}

@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig11_power [-- --quick]`
+//! Regenerates paper Figs. 11 & 12 (power series + energy efficiency).
+fn main() {
+    let opts = orcs::benchsuite::common::BenchOpts::from_env().expect("bench options");
+    orcs::benchsuite::fig11_12::run(&opts).expect("fig11/12 bench");
+}

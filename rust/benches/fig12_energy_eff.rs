@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig12_energy_eff [-- --quick]`
+//! Alias of fig11_power: one run feeds both figures (see fig11_12.rs).
+fn main() {
+    let opts = orcs::benchsuite::common::BenchOpts::from_env().expect("bench options");
+    orcs::benchsuite::fig11_12::run(&opts).expect("fig12 bench");
+}

@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig13_scaling [-- --quick]`
+//! Regenerates paper Fig. 13 (perf + EE scaling across GPU generations).
+fn main() {
+    let opts = orcs::benchsuite::common::BenchOpts::from_env().expect("bench options");
+    orcs::benchsuite::fig13::run(&opts).expect("fig13 bench");
+}

@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig8_bvh_policies [-- --quick | --n N --steps S]`
+//! Regenerates paper Fig. 8 (BVH rebuild/update schemes).
+fn main() {
+    let opts = orcs::benchsuite::common::BenchOpts::from_env().expect("bench options");
+    orcs::benchsuite::fig8::run(&opts).expect("fig8 bench");
+}

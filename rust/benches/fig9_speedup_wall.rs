@@ -1,0 +1,6 @@
+//! `cargo bench --bench fig9_speedup_wall [-- --quick]`
+//! Regenerates paper Fig. 9 (speedup vs CPU-CELL@64c, wall BC).
+fn main() {
+    let opts = orcs::benchsuite::common::BenchOpts::from_env().expect("bench options");
+    orcs::benchsuite::fig9_10::run(&opts, orcs::core::config::Boundary::Wall).expect("fig9 bench");
+}

@@ -1,0 +1,133 @@
+//! Micro-benchmarks of the hot paths (the §Perf profiling harness):
+//! BVH build / refit / query, cell sweep, radix sort, and the XLA force
+//! kernel dispatch. Plain timing loops (no criterion in the offline vendor
+//! set) with min/mean reporting over R repetitions.
+//!
+//! `cargo bench --bench micro [-- --n N]`
+
+use std::time::Instant;
+
+use orcs::bvh::{BuildKind, Bvh};
+use orcs::core::config::{Boundary, RadiusDist, SimConfig};
+use orcs::core::rng::Rng;
+use orcs::core::vec3::Vec3;
+use orcs::frnn::cell_list::{cell_forces, Grid};
+use orcs::frnn::gpu_cell::radix_sort_pairs;
+use orcs::physics::state::SimState;
+
+fn bench<F: FnMut()>(name: &str, reps: usize, mut f: F) {
+    // warmup
+    f();
+    let mut best = f64::INFINITY;
+    let mut total = 0.0;
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        let dt = t.elapsed().as_secs_f64();
+        best = best.min(dt);
+        total += dt;
+    }
+    println!(
+        "{name:<44} min {:>10.3} ms   mean {:>10.3} ms",
+        best * 1e3,
+        total / reps as f64 * 1e3
+    );
+}
+
+fn main() {
+    let n: usize = std::env::args()
+        .skip_while(|a| a != "--n")
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(50_000);
+    let reps = 5;
+    println!("== micro benches (n={n}, reps={reps}) ==");
+
+    let mut rng = Rng::new(42);
+    let pos: Vec<Vec3> = (0..n)
+        .map(|_| {
+            Vec3::new(
+                rng.range_f32(0.0, 1000.0),
+                rng.range_f32(0.0, 1000.0),
+                rng.range_f32(0.0, 1000.0),
+            )
+        })
+        .collect();
+    let radius: Vec<f32> = (0..n).map(|_| rng.range_f32(1.0, 20.0)).collect();
+
+    bench("bvh build (binned SAH)", reps, || {
+        let b = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
+        std::hint::black_box(b.node_count());
+    });
+    bench("bvh build (median)", reps, || {
+        let b = Bvh::build(&pos, &radius, BuildKind::Median);
+        std::hint::black_box(b.node_count());
+    });
+    bench("bvh build (LBVH / morton)", reps, || {
+        let b = Bvh::build(&pos, &radius, BuildKind::Lbvh);
+        std::hint::black_box(b.node_count());
+    });
+
+    let mut bvh = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
+    bench("bvh refit", reps, || {
+        bvh.refit(&pos, &radius);
+    });
+
+    let bvh = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
+    bench("bvh query x n (point, uniform scene)", reps, || {
+        let mut stats = orcs::bvh::traverse::TraversalStats::default();
+        let mut acc = 0usize;
+        for i in 0..n {
+            bvh.query_point(pos[i], i, &pos, &radius, &mut stats, |_| acc += 1);
+        }
+        std::hint::black_box((acc, stats.aabb_tests));
+    });
+
+    let cfg = SimConfig {
+        n,
+        boundary: Boundary::Periodic,
+        radius_dist: RadiusDist::Const(10.0),
+        ..SimConfig::default()
+    };
+    let state = SimState::from_config(&cfg);
+    bench("cell grid build", reps, || {
+        let g = Grid::build(&state.pos, state.box_l, state.r_max);
+        std::hint::black_box(matches!(g, Grid::Dense(_)));
+    });
+    let grid = Grid::build(&state.pos, state.box_l, state.r_max);
+    bench("cell sweep forces", reps, || {
+        let (f, t, e, v) = cell_forces(&state, &grid, orcs::parallel::num_threads());
+        std::hint::black_box((f.len(), t, e, v));
+    });
+
+    bench("radix sort (morton pairs)", reps, || {
+        let mut keys: Vec<u32> =
+            pos.iter().map(|&p| orcs::frnn::gpu_cell::morton30(p, 1000.0)).collect();
+        let mut vals: Vec<u32> = (0..n as u32).collect();
+        radix_sort_pairs(&mut keys, &mut vals);
+        std::hint::black_box(keys[0]);
+    });
+
+    // XLA dispatch cost (needs artifacts; skipped when absent)
+    match orcs::runtime::kernels::XlaKernels::load_default() {
+        Ok(kernels) => {
+            use orcs::frnn::{NeighborLists, PhysicsKernels};
+            let small_cfg = SimConfig { n: 4096, ..cfg };
+            let mut sstate = SimState::from_config(&small_cfg);
+            let lists = NeighborLists::from_vecs(
+                &(0..4096)
+                    .map(|i| vec![((i + 1) % 4096) as u32; 16])
+                    .collect::<Vec<_>>(),
+            );
+            let mut counts = orcs::rtcore::OpCounts::default();
+            bench("xla lj_forces (1 chunk, k=16)", reps, || {
+                let f = kernels.lj_forces(&sstate, &lists, &mut counts).unwrap();
+                std::hint::black_box(f.len());
+            });
+            bench("xla integrate (1 chunk)", reps, || {
+                kernels.integrate(&mut sstate, &mut counts).unwrap();
+            });
+        }
+        Err(e) => println!("xla benches skipped: {e}"),
+    }
+}

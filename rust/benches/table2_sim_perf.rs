@@ -1,0 +1,6 @@
+//! `cargo bench --bench table2_sim_perf [-- --quick]`
+//! Regenerates paper Table 2 (avg ms/step per approach/scenario).
+fn main() {
+    let opts = orcs::benchsuite::common::BenchOpts::from_env().expect("bench options");
+    orcs::benchsuite::table2::run(&opts).expect("table2 bench");
+}

@@ -1,0 +1,224 @@
+//! Shared benchmark infrastructure: the paper's scenario matrix, size
+//! scaling, engine plumbing and the OOM extrapolation to paper scale.
+//!
+//! Sizes: the paper runs n = 140k–1M for hundreds–thousands of steps on a
+//! 600 W GPU; the reproduced numbers come from the simulated-time model, so
+//! the benches default to smaller n (the model is size-faithful: op counts
+//! are measured, not extrapolated) with `--scale`/`--steps` overrides to
+//! approach paper sizes when wall-clock budget allows (DESIGN.md
+//! §Hardware-substitution).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::coordinator::{Engine, EngineConfig, RunSummary};
+use crate::core::config::{Boundary, ForcePath, ParticleDist, RadiusDist, SimConfig};
+use crate::frnn::{ApproachKind, PhysicsKernels, RustKernels};
+use crate::rtcore::HwProfile;
+
+/// One (particle distribution, radius distribution) cell of the paper's
+/// 3x4 evaluation grid (§4.1).
+#[derive(Clone, Copy, Debug)]
+pub struct Case {
+    pub dist: ParticleDist,
+    pub radius: RadiusDist,
+}
+
+impl Case {
+    pub fn tag(&self) -> String {
+        format!("{}/{}", self.dist, self.radius)
+    }
+}
+
+/// The full 3x4 grid.
+pub fn paper_grid() -> Vec<Case> {
+    let mut out = Vec::new();
+    for dist in ParticleDist::ALL {
+        for radius in RadiusDist::paper_set() {
+            out.push(Case { dist, radius });
+        }
+    }
+    out
+}
+
+/// The three representative cases of §4.3 (Figs 11–13).
+pub fn energy_cases() -> Vec<Case> {
+    vec![
+        Case { dist: ParticleDist::Lattice, radius: RadiusDist::Const(160.0) },
+        Case { dist: ParticleDist::Disordered, radius: RadiusDist::Const(1.0) },
+        Case {
+            dist: ParticleDist::Cluster,
+            radius: RadiusDist::LogNormal { mu: 1.0, sigma: 2.0, lo: 1.0, hi: 330.0 },
+        },
+    ]
+}
+
+/// Execution options shared by the bench binaries.
+pub struct BenchOpts {
+    pub threads: usize,
+    pub hw: &'static HwProfile,
+    pub kernels: Arc<dyn PhysicsKernels>,
+    pub quick: bool,
+    pub steps_override: Option<usize>,
+    pub n_override: Option<usize>,
+    pub seed: u64,
+}
+
+impl BenchOpts {
+    /// Parse from bench-binary argv (skipping cargo's injected `--bench`).
+    pub fn from_env() -> Result<BenchOpts> {
+        let argv: Vec<String> = std::env::args()
+            .skip(1)
+            .filter(|a| a != "--bench" && !a.ends_with(".rs"))
+            .collect();
+        let args = Args::parse(std::iter::once("bench".to_string()).chain(argv))?;
+        Self::from_args(&args)
+    }
+
+    pub fn from_args(args: &Args) -> Result<BenchOpts> {
+        let threads = crate::parallel::num_threads();
+        let force_path = match args.get_or("force-path", "rust") {
+            "xla" => ForcePath::Xla,
+            _ => ForcePath::Rust,
+        };
+        let kernels: Arc<dyn PhysicsKernels> = match force_path {
+            ForcePath::Rust => Arc::new(RustKernels { threads }),
+            ForcePath::Xla => Arc::new(crate::runtime::kernels::XlaKernels::load_default()?),
+        };
+        Ok(BenchOpts {
+            threads,
+            hw: args.hw()?,
+            kernels,
+            quick: args.has("quick") || std::env::var("ORCS_QUICK").is_ok(),
+            steps_override: args.get("steps").map(|s| s.parse()).transpose()?,
+            n_override: args.get("n").map(|s| s.parse()).transpose()?,
+            seed: args.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0xC0FFEE),
+        })
+    }
+
+    /// Pick (n, steps): default unless overridden; `--quick` shrinks both.
+    pub fn size(&self, n_default: usize, steps_default: usize) -> (usize, usize) {
+        let mut n = self.n_override.unwrap_or(n_default);
+        let mut steps = self.steps_override.unwrap_or(steps_default);
+        if self.quick {
+            n = (n / 8).max(256);
+            steps = (steps / 8).max(4);
+        }
+        (n, steps)
+    }
+
+    pub fn sim_config(&self, case: &Case, n: usize, boundary: Boundary) -> SimConfig {
+        SimConfig {
+            n,
+            particle_dist: case.dist,
+            radius_dist: case.radius,
+            boundary,
+            seed: self.seed,
+            ..SimConfig::default()
+        }
+    }
+
+    /// Build and run one engine; returns `None` when the backend does not
+    /// support the scenario (ORCS-persé × variable radius — the paper's
+    /// `-` cells).
+    pub fn run(
+        &self,
+        case: &Case,
+        n: usize,
+        boundary: Boundary,
+        approach: ApproachKind,
+        policy: &str,
+        steps: usize,
+        keep_trace: bool,
+    ) -> Result<Option<RunSummary>> {
+        self.run_with(case, n, boundary, approach, policy, steps, keep_trace, |_| {})
+    }
+
+    /// [`Self::run`] with a scenario-tweaking hook (dt, temperature, ...).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_with(
+        &self,
+        case: &Case,
+        n: usize,
+        boundary: Boundary,
+        approach: ApproachKind,
+        policy: &str,
+        steps: usize,
+        keep_trace: bool,
+        tweak: impl FnOnce(&mut SimConfig),
+    ) -> Result<Option<RunSummary>> {
+        let mut sim = self.sim_config(case, n, boundary);
+        tweak(&mut sim);
+        let cfg = EngineConfig {
+            policy: policy.to_string(),
+            hw: self.hw,
+            threads: self.threads,
+            check_oom: true,
+            ..EngineConfig::new(sim, approach)
+        };
+        match Engine::new(cfg, self.kernels.clone()) {
+            Ok(mut engine) => Ok(Some(engine.run(steps, keep_trace)?)),
+            Err(_) => Ok(None), // unsupported combination
+        }
+    }
+}
+
+/// Extrapolate whether RT-REF's neighbor list would exceed device memory at
+/// *paper* scale (n_paper) from a bench-scale measurement: with box and
+/// radii fixed, per-particle neighbor counts grow linearly in n, so
+/// `bytes(paper) ≈ n_paper * k_max_bench * (n_paper / n_bench) * 4`.
+pub fn paper_scale_oom(
+    k_max_bench: usize,
+    n_bench: usize,
+    n_paper: usize,
+    hw: &HwProfile,
+) -> bool {
+    if n_bench == 0 || k_max_bench == 0 {
+        return false;
+    }
+    let k_paper = (k_max_bench as f64) * (n_paper as f64 / n_bench as f64);
+    let bytes = n_paper as f64 * k_paper.min(n_paper as f64) * 4.0;
+    bytes > hw.vram_bytes as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtcore::profile::{RTXPRO, TITANRTX};
+
+    #[test]
+    fn grid_is_three_by_four() {
+        let g = paper_grid();
+        assert_eq!(g.len(), 12);
+        assert_eq!(energy_cases().len(), 3);
+    }
+
+    #[test]
+    fn oom_extrapolation_matches_paper_cases() {
+        // Lattice r=160 at 1M: k ~ 17k/particle -> ~68 GB -> OOM on 24 GB
+        // Turing, fits nowhere near on Titan but borderline on 96 GB.
+        // bench-scale stand-in: n=10k with k_max ~ 171
+        assert!(paper_scale_oom(171, 10_000, 1_000_000, &TITANRTX));
+        // r=1: k_max ~ 1 even at 1M -> no OOM anywhere
+        assert!(!paper_scale_oom(1, 10_000, 1_000_000, &RTXPRO));
+        // cluster LN: k_max ~ n at any scale -> catastrophic at 1M
+        assert!(paper_scale_oom(10_000, 10_000, 1_000_000, &RTXPRO));
+    }
+
+    #[test]
+    fn size_scaling() {
+        let opts = BenchOpts {
+            threads: 1,
+            hw: &RTXPRO,
+            kernels: Arc::new(RustKernels { threads: 1 }),
+            quick: true,
+            steps_override: None,
+            n_override: None,
+            seed: 1,
+        };
+        let (n, steps) = opts.size(8000, 80);
+        assert_eq!((n, steps), (1000, 10));
+    }
+}

@@ -1,0 +1,83 @@
+//! Figs. 11 & 12 — power-consumption time series and energy efficiency
+//! (interactions per joule) for the three representative cases of §4.3,
+//! wall + periodic BC, all five approaches.
+//!
+//! One set of runs feeds both figures. Shape targets (Fig. 11/12): RT-REF
+//! draws the most power in Lattice (≈400 W on the 600 W part), CPU-CELL a
+//! stable ≈250 W; ORCS variants sit between; at log-normal Cluster,
+//! ORCS-forces is the most energy-efficient by a wide margin; CPU remains
+//! competitive in EE despite being slowest.
+
+use anyhow::Result;
+
+use super::common::{energy_cases, BenchOpts};
+use crate::coordinator::metrics::fmt_si;
+use crate::coordinator::report::{results_dir, CsvWriter, TextTable};
+use crate::core::config::Boundary;
+use crate::frnn::ApproachKind;
+
+const N_DEFAULT: usize = 6_000;
+const STEPS_DEFAULT: usize = 80;
+
+pub fn run(opts: &BenchOpts) -> Result<()> {
+    let (n, steps) = opts.size(N_DEFAULT, STEPS_DEFAULT);
+    println!("== Figs. 11 & 12: power time series + energy efficiency (n={n}, {steps} steps) ==\n");
+
+    let mut power_csv = CsvWriter::create(
+        &results_dir().join("fig11_power.csv"),
+        &["case", "bc", "approach", "step", "t_cum_ms", "power_w"],
+    )?;
+    let mut ee_csv = CsvWriter::create(
+        &results_dir().join("fig12_energy_eff.csv"),
+        &["case", "bc", "approach", "interactions", "energy_j", "ee_int_per_j", "oom"],
+    )?;
+
+    for boundary in [Boundary::Wall, Boundary::Periodic] {
+        for case in energy_cases() {
+            let mut table =
+                TextTable::new(&["approach", "avg power (W)", "energy (J)", "EE (int/J)", "time (ms)"]);
+            for approach in ApproachKind::ALL {
+                let Some(s) =
+                    opts.run(&case, n, boundary, approach, "gradient", steps, true)?
+                else {
+                    table.row(vec![approach.to_string(), "-".into(), "-".into(), "-".into(), "-".into()]);
+                    continue;
+                };
+                let mut t_cum = 0.0;
+                for rec in &s.records {
+                    t_cum += rec.sim_ms;
+                    power_csv.row(&[
+                        case.tag(),
+                        boundary.to_string(),
+                        approach.to_string(),
+                        rec.step.to_string(),
+                        format!("{:.3}", t_cum),
+                        format!("{:.1}", rec.energy.avg_power_w),
+                    ])?;
+                }
+                ee_csv.row(&[
+                    case.tag(),
+                    boundary.to_string(),
+                    approach.to_string(),
+                    s.total_interactions.to_string(),
+                    format!("{:.4}", s.total_energy_j),
+                    format!("{:.1}", s.ee),
+                    s.oom.to_string(),
+                ])?;
+                table.row(vec![
+                    format!("{}{}", approach, if s.oom { " (OOM)" } else { "" }),
+                    format!("{:.0}", s.avg_power_w),
+                    format!("{:.3}", s.total_energy_j),
+                    fmt_si(s.ee),
+                    format!("{:.2}", s.total_sim_ms),
+                ]);
+            }
+            println!("--- {} / {} BC ---", case.tag(), boundary);
+            println!("{}", table.render());
+        }
+    }
+    println!("CSV: {} and {}",
+        results_dir().join("fig11_power.csv").display(),
+        results_dir().join("fig12_energy_eff.csv").display());
+    Ok(())
+}

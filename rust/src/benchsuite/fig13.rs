@@ -1,0 +1,115 @@
+//! Fig. 13 — performance and energy-efficiency scaling across four GPU
+//! generations (TITAN RTX → A40 → L40 → RTX Pro 6000 Blackwell).
+//!
+//! Shape targets: the A40→L40 jump is the strongest; Blackwell keeps
+//! scaling performance but EE stays roughly flat (its 600 W envelope); the
+//! RT-core approaches self-scale the most; RT-REF is absent (OOM) in the
+//! Lattice-r160 and Cluster-LN columns at paper scale.
+
+use anyhow::Result;
+
+use super::common::{energy_cases, paper_scale_oom, BenchOpts};
+use crate::coordinator::report::{results_dir, CsvWriter, TextTable};
+use crate::core::config::Boundary;
+use crate::frnn::ApproachKind;
+use crate::rtcore::profile::GENERATIONS;
+
+const N_DEFAULT: usize = 6_000;
+const STEPS_DEFAULT: usize = 30;
+/// Paper-scale n for the RT-REF OOM mirroring (see §4.3: Lattice r=160 at
+/// n=1M needs ~25k neighbors/particle; Cluster-LN approaches k ~ n).
+const N_PAPER: usize = 1_000_000;
+
+const GPU_APPROACHES: [ApproachKind; 4] = [
+    ApproachKind::GpuCell,
+    ApproachKind::RtRef,
+    ApproachKind::OrcsForces,
+    ApproachKind::OrcsPerse,
+];
+
+pub fn run(opts: &BenchOpts) -> Result<()> {
+    let (n, steps) = opts.size(N_DEFAULT, STEPS_DEFAULT);
+    println!("== Fig. 13: scaling across GPU generations (n={n}, {steps} steps, periodic BC) ==\n");
+
+    let mut csv = CsvWriter::create(
+        &results_dir().join("fig13_scaling.csv"),
+        &["case", "gpu", "approach", "avg_sim_ms", "perf_rel_titan", "ee_int_per_j",
+          "ee_rel_titan", "oom_paper_scale"],
+    )?;
+
+    for case in energy_cases() {
+        let mut perf_table = TextTable::new(&["approach", "TITANRTX", "A40", "L40", "RTXPRO"]);
+        let mut ee_table = TextTable::new(&["approach", "TITANRTX", "A40", "L40", "RTXPRO"]);
+        for approach in GPU_APPROACHES {
+            let mut perf_fields = vec![approach.to_string()];
+            let mut ee_fields = vec![approach.to_string()];
+            let mut baseline: Option<(f64, f64)> = None; // (ms, ee) on Titan
+            for hw in GENERATIONS {
+                let mut o = BenchOpts {
+                    threads: opts.threads,
+                    hw,
+                    kernels: opts.kernels.clone(),
+                    quick: opts.quick,
+                    steps_override: opts.steps_override,
+                    n_override: opts.n_override,
+                    seed: opts.seed,
+                };
+                o.hw = hw;
+                let Some(s) =
+                    o.run(&case, n, Boundary::Periodic, approach, "gradient", steps, true)?
+                else {
+                    perf_fields.push("-".into());
+                    ee_fields.push("-".into());
+                    continue;
+                };
+                let k_max_like = s
+                    .records
+                    .iter()
+                    .map(|r| r.counts.nbr_list_bytes_peak / 4 / (n as u64).max(1))
+                    .max()
+                    .unwrap_or(0) as usize;
+                let oom = s.oom
+                    || (approach == ApproachKind::RtRef
+                        && paper_scale_oom(k_max_like, n, N_PAPER, hw));
+                if oom {
+                    perf_fields.push("OOM".into());
+                    ee_fields.push("OOM".into());
+                    csv.row(&[
+                        case.tag(),
+                        hw.name.to_string(),
+                        approach.to_string(),
+                        format!("{:.4}", s.avg_sim_ms),
+                        "".into(),
+                        "".into(),
+                        "".into(),
+                        "true".into(),
+                    ])?;
+                    continue;
+                }
+                let (base_ms, base_ee) = *baseline.get_or_insert((s.avg_sim_ms, s.ee));
+                let perf_rel = base_ms / s.avg_sim_ms.max(1e-12);
+                let ee_rel = s.ee / base_ee.max(1e-12);
+                perf_fields.push(format!("{perf_rel:.2}x"));
+                ee_fields.push(format!("{ee_rel:.2}x"));
+                csv.row(&[
+                    case.tag(),
+                    hw.name.to_string(),
+                    approach.to_string(),
+                    format!("{:.4}", s.avg_sim_ms),
+                    format!("{perf_rel:.3}"),
+                    format!("{:.1}", s.ee),
+                    format!("{ee_rel:.3}"),
+                    "false".into(),
+                ])?;
+            }
+            perf_table.row(perf_fields);
+            ee_table.row(ee_fields);
+        }
+        println!("--- {} — performance scaling (relative to first non-OOM gen) ---", case.tag());
+        println!("{}", perf_table.render());
+        println!("--- {} — energy-efficiency scaling ---", case.tag());
+        println!("{}", ee_table.render());
+    }
+    println!("CSV: {}", results_dir().join("fig13_scaling.csv").display());
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Figs. 9 & 10 — GPU acceleration over CPU-CELL@64c for an increasing
+//! number of particles, under wall (Fig. 9) and periodic (Fig. 10) BC.
+//!
+//! `Speedup = <T_cpu-cell> / <T_gpu-approach>` (paper Eq. 9), simulated
+//! times. Shape targets: ORCS-persé fastest at r=1 (~1.3x over RT-REF);
+//! ORCS-forces fastest at log-normal radii (~1.6x wall / ~2x periodic over
+//! RT-REF); CELL methods win at r=160; RT-REF OOMs on Cluster-LN.
+
+use anyhow::Result;
+
+use super::common::{paper_grid, BenchOpts};
+use crate::coordinator::report::{results_dir, CsvWriter, TextTable};
+use crate::core::config::Boundary;
+use crate::frnn::ApproachKind;
+
+/// Particle-count sweep (paper reaches 1M; see DESIGN.md on sizing).
+const N_SWEEP_DEFAULT: [usize; 4] = [500, 1_000, 2_000, 4_000];
+const STEPS_DEFAULT: usize = 10;
+
+const GPU_APPROACHES: [ApproachKind; 4] = [
+    ApproachKind::GpuCell,
+    ApproachKind::RtRef,
+    ApproachKind::OrcsForces,
+    ApproachKind::OrcsPerse,
+];
+
+pub fn run(opts: &BenchOpts, boundary: Boundary) -> Result<()> {
+    let fig = if boundary == Boundary::Wall { 9 } else { 10 };
+    let (_, steps) = opts.size(8_000, STEPS_DEFAULT);
+    let sweep: Vec<usize> = if opts.quick {
+        vec![500, 1_000]
+    } else if let Some(n) = opts.n_override {
+        vec![n / 4, n / 2, n]
+    } else {
+        N_SWEEP_DEFAULT.to_vec()
+    };
+    println!("== Fig. {fig}: speedup vs CPU-CELL@64c ({boundary} BC, {steps} steps, n sweep {sweep:?}) ==\n");
+
+    let mut csv = CsvWriter::create(
+        &results_dir().join(format!("fig{fig}_speedup_{}.csv", boundary.to_string().to_lowercase())),
+        &["case", "n", "approach", "avg_sim_ms", "cpu_ms", "speedup", "oom"],
+    )?;
+
+    for case in paper_grid() {
+        let mut table = TextTable::new(&["n", "GPU-CELL", "RT-REF", "ORCS-forces", "ORCS-perse"]);
+        for &n in &sweep {
+            let cpu = opts
+                .run(&case, n, boundary, ApproachKind::CpuCell, "gradient", steps, false)?
+                .expect("cpu-cell always supported");
+            let mut fields = vec![n.to_string()];
+            for approach in GPU_APPROACHES {
+                let cell = match opts.run(&case, n, boundary, approach, "gradient", steps, false)? {
+                    None => "-".into(),
+                    Some(s) if s.oom => {
+                        csv.row(&[
+                            case.tag(),
+                            n.to_string(),
+                            approach.to_string(),
+                            "".into(),
+                            format!("{:.4}", cpu.avg_sim_ms),
+                            "".into(),
+                            "true".into(),
+                        ])?;
+                        "OOM".into()
+                    }
+                    Some(s) => {
+                        let speedup = cpu.avg_sim_ms / s.avg_sim_ms.max(1e-12);
+                        csv.row(&[
+                            case.tag(),
+                            n.to_string(),
+                            approach.to_string(),
+                            format!("{:.4}", s.avg_sim_ms),
+                            format!("{:.4}", cpu.avg_sim_ms),
+                            format!("{:.2}", speedup),
+                            "false".into(),
+                        ])?;
+                        format!("{speedup:.1}x")
+                    }
+                };
+                fields.push(cell);
+            }
+            table.row(fields);
+        }
+        println!("--- {} ---", case.tag());
+        println!("{}", table.render());
+    }
+    println!(
+        "CSV: {}",
+        results_dir()
+            .join(format!("fig{fig}_speedup_{}.csv", boundary.to_string().to_lowercase()))
+            .display()
+    );
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Benchmark suite: one module per table/figure of the paper's evaluation.
+//! Each regenerates the paper artifact's rows/series (simulated GPU times
+//! from the rtcore model + real wall-clock), prints them, and writes CSVs
+//! into `results/`.
+
+pub mod common;
+pub mod fig11_12;
+pub mod fig13;
+pub mod fig8;
+pub mod fig9_10;
+pub mod table2;

@@ -1,0 +1,125 @@
+//! Table 2 — average time (ms) per step for the five approaches over the
+//! full scenario grid, wall + periodic BC, small + large n.
+//!
+//! Rows mirror the paper exactly: per (distribution, radius, BC, n) the
+//! fastest approach is flagged, ORCS-persé prints `-` for variable radii,
+//! and RT-REF prints `OOM` where its fixed-slot neighbor list would exceed
+//! device memory *at paper scale* (extrapolated from the measured k_max —
+//! see `common::paper_scale_oom`) or at bench scale.
+
+use anyhow::Result;
+
+use super::common::{paper_grid, paper_scale_oom, BenchOpts};
+use crate::coordinator::metrics::fmt_ms;
+use crate::coordinator::report::{results_dir, CsvWriter, TextTable};
+use crate::core::config::Boundary;
+use crate::frnn::ApproachKind;
+
+/// Paper: n in {50k, 1M}. Bench defaults (simulated times are
+/// size-faithful; see DESIGN.md).
+const N_SMALL: usize = 1_500;
+const N_LARGE: usize = 6_000;
+/// Paper-scale sizes used for the OOM extrapolation.
+const N_PAPER_SMALL: usize = 50_000;
+const N_PAPER_LARGE: usize = 1_000_000;
+const STEPS_DEFAULT: usize = 20;
+
+pub fn run(opts: &BenchOpts) -> Result<()> {
+    let (n_small, steps) = opts.size(N_SMALL, STEPS_DEFAULT);
+    let (n_large, _) = opts.size(N_LARGE, STEPS_DEFAULT);
+    println!("== Table 2: avg simulated ms/step (n_small={n_small}, n_large={n_large}, {steps} steps) ==");
+    println!("   paper: n in {{50k, 1M}}; OOM cells extrapolated to paper scale\n");
+
+    let mut csv = CsvWriter::create(
+        &results_dir().join("table2_sim_perf.csv"),
+        &["dist", "radius", "bc", "n", "approach", "avg_sim_ms", "oom", "k_max_like", "wall_s"],
+    )?;
+
+    for case in paper_grid() {
+        let mut table = TextTable::new(&[
+            "approach",
+            "Wall/small",
+            "Wall/large",
+            "Periodic/small",
+            "Periodic/large",
+        ]);
+        // column-wise bests for the teal highlight equivalent (asterisk)
+        let mut cells: Vec<Vec<Option<(f64, bool)>>> = Vec::new();
+
+        for approach in ApproachKind::ALL {
+            let mut row_cells = Vec::new();
+            for (boundary, n, n_paper) in [
+                (Boundary::Wall, n_small, N_PAPER_SMALL),
+                (Boundary::Wall, n_large, N_PAPER_LARGE),
+                (Boundary::Periodic, n_small, N_PAPER_SMALL),
+                (Boundary::Periodic, n_large, N_PAPER_LARGE),
+            ] {
+                let summary =
+                    opts.run(&case, n, boundary, approach, "gradient", steps, true)?;
+                let cell = match summary {
+                    None => None, // unsupported (perse x variable radius)
+                    Some(s) => {
+                        // extrapolated OOM for RT-REF from measured k_max
+                        let k_max_like = s
+                            .records
+                            .iter()
+                            .map(|r| r.counts.nbr_list_bytes_peak / 4 / (n as u64).max(1))
+                            .max()
+                            .unwrap_or(0) as usize;
+                        let oom = s.oom
+                            || (approach == ApproachKind::RtRef
+                                && paper_scale_oom(k_max_like, n, n_paper, opts.hw));
+                        csv.row(&[
+                            case.dist.to_string(),
+                            case.radius.to_string(),
+                            boundary.to_string(),
+                            n.to_string(),
+                            approach.to_string(),
+                            format!("{:.4}", s.avg_sim_ms),
+                            oom.to_string(),
+                            k_max_like.to_string(),
+                            format!("{:.2}", s.wall_total_s),
+                        ])?;
+                        Some((s.avg_sim_ms, oom))
+                    }
+                };
+                row_cells.push(cell);
+            }
+            cells.push(row_cells);
+        }
+
+        // render with best-of-column markers (the paper's teal cells)
+        let bests: Vec<f64> = (0..4)
+            .map(|col| {
+                cells
+                    .iter()
+                    .filter_map(|row| row[col])
+                    .filter(|(_, oom)| !oom)
+                    .map(|(ms, _)| ms)
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .collect();
+        for (ai, approach) in ApproachKind::ALL.iter().enumerate() {
+            let mut fields = vec![approach.to_string()];
+            for col in 0..4 {
+                fields.push(match cells[ai][col] {
+                    None => "-".into(),
+                    Some((_, true)) => "OOM".into(),
+                    Some((ms, false)) => {
+                        if (ms - bests[col]).abs() < 1e-12 {
+                            format!("*{}", fmt_ms(ms))
+                        } else {
+                            fmt_ms(ms)
+                        }
+                    }
+                });
+            }
+            table.row(fields);
+        }
+        println!("--- {} ---", case.tag());
+        println!("{}", table.render());
+    }
+    println!("(* = fastest per column, as the paper's teal cells)");
+    println!("CSV: {}", results_dir().join("table2_sim_perf.csv").display());
+    Ok(())
+}

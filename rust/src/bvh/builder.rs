@@ -1,0 +1,292 @@
+//! BVH construction: median split and binned-SAH builders.
+//!
+//! Both builders produce the same node layout (children consecutive, always
+//! after the parent) so refit and traversal are builder-agnostic. The
+//! median builder models fast hardware LBVH-style construction; binned SAH
+//! models a high-quality build. The timing model charges builds by
+//! primitive count regardless of kind (hardware builds are opaque), but the
+//! *query* cost difference between tree qualities is real and measured.
+
+use super::{Bvh, BuildKind, Node, LEAF_SIZE};
+use crate::core::aabb::Aabb;
+use crate::core::vec3::Vec3;
+
+/// Number of SAH bins per axis.
+const SAH_BINS: usize = 16;
+
+/// SAH traversal/intersection cost ratio (standard ~1:1 for AABB vs sphere
+/// tests on RT hardware).
+const COST_TRAVERSE: f32 = 1.0;
+const COST_INTERSECT: f32 = 1.0;
+
+struct BuildCtx<'a> {
+    centroids: Vec<Vec3>,
+    prim_bbs: Vec<Aabb>,
+    order: &'a mut [u32],
+    nodes: Vec<Node>,
+}
+
+impl Bvh {
+    /// Build a fresh BVH over spheres `(pos[i], radius[i])`.
+    pub fn build(pos: &[Vec3], radius: &[f32], kind: BuildKind) -> Bvh {
+        assert_eq!(pos.len(), radius.len());
+        assert!(!pos.is_empty(), "cannot build a BVH over zero primitives");
+        let n = pos.len();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+
+        if kind == BuildKind::Lbvh {
+            // Z-order the primitives once; range-midpoint splits below then
+            // approximate morton-prefix splits (HLBVH-style).
+            let bb = pos.iter().zip(radius).fold(Aabb::EMPTY, |mut a, (&p, &r)| {
+                a.grow(&Aabb::of_sphere(p, r));
+                a
+            });
+            let span = (bb.hi - bb.lo).max_component().max(1e-6);
+            let mut keys: Vec<u32> = pos
+                .iter()
+                .map(|&p| crate::frnn::gpu_cell::morton30((p - bb.lo) * (1000.0 / span), 1000.0))
+                .collect();
+            crate::frnn::gpu_cell::radix_sort_pairs(&mut keys, &mut order);
+        }
+        let prim_bbs: Vec<Aabb> =
+            (0..n).map(|i| Aabb::of_sphere(pos[i], radius[i])).collect();
+        let centroids: Vec<Vec3> = pos.to_vec();
+
+        let mut ctx = BuildCtx {
+            centroids,
+            prim_bbs,
+            order: &mut order,
+            nodes: Vec::with_capacity(2 * n / LEAF_SIZE + 2),
+        };
+        // reserve root
+        ctx.nodes.push(Node { aabb: Aabb::EMPTY, left_first: 0, count: 0 });
+        build_range(&mut ctx, 0, 0, n, kind);
+        let nodes = ctx.nodes;
+
+        Bvh { nodes, prim_order: order, n_prims: n, kind, refits_since_build: 0 }
+    }
+}
+
+/// Recursively build the subtree for `order[lo..hi]` into `nodes[node_idx]`.
+fn build_range(ctx: &mut BuildCtx, node_idx: usize, lo: usize, hi: usize, kind: BuildKind) {
+    let count = hi - lo;
+    let mut bb = Aabb::EMPTY;
+    let mut cb = Aabb::EMPTY; // centroid bounds
+    for k in lo..hi {
+        let p = ctx.order[k] as usize;
+        bb.grow(&ctx.prim_bbs[p]);
+        let c = ctx.centroids[p];
+        cb.grow(&Aabb::new(c, c));
+    }
+
+    if count <= LEAF_SIZE {
+        ctx.nodes[node_idx] =
+            Node { aabb: bb, left_first: lo as u32, count: count as u32 };
+        return;
+    }
+
+    let split = match kind {
+        BuildKind::Median => split_median(ctx, lo, hi, &cb),
+        BuildKind::BinnedSah => {
+            split_sah(ctx, lo, hi, &cb, &bb).unwrap_or_else(|| split_median(ctx, lo, hi, &cb))
+        }
+        // order is already morton-sorted: midpoint = prefix split
+        BuildKind::Lbvh => lo + count / 2,
+    };
+
+    // Degenerate split (all centroids identical): force a half split.
+    let mid = if split <= lo || split >= hi { lo + count / 2 } else { split };
+
+    let left = ctx.nodes.len();
+    ctx.nodes.push(Node { aabb: Aabb::EMPTY, left_first: 0, count: 0 });
+    ctx.nodes.push(Node { aabb: Aabb::EMPTY, left_first: 0, count: 0 });
+    ctx.nodes[node_idx] = Node { aabb: bb, left_first: left as u32, count: 0 };
+    build_range(ctx, left, lo, mid, kind);
+    build_range(ctx, left + 1, mid, hi, kind);
+}
+
+/// Median split: partition around the median centroid on the longest axis.
+fn split_median(ctx: &mut BuildCtx, lo: usize, hi: usize, cb: &Aabb) -> usize {
+    let axis = cb.longest_axis();
+    let mid = lo + (hi - lo) / 2;
+    let (order, centroids) = (&mut *ctx.order, &ctx.centroids);
+    order[lo..hi].select_nth_unstable_by(mid - lo, |&a, &b| {
+        centroids[a as usize]
+            .axis(axis)
+            .partial_cmp(&centroids[b as usize].axis(axis))
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    mid
+}
+
+/// Binned SAH: try SAH_BINS buckets on each axis, pick the cheapest split.
+/// Returns `None` when no split beats the leaf cost or bounds are degenerate.
+fn split_sah(ctx: &mut BuildCtx, lo: usize, hi: usize, cb: &Aabb, bb: &Aabb) -> Option<usize> {
+    let count = hi - lo;
+    let ext = cb.hi - cb.lo;
+    let mut best: Option<(f32, usize, usize)> = None; // (cost, axis, bin)
+
+    for axis in 0..3 {
+        let extent = ext.axis(axis);
+        if extent <= 1e-6 {
+            continue;
+        }
+        let k0 = cb.lo.axis(axis);
+        let scale = SAH_BINS as f32 * (1.0 - 1e-6) / extent;
+
+        let mut bin_bb = [Aabb::EMPTY; SAH_BINS];
+        let mut bin_n = [0usize; SAH_BINS];
+        for k in lo..hi {
+            let p = ctx.order[k] as usize;
+            let b = (((ctx.centroids[p].axis(axis) - k0) * scale) as usize).min(SAH_BINS - 1);
+            bin_bb[b].grow(&ctx.prim_bbs[p]);
+            bin_n[b] += 1;
+        }
+
+        // prefix/suffix sweeps
+        let mut left_bb = [Aabb::EMPTY; SAH_BINS];
+        let mut left_n = [0usize; SAH_BINS];
+        let mut acc_bb = Aabb::EMPTY;
+        let mut acc_n = 0;
+        for b in 0..SAH_BINS {
+            acc_bb.grow(&bin_bb[b]);
+            acc_n += bin_n[b];
+            left_bb[b] = acc_bb;
+            left_n[b] = acc_n;
+        }
+        let mut acc_bb = Aabb::EMPTY;
+        let mut acc_n = 0;
+        for b in (1..SAH_BINS).rev() {
+            acc_bb.grow(&bin_bb[b]);
+            acc_n += bin_n[b];
+            let nl = left_n[b - 1];
+            if nl == 0 || acc_n == 0 {
+                continue;
+            }
+            let sa = bb.surface_area().max(1e-12);
+            let cost = COST_TRAVERSE
+                + COST_INTERSECT
+                    * (left_bb[b - 1].surface_area() * nl as f32
+                        + acc_bb.surface_area() * acc_n as f32)
+                    / sa;
+            if best.map_or(true, |(bc, _, _)| cost < bc) {
+                best = Some((cost, axis, b));
+            }
+        }
+    }
+
+    let (cost, axis, bin) = best?;
+    // compare against leaf cost
+    if cost >= COST_INTERSECT * count as f32 {
+        return None;
+    }
+    // partition by bin
+    let k0 = cb.lo.axis(axis);
+    let extent = ext.axis(axis);
+    let scale = SAH_BINS as f32 * (1.0 - 1e-6) / extent;
+    let (order, centroids) = (&mut *ctx.order, &ctx.centroids);
+    let mut i = lo;
+    let mut j = hi;
+    while i < j {
+        let p = order[i] as usize;
+        let b = (((centroids[p].axis(axis) - k0) * scale) as usize).min(SAH_BINS - 1);
+        if b < bin {
+            i += 1;
+        } else {
+            j -= 1;
+            order.swap(i, j);
+        }
+    }
+    Some(i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Rng;
+
+    fn scene(n: usize, seed: u64) -> (Vec<Vec3>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (
+            (0..n)
+                .map(|_| {
+                    Vec3::new(
+                        rng.range_f32(0.0, 50.0),
+                        rng.range_f32(0.0, 50.0),
+                        rng.range_f32(0.0, 50.0),
+                    )
+                })
+                .collect(),
+            (0..n).map(|_| rng.range_f32(0.1, 2.0)).collect(),
+        )
+    }
+
+    #[test]
+    fn node_count_bounds() {
+        let (pos, radius) = scene(1000, 1);
+        let bvh = Bvh::build(&pos, &radius, BuildKind::Median);
+        // binary tree over ceil(n/LEAF) leaves
+        assert!(bvh.node_count() >= 2 * (1000 / LEAF_SIZE) - 1);
+        assert!(bvh.node_count() <= 2 * 1000);
+    }
+
+    #[test]
+    fn identical_centroids_dont_recurse_forever() {
+        let pos = vec![Vec3::splat(5.0); 50];
+        let radius = vec![1.0f32; 50];
+        for kind in [BuildKind::Median, BuildKind::BinnedSah] {
+            let bvh = Bvh::build(&pos, &radius, kind);
+            bvh.check_invariants(&pos, &radius).unwrap();
+        }
+    }
+
+    #[test]
+    fn sah_tree_not_worse_than_median() {
+        let (pos, radius) = scene(3000, 3);
+        let med = Bvh::build(&pos, &radius, BuildKind::Median);
+        let sah = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
+        let qm = crate::bvh::quality::sah_cost(&med);
+        let qs = crate::bvh::quality::sah_cost(&sah);
+        assert!(qs <= qm * 1.1, "sah={qs} median={qm}");
+    }
+
+    #[test]
+    fn lbvh_builds_valid_tree() {
+        let (pos, radius) = scene(2000, 5);
+        let bvh = Bvh::build(&pos, &radius, BuildKind::Lbvh);
+        bvh.check_invariants(&pos, &radius).unwrap();
+        // quality ordering: SAH <= median <= ~LBVH (morton splits are the
+        // cheapest build, roughest tree)
+        let sah = crate::bvh::quality::sah_cost(&Bvh::build(&pos, &radius, BuildKind::BinnedSah));
+        let lbvh = crate::bvh::quality::sah_cost(&bvh);
+        assert!(sah <= lbvh * 1.05, "sah={sah} lbvh={lbvh}");
+    }
+
+    #[test]
+    fn lbvh_queries_match_brute_force() {
+        let (pos, radius) = scene(600, 6);
+        let bvh = Bvh::build(&pos, &radius, BuildKind::Lbvh);
+        let mut stats = crate::bvh::traverse::TraversalStats::default();
+        for i in (0..pos.len()).step_by(13) {
+            let mut got = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut stats);
+            got.sort_unstable();
+            let want: Vec<usize> = (0..pos.len())
+                .filter(|&j| {
+                    j != i && (pos[i] - pos[j]).norm2() < radius[j] * radius[j]
+                })
+                .collect();
+            assert_eq!(got, want, "i={i}");
+        }
+    }
+
+    #[test]
+    fn children_follow_parents() {
+        let (pos, radius) = scene(512, 4);
+        let bvh = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
+        for (i, n) in bvh.nodes.iter().enumerate() {
+            if !n.is_leaf() {
+                assert!(n.left_first as usize > i);
+            }
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! The BVH substrate — our stand-in for the GPU RT cores' acceleration
+//! structure.
+//!
+//! The paper manages the OptiX BVH through exactly two operations: **build**
+//! (full reconstruction, optimal tree for the current particle positions)
+//! and **update** (refit: recompute node bounds over the existing topology).
+//! We reproduce both, plus a stack traversal with *exact operation counters*
+//! (AABB tests, sphere tests) that feed the RT-core timing model
+//! ([`crate::rtcore`]). Refit-induced degradation — the phenomenon the
+//! `gradient` optimizer exploits — emerges structurally: as particles move,
+//! refitted node bounds overlap more and traversal touches more nodes.
+
+pub mod builder;
+pub mod quality;
+pub mod traverse;
+
+use crate::core::aabb::Aabb;
+use crate::core::vec3::Vec3;
+
+/// Maximum primitives per leaf. 4 mirrors typical hardware BVH widths.
+pub const LEAF_SIZE: usize = 4;
+
+/// One BVH node. Children of internal nodes are allocated consecutively
+/// (`left`, `left + 1`), and always at higher indices than their parent, so
+/// a reverse-index sweep is a valid bottom-up order (used by refit).
+#[derive(Clone, Copy, Debug)]
+pub struct Node {
+    pub aabb: Aabb,
+    /// Internal: index of the left child (right = left + 1).
+    /// Leaf: first index into [`Bvh::prim_order`].
+    pub left_first: u32,
+    /// 0 for internal nodes; primitive count for leaves.
+    pub count: u32,
+}
+
+impl Node {
+    #[inline(always)]
+    pub fn is_leaf(&self) -> bool {
+        self.count > 0
+    }
+}
+
+/// Build heuristic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BuildKind {
+    /// Median split on the longest centroid axis — fast, decent quality
+    /// (models hardware LBVH-style builders).
+    Median,
+    /// Binned surface-area heuristic — slower build, better tree (models
+    /// high-quality builds). 16 bins.
+    BinnedSah,
+    /// Morton-order linear BVH (HLBVH-family, paper refs [29][32]): radix
+    /// sort primitives by Z-order, then split sorted ranges at their
+    /// midpoint. Fastest build, lowest quality — the hardware-builder
+    /// extreme of the build/quality trade-off ablation.
+    Lbvh,
+}
+
+/// A bounding volume hierarchy over particle search spheres.
+#[derive(Clone, Debug)]
+pub struct Bvh {
+    pub nodes: Vec<Node>,
+    /// Permutation of primitive ids; leaves reference ranges of it.
+    pub prim_order: Vec<u32>,
+    pub n_prims: usize,
+    pub kind: BuildKind,
+    /// Number of refits applied since the last full build.
+    pub refits_since_build: u32,
+}
+
+impl Bvh {
+    /// Number of nodes (internal + leaf).
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Root bounding box.
+    pub fn root_aabb(&self) -> Aabb {
+        self.nodes[0].aabb
+    }
+
+    /// Refit ("update" in RT-core terms): recompute every node's AABB from
+    /// current sphere positions without changing the topology. O(nodes).
+    pub fn refit(&mut self, pos: &[Vec3], radius: &[f32]) {
+        debug_assert_eq!(pos.len(), self.n_prims);
+        for i in (0..self.nodes.len()).rev() {
+            let node = self.nodes[i];
+            let mut bb = Aabb::EMPTY;
+            if node.is_leaf() {
+                let first = node.left_first as usize;
+                for k in first..first + node.count as usize {
+                    let p = self.prim_order[k] as usize;
+                    bb.grow(&Aabb::of_sphere(pos[p], radius[p]));
+                }
+            } else {
+                // children have higher indices -> already refit
+                bb.grow(&self.nodes[node.left_first as usize].aabb);
+                bb.grow(&self.nodes[node.left_first as usize + 1].aabb);
+            }
+            self.nodes[i].aabb = bb;
+        }
+        self.refits_since_build += 1;
+    }
+
+    /// Validate structural invariants (tests / debug builds).
+    pub fn check_invariants(&self, pos: &[Vec3], radius: &[f32]) -> Result<(), String> {
+        // prim_order is a permutation
+        let mut seen = vec![false; self.n_prims];
+        for &p in &self.prim_order {
+            let p = p as usize;
+            if p >= self.n_prims {
+                return Err(format!("prim id {p} out of range"));
+            }
+            if seen[p] {
+                return Err(format!("prim id {p} duplicated"));
+            }
+            seen[p] = true;
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("prim_order not a full permutation".into());
+        }
+        // every node's AABB contains its content; children after parents
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.is_leaf() {
+                let first = n.left_first as usize;
+                if first + n.count as usize > self.prim_order.len() {
+                    return Err(format!("leaf {i} range out of bounds"));
+                }
+                for k in first..first + n.count as usize {
+                    let p = self.prim_order[k] as usize;
+                    let sb = Aabb::of_sphere(pos[p], radius[p]);
+                    if !contains_box(&n.aabb, &sb) {
+                        return Err(format!("leaf {i} does not bound prim {p}"));
+                    }
+                }
+            } else {
+                let l = n.left_first as usize;
+                if l <= i || l + 1 >= self.nodes.len() {
+                    return Err(format!("node {i} bad child index {l}"));
+                }
+                for c in [l, l + 1] {
+                    if !contains_box(&n.aabb, &self.nodes[c].aabb) {
+                        return Err(format!("node {i} does not bound child {c}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn contains_box(outer: &Aabb, inner: &Aabb) -> bool {
+    const EPS: f32 = 1e-3;
+    inner.is_empty()
+        || (outer.lo.x <= inner.lo.x + EPS
+            && outer.lo.y <= inner.lo.y + EPS
+            && outer.lo.z <= inner.lo.z + EPS
+            && outer.hi.x >= inner.hi.x - EPS
+            && outer.hi.y >= inner.hi.y - EPS
+            && outer.hi.z >= inner.hi.z - EPS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Rng;
+
+    fn random_scene(n: usize, seed: u64) -> (Vec<Vec3>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let pos = (0..n)
+            .map(|_| {
+                Vec3::new(
+                    rng.range_f32(0.0, 100.0),
+                    rng.range_f32(0.0, 100.0),
+                    rng.range_f32(0.0, 100.0),
+                )
+            })
+            .collect();
+        let radius = (0..n).map(|_| rng.range_f32(0.5, 5.0)).collect();
+        (pos, radius)
+    }
+
+    #[test]
+    fn build_invariants_hold_both_kinds() {
+        for kind in [BuildKind::Median, BuildKind::BinnedSah] {
+            let (pos, radius) = random_scene(500, 9);
+            let bvh = Bvh::build(&pos, &radius, kind);
+            bvh.check_invariants(&pos, &radius).unwrap();
+            assert_eq!(bvh.n_prims, 500);
+            assert_eq!(bvh.refits_since_build, 0);
+        }
+    }
+
+    #[test]
+    fn refit_keeps_invariants_after_motion() {
+        let (mut pos, radius) = random_scene(300, 10);
+        let mut bvh = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
+        let mut rng = Rng::new(77);
+        for round in 1..=5 {
+            for p in pos.iter_mut() {
+                *p += Vec3::new(
+                    rng.range_f32(-2.0, 2.0),
+                    rng.range_f32(-2.0, 2.0),
+                    rng.range_f32(-2.0, 2.0),
+                );
+            }
+            bvh.refit(&pos, &radius);
+            bvh.check_invariants(&pos, &radius).unwrap();
+            assert_eq!(bvh.refits_since_build, round);
+        }
+    }
+
+    #[test]
+    fn single_and_tiny_inputs() {
+        let pos = vec![Vec3::splat(1.0)];
+        let radius = vec![2.0];
+        let bvh = Bvh::build(&pos, &radius, BuildKind::Median);
+        bvh.check_invariants(&pos, &radius).unwrap();
+        assert_eq!(bvh.node_count(), 1);
+        assert!(bvh.nodes[0].is_leaf());
+    }
+
+    #[test]
+    fn refit_grows_root_when_particles_spread() {
+        let (mut pos, radius) = random_scene(100, 11);
+        let mut bvh = Bvh::build(&pos, &radius, BuildKind::Median);
+        let before = bvh.root_aabb().surface_area();
+        for p in pos.iter_mut() {
+            *p = *p * 2.0; // spread out
+        }
+        bvh.refit(&pos, &radius);
+        assert!(bvh.root_aabb().surface_area() > before);
+        bvh.check_invariants(&pos, &radius).unwrap();
+    }
+}

@@ -1,0 +1,97 @@
+//! BVH quality metrics: the SAH cost of the current tree and overlap-based
+//! degradation measures. Used by tests (SAH builds beat median builds) and
+//! by the benchmark reports to show how refits degrade the tree — the
+//! phenomenon the `gradient` policy models as `Δq` (paper Fig. 3).
+
+use super::Bvh;
+
+/// Expected traversal cost under the Surface Area Heuristic:
+/// `C = Ct * Σ_internal SA(n)/SA(root) + Ci * Σ_leaf SA(l)/SA(root) * count(l)`.
+pub fn sah_cost(bvh: &Bvh) -> f64 {
+    let root_sa = bvh.nodes[0].aabb.surface_area() as f64;
+    if root_sa <= 0.0 {
+        return 0.0;
+    }
+    let mut cost = 0.0;
+    for n in &bvh.nodes {
+        let sa = n.aabb.surface_area() as f64 / root_sa;
+        if n.is_leaf() {
+            cost += sa * n.count as f64;
+        } else {
+            cost += sa;
+        }
+    }
+    cost
+}
+
+/// Sum of child-overlap surface areas normalized by the root — grows as
+/// refits accumulate and sibling boxes start intersecting.
+pub fn overlap_metric(bvh: &Bvh) -> f64 {
+    let root_sa = bvh.nodes[0].aabb.surface_area() as f64;
+    if root_sa <= 0.0 {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    for n in &bvh.nodes {
+        if n.is_leaf() {
+            continue;
+        }
+        let a = bvh.nodes[n.left_first as usize].aabb;
+        let b = bvh.nodes[n.left_first as usize + 1].aabb;
+        let lo = a.lo.max(b.lo);
+        let hi = a.hi.min(b.hi);
+        let d = hi - lo;
+        if d.x > 0.0 && d.y > 0.0 && d.z > 0.0 {
+            total += 2.0 * (d.x * d.y + d.y * d.z + d.z * d.x) as f64 / root_sa;
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bvh::BuildKind;
+    use crate::core::rng::Rng;
+    use crate::core::vec3::Vec3;
+
+    #[test]
+    fn refits_degrade_quality_metrics() {
+        let mut rng = Rng::new(31);
+        let mut pos: Vec<Vec3> = (0..1500)
+            .map(|_| {
+                Vec3::new(
+                    rng.range_f32(0.0, 100.0),
+                    rng.range_f32(0.0, 100.0),
+                    rng.range_f32(0.0, 100.0),
+                )
+            })
+            .collect();
+        let radius = vec![1.5f32; 1500];
+        let mut bvh = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
+        let q0 = sah_cost(&bvh);
+        let o0 = overlap_metric(&bvh);
+        for _ in 0..12 {
+            for p in pos.iter_mut() {
+                *p += Vec3::new(
+                    rng.range_f32(-3.0, 3.0),
+                    rng.range_f32(-3.0, 3.0),
+                    rng.range_f32(-3.0, 3.0),
+                );
+            }
+            bvh.refit(&pos, &radius);
+        }
+        assert!(sah_cost(&bvh) > q0, "SAH cost should grow with refits");
+        assert!(overlap_metric(&bvh) > o0, "overlap should grow with refits");
+    }
+
+    #[test]
+    fn leaf_only_tree_cost() {
+        let pos = vec![Vec3::ZERO; 2];
+        let radius = vec![1.0f32; 2];
+        let bvh = Bvh::build(&pos, &radius, BuildKind::Median);
+        // one leaf node, sa ratio 1, two prims
+        assert!((sah_cost(&bvh) - 2.0).abs() < 1e-6);
+        assert_eq!(overlap_metric(&bvh), 0.0);
+    }
+}

@@ -1,0 +1,241 @@
+//! BVH traversal with exact operation counters — the simulated RT-core
+//! query.
+//!
+//! The paper's FRNN scheme launches an *infinitesimal ray* at each particle
+//! position and collects sphere intersections (Fig. 1): geometrically this is
+//! a point query — `p_i` hits sphere `j` iff `|p_i - p_j| < r_j`. Traversal
+//! visits every node whose AABB contains the query point and tests spheres
+//! at the leaves. Counters mirror what RT silicon does per ray: box tests
+//! (RT-core units) and intersection-shader invocations (SM units).
+
+use super::Bvh;
+use crate::core::vec3::Vec3;
+
+/// Per-query (or accumulated) traversal statistics. These feed
+/// [`crate::rtcore::timing`] to produce simulated GPU time.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraversalStats {
+    /// Ray–AABB tests executed (RT-core box units).
+    pub aabb_tests: u64,
+    /// Sphere (primitive) tests — intersection-shader invocations.
+    pub sphere_tests: u64,
+    /// Intersections found (hits = discovered neighbor candidates).
+    pub hits: u64,
+    /// Rays launched (primary + gamma).
+    pub rays: u64,
+}
+
+impl TraversalStats {
+    pub fn add(&mut self, o: &TraversalStats) {
+        self.aabb_tests += o.aabb_tests;
+        self.sphere_tests += o.sphere_tests;
+        self.hits += o.hits;
+        self.rays += o.rays;
+    }
+}
+
+impl Bvh {
+    /// Query all spheres containing point `p`, excluding primitive
+    /// `exclude` (a particle never neighbors itself; pass `usize::MAX` to
+    /// keep all). Calls `visit(j)` for every hit and updates `stats`.
+    ///
+    /// `pos`/`radius` are the *current* particle arrays: the BVH prunes by
+    /// node bounds (possibly stale-loose after refits — exactly like RT
+    /// hardware), but the sphere test itself is exact.
+    #[inline]
+    pub fn query_point<F: FnMut(usize)>(
+        &self,
+        p: Vec3,
+        exclude: usize,
+        pos: &[Vec3],
+        radius: &[f32],
+        stats: &mut TraversalStats,
+        mut visit: F,
+    ) {
+        stats.rays += 1;
+        // Manual stack; depth bounded by tree height (can grow after many
+        // degenerate refits, so use a SmallVec-like spill pattern).
+        let mut stack = [0u32; 96];
+        let mut sp = 0usize;
+        let mut spill: Vec<u32> = Vec::new();
+
+        let mut current = 0u32;
+        loop {
+            // SAFETY: `current` is always a node index produced by the
+            // builder (root 0, children `left_first`/`left_first+1` which
+            // `check_invariants` proves in-bounds); prim_order indices are
+            // a permutation of 0..n_prims. Skipping the bounds checks is
+            // worth ~8% on this hottest loop (EXPERIMENTS.md §Perf #6).
+            let node = unsafe { self.nodes.get_unchecked(current as usize) };
+            stats.aabb_tests += 1;
+            if node.aabb.contains(p) {
+                if node.is_leaf() {
+                    let first = node.left_first as usize;
+                    for k in first..first + node.count as usize {
+                        let j = unsafe { *self.prim_order.get_unchecked(k) } as usize;
+                        stats.sphere_tests += 1;
+                        if j != exclude {
+                            let d2 = (p - *unsafe { pos.get_unchecked(j) }).norm2();
+                            let r = unsafe { *radius.get_unchecked(j) };
+                            if d2 < r * r {
+                                stats.hits += 1;
+                                visit(j);
+                            }
+                        }
+                    }
+                } else {
+                    // push right, descend left
+                    let l = node.left_first;
+                    if sp < stack.len() {
+                        stack[sp] = l + 1;
+                        sp += 1;
+                    } else {
+                        spill.push(l + 1);
+                    }
+                    current = l;
+                    continue;
+                }
+            }
+            // pop
+            if let Some(next) = spill.pop() {
+                current = next;
+            } else if sp > 0 {
+                sp -= 1;
+                current = stack[sp];
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Collect hit indices into a vector (convenience for tests and the
+    /// neighbor-list pipeline).
+    pub fn query_point_collect(
+        &self,
+        p: Vec3,
+        exclude: usize,
+        pos: &[Vec3],
+        radius: &[f32],
+        stats: &mut TraversalStats,
+    ) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.query_point(p, exclude, pos, radius, stats, |j| out.push(j));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bvh::BuildKind;
+    use crate::core::rng::Rng;
+
+    fn scene(n: usize, seed: u64, rmax: f32) -> (Vec<Vec3>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (
+            (0..n)
+                .map(|_| {
+                    Vec3::new(
+                        rng.range_f32(0.0, 100.0),
+                        rng.range_f32(0.0, 100.0),
+                        rng.range_f32(0.0, 100.0),
+                    )
+                })
+                .collect(),
+            (0..n).map(|_| rng.range_f32(0.5, rmax)).collect(),
+        )
+    }
+
+    fn brute(p: Vec3, exclude: usize, pos: &[Vec3], radius: &[f32]) -> Vec<usize> {
+        let mut v: Vec<usize> = (0..pos.len())
+            .filter(|&j| j != exclude && (p - pos[j]).norm2() < radius[j] * radius[j])
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn query_matches_brute_force() {
+        let (pos, radius) = scene(400, 21, 8.0);
+        for kind in [BuildKind::Median, BuildKind::BinnedSah] {
+            let bvh = Bvh::build(&pos, &radius, kind);
+            let mut stats = TraversalStats::default();
+            for i in 0..pos.len() {
+                let mut got = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut stats);
+                got.sort_unstable();
+                assert_eq!(got, brute(pos[i], i, &pos, &radius), "i={i} kind={kind:?}");
+            }
+            assert_eq!(stats.rays, 400);
+            assert!(stats.aabb_tests > 0 && stats.sphere_tests > 0);
+        }
+    }
+
+    #[test]
+    fn query_correct_after_refits() {
+        let (mut pos, radius) = scene(300, 22, 6.0);
+        let mut bvh = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
+        let mut rng = Rng::new(5);
+        for _ in 0..4 {
+            for p in pos.iter_mut() {
+                *p += Vec3::new(
+                    rng.range_f32(-3.0, 3.0),
+                    rng.range_f32(-3.0, 3.0),
+                    rng.range_f32(-3.0, 3.0),
+                );
+            }
+            bvh.refit(&pos, &radius);
+            let mut stats = TraversalStats::default();
+            for i in (0..pos.len()).step_by(7) {
+                let mut got = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut stats);
+                got.sort_unstable();
+                assert_eq!(got, brute(pos[i], i, &pos, &radius));
+            }
+        }
+    }
+
+    #[test]
+    fn refit_degradation_increases_traversal_cost() {
+        // the phenomenon gradient exploits: after motion + refit, queries
+        // touch more nodes than after a rebuild of the same configuration
+        let (mut pos, radius) = scene(2000, 23, 3.0);
+        let mut bvh = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
+        let mut rng = Rng::new(6);
+        for _ in 0..10 {
+            for p in pos.iter_mut() {
+                *p += Vec3::new(
+                    rng.range_f32(-4.0, 4.0),
+                    rng.range_f32(-4.0, 4.0),
+                    rng.range_f32(-4.0, 4.0),
+                );
+            }
+            bvh.refit(&pos, &radius);
+        }
+        let mut refit_stats = TraversalStats::default();
+        for i in 0..pos.len() {
+            bvh.query_point(pos[i], i, &pos, &radius, &mut refit_stats, |_| {});
+        }
+        let fresh = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
+        let mut fresh_stats = TraversalStats::default();
+        for i in 0..pos.len() {
+            fresh.query_point(pos[i], i, &pos, &radius, &mut fresh_stats, |_| {});
+        }
+        // hits identical (correctness), cost strictly larger (degradation)
+        assert_eq!(refit_stats.hits, fresh_stats.hits);
+        assert!(
+            refit_stats.aabb_tests > fresh_stats.aabb_tests,
+            "refit={} fresh={}",
+            refit_stats.aabb_tests,
+            fresh_stats.aabb_tests
+        );
+    }
+
+    #[test]
+    fn exclude_max_keeps_self() {
+        let pos = vec![Vec3::ZERO, Vec3::new(1.0, 0.0, 0.0)];
+        let radius = vec![2.0f32, 2.0];
+        let bvh = Bvh::build(&pos, &radius, BuildKind::Median);
+        let mut stats = TraversalStats::default();
+        let got = bvh.query_point_collect(Vec3::ZERO, usize::MAX, &pos, &radius, &mut stats);
+        assert_eq!(got.len(), 2); // both spheres contain the origin
+    }
+}

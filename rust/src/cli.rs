@@ -1,0 +1,196 @@
+//! Hand-rolled CLI argument parsing (the offline vendor set has no `clap`).
+//!
+//! Grammar: `orcs <subcommand> [--flag value]... [--switch]...`
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::core::config::{Boundary, ForcePath, ParticleDist, RadiusDist, SimConfig};
+use crate::frnn::ApproachKind;
+use crate::rtcore::profile;
+use crate::rtcore::HwProfile;
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut it = args.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_else(|| "help".into());
+        let mut out = Args { subcommand, ..Default::default() };
+        while let Some(a) = it.next() {
+            let Some(name) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument: {a}");
+            };
+            // --key=value or --key value or --switch
+            if let Some((k, v)) = name.split_once('=') {
+                out.flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                out.flags.insert(name.to_string(), it.next().unwrap());
+            } else {
+                out.switches.push(name.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Build a [`SimConfig`] from the common scenario flags.
+    pub fn sim_config(&self) -> Result<SimConfig> {
+        let mut cfg = SimConfig {
+            n: self.get_usize("n", 10_000)?,
+            box_l: self.get_f32("box", 1000.0)?,
+            dt: self.get_f32("dt", 1e-3)?,
+            ..SimConfig::default()
+        };
+        if let Some(d) = self.get("dist") {
+            cfg.particle_dist = ParticleDist::parse(d)
+                .ok_or_else(|| anyhow::anyhow!("bad --dist {d} (lattice|disordered|cluster)"))?;
+        }
+        if let Some(r) = self.get("radius") {
+            cfg.radius_dist = RadiusDist::parse(r)
+                .ok_or_else(|| anyhow::anyhow!("bad --radius {r} (r1|r160|u|ln|const:X|uniform:LO,HI|lognormal:MU,SIG,LO,HI)"))?;
+        }
+        if let Some(b) = self.get("bc") {
+            cfg.boundary = Boundary::parse(b)
+                .ok_or_else(|| anyhow::anyhow!("bad --bc {b} (wall|periodic)"))?;
+        }
+        if let Some(s) = self.get("seed") {
+            cfg.seed = s.parse()?;
+        }
+        if let Some(fp) = self.get("force-path") {
+            cfg.force_path = match fp {
+                "xla" => ForcePath::Xla,
+                "rust" => ForcePath::Rust,
+                other => bail!("bad --force-path {other} (xla|rust)"),
+            };
+        }
+        Ok(cfg)
+    }
+
+    pub fn approach(&self, default: ApproachKind) -> Result<ApproachKind> {
+        match self.get("approach") {
+            None => Ok(default),
+            Some(a) => ApproachKind::parse(a)
+                .ok_or_else(|| anyhow::anyhow!("bad --approach {a} (cpu-cell|gpu-cell|rt-ref|orcs-forces|orcs-perse)")),
+        }
+    }
+
+    pub fn hw(&self) -> Result<&'static HwProfile> {
+        match self.get("hw") {
+            None => Ok(profile::DEFAULT_GPU),
+            Some(h) => profile::by_name(h)
+                .ok_or_else(|| anyhow::anyhow!("bad --hw {h} (titanrtx|a40|l40|rtxpro)")),
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+orcs — RT-core FRNN particle simulation (paper reproduction)
+
+USAGE:
+  orcs simulate   [scenario flags] [--approach A] [--steps N]
+                  [--policy gradient|gradient-ee|avg|fixed-K]
+                  [--force-path xla|rust] [--hw GPU] [--trace out.csv]
+  orcs bench-fig8        regenerate Fig. 8 (BVH policies time series)
+  orcs bench-table2      regenerate Table 2 (avg ms/step grid)
+  orcs bench-fig9        regenerate Fig. 9 (speedup, wall BC)
+  orcs bench-fig10       regenerate Fig. 10 (speedup, periodic BC)
+  orcs bench-fig11       regenerate Fig. 11 (power time series)
+  orcs bench-fig12       regenerate Fig. 12 (energy efficiency)
+  orcs bench-fig13       regenerate Fig. 13 (GPU-generation scaling)
+  orcs inspect-artifacts print the loaded PJRT artifact set
+
+Scenario flags:
+  --n N                particle count             (default 10000)
+  --dist D             lattice|disordered|cluster (default disordered)
+  --radius R           r1|r160|u|ln|const:X|uniform:LO,HI|lognormal:MU,SIG,LO,HI
+  --bc B               wall|periodic              (default periodic)
+  --box L              box side                   (default 1000)
+  --dt DT              time step                  (default 1e-3)
+  --seed S             RNG seed
+Bench flags:
+  --scale F            shrink paper sizes by F (default per-bench)
+  --steps N            step count override
+  --quick              tiny sizes for smoke runs
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_and_switches() {
+        let a = parse(&["simulate", "--n", "500", "--bc=wall", "--quick", "--policy", "avg"]);
+        assert_eq!(a.subcommand, "simulate");
+        assert_eq!(a.get("n"), Some("500"));
+        assert_eq!(a.get("bc"), Some("wall"));
+        assert_eq!(a.get("policy"), Some("avg"));
+        assert!(a.has("quick"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn builds_sim_config() {
+        let a = parse(&[
+            "simulate", "--n", "123", "--dist", "cluster", "--radius", "ln", "--bc", "wall",
+        ]);
+        let cfg = a.sim_config().unwrap();
+        assert_eq!(cfg.n, 123);
+        assert_eq!(cfg.particle_dist, ParticleDist::Cluster);
+        assert_eq!(cfg.boundary, Boundary::Wall);
+        assert!(matches!(cfg.radius_dist, RadiusDist::LogNormal { .. }));
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(parse(&["x", "--dist", "blob"]).sim_config().is_err());
+        assert!(parse(&["x", "--bc", "moebius"]).sim_config().is_err());
+        assert!(parse(&["x"]).approach(ApproachKind::RtRef).is_ok());
+        assert!(parse(&["x", "--approach", "zzz"]).approach(ApproachKind::RtRef).is_err());
+        assert!(Args::parse(["x".to_string(), "oops".to_string()]).is_err());
+    }
+
+    #[test]
+    fn hw_lookup() {
+        assert_eq!(parse(&["x"]).hw().unwrap().name, "RTXPRO");
+        assert_eq!(parse(&["x", "--hw", "l40"]).hw().unwrap().name, "L40");
+        assert!(parse(&["x", "--hw", "h100"]).hw().is_err());
+    }
+}

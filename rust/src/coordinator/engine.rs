@@ -1,0 +1,264 @@
+//! The simulation engine: one backend, one scenario, stepped to completion
+//! with full metering.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::core::config::{ForcePath, SimConfig};
+use crate::frnn::{ApproachKind, Backend, PhysicsKernels, RustKernels, StepCtx, WallPhases};
+use crate::gradient::BvhAction;
+use crate::physics::state::SimState;
+use crate::rtcore::power::{step_energy, StepEnergy};
+use crate::rtcore::profile::{DeviceKind, EPYC64};
+use crate::rtcore::{timing, HwProfile, OpCounts, PhaseTimes};
+
+/// Engine configuration: scenario + execution bindings.
+#[derive(Clone)]
+pub struct EngineConfig {
+    pub sim: SimConfig,
+    pub approach: ApproachKind,
+    /// BVH rebuild policy spec for RT backends (`gradient`, `avg`,
+    /// `fixed-K`). Ignored by cell backends.
+    pub policy: String,
+    /// GPU profile pricing the GPU approaches (CPU-CELL is always priced on
+    /// the EPYC host profile).
+    pub hw: &'static HwProfile,
+    pub threads: usize,
+    /// Enforce device-memory limits (RT-REF neighbor list OOM, §4.2).
+    pub check_oom: bool,
+}
+
+impl EngineConfig {
+    pub fn new(sim: SimConfig, approach: ApproachKind) -> Self {
+        EngineConfig {
+            sim,
+            approach,
+            policy: "gradient".into(),
+            hw: crate::rtcore::profile::DEFAULT_GPU,
+            threads: crate::parallel::num_threads(),
+            check_oom: true,
+        }
+    }
+
+    /// The profile that prices this engine's op counts.
+    pub fn pricing_profile(&self) -> &'static HwProfile {
+        if self.approach == ApproachKind::CpuCell {
+            &EPYC64
+        } else {
+            self.hw
+        }
+    }
+}
+
+/// Everything measured about one step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub step: u64,
+    pub counts: OpCounts,
+    /// Simulated phase times on the pricing profile.
+    pub sim_times: PhaseTimes,
+    /// Total simulated step time, ms.
+    pub sim_ms: f64,
+    /// Simulated RT cost (BVH op + query), ms — the Fig. 8 quantity.
+    pub rt_ms: f64,
+    pub energy: StepEnergy,
+    pub wall: WallPhases,
+    pub bvh_action: Option<BvhAction>,
+    pub interactions: u64,
+    pub oom_bytes: Option<u64>,
+}
+
+/// Aggregate over a run.
+#[derive(Clone, Debug, Default)]
+pub struct RunSummary {
+    pub approach: String,
+    pub scenario: String,
+    pub hw: String,
+    pub steps: u64,
+    /// Mean simulated step time, ms.
+    pub avg_sim_ms: f64,
+    pub total_sim_ms: f64,
+    pub total_rt_ms: f64,
+    pub total_energy_j: f64,
+    pub total_interactions: u64,
+    pub avg_power_w: f64,
+    /// interactions per joule (Eq. 10).
+    pub ee: f64,
+    pub oom: bool,
+    pub oom_bytes: u64,
+    pub wall_total_s: f64,
+    /// Per-step trace (kept when requested).
+    pub records: Vec<StepRecord>,
+}
+
+/// A live simulation: state + backend + bindings.
+pub struct Engine {
+    pub cfg: EngineConfig,
+    pub state: SimState,
+    backend: Box<dyn Backend>,
+    kernels: Arc<dyn PhysicsKernels>,
+}
+
+impl Engine {
+    /// Build the engine; `kernels` binds the force/integration path (XLA or
+    /// Rust). Fails fast when the backend does not support the scenario
+    /// (e.g. ORCS-persé with variable radii).
+    pub fn new(cfg: EngineConfig, kernels: Arc<dyn PhysicsKernels>) -> Result<Self> {
+        let state = SimState::from_config(&cfg.sim);
+        let backend = cfg.approach.create(&cfg.policy)?;
+        backend
+            .supports(&state)
+            .map_err(|e| anyhow::anyhow!("{} cannot run {}: {e}", backend.name(), cfg.sim.tag()))?;
+        Ok(Engine { cfg, state, backend, kernels })
+    }
+
+    /// Convenience: engine with the pure-Rust kernels.
+    pub fn new_rust(cfg: EngineConfig) -> Result<Self> {
+        let threads = cfg.threads;
+        Self::new(cfg, Arc::new(RustKernels { threads }))
+    }
+
+    /// Build the kernels requested by the config's force path.
+    pub fn kernels_for(path: ForcePath, threads: usize) -> Result<Arc<dyn PhysicsKernels>> {
+        Ok(match path {
+            ForcePath::Rust => Arc::new(RustKernels { threads }),
+            ForcePath::Xla => Arc::new(crate::runtime::kernels::XlaKernels::load_default()?),
+        })
+    }
+
+    /// Execute one step and meter it.
+    pub fn step(&mut self) -> Result<StepRecord> {
+        let hw = self.cfg.pricing_profile();
+        let mut ctx = StepCtx {
+            threads: self.cfg.threads,
+            kernels: self.kernels.as_ref(),
+            hw,
+            check_oom: self.cfg.check_oom,
+        };
+        let r = self.backend.step(&mut self.state, &mut ctx)?;
+        let sim_times = timing::simulate(&r.counts, hw);
+        let energy = step_energy(&sim_times, &r.counts, hw);
+        Ok(StepRecord {
+            step: self.state.step_count,
+            counts: r.counts,
+            sim_times,
+            sim_ms: sim_times.total() * 1e3,
+            rt_ms: sim_times.rt_cost() * 1e3,
+            energy,
+            wall: r.wall,
+            bvh_action: r.bvh_action,
+            interactions: r.counts.interactions,
+            oom_bytes: r.oom_bytes,
+        })
+    }
+
+    /// Run `steps` steps; aborts early on OOM (like the paper's runs).
+    pub fn run(&mut self, steps: usize, keep_trace: bool) -> Result<RunSummary> {
+        let wall_start = Instant::now();
+        let mut s = RunSummary {
+            approach: self.backend.name().to_string(),
+            scenario: self.cfg.sim.tag(),
+            hw: self.cfg.pricing_profile().name.to_string(),
+            ..Default::default()
+        };
+        let mut energy_time = 0.0;
+        for _ in 0..steps {
+            let rec = self.step()?;
+            s.steps += 1;
+            s.total_sim_ms += rec.sim_ms;
+            s.total_rt_ms += rec.rt_ms;
+            s.total_energy_j += rec.energy.energy_j;
+            s.total_interactions += rec.interactions;
+            energy_time += rec.sim_ms;
+            if keep_trace {
+                s.records.push(rec);
+            }
+            if let Some(bytes) = rec.oom_bytes {
+                s.oom = true;
+                s.oom_bytes = bytes;
+                break;
+            }
+        }
+        if s.steps > 0 {
+            s.avg_sim_ms = s.total_sim_ms / s.steps as f64;
+        }
+        if energy_time > 0.0 {
+            s.avg_power_w = s.total_energy_j / (energy_time * 1e-3);
+        }
+        s.ee = crate::rtcore::power::energy_efficiency(s.total_interactions, s.total_energy_j);
+        s.wall_total_s = wall_start.elapsed().as_secs_f64();
+        debug_assert!(
+            self.cfg.pricing_profile().kind == DeviceKind::Cpu
+                || self.cfg.approach != ApproachKind::CpuCell
+        );
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::config::{Boundary, ParticleDist, RadiusDist};
+
+    fn small_cfg(approach: ApproachKind) -> EngineConfig {
+        let sim = SimConfig {
+            n: 300,
+            box_l: 200.0,
+            particle_dist: ParticleDist::Disordered,
+            radius_dist: RadiusDist::Const(6.0),
+            boundary: Boundary::Periodic,
+            ..SimConfig::default()
+        };
+        EngineConfig { threads: 2, policy: "fixed-10".into(), ..EngineConfig::new(sim, approach) }
+    }
+
+    #[test]
+    fn all_backends_run_and_meter() {
+        for approach in ApproachKind::ALL {
+            let mut e = Engine::new_rust(small_cfg(approach)).unwrap();
+            let s = e.run(5, true).unwrap();
+            assert_eq!(s.steps, 5, "{approach}");
+            assert!(s.avg_sim_ms > 0.0, "{approach}");
+            assert!(s.total_energy_j > 0.0, "{approach}");
+            assert!(s.total_interactions > 0, "{approach}");
+            assert_eq!(s.records.len(), 5);
+            assert!(e.state.is_finite());
+        }
+    }
+
+    #[test]
+    fn cpu_cell_priced_on_epyc() {
+        let cfg = small_cfg(ApproachKind::CpuCell);
+        assert_eq!(cfg.pricing_profile().name, "CPU-EPYC64");
+        let cfg = small_cfg(ApproachKind::RtRef);
+        assert_eq!(cfg.pricing_profile().name, "RTXPRO");
+    }
+
+    #[test]
+    fn perse_rejects_variable_radius_at_construction() {
+        let mut cfg = small_cfg(ApproachKind::OrcsPerse);
+        cfg.sim.radius_dist = RadiusDist::Uniform(1.0, 5.0);
+        assert!(Engine::new_rust(cfg).is_err());
+    }
+
+    #[test]
+    fn backends_agree_on_trajectories() {
+        // RT-REF, ORCS-forces, ORCS-perse, GPU-CELL, CPU-CELL must produce
+        // the same physics (same forces => same positions) step for step.
+        let mut positions = Vec::new();
+        for approach in ApproachKind::ALL {
+            let mut e = Engine::new_rust(small_cfg(approach)).unwrap();
+            e.run(3, false).unwrap();
+            positions.push((approach, e.state.pos.clone()));
+        }
+        let (ref_name, ref_pos) = &positions[0];
+        for (name, pos) in &positions[1..] {
+            for i in 0..ref_pos.len() {
+                let d = (pos[i] - ref_pos[i]).norm();
+                assert!(d < 1e-2, "{name} vs {ref_name} diverged at {i}: {d}");
+            }
+        }
+    }
+}

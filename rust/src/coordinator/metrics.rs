@@ -1,0 +1,118 @@
+//! Small statistics helpers used by the bench suite and reports.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile via linear interpolation, `q` in [0, 100].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = (q / 100.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Simple linear-regression slope of y over x (the Δq estimator shape).
+pub fn slope(xs: &[f64], ys: &[f64]) -> f64 {
+    let n = xs.len().min(ys.len());
+    if n < 2 {
+        return 0.0;
+    }
+    let mx = mean(&xs[..n]);
+    let my = mean(&ys[..n]);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..n {
+        num += (xs[i] - mx) * (ys[i] - my);
+        den += (xs[i] - mx) * (xs[i] - mx);
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+/// Format a duration in ms with adaptive precision (bench tables).
+pub fn fmt_ms(ms: f64) -> String {
+    if ms >= 1000.0 {
+        format!("{:.0}", ms)
+    } else if ms >= 100.0 {
+        format!("{:.1}", ms)
+    } else if ms >= 1.0 {
+        format!("{:.2}", ms)
+    } else {
+        format!("{:.3}", ms)
+    }
+}
+
+/// Format big counts with SI suffixes (bench tables).
+pub fn fmt_si(x: f64) -> String {
+    let ax = x.abs();
+    if ax >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if ax >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if ax >= 1e3 {
+        format!("{:.1}k", x / 1e3)
+    } else {
+        format!("{:.1}", x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(mean(&xs), 3.0);
+        assert!((stddev(&xs) - 1.5811388).abs() < 1e-6);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn slope_linear() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 3.0, 5.0, 7.0];
+        assert!((slope(&xs, &ys) - 2.0).abs() < 1e-12);
+        assert_eq!(slope(&[1.0], &[2.0]), 0.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ms(0.1234), "0.123");
+        assert_eq!(fmt_ms(12.34), "12.34");
+        assert_eq!(fmt_ms(123.4), "123.4");
+        assert_eq!(fmt_ms(12340.0), "12340");
+        assert_eq!(fmt_si(1234.0), "1.2k");
+        assert_eq!(fmt_si(12_500_000.0), "12.50M");
+        assert_eq!(fmt_si(3.0), "3.0");
+    }
+}

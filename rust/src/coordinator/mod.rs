@@ -1,0 +1,9 @@
+//! The coordinator: owns the simulation loop, binds backends to physics
+//! kernels and hardware profiles, meters every step (simulated time, real
+//! wall time, energy) and renders reports.
+
+pub mod engine;
+pub mod metrics;
+pub mod report;
+
+pub use engine::{Engine, EngineConfig, RunSummary, StepRecord};

@@ -1,0 +1,122 @@
+//! Report rendering: CSV traces and aligned text tables for the bench
+//! suite (the offline vendor set has no serde, so emission is by hand).
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Minimal CSV writer (quotes fields containing separators).
+pub struct CsvWriter {
+    out: fs::File,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: &Path, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut out = fs::File::create(path)?;
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, cols: header.len() })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        anyhow::ensure!(fields.len() == self.cols, "row width mismatch");
+        let line: Vec<String> = fields
+            .iter()
+            .map(|f| {
+                if f.contains(',') || f.contains('"') {
+                    format!("\"{}\"", f.replace('"', "\"\""))
+                } else {
+                    f.clone()
+                }
+            })
+            .collect();
+        writeln!(self.out, "{}", line.join(","))?;
+        Ok(())
+    }
+}
+
+/// Aligned plain-text table (paper-style rows printed by the benches).
+#[derive(Default)]
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new(header: &[&str]) -> Self {
+        TextTable { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, fields: Vec<String>) {
+        self.rows.push(fields);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (c, f) in row.iter().enumerate().take(ncols) {
+                widths[c] = widths[c].max(f.len());
+            }
+        }
+        let mut s = String::new();
+        let fmt_row = |fields: &[String], widths: &[usize]| -> String {
+            fields
+                .iter()
+                .enumerate()
+                .map(|(c, f)| format!("{:>w$}", f, w = widths.get(c).copied().unwrap_or(8)))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        s.push_str(&fmt_row(&self.header, &widths));
+        s.push('\n');
+        s.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&fmt_row(row, &widths));
+            s.push('\n');
+        }
+        s
+    }
+}
+
+/// Results directory (env override `ORCS_RESULTS`).
+pub fn results_dir() -> std::path::PathBuf {
+    std::env::var("ORCS_RESULTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("results"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_writes_and_quotes() {
+        let dir = std::env::temp_dir().join("orcs_test_csv");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["1".into(), "x,y".into()]).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,\"x,y\"\n");
+        assert!(CsvWriter::create(&path, &["a"]).unwrap().row(&["1".into(), "2".into()]).is_err());
+    }
+
+    #[test]
+    fn table_aligns() {
+        let mut t = TextTable::new(&["name", "val"]);
+        t.row(vec!["x".into(), "1".into()]);
+        t.row(vec!["longer".into(), "22".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name"));
+        assert!(lines[3].ends_with("22"));
+    }
+}

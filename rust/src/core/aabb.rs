@@ -1,0 +1,135 @@
+//! Axis-aligned bounding boxes — the primitive the (simulated) RT cores
+//! traverse. Each particle's search sphere (center `p`, radius `r`) bounds
+//! to `[p - r, p + r]`.
+
+use super::vec3::Vec3;
+
+/// An axis-aligned bounding box.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Aabb {
+    pub lo: Vec3,
+    pub hi: Vec3,
+}
+
+impl Aabb {
+    /// The empty box (identity for [`Aabb::union`]).
+    pub const EMPTY: Aabb = Aabb {
+        lo: Vec3::splat(f32::INFINITY),
+        hi: Vec3::splat(f32::NEG_INFINITY),
+    };
+
+    #[inline(always)]
+    pub fn new(lo: Vec3, hi: Vec3) -> Self {
+        Aabb { lo, hi }
+    }
+
+    /// Bounding box of a sphere at `c` with radius `r`.
+    #[inline(always)]
+    pub fn of_sphere(c: Vec3, r: f32) -> Self {
+        Aabb {
+            lo: c - Vec3::splat(r),
+            hi: c + Vec3::splat(r),
+        }
+    }
+
+    /// Smallest box containing both operands.
+    #[inline(always)]
+    pub fn union(self, o: Aabb) -> Aabb {
+        Aabb {
+            lo: self.lo.min(o.lo),
+            hi: self.hi.max(o.hi),
+        }
+    }
+
+    /// Grow in place — hot loop of refit, avoids a copy.
+    #[inline(always)]
+    pub fn grow(&mut self, o: &Aabb) {
+        self.lo = self.lo.min(o.lo);
+        self.hi = self.hi.max(o.hi);
+    }
+
+    /// Does `p` lie inside (or on the surface of) the box?
+    #[inline(always)]
+    pub fn contains(&self, p: Vec3) -> bool {
+        p.x >= self.lo.x
+            && p.x <= self.hi.x
+            && p.y >= self.lo.y
+            && p.y <= self.hi.y
+            && p.z >= self.lo.z
+            && p.z <= self.hi.z
+    }
+
+    /// Box center.
+    #[inline(always)]
+    pub fn center(&self) -> Vec3 {
+        (self.lo + self.hi) * 0.5
+    }
+
+    /// Surface area (the SAH quality measure). Zero for the empty box.
+    #[inline(always)]
+    pub fn surface_area(&self) -> f32 {
+        let d = self.hi - self.lo;
+        if d.x < 0.0 || d.y < 0.0 || d.z < 0.0 {
+            return 0.0;
+        }
+        2.0 * (d.x * d.y + d.y * d.z + d.z * d.x)
+    }
+
+    /// True when the box contains no points.
+    #[inline(always)]
+    pub fn is_empty(&self) -> bool {
+        self.lo.x > self.hi.x
+    }
+
+    /// Longest axis (0/1/2) — split axis for median builds.
+    #[inline(always)]
+    pub fn longest_axis(&self) -> usize {
+        let d = self.hi - self.lo;
+        if d.x >= d.y && d.x >= d.z {
+            0
+        } else if d.y >= d.z {
+            1
+        } else {
+            2
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sphere_bounds() {
+        let b = Aabb::of_sphere(Vec3::new(1.0, 2.0, 3.0), 0.5);
+        assert_eq!(b.lo, Vec3::new(0.5, 1.5, 2.5));
+        assert_eq!(b.hi, Vec3::new(1.5, 2.5, 3.5));
+        assert!(b.contains(Vec3::new(1.0, 2.0, 3.0)));
+        assert!(!b.contains(Vec3::new(2.0, 2.0, 3.0)));
+    }
+
+    #[test]
+    fn union_and_empty() {
+        let a = Aabb::of_sphere(Vec3::ZERO, 1.0);
+        let b = Aabb::of_sphere(Vec3::splat(5.0), 1.0);
+        let u = a.union(b);
+        assert_eq!(u.lo, Vec3::splat(-1.0));
+        assert_eq!(u.hi, Vec3::splat(6.0));
+        assert!(Aabb::EMPTY.is_empty());
+        assert_eq!(Aabb::EMPTY.union(a), a);
+        assert_eq!(Aabb::EMPTY.surface_area(), 0.0);
+    }
+
+    #[test]
+    fn surface_area_unit_cube() {
+        let b = Aabb::new(Vec3::ZERO, Vec3::splat(1.0));
+        assert_eq!(b.surface_area(), 6.0);
+        assert_eq!(b.center(), Vec3::splat(0.5));
+    }
+
+    #[test]
+    fn longest_axis_picks_max_extent() {
+        let b = Aabb::new(Vec3::ZERO, Vec3::new(1.0, 5.0, 2.0));
+        assert_eq!(b.longest_axis(), 1);
+    }
+}

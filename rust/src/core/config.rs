@@ -1,0 +1,251 @@
+//! Simulation configuration: the knobs of the paper's evaluation (§4).
+
+use std::fmt;
+
+/// Initial particle position distribution (paper Fig. 7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParticleDist {
+    /// Regular grid positions.
+    Lattice,
+    /// Random uniform positions in the box.
+    Disordered,
+    /// Random normal cluster `N(mu = rand, sigma = 25)`.
+    Cluster,
+}
+
+impl ParticleDist {
+    pub const ALL: [ParticleDist; 3] =
+        [ParticleDist::Lattice, ParticleDist::Disordered, ParticleDist::Cluster];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "lattice" | "l" => Some(Self::Lattice),
+            "disordered" | "d" => Some(Self::Disordered),
+            "cluster" | "c" => Some(Self::Cluster),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ParticleDist {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Lattice => write!(f, "Lattice"),
+            Self::Disordered => write!(f, "Disordered"),
+            Self::Cluster => write!(f, "Cluster"),
+        }
+    }
+}
+
+/// Search-radius distribution (paper §4.1: r=1, r=160, U[1,160], LN(1,2)∈[1,330]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RadiusDist {
+    /// All particles share one radius.
+    Const(f32),
+    /// Uniform in `[lo, hi]`.
+    Uniform(f32, f32),
+    /// `exp(N(mu, sigma))` clamped to `[lo, hi]`.
+    LogNormal { mu: f64, sigma: f64, lo: f32, hi: f32 },
+}
+
+impl RadiusDist {
+    /// The paper's four benchmark radius distributions.
+    pub fn paper_set() -> [RadiusDist; 4] {
+        [
+            RadiusDist::Const(1.0),
+            RadiusDist::Const(160.0),
+            RadiusDist::Uniform(1.0, 160.0),
+            RadiusDist::LogNormal { mu: 1.0, sigma: 2.0, lo: 1.0, hi: 330.0 },
+        ]
+    }
+
+    /// True when every particle has the same radius (ORCS-persé requirement).
+    pub fn is_uniform_radius(&self) -> bool {
+        matches!(self, RadiusDist::Const(_))
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        let s = s.to_ascii_lowercase();
+        if let Some(v) = s.strip_prefix("const:") {
+            return v.parse().ok().map(RadiusDist::Const);
+        }
+        if let Some(v) = s.strip_prefix("uniform:") {
+            let mut it = v.split(',');
+            let lo = it.next()?.parse().ok()?;
+            let hi = it.next()?.parse().ok()?;
+            return Some(RadiusDist::Uniform(lo, hi));
+        }
+        if let Some(v) = s.strip_prefix("lognormal:") {
+            let mut it = v.split(',');
+            let mu = it.next()?.parse().ok()?;
+            let sigma = it.next()?.parse().ok()?;
+            let lo = it.next()?.parse().ok()?;
+            let hi = it.next()?.parse().ok()?;
+            return Some(RadiusDist::LogNormal { mu, sigma, lo, hi });
+        }
+        match s.as_str() {
+            "r1" => Some(RadiusDist::Const(1.0)),
+            "r160" => Some(RadiusDist::Const(160.0)),
+            "u" | "u1-160" => Some(RadiusDist::Uniform(1.0, 160.0)),
+            "ln" | "ln1-330" => {
+                Some(RadiusDist::LogNormal { mu: 1.0, sigma: 2.0, lo: 1.0, hi: 330.0 })
+            }
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for RadiusDist {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Const(r) => write!(f, "r={r}"),
+            Self::Uniform(lo, hi) => write!(f, "U[{lo},{hi}]"),
+            Self::LogNormal { mu, sigma, lo, hi } => {
+                write!(f, "LN({mu},{sigma})[{lo},{hi}]")
+            }
+        }
+    }
+}
+
+/// Boundary conditions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Boundary {
+    /// Reflective walls.
+    Wall,
+    /// Periodic wrap with minimum-image interactions (contribution #3
+    /// handles this case with gamma rays in the RT pipelines).
+    Periodic,
+}
+
+impl Boundary {
+    pub const ALL: [Boundary; 2] = [Boundary::Wall, Boundary::Periodic];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "wall" | "w" => Some(Self::Wall),
+            "periodic" | "p" => Some(Self::Periodic),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Boundary {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Wall => write!(f, "Wall"),
+            Self::Periodic => write!(f, "Periodic"),
+        }
+    }
+}
+
+/// Which physics-kernel path the coordinator uses for gather-style force
+/// evaluation (RT-REF) and integration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ForcePath {
+    /// AOT-lowered JAX/Pallas HLO executed through PJRT — the paper-faithful
+    /// "separate GPU compute kernel". Default for `simulate` and the e2e
+    /// example.
+    Xla,
+    /// Pure-Rust oracle path; used by tests as reference and by very large
+    /// bench sweeps where PJRT-CPU dispatch overhead would dominate
+    /// wall-clock (simulated times are identical on both paths).
+    Rust,
+}
+
+/// Full scenario configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Number of particles.
+    pub n: usize,
+    /// Cubic box side (paper: 1000).
+    pub box_l: f32,
+    pub particle_dist: ParticleDist,
+    pub radius_dist: RadiusDist,
+    pub boundary: Boundary,
+    /// Integration time step.
+    pub dt: f32,
+    /// LJ well depth.
+    pub epsilon: f32,
+    /// sigma_i = r_i / sigma_factor (classic cutoff r_c = 2.5 sigma).
+    pub sigma_factor: f32,
+    /// Force-magnitude cap for numerical stability in dense clusters.
+    pub f_max: f32,
+    /// RNG seed for scene + dynamics.
+    pub seed: u64,
+    pub force_path: ForcePath,
+    /// Std-dev of the initial thermal velocity kick (scene temperature).
+    pub vel_scale: f32,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            n: 10_000,
+            box_l: 1000.0,
+            particle_dist: ParticleDist::Disordered,
+            radius_dist: RadiusDist::Const(1.0),
+            boundary: Boundary::Periodic,
+            dt: 1e-3,
+            epsilon: 1.0,
+            sigma_factor: 2.5,
+            f_max: 1e4,
+            seed: 0xC0FFEE,
+            force_path: ForcePath::Rust,
+            vel_scale: 0.05,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Short human tag, used in CSV outputs: `Lattice/r=1/Wall/n=50000`.
+    pub fn tag(&self) -> String {
+        format!(
+            "{}/{}/{}/n={}",
+            self.particle_dist, self.radius_dist, self.boundary, self.n
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_particle_dist() {
+        assert_eq!(ParticleDist::parse("lattice"), Some(ParticleDist::Lattice));
+        assert_eq!(ParticleDist::parse("D"), Some(ParticleDist::Disordered));
+        assert_eq!(ParticleDist::parse("c"), Some(ParticleDist::Cluster));
+        assert_eq!(ParticleDist::parse("x"), None);
+    }
+
+    #[test]
+    fn parse_radius_dist() {
+        assert_eq!(RadiusDist::parse("r1"), Some(RadiusDist::Const(1.0)));
+        assert_eq!(RadiusDist::parse("const:2.5"), Some(RadiusDist::Const(2.5)));
+        assert_eq!(
+            RadiusDist::parse("uniform:1,160"),
+            Some(RadiusDist::Uniform(1.0, 160.0))
+        );
+        match RadiusDist::parse("ln") {
+            Some(RadiusDist::LogNormal { mu, sigma, lo, hi }) => {
+                assert_eq!((mu, sigma, lo, hi), (1.0, 2.0, 1.0, 330.0));
+            }
+            other => panic!("bad parse: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn paper_set_matches_section_4() {
+        let set = RadiusDist::paper_set();
+        assert_eq!(set[0], RadiusDist::Const(1.0));
+        assert_eq!(set[1], RadiusDist::Const(160.0));
+        assert!(set[0].is_uniform_radius());
+        assert!(!set[2].is_uniform_radius());
+    }
+
+    #[test]
+    fn tag_is_stable() {
+        let c = SimConfig::default();
+        assert_eq!(c.tag(), "Disordered/r=1/Periodic/n=10000");
+    }
+}

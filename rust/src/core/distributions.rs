@@ -1,0 +1,219 @@
+//! Scene generation: initial particle positions, velocities and search radii
+//! for the paper's benchmark scenarios (§4.1, Fig. 7).
+
+use super::config::{ParticleDist, RadiusDist, SimConfig};
+use super::rng::Rng;
+use super::vec3::Vec3;
+
+/// A generated scene: positions, velocities and per-particle search radii
+/// (structure-of-arrays, the layout every downstream system consumes).
+#[derive(Clone, Debug)]
+pub struct Scene {
+    pub pos: Vec<Vec3>,
+    pub vel: Vec<Vec3>,
+    pub radius: Vec<f32>,
+    /// Largest search radius in the system — the gamma-ray trigger distance
+    /// for periodic BC with variable radii (§3.3).
+    pub r_max: f32,
+    pub box_l: f32,
+}
+
+impl Scene {
+    pub fn len(&self) -> usize {
+        self.pos.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pos.is_empty()
+    }
+}
+
+/// Generate initial positions for `n` particles in a cubic box of side
+/// `box_l` according to `dist`.
+pub fn positions(dist: ParticleDist, n: usize, box_l: f32, rng: &mut Rng) -> Vec<Vec3> {
+    match dist {
+        ParticleDist::Lattice => lattice(n, box_l),
+        ParticleDist::Disordered => (0..n)
+            .map(|_| {
+                Vec3::new(
+                    rng.range_f32(0.0, box_l),
+                    rng.range_f32(0.0, box_l),
+                    rng.range_f32(0.0, box_l),
+                )
+            })
+            .collect(),
+        ParticleDist::Cluster => {
+            // Paper: N(mu = rand, sigma = 25). One random cluster center,
+            // normal spread of 25, clamped into the box.
+            let mu = Vec3::new(
+                rng.range_f32(0.2 * box_l, 0.8 * box_l),
+                rng.range_f32(0.2 * box_l, 0.8 * box_l),
+                rng.range_f32(0.2 * box_l, 0.8 * box_l),
+            );
+            (0..n)
+                .map(|_| {
+                    let p = Vec3::new(
+                        mu.x + rng.normal_ms(0.0, 25.0) as f32,
+                        mu.y + rng.normal_ms(0.0, 25.0) as f32,
+                        mu.z + rng.normal_ms(0.0, 25.0) as f32,
+                    );
+                    clamp_into_box(p, box_l)
+                })
+                .collect()
+        }
+    }
+}
+
+/// Regular grid filling the box: ceil(n^(1/3)) points per side, row-major,
+/// truncated to exactly `n`.
+fn lattice(n: usize, box_l: f32) -> Vec<Vec3> {
+    let side = (n as f64).cbrt().ceil() as usize;
+    let side = side.max(1);
+    let step = box_l / side as f32;
+    let half = step * 0.5;
+    let mut out = Vec::with_capacity(n);
+    'outer: for k in 0..side {
+        for j in 0..side {
+            for i in 0..side {
+                if out.len() == n {
+                    break 'outer;
+                }
+                out.push(Vec3::new(
+                    half + i as f32 * step,
+                    half + j as f32 * step,
+                    half + k as f32 * step,
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[inline]
+fn clamp_into_box(p: Vec3, box_l: f32) -> Vec3 {
+    let eps = 1e-3;
+    Vec3::new(
+        p.x.clamp(eps, box_l - eps),
+        p.y.clamp(eps, box_l - eps),
+        p.z.clamp(eps, box_l - eps),
+    )
+}
+
+/// Sample per-particle search radii.
+pub fn radii(dist: RadiusDist, n: usize, rng: &mut Rng) -> Vec<f32> {
+    match dist {
+        RadiusDist::Const(r) => vec![r; n],
+        RadiusDist::Uniform(lo, hi) => (0..n).map(|_| rng.range_f32(lo, hi)).collect(),
+        RadiusDist::LogNormal { mu, sigma, lo, hi } => (0..n)
+            .map(|_| (rng.lognormal(mu, sigma) as f32).clamp(lo, hi))
+            .collect(),
+    }
+}
+
+/// Small random initial velocities (temperature seed) — the paper's systems
+/// start near rest and acquire motion from LJ forces; a tiny kick breaks
+/// lattice symmetry.
+pub fn velocities(n: usize, scale: f32, rng: &mut Rng) -> Vec<Vec3> {
+    (0..n)
+        .map(|_| {
+            Vec3::new(
+                rng.normal_ms(0.0, scale as f64) as f32,
+                rng.normal_ms(0.0, scale as f64) as f32,
+                rng.normal_ms(0.0, scale as f64) as f32,
+            )
+        })
+        .collect()
+}
+
+/// Build the full scene for a configuration.
+pub fn scene(cfg: &SimConfig) -> Scene {
+    let mut rng = Rng::new(cfg.seed);
+    let pos = positions(cfg.particle_dist, cfg.n, cfg.box_l, &mut rng);
+    let radius = radii(cfg.radius_dist, cfg.n, &mut rng);
+    let vel = velocities(cfg.n, cfg.vel_scale, &mut rng);
+    let r_max = radius.iter().fold(0.0f32, |a, &b| a.max(b));
+    Scene { pos, vel, radius, r_max, box_l: cfg.box_l }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::config::{ParticleDist, RadiusDist};
+
+    fn in_box(p: Vec3, l: f32) -> bool {
+        (0.0..=l).contains(&p.x) && (0.0..=l).contains(&p.y) && (0.0..=l).contains(&p.z)
+    }
+
+    #[test]
+    fn lattice_positions_in_box_and_distinct() {
+        let ps = positions(ParticleDist::Lattice, 1000, 100.0, &mut Rng::new(1));
+        assert_eq!(ps.len(), 1000);
+        assert!(ps.iter().all(|&p| in_box(p, 100.0)));
+        // grid of 10^3 -> spacing 10, first two differ by 10 in x
+        assert!((ps[1].x - ps[0].x - 10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn lattice_non_cube_count() {
+        let ps = positions(ParticleDist::Lattice, 37, 100.0, &mut Rng::new(1));
+        assert_eq!(ps.len(), 37);
+    }
+
+    #[test]
+    fn disordered_uniform_spread() {
+        let ps = positions(ParticleDist::Disordered, 5000, 1000.0, &mut Rng::new(2));
+        assert!(ps.iter().all(|&p| in_box(p, 1000.0)));
+        let mean = ps.iter().fold(Vec3::ZERO, |a, &b| a + b) / 5000.0;
+        assert!((mean.x - 500.0).abs() < 20.0);
+        assert!((mean.y - 500.0).abs() < 20.0);
+    }
+
+    #[test]
+    fn cluster_is_tight() {
+        let ps = positions(ParticleDist::Cluster, 5000, 1000.0, &mut Rng::new(3));
+        let mean = ps.iter().fold(Vec3::ZERO, |a, &b| a + b) / 5000.0;
+        // std 25 -> nearly all particles within 100 of the center
+        let far = ps.iter().filter(|&&p| (p - mean).norm() > 150.0).count();
+        assert!(far < 10, "far={far}");
+        assert!(ps.iter().all(|&p| in_box(p, 1000.0)));
+    }
+
+    #[test]
+    fn radii_distributions() {
+        let mut rng = Rng::new(4);
+        let c = radii(RadiusDist::Const(160.0), 100, &mut rng);
+        assert!(c.iter().all(|&r| r == 160.0));
+        let u = radii(RadiusDist::Uniform(1.0, 160.0), 10_000, &mut rng);
+        assert!(u.iter().all(|&r| (1.0..160.0).contains(&r)));
+        let ln =
+            radii(RadiusDist::LogNormal { mu: 1.0, sigma: 2.0, lo: 1.0, hi: 330.0 }, 10_000, &mut rng);
+        assert!(ln.iter().all(|&r| (1.0..=330.0).contains(&r)));
+        // log-normal: most particles small, a few large (paper §4.1)
+        let small = ln.iter().filter(|&&r| r < 20.0).count();
+        let large = ln.iter().filter(|&&r| r > 100.0).count();
+        assert!(small > 7_000, "small={small}");
+        assert!(large > 50, "large={large}");
+    }
+
+    #[test]
+    fn scene_r_max_consistent() {
+        let cfg = SimConfig {
+            n: 500,
+            radius_dist: RadiusDist::Uniform(1.0, 160.0),
+            ..SimConfig::default()
+        };
+        let s = scene(&cfg);
+        let m = s.radius.iter().cloned().fold(0.0f32, f32::max);
+        assert_eq!(s.r_max, m);
+        assert_eq!(s.len(), 500);
+    }
+
+    #[test]
+    fn scene_deterministic_per_seed() {
+        let cfg = SimConfig { n: 100, ..SimConfig::default() };
+        let a = scene(&cfg);
+        let b = scene(&cfg);
+        assert_eq!(a.pos, b.pos);
+        assert_eq!(a.radius, b.radius);
+    }
+}

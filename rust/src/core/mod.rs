@@ -1,0 +1,8 @@
+//! Core value types: 3-vectors, AABBs, deterministic RNG, scene generation
+//! and simulation configuration.
+
+pub mod aabb;
+pub mod config;
+pub mod distributions;
+pub mod rng;
+pub mod vec3;

@@ -1,0 +1,197 @@
+//! Minimal f32 3-vector used throughout the simulation.
+//!
+//! f32 matches the precision of the paper's GPU implementation; the box is
+//! 1000³ so f32 gives ~6e-5 absolute position resolution, far below the
+//! smallest interaction radius (r = 1).
+
+use std::ops::{Add, AddAssign, Div, Mul, Neg, Sub, SubAssign};
+
+/// A 3-component single-precision vector.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Vec3 {
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+}
+
+impl Vec3 {
+    pub const ZERO: Vec3 = Vec3 { x: 0.0, y: 0.0, z: 0.0 };
+
+    #[inline(always)]
+    pub const fn new(x: f32, y: f32, z: f32) -> Self {
+        Vec3 { x, y, z }
+    }
+
+    /// All components set to `v`.
+    #[inline(always)]
+    pub const fn splat(v: f32) -> Self {
+        Vec3 { x: v, y: v, z: v }
+    }
+
+    #[inline(always)]
+    pub fn dot(self, o: Vec3) -> f32 {
+        self.x * o.x + self.y * o.y + self.z * o.z
+    }
+
+    /// Squared Euclidean norm.
+    #[inline(always)]
+    pub fn norm2(self) -> f32 {
+        self.dot(self)
+    }
+
+    #[inline(always)]
+    pub fn norm(self) -> f32 {
+        self.norm2().sqrt()
+    }
+
+    /// Component-wise minimum.
+    #[inline(always)]
+    pub fn min(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x.min(o.x), self.y.min(o.y), self.z.min(o.z))
+    }
+
+    /// Component-wise maximum.
+    #[inline(always)]
+    pub fn max(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x.max(o.x), self.y.max(o.y), self.z.max(o.z))
+    }
+
+    /// Component-wise absolute value.
+    #[inline(always)]
+    pub fn abs(self) -> Vec3 {
+        Vec3::new(self.x.abs(), self.y.abs(), self.z.abs())
+    }
+
+    /// Largest component.
+    #[inline(always)]
+    pub fn max_component(self) -> f32 {
+        self.x.max(self.y).max(self.z)
+    }
+
+    /// Component accessor by axis index (0 = x, 1 = y, 2 = z).
+    #[inline(always)]
+    pub fn axis(self, a: usize) -> f32 {
+        match a {
+            0 => self.x,
+            1 => self.y,
+            _ => self.z,
+        }
+    }
+
+    /// Minimum-image displacement for a periodic cubic box of side `box_l`:
+    /// each component of `self` is wrapped into `[-box_l/2, box_l/2)`.
+    #[inline(always)]
+    pub fn min_image(self, box_l: f32) -> Vec3 {
+        #[inline(always)]
+        fn wrap(d: f32, l: f32) -> f32 {
+            d - l * (d / l).round()
+        }
+        Vec3::new(wrap(self.x, box_l), wrap(self.y, box_l), wrap(self.z, box_l))
+    }
+
+    /// True if every component is finite.
+    #[inline(always)]
+    pub fn is_finite(self) -> bool {
+        self.x.is_finite() && self.y.is_finite() && self.z.is_finite()
+    }
+}
+
+impl Add for Vec3 {
+    type Output = Vec3;
+    #[inline(always)]
+    fn add(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x + o.x, self.y + o.y, self.z + o.z)
+    }
+}
+
+impl Sub for Vec3 {
+    type Output = Vec3;
+    #[inline(always)]
+    fn sub(self, o: Vec3) -> Vec3 {
+        Vec3::new(self.x - o.x, self.y - o.y, self.z - o.z)
+    }
+}
+
+impl Mul<f32> for Vec3 {
+    type Output = Vec3;
+    #[inline(always)]
+    fn mul(self, s: f32) -> Vec3 {
+        Vec3::new(self.x * s, self.y * s, self.z * s)
+    }
+}
+
+impl Div<f32> for Vec3 {
+    type Output = Vec3;
+    #[inline(always)]
+    fn div(self, s: f32) -> Vec3 {
+        Vec3::new(self.x / s, self.y / s, self.z / s)
+    }
+}
+
+impl Neg for Vec3 {
+    type Output = Vec3;
+    #[inline(always)]
+    fn neg(self) -> Vec3 {
+        Vec3::new(-self.x, -self.y, -self.z)
+    }
+}
+
+impl AddAssign for Vec3 {
+    #[inline(always)]
+    fn add_assign(&mut self, o: Vec3) {
+        *self = *self + o;
+    }
+}
+
+impl SubAssign for Vec3 {
+    #[inline(always)]
+    fn sub_assign(&mut self, o: Vec3) {
+        *self = *self - o;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = Vec3::new(1.0, 2.0, 3.0);
+        let b = Vec3::new(4.0, 5.0, 6.0);
+        assert_eq!(a + b, Vec3::new(5.0, 7.0, 9.0));
+        assert_eq!(b - a, Vec3::splat(3.0));
+        assert_eq!(a * 2.0, Vec3::new(2.0, 4.0, 6.0));
+        assert_eq!(b / 2.0, Vec3::new(2.0, 2.5, 3.0));
+        assert_eq!(-a, Vec3::new(-1.0, -2.0, -3.0));
+        assert_eq!(a.dot(b), 32.0);
+        assert_eq!(a.norm2(), 14.0);
+    }
+
+    #[test]
+    fn min_max_axis() {
+        let a = Vec3::new(1.0, 5.0, 3.0);
+        let b = Vec3::new(4.0, 2.0, 6.0);
+        assert_eq!(a.min(b), Vec3::new(1.0, 2.0, 3.0));
+        assert_eq!(a.max(b), Vec3::new(4.0, 5.0, 6.0));
+        assert_eq!(a.axis(0), 1.0);
+        assert_eq!(a.axis(1), 5.0);
+        assert_eq!(a.axis(2), 3.0);
+        assert_eq!(a.max_component(), 5.0);
+    }
+
+    #[test]
+    fn min_image_wraps_to_half_box() {
+        let l = 100.0;
+        // displacement of 90 across a 100-box is really -10
+        let d = Vec3::new(90.0, -90.0, 30.0).min_image(l);
+        assert!((d.x - (-10.0)).abs() < 1e-4);
+        assert!((d.y - 10.0).abs() < 1e-4);
+        assert!((d.z - 30.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn min_image_idempotent_within_half() {
+        let d = Vec3::new(10.0, -20.0, 49.0);
+        assert_eq!(d.min_image(100.0), d);
+    }
+}

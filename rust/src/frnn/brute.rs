@@ -1,0 +1,198 @@
+//! All-pairs brute-force oracle: `O(n²)` neighbor finding and force
+//! evaluation. The ground truth every backend is validated against in the
+//! integration and property tests.
+
+use crate::core::config::Boundary;
+use crate::core::vec3::Vec3;
+use crate::physics::boundary::displacement;
+use crate::physics::lj::LjParams;
+use crate::physics::state::SimState;
+
+/// Interaction neighbor set of particle `i`: all `j != i` with
+/// `|d_ij| < max(r_i, r_j)` (minimum-imaged when periodic). Sorted.
+pub fn interaction_neighbors(
+    i: usize,
+    pos: &[Vec3],
+    radius: &[f32],
+    boundary: Boundary,
+    box_l: f32,
+) -> Vec<usize> {
+    let mut out = Vec::new();
+    for j in 0..pos.len() {
+        if j == i {
+            continue;
+        }
+        let d = displacement(pos[i], pos[j], boundary, box_l);
+        let rc = radius[i].max(radius[j]);
+        if d.norm2() < rc * rc {
+            out.push(j);
+        }
+    }
+    out
+}
+
+/// Detection neighbor set: all `j != i` whose *sphere contains* `p_i`
+/// (`|d_ij| < r_j`) — what particle i's ray alone can discover (Fig. 5).
+pub fn detection_neighbors(
+    i: usize,
+    pos: &[Vec3],
+    radius: &[f32],
+    boundary: Boundary,
+    box_l: f32,
+) -> Vec<usize> {
+    let mut out = Vec::new();
+    for j in 0..pos.len() {
+        if j == i {
+            continue;
+        }
+        let d = displacement(pos[i], pos[j], boundary, box_l);
+        if d.norm2() < radius[j] * radius[j] {
+            out.push(j);
+        }
+    }
+    out
+}
+
+/// Brute-force per-particle LJ forces over the interaction sets.
+pub fn forces(state: &SimState) -> Vec<Vec3> {
+    let n = state.n();
+    let mut f = vec![Vec3::ZERO; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = displacement(state.pos[i], state.pos[j], state.boundary, state.box_l);
+            if let Some(fij) = state.params.pair_force(d, state.radius[i], state.radius[j]) {
+                f[i] += fij;
+                f[j] -= fij;
+            }
+        }
+    }
+    f
+}
+
+/// Count unordered interacting pairs (the paper's per-step `I`).
+pub fn count_interactions(
+    pos: &[Vec3],
+    radius: &[f32],
+    boundary: Boundary,
+    box_l: f32,
+) -> u64 {
+    let n = pos.len();
+    let mut c = 0u64;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = displacement(pos[i], pos[j], boundary, box_l);
+            let rc = radius[i].max(radius[j]);
+            if d.norm2() < rc * rc {
+                c += 1;
+            }
+        }
+    }
+    c
+}
+
+/// Total potential energy (diagnostic for integration tests).
+pub fn potential_energy(state: &SimState) -> f64 {
+    let n = state.n();
+    let mut u = 0.0f64;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = displacement(state.pos[i], state.pos[j], state.boundary, state.box_l);
+            let rc = state.params.cutoff_pair(state.radius[i], state.radius[j]);
+            let r2 = d.norm2();
+            if r2 < rc * rc {
+                let sigma = state.params.sigma_pair(state.radius[i], state.radius[j]);
+                u += state.params.potential(r2, sigma) as f64;
+            }
+        }
+    }
+    u
+}
+
+/// Convenience used by tests: forces computed for arbitrary arrays.
+pub fn forces_raw(
+    pos: &[Vec3],
+    radius: &[f32],
+    params: &LjParams,
+    boundary: Boundary,
+    box_l: f32,
+) -> Vec<Vec3> {
+    let n = pos.len();
+    let mut f = vec![Vec3::ZERO; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = displacement(pos[i], pos[j], boundary, box_l);
+            if let Some(fij) = params.pair_force(d, radius[i], radius[j]) {
+                f[i] += fij;
+                f[j] -= fij;
+            }
+        }
+    }
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::config::SimConfig;
+
+    #[test]
+    fn interaction_set_symmetric() {
+        let pos = vec![
+            Vec3::new(0.0, 0.0, 0.0),
+            Vec3::new(3.0, 0.0, 0.0),
+            Vec3::new(50.0, 0.0, 0.0),
+        ];
+        let radius = vec![1.0f32, 5.0, 1.0];
+        // pair (0,1): dist 3 < max(1,5) -> interact both ways
+        let n0 = interaction_neighbors(0, &pos, &radius, Boundary::Wall, 100.0);
+        let n1 = interaction_neighbors(1, &pos, &radius, Boundary::Wall, 100.0);
+        assert_eq!(n0, vec![1]);
+        assert_eq!(n1, vec![0]);
+        // detection is asymmetric: 0 sees 1 (inside 1's sphere), 1 does not see 0
+        let d0 = detection_neighbors(0, &pos, &radius, Boundary::Wall, 100.0);
+        let d1 = detection_neighbors(1, &pos, &radius, Boundary::Wall, 100.0);
+        assert_eq!(d0, vec![1]);
+        assert!(d1.is_empty());
+    }
+
+    #[test]
+    fn periodic_wraps_neighbors() {
+        let pos = vec![Vec3::new(0.5, 5.0, 5.0), Vec3::new(9.5, 5.0, 5.0)];
+        let radius = vec![2.0f32, 2.0];
+        let nw = interaction_neighbors(0, &pos, &radius, Boundary::Wall, 10.0);
+        assert!(nw.is_empty());
+        let np = interaction_neighbors(0, &pos, &radius, Boundary::Periodic, 10.0);
+        assert_eq!(np, vec![1]);
+    }
+
+    #[test]
+    fn forces_conserve_momentum() {
+        let cfg = SimConfig { n: 50, ..SimConfig::default() };
+        let mut state = SimState::from_config(&cfg);
+        // dense cluster to guarantee interactions
+        for (k, p) in state.pos.iter_mut().enumerate() {
+            let k = k as f32;
+            *p = Vec3::new(500.0 + (k % 5.0) * 0.8, 500.0 + (k / 7.0) * 0.6, 500.0);
+        }
+        state.radius.iter_mut().for_each(|r| *r = 3.0);
+        let f = forces(&state);
+        let sum = f.iter().fold(Vec3::ZERO, |a, &b| a + b);
+        let scale: f32 = f.iter().map(|v| v.norm()).sum::<f32>().max(1.0);
+        assert!(sum.norm() < 1e-3 * scale, "net force {sum:?} vs scale {scale}");
+    }
+
+    #[test]
+    fn interaction_count_matches_sets() {
+        let cfg = SimConfig { n: 40, ..SimConfig::default() };
+        let mut state = SimState::from_config(&cfg);
+        state.radius.iter_mut().for_each(|r| *r = 40.0);
+        let total: usize = (0..state.n())
+            .map(|i| {
+                interaction_neighbors(i, &state.pos, &state.radius, state.boundary, state.box_l)
+                    .len()
+            })
+            .sum();
+        let pairs = count_interactions(&state.pos, &state.radius, state.boundary, state.box_l);
+        assert_eq!(total as u64, 2 * pairs);
+    }
+}

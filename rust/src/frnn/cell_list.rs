@@ -1,0 +1,532 @@
+//! CPU-CELL@64c — the parallel cell-list baseline (Ihmsen et al. [13],
+//! adapted as in the paper §4.2: forces are computed directly from the cell
+//! sweep, no fixed-size neighbor list, so dense scenes cannot OOM).
+//!
+//! The [`CellGrid`] here is also the substrate for [`super::gpu_cell`].
+
+use std::time::Instant;
+
+use crate::core::config::Boundary;
+use crate::core::vec3::Vec3;
+use crate::frnn::{Backend, StepCtx, StepResult, WallPhases};
+use crate::parallel;
+use crate::physics::state::SimState;
+use crate::rtcore::OpCounts;
+
+/// Uniform grid over the box with counting-sort cell buckets.
+#[derive(Clone, Debug)]
+pub struct CellGrid {
+    pub dims: usize,
+    pub cell: f32,
+    /// CSR: particles of cell `c` are `items[starts[c]..starts[c+1]]`.
+    pub starts: Vec<u32>,
+    pub items: Vec<u32>,
+}
+
+/// Above this per-axis resolution a dense cell array is wasteful; the
+/// hashed [`SparseGrid`] takes over (compact-hashing cell lists, as in
+/// Ihmsen et al. [13]).
+pub const DENSE_DIMS_CAP: usize = 64;
+
+/// Multiplicative hasher for cell keys — the default SipHash dominates the
+/// sweep profile (EXPERIMENTS.md §Perf #7); cell keys are already
+/// well-distributed integers, so one 64-bit multiply suffices.
+#[derive(Clone, Copy, Default)]
+pub struct CellKeyHasher(u64);
+
+impl std::fmt::Debug for CellKeyHash {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "CellKeyHash")
+    }
+}
+
+impl std::hash::Hasher for CellKeyHasher {
+    #[inline(always)]
+    fn finish(&self) -> u64 {
+        self.0
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+    }
+
+    #[inline(always)]
+    fn write_i64(&mut self, i: i64) {
+        self.0 = (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+    }
+}
+
+/// BuildHasher for [`CellKeyHasher`].
+#[derive(Clone, Copy, Default)]
+pub struct CellKeyHash;
+
+impl std::hash::BuildHasher for CellKeyHash {
+    type Hasher = CellKeyHasher;
+    fn build_hasher(&self) -> CellKeyHasher {
+        CellKeyHasher::default()
+    }
+}
+
+/// Radius-sized cells, hash-backed: the small-radius regime (r=1 in a
+/// 1000³ box needs 10⁹ virtual cells) where a dense array cannot exist but
+/// fine cells are exactly what makes the paper's CPU-CELL fast.
+#[derive(Clone, Debug)]
+pub struct SparseGrid {
+    pub dims: i64,
+    pub cell: f32,
+    map: std::collections::HashMap<i64, Vec<u32>, CellKeyHash>,
+}
+
+impl SparseGrid {
+    pub fn build(pos: &[Vec3], box_l: f32, dims: usize) -> SparseGrid {
+        let dims_i = dims as i64;
+        let cell = box_l / dims as f32;
+        let mut map: std::collections::HashMap<i64, Vec<u32>, CellKeyHash> =
+            std::collections::HashMap::with_capacity_and_hasher(pos.len(), CellKeyHash);
+        for (i, &p) in pos.iter().enumerate() {
+            let cx = ((p.x / cell) as i64).min(dims_i - 1);
+            let cy = ((p.y / cell) as i64).min(dims_i - 1);
+            let cz = ((p.z / cell) as i64).min(dims_i - 1);
+            map.entry((cz * dims_i + cy) * dims_i + cx).or_default().push(i as u32);
+        }
+        SparseGrid { dims: dims_i, cell, map }
+    }
+
+    /// Visit every particle in the 27 cells around `p` (cell >= r_max so a
+    /// reach of 1 always covers the cutoff).
+    pub fn sweep<F: FnMut(u32)>(&self, p: Vec3, boundary: Boundary, mut visit: F) {
+        let d = self.dims;
+        let cx = ((p.x / self.cell) as i64).min(d - 1);
+        let cy = ((p.y / self.cell) as i64).min(d - 1);
+        let cz = ((p.z / self.cell) as i64).min(d - 1);
+        for dz in -1..=1i64 {
+            for dy in -1..=1i64 {
+                for dx in -1..=1i64 {
+                    let (mut x, mut y, mut z) = (cx + dx, cy + dy, cz + dz);
+                    match boundary {
+                        Boundary::Periodic => {
+                            x = x.rem_euclid(d);
+                            y = y.rem_euclid(d);
+                            z = z.rem_euclid(d);
+                        }
+                        Boundary::Wall => {
+                            if !(0..d).contains(&x)
+                                || !(0..d).contains(&y)
+                                || !(0..d).contains(&z)
+                            {
+                                continue;
+                            }
+                        }
+                    }
+                    if let Some(items) = self.map.get(&((z * d + y) * d + x)) {
+                        for &j in items {
+                            visit(j);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Dense array or hashed grid, chosen by resolution.
+pub enum Grid {
+    Dense(CellGrid),
+    Sparse(SparseGrid),
+}
+
+impl Grid {
+    /// Build the right grid for the scene: radius-sized cells, hashed when
+    /// a dense array at that resolution would be infeasible.
+    pub fn build(pos: &[Vec3], box_l: f32, r_max: f32) -> Grid {
+        let by_radius = ((box_l / r_max.max(1e-3)).floor() as usize).max(1);
+        if by_radius > DENSE_DIMS_CAP {
+            Grid::Sparse(SparseGrid::build(pos, box_l, by_radius))
+        } else {
+            Grid::Dense(CellGrid::build(pos, box_l, by_radius))
+        }
+    }
+}
+
+impl CellGrid {
+    /// Choose grid resolution: cells at least `r_max` wide (so a reach of 1
+    /// covers the cutoff), but never more than O(n) cells in total.
+    pub fn choose_dims(n: usize, box_l: f32, r_max: f32) -> usize {
+        let by_radius = (box_l / r_max.max(1e-3)).floor() as usize;
+        let by_count = ((2 * n.max(1)) as f64).cbrt().ceil() as usize;
+        by_radius.clamp(1, by_count.max(4))
+    }
+
+    pub fn build(pos: &[Vec3], box_l: f32, dims: usize) -> CellGrid {
+        let dims = dims.max(1);
+        let cell = box_l / dims as f32;
+        let n_cells = dims * dims * dims;
+        let mut counts = vec![0u32; n_cells + 1];
+        let idx_of = |p: Vec3| -> usize {
+            let cx = ((p.x / cell) as usize).min(dims - 1);
+            let cy = ((p.y / cell) as usize).min(dims - 1);
+            let cz = ((p.z / cell) as usize).min(dims - 1);
+            (cz * dims + cy) * dims + cx
+        };
+        for &p in pos {
+            counts[idx_of(p) + 1] += 1;
+        }
+        for c in 0..n_cells {
+            counts[c + 1] += counts[c];
+        }
+        let starts = counts.clone();
+        let mut cursor = counts;
+        let mut items = vec![0u32; pos.len()];
+        for (i, &p) in pos.iter().enumerate() {
+            let c = idx_of(p);
+            items[cursor[c] as usize] = i as u32;
+            cursor[c] += 1;
+        }
+        CellGrid { dims, cell, starts, items }
+    }
+
+    #[inline]
+    pub fn cell_index(&self, p: Vec3) -> (i64, i64, i64) {
+        (
+            ((p.x / self.cell) as i64).min(self.dims as i64 - 1),
+            ((p.y / self.cell) as i64).min(self.dims as i64 - 1),
+            ((p.z / self.cell) as i64).min(self.dims as i64 - 1),
+        )
+    }
+
+    #[inline]
+    pub fn cell_items(&self, cx: i64, cy: i64, cz: i64) -> &[u32] {
+        let d = self.dims as i64;
+        debug_assert!((0..d).contains(&cx) && (0..d).contains(&cy) && (0..d).contains(&cz));
+        let c = ((cz * d + cy) * d + cx) as usize;
+        &self.items[self.starts[c] as usize..self.starts[c + 1] as usize]
+    }
+
+    /// Visit every particle in cells within `reach` of `p`'s cell,
+    /// respecting boundary mode (wrap vs clamp). The visitor receives the
+    /// particle index; distance filtering is the caller's job.
+    pub fn sweep<F: FnMut(u32)>(
+        &self,
+        p: Vec3,
+        reach: i64,
+        boundary: Boundary,
+        mut visit: F,
+    ) {
+        let d = self.dims as i64;
+        let (cx, cy, cz) = self.cell_index(p);
+        for dz in -reach..=reach {
+            for dy in -reach..=reach {
+                for dx in -reach..=reach {
+                    let (mut x, mut y, mut z) = (cx + dx, cy + dy, cz + dz);
+                    match boundary {
+                        Boundary::Periodic => {
+                            x = x.rem_euclid(d);
+                            y = y.rem_euclid(d);
+                            z = z.rem_euclid(d);
+                        }
+                        Boundary::Wall => {
+                            if !(0..d).contains(&x) || !(0..d).contains(&y) || !(0..d).contains(&z)
+                            {
+                                continue;
+                            }
+                        }
+                    }
+                    for &j in self.cell_items(x, y, z) {
+                        visit(j);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Cell reach needed to cover `r_max` interactions.
+    pub fn reach_for(&self, r_max: f32) -> i64 {
+        (r_max / self.cell).ceil() as i64
+    }
+}
+
+/// Run one cell-sweep force pass; shared by CPU-CELL and GPU-CELL.
+/// Returns (forces, pair_tests, force_evals, cell_visits).
+pub fn cell_forces(
+    state: &SimState,
+    grid: &Grid,
+    threads: usize,
+) -> (Vec<Vec3>, u64, u64, u64) {
+    let n = state.n();
+    // Dense-grid sweep bounds; under periodic wrap a reach beyond
+    // (dims-1)/2 would visit cells twice — in that degenerate regime (huge
+    // radii / tiny grids) fall back to an exact all-particles sweep. Walls
+    // never wrap, so the full reach is always safe (out-of-range cells are
+    // skipped). Sparse grids always have cell >= r_max, so reach is 1.
+    let (reach, full_sweep) = match grid {
+        Grid::Dense(g) => {
+            let needed = g.reach_for(state.r_max);
+            let max_periodic = (g.dims as i64 - 1) / 2;
+            (needed, state.boundary == Boundary::Periodic && needed > max_periodic)
+        }
+        Grid::Sparse(_) => (1, false),
+    };
+
+    // cells visited per particle sweep (lookup overhead)
+    let visits_per_sweep: u64 = if full_sweep {
+        n as u64 // degenerate: treated as one visit per candidate row
+    } else {
+        match grid {
+            Grid::Dense(_) => {
+                let w = (2 * reach + 1) as u64;
+                w * w * w
+            }
+            Grid::Sparse(_) => 27,
+        }
+    };
+
+    let results = parallel::parallel_reduce(
+        n,
+        threads,
+        || (vec![Vec3::ZERO; n], 0u64, 0u64),
+        |(forces, tests, evals), i| {
+            let p = state.pos[i];
+            let mut body = |j: u32| {
+                let j = j as usize;
+                if j == i {
+                    return;
+                }
+                *tests += 1;
+                let dx = crate::physics::boundary::displacement(
+                    p,
+                    state.pos[j],
+                    state.boundary,
+                    state.box_l,
+                );
+                if let Some(fij) =
+                    state.params.pair_force(dx, state.radius[i], state.radius[j])
+                {
+                    forces[i] += fij;
+                    *evals += 1;
+                }
+            };
+            match grid {
+                _ if full_sweep => {
+                    // degenerate small grid: visit all particles once
+                    for j in 0..n as u32 {
+                        body(j);
+                    }
+                }
+                Grid::Dense(g) => g.sweep(p, reach, state.boundary, body),
+                Grid::Sparse(g) => g.sweep(p, state.boundary, body),
+            }
+        },
+    );
+
+    // merge per-thread force buffers (first buffer reused as accumulator)
+    let mut iter = results.into_iter();
+    let (mut forces, mut tests, mut evals) = iter.next().unwrap();
+    for (f2, t2, e2) in iter {
+        for (a, b) in forces.iter_mut().zip(f2) {
+            *a += b;
+        }
+        tests += t2;
+        evals += e2;
+    }
+    (forces, tests, evals, visits_per_sweep * n as u64)
+}
+
+/// CPU-CELL@64c backend.
+pub struct CpuCell {
+    _priv: (),
+}
+
+impl CpuCell {
+    pub fn new() -> Self {
+        CpuCell { _priv: () }
+    }
+}
+
+impl Default for CpuCell {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for CpuCell {
+    fn name(&self) -> &'static str {
+        "CPU-CELL@64c"
+    }
+
+    fn step(&mut self, state: &mut SimState, ctx: &mut StepCtx) -> anyhow::Result<StepResult> {
+        let mut counts = OpCounts::default();
+        let mut wall = WallPhases::default();
+
+        let t0 = Instant::now();
+        let grid = Grid::build(&state.pos, state.box_l, state.r_max);
+        counts.grid_binned += state.n() as u64;
+        wall.search = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let (forces, tests, evals, visits) = cell_forces(state, &grid, ctx.threads);
+        state.force = forces;
+        counts.cell_pair_tests += tests;
+        counts.cell_force_evals += evals;
+        counts.cell_visits += visits;
+        counts.interactions += evals / 2; // each pair evaluated from both ends
+        wall.force = t1.elapsed().as_secs_f64();
+
+        let t2 = Instant::now();
+        crate::physics::integrator::step(state);
+        counts.integrate_particles += state.n() as u64;
+        wall.integrate = t2.elapsed().as_secs_f64();
+
+        Ok(StepResult { counts, bvh_action: None, oom_bytes: None, wall })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::config::{Boundary, RadiusDist, SimConfig};
+    use crate::frnn::brute;
+    use crate::frnn::RustKernels;
+    use crate::rtcore::profile::EPYC64;
+
+    fn mk_state(n: usize, boundary: Boundary, radius: RadiusDist, box_l: f32) -> SimState {
+        let cfg = SimConfig { n, boundary, radius_dist: radius, box_l, ..SimConfig::default() };
+        SimState::from_config(&cfg)
+    }
+
+    #[test]
+    fn grid_build_partitions_all_particles() {
+        let state = mk_state(500, Boundary::Periodic, RadiusDist::Const(10.0), 100.0);
+        let grid = CellGrid::build(&state.pos, 100.0, 10);
+        assert_eq!(grid.items.len(), 500);
+        let mut seen = vec![false; 500];
+        for &i in &grid.items {
+            assert!(!seen[i as usize]);
+            seen[i as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        // every particle is in the cell the index function says
+        for i in 0..500 {
+            let (cx, cy, cz) = grid.cell_index(state.pos[i]);
+            assert!(grid.cell_items(cx, cy, cz).contains(&(i as u32)));
+        }
+    }
+
+    #[test]
+    fn cell_forces_match_brute_force() {
+        for boundary in [Boundary::Wall, Boundary::Periodic] {
+            for radius in [RadiusDist::Const(6.0), RadiusDist::Uniform(2.0, 12.0)] {
+                let state = mk_state(300, boundary, radius, 100.0);
+                let grid = Grid::build(&state.pos, state.box_l, state.r_max);
+                let (forces, _, _, _) = cell_forces(&state, &grid, 4);
+                let want = brute::forces(&state);
+                for i in 0..state.n() {
+                    let d = (forces[i] - want[i]).norm();
+                    assert!(
+                        d <= 1e-3 * want[i].norm().max(1.0),
+                        "{boundary:?} {radius:?} particle {i}: {:?} vs {:?}",
+                        forces[i],
+                        want[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_grid_selected_for_small_radii() {
+        let state = mk_state(300, Boundary::Periodic, RadiusDist::Const(0.5), 100.0);
+        assert!(matches!(
+            Grid::build(&state.pos, state.box_l, state.r_max),
+            Grid::Sparse(_)
+        ));
+        let state = mk_state(300, Boundary::Periodic, RadiusDist::Const(10.0), 100.0);
+        assert!(matches!(
+            Grid::build(&state.pos, state.box_l, state.r_max),
+            Grid::Dense(_)
+        ));
+    }
+
+    #[test]
+    fn sparse_grid_forces_match_brute_force() {
+        // tiny radii in a big box: the regime only the hashed grid handles
+        for boundary in [Boundary::Wall, Boundary::Periodic] {
+            let cfg = SimConfig {
+                n: 400,
+                boundary,
+                radius_dist: RadiusDist::Const(3.0),
+                box_l: 400.0,
+                ..SimConfig::default()
+            };
+            // clustered positions so some pairs actually interact
+            let mut state = SimState::from_config(&cfg);
+            for (k, p) in state.pos.iter_mut().enumerate() {
+                if k % 2 == 0 {
+                    let anchor = state_anchor(k);
+                    *p = anchor;
+                } else {
+                    let anchor = state_anchor(k - 1);
+                    *p = anchor + Vec3::new(1.5, 0.5, -0.5);
+                }
+            }
+            let grid = Grid::build(&state.pos, state.box_l, state.r_max);
+            assert!(matches!(grid, Grid::Sparse(_)));
+            let (forces, _, evals, _) = cell_forces(&state, &grid, 3);
+            assert!(evals > 0, "test scene produced no interactions");
+            let want = brute::forces(&state);
+            for i in 0..state.n() {
+                let d = (forces[i] - want[i]).norm();
+                assert!(d <= 1e-3 * want[i].norm().max(1.0), "{boundary:?} particle {i}");
+            }
+        }
+    }
+
+    /// Deterministic pseudo-cluster anchors spread through the box.
+    fn state_anchor(k: usize) -> Vec3 {
+        let h = (k as u32).wrapping_mul(2654435761);
+        Vec3::new(
+            2.0 + (h % 396) as f32,
+            2.0 + ((h >> 8) % 396) as f32,
+            2.0 + ((h >> 16) % 396) as f32,
+        )
+    }
+
+    #[test]
+    fn sparse_sweep_wraps_across_periodic_faces() {
+        let pos = vec![Vec3::new(0.5, 50.0, 50.0), Vec3::new(99.5, 50.0, 50.0)];
+        let grid = SparseGrid::build(&pos, 100.0, 100); // cell = 1
+        let mut seen = Vec::new();
+        grid.sweep(pos[0], Boundary::Periodic, |j| seen.push(j));
+        assert!(seen.contains(&1), "periodic sweep must reach across the face");
+        let mut seen_wall = Vec::new();
+        grid.sweep(pos[0], Boundary::Wall, |j| seen_wall.push(j));
+        assert!(!seen_wall.contains(&1), "wall sweep must not wrap");
+    }
+
+    #[test]
+    fn huge_radius_degenerates_gracefully() {
+        // r_max comparable to the box: grid degenerates to a near-full sweep
+        let state = mk_state(100, Boundary::Periodic, RadiusDist::Const(60.0), 100.0);
+        let grid = Grid::build(&state.pos, state.box_l, state.r_max);
+        let (forces, _, _, _) = cell_forces(&state, &grid, 2);
+        let want = brute::forces(&state);
+        for i in 0..state.n() {
+            let d = (forces[i] - want[i]).norm();
+            assert!(d <= 1e-2 * want[i].norm().max(1.0), "particle {i}");
+        }
+    }
+
+    #[test]
+    fn backend_step_runs_and_counts() {
+        let mut state = mk_state(200, Boundary::Periodic, RadiusDist::Const(8.0), 100.0);
+        let kernels = RustKernels { threads: 2 };
+        let mut ctx = StepCtx { threads: 2, kernels: &kernels, hw: &EPYC64, check_oom: false };
+        let mut backend = CpuCell::new();
+        let r = backend.step(&mut state, &mut ctx).unwrap();
+        assert!(r.counts.cell_pair_tests > 0);
+        assert!(r.counts.integrate_particles == 200);
+        assert_eq!(state.step_count, 1);
+        assert!(state.is_finite());
+    }
+}

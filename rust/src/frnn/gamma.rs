@@ -1,0 +1,113 @@
+//! Contribution #3 — ray-traced periodic boundary conditions.
+//!
+//! A ray launched at a boundary-adjacent particle cannot see neighbors on
+//! the opposite side of the box. Instead of replicating geometry, the paper
+//! launches extra "gamma" rays with box-offset origins: one per crossed
+//! face, plus the edge/corner combinations (Fig. 6 — `p_14` launches
+//! `γ_x, γ_y, γ_xy`). With variable radii the trigger distance must be the
+//! *largest radius in the system* so that a large sphere on the opposite
+//! wall is still discovered (the Fig. 5 asymmetric case across a wall).
+
+use crate::core::vec3::Vec3;
+
+/// Compute the gamma-ray origins for particle position `p`.
+///
+/// `trigger` is the boundary proximity that fires a gamma ray: the common
+/// radius for uniform scenes, `r_max` for variable radii (§3.3). Origins
+/// (excluding the primary) are appended to `out` (cleared first).
+/// At most 7 origins are produced (3 faces + 3 edges + 1 corner).
+pub fn gamma_origins(p: Vec3, trigger: f32, box_l: f32, out: &mut Vec<Vec3>) {
+    out.clear();
+    // Per-axis shift that moves the origin next to the opposite wall, or 0.
+    let shift_axis = |x: f32| -> f32 {
+        if x < trigger {
+            box_l
+        } else if x > box_l - trigger {
+            -box_l
+        } else {
+            0.0
+        }
+    };
+    let sx = shift_axis(p.x);
+    let sy = shift_axis(p.y);
+    let sz = shift_axis(p.z);
+    if sx == 0.0 && sy == 0.0 && sz == 0.0 {
+        return;
+    }
+    // All non-empty subsets of the active axes.
+    for mask in 1u8..8 {
+        let dx = if mask & 1 != 0 { sx } else { 0.0 };
+        let dy = if mask & 2 != 0 { sy } else { 0.0 };
+        let dz = if mask & 4 != 0 { sz } else { 0.0 };
+        if (mask & 1 != 0 && sx == 0.0)
+            || (mask & 2 != 0 && sy == 0.0)
+            || (mask & 4 != 0 && sz == 0.0)
+        {
+            continue; // subset includes an inactive axis -> duplicate
+        }
+        out.push(p + Vec3::new(dx, dy, dz));
+    }
+}
+
+/// Number of gamma rays a particle at `p` will launch (diagnostic).
+pub fn gamma_count(p: Vec3, trigger: f32, box_l: f32) -> usize {
+    let active = [p.x, p.y, p.z]
+        .iter()
+        .filter(|&&x| x < trigger || x > box_l - trigger)
+        .count() as u32;
+    (1usize << active) - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interior_particle_launches_none() {
+        let mut out = Vec::new();
+        gamma_origins(Vec3::splat(500.0), 10.0, 1000.0, &mut out);
+        assert!(out.is_empty());
+        assert_eq!(gamma_count(Vec3::splat(500.0), 10.0, 1000.0), 0);
+    }
+
+    #[test]
+    fn face_particle_launches_one() {
+        let mut out = Vec::new();
+        gamma_origins(Vec3::new(2.0, 500.0, 500.0), 10.0, 1000.0, &mut out);
+        assert_eq!(out, vec![Vec3::new(1002.0, 500.0, 500.0)]);
+    }
+
+    #[test]
+    fn corner_particle_launches_seven() {
+        let mut out = Vec::new();
+        let p = Vec3::new(1.0, 999.0, 2.0);
+        gamma_origins(p, 10.0, 1000.0, &mut out);
+        assert_eq!(out.len(), 7);
+        assert_eq!(gamma_count(p, 10.0, 1000.0), 7);
+        // all origins distinct and distinct from primary
+        for (a, &oa) in out.iter().enumerate() {
+            assert_ne!(oa, p);
+            for &ob in &out[a + 1..] {
+                assert_ne!(oa, ob);
+            }
+        }
+        // the xy-combination exists (paper's gamma_{14_{x,y}})
+        assert!(out.contains(&Vec3::new(1001.0, -1.0, 2.0)));
+    }
+
+    #[test]
+    fn edge_particle_launches_three() {
+        let p = Vec3::new(5.0, 5.0, 500.0);
+        let mut out = Vec::new();
+        gamma_origins(p, 10.0, 1000.0, &mut out);
+        assert_eq!(out.len(), 3); // gamma_x, gamma_y, gamma_xy
+        assert_eq!(gamma_count(p, 10.0, 1000.0), 3);
+    }
+
+    #[test]
+    fn trigger_respects_both_walls() {
+        let mut out = Vec::new();
+        gamma_origins(Vec3::new(995.0, 500.0, 500.0), 10.0, 1000.0, &mut out);
+        assert_eq!(out, vec![Vec3::new(-5.0, 500.0, 500.0)]);
+    }
+}

@@ -1,0 +1,289 @@
+//! FRNN simulation backends: the paper's five approaches plus shared
+//! infrastructure.
+//!
+//! | Backend | Paper §4.2 name | Pipeline |
+//! |---|---|---|
+//! | [`cell_list::CpuCell`] | CPU-CELL@64c | parallel cell-list sweep on the host |
+//! | [`gpu_cell::GpuCell`]  | GPU-CELL | z-order radix sort + grid + sweep (GPU model) |
+//! | [`rt_ref::RtRef`]      | RT-REF | RT traversal → neighbor list → force kernel |
+//! | [`orcs_forces::OrcsForces`] | ORCS-forces | in-shader symmetric force scatter |
+//! | [`orcs_perse::OrcsPerse`]   | ORCS-persé | payload accumulation, whole step in RT |
+//!
+//! Backends fill [`OpCounts`] (priced by [`crate::rtcore::timing`]) and use
+//! the [`PhysicsKernels`] abstraction for the "separate compute kernel"
+//! stages, which the coordinator binds to either the PJRT/XLA runtime or
+//! the pure-Rust oracle.
+
+pub mod brute;
+pub mod cell_list;
+pub mod gamma;
+pub mod gpu_cell;
+pub mod orcs_forces;
+pub mod orcs_perse;
+pub mod rt_common;
+pub mod rt_ref;
+
+use crate::core::vec3::Vec3;
+use crate::gradient::BvhAction;
+use crate::physics::state::SimState;
+use crate::rtcore::{HwProfile, OpCounts};
+
+/// Compressed sparse-row neighbor lists: neighbors of particle `i` are
+/// `items[offsets[i]..offsets[i+1]]`.
+#[derive(Clone, Debug, Default)]
+pub struct NeighborLists {
+    pub offsets: Vec<u32>,
+    pub items: Vec<u32>,
+}
+
+impl NeighborLists {
+    pub fn from_vecs(lists: &[Vec<u32>]) -> Self {
+        let mut offsets = Vec::with_capacity(lists.len() + 1);
+        let total: usize = lists.iter().map(|l| l.len()).sum();
+        let mut items = Vec::with_capacity(total);
+        offsets.push(0u32);
+        for l in lists {
+            items.extend_from_slice(l);
+            offsets.push(items.len() as u32);
+        }
+        NeighborLists { offsets, items }
+    }
+
+    pub fn n(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    pub fn neighbors(&self, i: usize) -> &[u32] {
+        &self.items[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    pub fn total_entries(&self) -> usize {
+        self.items.len()
+    }
+
+    /// Longest per-particle list (the paper's `k_max`, which sizes the
+    /// fixed-slot GPU allocation `n * k_max * 4` bytes).
+    pub fn k_max(&self) -> usize {
+        (0..self.n()).map(|i| self.neighbors(i).len()).max().unwrap_or(0)
+    }
+}
+
+/// The "separate GPU compute kernel" stages of the pipelines. Bound to the
+/// PJRT/XLA runtime ([`crate::runtime::XlaKernels`]) or the pure-Rust
+/// reference ([`RustKernels`]).
+pub trait PhysicsKernels: Send + Sync {
+    /// Gather-style LJ force evaluation over neighbor lists; returns the
+    /// per-particle total force. Displacements are minimum-imaged when the
+    /// state is periodic.
+    fn lj_forces(
+        &self,
+        state: &SimState,
+        lists: &NeighborLists,
+        counts: &mut OpCounts,
+    ) -> anyhow::Result<Vec<Vec3>>;
+
+    /// Advance positions/velocities one step from `state.force`, applying
+    /// boundary conditions.
+    fn integrate(&self, state: &mut SimState, counts: &mut OpCounts) -> anyhow::Result<()>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust reference kernels (also the test oracle for the XLA path).
+pub struct RustKernels {
+    pub threads: usize,
+}
+
+impl PhysicsKernels for RustKernels {
+    fn lj_forces(
+        &self,
+        state: &SimState,
+        lists: &NeighborLists,
+        counts: &mut OpCounts,
+    ) -> anyhow::Result<Vec<Vec3>> {
+        let n = state.n();
+        let forces = crate::parallel::parallel_map(n, self.threads, |i| {
+            let mut f = Vec3::ZERO;
+            for &j in lists.neighbors(i) {
+                let j = j as usize;
+                let dx = crate::physics::boundary::displacement(
+                    state.pos[i],
+                    state.pos[j],
+                    state.boundary,
+                    state.box_l,
+                );
+                if let Some(fij) =
+                    state.params.pair_force(dx, state.radius[i], state.radius[j])
+                {
+                    f += fij;
+                }
+            }
+            f
+        });
+        // force_kernel_pairs is charged by the *caller* (RT-REF prices the
+        // fixed-slot n x k_max layout of the paper, not the CSR entries)
+        counts.kernel_launches += 1;
+        Ok(forces)
+    }
+
+    fn integrate(&self, state: &mut SimState, counts: &mut OpCounts) -> anyhow::Result<()> {
+        crate::physics::integrator::step(state);
+        counts.integrate_particles += state.n() as u64;
+        counts.kernel_launches += 1;
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+/// Wall-clock seconds per pipeline phase (real, measured).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WallPhases {
+    pub bvh: f64,
+    pub search: f64,
+    pub force: f64,
+    pub integrate: f64,
+}
+
+impl WallPhases {
+    pub fn total(&self) -> f64 {
+        self.bvh + self.search + self.force + self.integrate
+    }
+}
+
+/// Result of one backend step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepResult {
+    pub counts: OpCounts,
+    /// BVH action taken, for RT backends.
+    pub bvh_action: Option<BvhAction>,
+    /// Set when the step would exceed device memory (required bytes).
+    pub oom_bytes: Option<u64>,
+    pub wall: WallPhases,
+}
+
+/// Per-step execution context handed to backends by the coordinator.
+pub struct StepCtx<'a> {
+    pub threads: usize,
+    pub kernels: &'a dyn PhysicsKernels,
+    /// Hardware profile used to price this backend's ops (GPU for the RT
+    /// and GPU-CELL backends, EPYC for CPU-CELL) — feeds the BVH policy's
+    /// simulated clock and the OOM check.
+    pub hw: &'static HwProfile,
+    /// Enforce the device-memory limit (RT-REF neighbor list, §4.2).
+    pub check_oom: bool,
+}
+
+/// A full FRNN simulation backend.
+pub trait Backend: Send {
+    fn name(&self) -> &'static str;
+
+    /// Check whether this backend supports the scenario (e.g. ORCS-persé
+    /// requires a uniform radius).
+    fn supports(&self, state: &SimState) -> Result<(), String> {
+        let _ = state;
+        Ok(())
+    }
+
+    /// Execute one simulation step: find neighbors, compute forces,
+    /// advance particles; fill counters and wall times.
+    fn step(&mut self, state: &mut SimState, ctx: &mut StepCtx) -> anyhow::Result<StepResult>;
+}
+
+/// Backend identifiers (CLI + bench matrix).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ApproachKind {
+    CpuCell,
+    GpuCell,
+    RtRef,
+    OrcsForces,
+    OrcsPerse,
+}
+
+impl ApproachKind {
+    pub const ALL: [ApproachKind; 5] = [
+        ApproachKind::CpuCell,
+        ApproachKind::GpuCell,
+        ApproachKind::RtRef,
+        ApproachKind::OrcsForces,
+        ApproachKind::OrcsPerse,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ApproachKind::CpuCell => "CPU-CELL@64c",
+            ApproachKind::GpuCell => "GPU-CELL",
+            ApproachKind::RtRef => "RT-REF",
+            ApproachKind::OrcsForces => "ORCS-forces",
+            ApproachKind::OrcsPerse => "ORCS-perse",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "cpu-cell" | "cpucell" | "cpu" => Some(Self::CpuCell),
+            "gpu-cell" | "gpucell" => Some(Self::GpuCell),
+            "rt-ref" | "rtref" => Some(Self::RtRef),
+            "orcs-forces" | "forces" => Some(Self::OrcsForces),
+            "orcs-perse" | "perse" => Some(Self::OrcsPerse),
+            _ => None,
+        }
+    }
+
+    /// True for backends that maintain a BVH (and therefore take a rebuild
+    /// policy).
+    pub fn is_rt(&self) -> bool {
+        matches!(self, Self::RtRef | Self::OrcsForces | Self::OrcsPerse)
+    }
+
+    /// Instantiate the backend. `policy_spec` selects the BVH rebuild
+    /// policy for RT backends (`gradient`, `avg`, `fixed-K`).
+    pub fn create(&self, policy_spec: &str) -> anyhow::Result<Box<dyn Backend>> {
+        let policy = || {
+            crate::gradient::policy::parse_policy(policy_spec)
+                .ok_or_else(|| anyhow::anyhow!("unknown BVH policy: {policy_spec}"))
+        };
+        Ok(match self {
+            ApproachKind::CpuCell => Box::new(cell_list::CpuCell::new()),
+            ApproachKind::GpuCell => Box::new(gpu_cell::GpuCell::new()),
+            ApproachKind::RtRef => Box::new(rt_ref::RtRef::new(policy()?)),
+            ApproachKind::OrcsForces => Box::new(orcs_forces::OrcsForces::new(policy()?)),
+            ApproachKind::OrcsPerse => Box::new(orcs_perse::OrcsPerse::new(policy()?)),
+        })
+    }
+}
+
+impl std::fmt::Display for ApproachKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csr_roundtrip() {
+        let lists = vec![vec![1u32, 2], vec![], vec![0, 1, 3], vec![2]];
+        let nl = NeighborLists::from_vecs(&lists);
+        assert_eq!(nl.n(), 4);
+        assert_eq!(nl.neighbors(0), &[1, 2]);
+        assert_eq!(nl.neighbors(1), &[] as &[u32]);
+        assert_eq!(nl.neighbors(2), &[0, 1, 3]);
+        assert_eq!(nl.total_entries(), 6);
+        assert_eq!(nl.k_max(), 3);
+    }
+
+    #[test]
+    fn approach_parse_and_labels() {
+        assert_eq!(ApproachKind::parse("rt-ref"), Some(ApproachKind::RtRef));
+        assert_eq!(ApproachKind::parse("perse"), Some(ApproachKind::OrcsPerse));
+        assert!(ApproachKind::parse("nope").is_none());
+        assert!(ApproachKind::RtRef.is_rt());
+        assert!(!ApproachKind::CpuCell.is_rt());
+        assert_eq!(ApproachKind::ALL.len(), 5);
+    }
+}

@@ -1,0 +1,224 @@
+//! ORCS-forces (contribution #2, §3.2.2): no neighbor list — every
+//! intersection shader computes the pair force immediately and scatters it
+//! into **both** endpoint force accumulators in global memory, atomically.
+//! A separate kernel then integrates.
+//!
+//! Pair-handling rule (exactly once per pair):
+//! * uniform radius: both rays detect the pair; the *smaller particle id*
+//!   handles it;
+//! * variable radius: detection can be one-sided (Fig. 5) — the thread with
+//!   the smallest search radius is guaranteed to detect (it sits inside the
+//!   larger sphere) and handles the pair; ties broken by id.
+//!
+//! On real hardware the scatter is `atomicAdd`; we reproduce it race-free
+//! with per-thread force buffers + a deterministic reduction, while
+//! *counting* the atomics for the timing model (DESIGN.md
+//! §Hardware-Adaptation).
+
+use std::time::Instant;
+
+use crate::bvh::traverse::TraversalStats;
+use crate::core::vec3::Vec3;
+use crate::frnn::rt_common::{fold_stats, gamma_trigger, launch_rays, BvhManager};
+use crate::frnn::{Backend, StepCtx, StepResult, WallPhases};
+use crate::gradient::RebuildPolicy;
+use crate::parallel;
+use crate::physics::state::SimState;
+use crate::rtcore::OpCounts;
+
+pub struct OrcsForces {
+    mgr: BvhManager,
+}
+
+impl OrcsForces {
+    pub fn new(policy: Box<dyn RebuildPolicy>) -> Self {
+        OrcsForces { mgr: BvhManager::new(policy) }
+    }
+}
+
+/// Does ray thread `i` handle the pair `(i, j)`? See module docs.
+#[inline(always)]
+pub fn handles_pair(i: usize, r_i: f32, j: usize, r_j: f32, mutual: bool) -> bool {
+    if !mutual {
+        return true; // only i detected the pair
+    }
+    // both detect: lexicographically smaller (radius, id) handles
+    (r_i, i) < (r_j, j)
+}
+
+impl Backend for OrcsForces {
+    fn name(&self) -> &'static str {
+        "ORCS-forces"
+    }
+
+    fn step(&mut self, state: &mut SimState, ctx: &mut StepCtx) -> anyhow::Result<StepResult> {
+        let mut counts = OpCounts::default();
+        let mut wall = WallPhases::default();
+        let n = state.n();
+
+        // Phase 1: BVH maintenance.
+        let t0 = Instant::now();
+        let action = self.mgr.prepare(&state.pos, &state.radius, &mut counts);
+        wall.bvh = t0.elapsed().as_secs_f64();
+
+        // Phase 2: traversal with in-shader force scatter.
+        let t1 = Instant::now();
+        let bvh = self.mgr.bvh();
+        let trigger = gamma_trigger(state);
+        struct ThreadOut {
+            forces: Vec<Vec3>,
+            stats: TraversalStats,
+            pairs: u64,
+            evals: u64,
+        }
+        let parts = parallel::parallel_reduce(
+            n,
+            ctx.threads,
+            || ThreadOut {
+                forces: vec![Vec3::ZERO; n],
+                stats: TraversalStats::default(),
+                pairs: 0,
+                evals: 0,
+            },
+            |out, i| {
+                let mut gamma_buf = Vec::new();
+                let r_i = state.radius[i];
+                let forces = &mut out.forces;
+                let pairs = &mut out.pairs;
+                let evals = &mut out.evals;
+                launch_rays(
+                    bvh,
+                    i,
+                    &state.pos,
+                    &state.radius,
+                    state.boundary,
+                    state.box_l,
+                    trigger,
+                    &mut gamma_buf,
+                    &mut out.stats,
+                    |j, dx| {
+                        let r_j = state.radius[j];
+                        let mutual = dx.norm2() < r_i * r_i;
+                        if !handles_pair(i, r_i, j, r_j, mutual) {
+                            return;
+                        }
+                        *evals += 1;
+                        if let Some(fij) = state.params.pair_force(dx, r_i, r_j) {
+                            forces[i] += fij;
+                            forces[j] -= fij; // "atomicAdd" on real hardware
+                            *pairs += 1;
+                        }
+                    },
+                );
+            },
+        );
+
+        // Deterministic reduction of the per-thread scatter buffers.
+        let mut force = vec![Vec3::ZERO; n];
+        let mut stats = TraversalStats::default();
+        let mut pairs = 0u64;
+        let mut evals = 0u64;
+        for part in parts {
+            for (a, b) in force.iter_mut().zip(part.forces) {
+                *a += b;
+            }
+            stats.add(&part.stats);
+            pairs += part.pairs;
+            evals += part.evals;
+        }
+        state.force = force;
+        fold_stats(&mut counts, &stats);
+        counts.isect_force_evals += evals;
+        counts.atomic_adds += 2 * pairs; // both endpoints, atomically
+        counts.interactions += pairs;
+        wall.search = t1.elapsed().as_secs_f64();
+
+        // Phase 3: the one extra compute kernel — integration.
+        let t2 = Instant::now();
+        ctx.kernels.integrate(state, &mut counts)?;
+        wall.integrate = t2.elapsed().as_secs_f64();
+
+        self.mgr.observe(action, &counts, ctx.hw);
+        Ok(StepResult { counts, bvh_action: Some(action), oom_bytes: None, wall })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::config::{Boundary, RadiusDist, SimConfig};
+    use crate::frnn::{brute, RustKernels};
+    use crate::gradient::FixedKPolicy;
+    use crate::rtcore::profile::RTXPRO;
+
+    #[test]
+    fn handler_rule_exactly_once() {
+        // mutual detection, distinct radii: smaller radius handles
+        assert!(handles_pair(5, 1.0, 9, 2.0, true));
+        assert!(!handles_pair(9, 2.0, 5, 1.0, true));
+        // mutual, equal radii: smaller id handles
+        assert!(handles_pair(3, 1.0, 7, 1.0, true));
+        assert!(!handles_pair(7, 1.0, 3, 1.0, true));
+        // one-sided detection: the detector always handles
+        assert!(handles_pair(9, 1.0, 5, 8.0, false));
+    }
+
+    fn check_matches_brute(n: usize, boundary: Boundary, radius: RadiusDist) {
+        let cfg = SimConfig {
+            n,
+            boundary,
+            radius_dist: radius,
+            box_l: 100.0,
+            ..SimConfig::default()
+        };
+        let mut state = SimState::from_config(&cfg);
+        let want = {
+            let mut s2 = state.clone();
+            s2.force = brute::forces(&s2);
+            crate::physics::integrator::step(&mut s2);
+            s2
+        };
+        let kernels = RustKernels { threads: 3 };
+        let mut ctx = StepCtx { threads: 3, kernels: &kernels, hw: &RTXPRO, check_oom: false };
+        let mut backend = OrcsForces::new(Box::new(FixedKPolicy::new(4)));
+        let r = backend.step(&mut state, &mut ctx).unwrap();
+        assert!(r.counts.atomic_adds == 2 * r.counts.interactions);
+        assert!(r.counts.nbr_list_writes == 0, "ORCS must not build lists");
+        for i in 0..state.n() {
+            assert!(
+                (state.pos[i] - want.pos[i]).norm() < 1e-3,
+                "{boundary:?} {radius:?} particle {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_brute_force_all_modes() {
+        for boundary in [Boundary::Wall, Boundary::Periodic] {
+            for radius in [RadiusDist::Const(8.0), RadiusDist::Uniform(2.0, 14.0)] {
+                check_matches_brute(220, boundary, radius);
+            }
+        }
+    }
+
+    #[test]
+    fn interaction_count_exact() {
+        let cfg = SimConfig {
+            n: 180,
+            boundary: Boundary::Periodic,
+            radius_dist: RadiusDist::Uniform(2.0, 12.0),
+            box_l: 100.0,
+            ..SimConfig::default()
+        };
+        let mut state = SimState::from_config(&cfg);
+        let want =
+            brute::count_interactions(&state.pos, &state.radius, state.boundary, state.box_l);
+        let kernels = RustKernels { threads: 2 };
+        let mut ctx = StepCtx { threads: 2, kernels: &kernels, hw: &RTXPRO, check_oom: false };
+        let mut backend = OrcsForces::new(Box::new(FixedKPolicy::new(4)));
+        let r = backend.step(&mut state, &mut ctx).unwrap();
+        // pairs outside the LJ force cutoff but inside the search radius
+        // still count as interactions (they were evaluated)
+        assert_eq!(r.counts.interactions, want);
+    }
+}

@@ -1,0 +1,230 @@
+//! Shared infrastructure for the three RT-core backends: BVH lifecycle
+//! management under a rebuild policy, and the parallel ray-launch loop.
+
+use crate::bvh::traverse::TraversalStats;
+use crate::bvh::{BuildKind, Bvh};
+use crate::core::config::Boundary;
+use crate::core::vec3::Vec3;
+use crate::gradient::{BvhAction, RebuildPolicy, StepObs};
+use crate::physics::state::SimState;
+use crate::rtcore::{timing, HwProfile, OpCounts};
+
+/// Owns the BVH and applies the rebuild/update policy each step.
+pub struct BvhManager {
+    bvh: Option<Bvh>,
+    pub policy: Box<dyn RebuildPolicy>,
+    pub build_kind: BuildKind,
+}
+
+impl BvhManager {
+    pub fn new(policy: Box<dyn RebuildPolicy>) -> Self {
+        BvhManager { bvh: None, policy, build_kind: BuildKind::BinnedSah }
+    }
+
+    /// Apply the policy's decision: build or refit the BVH for the current
+    /// particle state. Returns the action taken and fills the counters.
+    pub fn prepare(
+        &mut self,
+        pos: &[Vec3],
+        radius: &[f32],
+        counts: &mut OpCounts,
+    ) -> BvhAction {
+        let mut action = self.policy.decide();
+        if self.bvh.is_none() {
+            action = BvhAction::Build; // nothing to refit yet
+        }
+        match action {
+            BvhAction::Build => {
+                self.bvh = Some(Bvh::build(pos, radius, self.build_kind));
+                counts.bvh_built_prims += pos.len() as u64;
+            }
+            BvhAction::Update => {
+                self.bvh.as_mut().expect("update before first build").refit(pos, radius);
+                counts.bvh_refit_prims += pos.len() as u64;
+            }
+        }
+        action
+    }
+
+    /// Feed the policy the simulated costs of the executed step. The
+    /// observation clock is the RT timing model — the reproducible
+    /// substitute for the paper's NVML timers.
+    pub fn observe(&mut self, action: BvhAction, counts: &OpCounts, hw: &HwProfile) {
+        use crate::rtcore::power::{bvh_phase_power, BvhPhase};
+        let t = timing::simulate(counts, hw);
+        let op_power = bvh_phase_power(
+            hw,
+            if action == BvhAction::Build { BvhPhase::Build } else { BvhPhase::Refit },
+        );
+        let q_power = bvh_phase_power(hw, BvhPhase::Traverse);
+        self.policy.observe(StepObs {
+            action,
+            bvh_op_time: (t.build + t.refit) * 1e3,
+            query_time: t.traverse * 1e3,
+            // millijoules (ms x W)
+            bvh_op_energy: (t.build + t.refit) * 1e3 * op_power,
+            query_energy: t.traverse * 1e3 * q_power,
+        });
+    }
+
+    pub fn bvh(&self) -> &Bvh {
+        self.bvh.as_ref().expect("BVH not built yet")
+    }
+}
+
+/// One particle's ray set: primary origin plus gamma origins (periodic BC).
+/// Visits every sphere hit by any of the rays; `visit(j, dx)` receives the
+/// neighbor id and the displacement `origin - p_j` (which equals the
+/// minimum-image displacement for gamma hits).
+///
+/// Returns per-call traversal stats (caller accumulates).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn launch_rays<F: FnMut(usize, Vec3)>(
+    bvh: &Bvh,
+    i: usize,
+    pos: &[Vec3],
+    radius: &[f32],
+    boundary: Boundary,
+    box_l: f32,
+    gamma_trigger: f32,
+    gamma_buf: &mut Vec<Vec3>,
+    stats: &mut TraversalStats,
+    mut visit: F,
+) {
+    let p = pos[i];
+    bvh.query_point(p, i, pos, radius, stats, |j| {
+        visit(j, p - pos[j]);
+    });
+    if boundary == Boundary::Periodic {
+        crate::frnn::gamma::gamma_origins(p, gamma_trigger, box_l, gamma_buf);
+        for g_idx in 0..gamma_buf.len() {
+            let o = gamma_buf[g_idx];
+            bvh.query_point(o, i, pos, radius, stats, |j| {
+                visit(j, o - pos[j]);
+            });
+        }
+    }
+}
+
+/// Fold traversal stats into the step counters.
+pub fn fold_stats(counts: &mut OpCounts, stats: &TraversalStats) {
+    counts.aabb_tests += stats.aabb_tests;
+    counts.sphere_tests += stats.sphere_tests;
+    counts.rays += stats.rays;
+}
+
+/// The gamma trigger distance for a scene (§3.3): the largest search radius
+/// in the system.
+pub fn gamma_trigger(state: &SimState) -> f32 {
+    state.r_max
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::config::{Boundary, RadiusDist, SimConfig};
+    use crate::frnn::brute;
+    use crate::gradient::FixedKPolicy;
+
+    fn mk_state(n: usize, boundary: Boundary, radius: RadiusDist) -> SimState {
+        let cfg = SimConfig {
+            n,
+            boundary,
+            radius_dist: radius,
+            box_l: 100.0,
+            ..SimConfig::default()
+        };
+        let mut s = SimState::from_config(&cfg);
+        // shrink box positions into [0,100)
+        for p in s.pos.iter_mut() {
+            p.x = p.x.rem_euclid(100.0);
+            p.y = p.y.rem_euclid(100.0);
+            p.z = p.z.rem_euclid(100.0);
+        }
+        s
+    }
+
+    #[test]
+    fn rays_discover_interaction_set_periodic_uniform() {
+        let state = mk_state(200, Boundary::Periodic, RadiusDist::Const(8.0));
+        let mut mgr = BvhManager::new(Box::new(FixedKPolicy::new(5)));
+        let mut counts = OpCounts::default();
+        mgr.prepare(&state.pos, &state.radius, &mut counts);
+        let mut gamma_buf = Vec::new();
+        let mut stats = TraversalStats::default();
+        for i in 0..state.n() {
+            let mut found = Vec::new();
+            launch_rays(
+                mgr.bvh(),
+                i,
+                &state.pos,
+                &state.radius,
+                state.boundary,
+                state.box_l,
+                gamma_trigger(&state),
+                &mut gamma_buf,
+                &mut stats,
+                |j, _| found.push(j),
+            );
+            found.sort_unstable();
+            found.dedup();
+            let want = brute::interaction_neighbors(
+                i,
+                &state.pos,
+                &state.radius,
+                state.boundary,
+                state.box_l,
+            );
+            assert_eq!(found, want, "particle {i}");
+        }
+        assert!(stats.rays as usize >= state.n());
+    }
+
+    #[test]
+    fn gamma_displacement_equals_min_image() {
+        // particle at x=1, neighbor at x=99 in a 100-box with radius 5
+        let mut state = mk_state(2, Boundary::Periodic, RadiusDist::Const(5.0));
+        state.pos[0] = Vec3::new(1.0, 50.0, 50.0);
+        state.pos[1] = Vec3::new(99.0, 50.0, 50.0);
+        state.r_max = 5.0;
+        let mut mgr = BvhManager::new(Box::new(FixedKPolicy::new(5)));
+        let mut counts = OpCounts::default();
+        mgr.prepare(&state.pos, &state.radius, &mut counts);
+        let mut gamma_buf = Vec::new();
+        let mut stats = TraversalStats::default();
+        let mut seen = Vec::new();
+        launch_rays(
+            mgr.bvh(),
+            0,
+            &state.pos,
+            &state.radius,
+            state.boundary,
+            state.box_l,
+            5.0,
+            &mut gamma_buf,
+            &mut stats,
+            |j, dx| seen.push((j, dx)),
+        );
+        assert_eq!(seen.len(), 1);
+        let (j, dx) = seen[0];
+        assert_eq!(j, 1);
+        // min image of (1 - 99) across 100 is +2
+        assert!((dx.x - 2.0).abs() < 1e-5, "dx={dx:?}");
+    }
+
+    #[test]
+    fn manager_policy_drives_rebuilds() {
+        let state = mk_state(100, Boundary::Wall, RadiusDist::Const(4.0));
+        let mut mgr = BvhManager::new(Box::new(FixedKPolicy::new(3)));
+        let mut actions = Vec::new();
+        for _ in 0..6 {
+            let mut counts = OpCounts::default();
+            let a = mgr.prepare(&state.pos, &state.radius, &mut counts);
+            mgr.observe(a, &counts, &crate::rtcore::profile::RTXPRO);
+            actions.push(a);
+        }
+        use BvhAction::*;
+        assert_eq!(actions, vec![Build, Update, Update, Build, Update, Update]);
+    }
+}

@@ -1,0 +1,116 @@
+//! The gradient cost model (paper Eqs. 5–8).
+//!
+//! With `k_u` consecutive updates between rebuilds, the total RT cost over a
+//! simulation is modeled as the area under the saw-tooth curve of Fig. 3:
+//!
+//! ```text
+//! T_sim = n_steps/(k_u+1) * [ k_u*(k_u*Δq)/2 + k_u*(t_u + t_q) + (t_r + t_q) ]
+//! ```
+//!
+//! Setting dT/dk = 0 yields `Δq k² + 2Δq k + 2(t_u − t_r) = 0`, whose
+//! positive root is the optimal number of consecutive updates:
+//!
+//! ```text
+//! k_opt = −1 + sqrt(1 − 2 (t_u − t_r)/Δq)
+//! ```
+
+/// Cost-model parameters, all in the same time unit (we use simulated ms).
+#[derive(Clone, Copy, Debug)]
+pub struct CostParams {
+    /// BVH full rebuild cost `t_r`.
+    pub t_r: f64,
+    /// BVH update (refit) cost `t_u`.
+    pub t_u: f64,
+    /// RT query cost with a fresh BVH `t_q`.
+    pub t_q: f64,
+    /// Average extra query cost per update step `Δq`.
+    pub dq: f64,
+}
+
+/// Total simulation RT cost for a fixed update count `k_u` (Eq. 5).
+pub fn simulation_cost(p: &CostParams, n_steps: f64, k_u: f64) -> f64 {
+    let k = k_u.max(0.0);
+    n_steps / (k + 1.0)
+        * (k * (k * p.dq) / 2.0 + k * (p.t_u + p.t_q) + (p.t_r + p.t_q))
+}
+
+/// Closed-form optimal `k_u` (Eq. 8). Returns a large-but-finite value when
+/// `Δq` is (numerically) zero — no degradation means "never rebuild".
+pub fn optimal_ku(p: &CostParams) -> f64 {
+    const DQ_FLOOR: f64 = 1e-12;
+    const K_CAP: f64 = 1e6;
+    let dq = p.dq.max(DQ_FLOOR);
+    // t_u <= t_r in any sane system; clamp the discriminant defensively.
+    let disc = 1.0 - 2.0 * (p.t_u - p.t_r) / dq;
+    if disc <= 1.0 {
+        // updates cost more than rebuilds: rebuild every step
+        return 0.0;
+    }
+    (-1.0 + disc.sqrt()).min(K_CAP)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn numeric_argmin(p: &CostParams) -> f64 {
+        // integer scan is what a discrete simulation can actually choose
+        let mut best_k = 0.0;
+        let mut best_c = f64::INFINITY;
+        for k in 0..100_000 {
+            let c = simulation_cost(p, 1000.0, k as f64);
+            if c < best_c {
+                best_c = c;
+                best_k = k as f64;
+            }
+        }
+        best_k
+    }
+
+    #[test]
+    fn closed_form_matches_numeric_minimum() {
+        for (t_r, t_u, dq) in [
+            (10.0, 1.0, 0.5),
+            (100.0, 5.0, 0.1),
+            (50.0, 0.5, 2.0),
+            (3.0, 0.1, 0.01),
+        ] {
+            let p = CostParams { t_r, t_u, t_q: 5.0, dq };
+            let k_closed = optimal_ku(&p);
+            let k_num = numeric_argmin(&p);
+            assert!(
+                (k_closed - k_num).abs() <= 1.0 + 0.02 * k_num,
+                "t_r={t_r} t_u={t_u} dq={dq}: closed={k_closed} numeric={k_num}"
+            );
+        }
+    }
+
+    #[test]
+    fn faster_dynamics_lower_k() {
+        // larger Δq (stronger degradation per step) must shrink k_opt
+        let slow = CostParams { t_r: 20.0, t_u: 1.0, t_q: 4.0, dq: 0.05 };
+        let fast = CostParams { dq: 5.0, ..slow };
+        assert!(optimal_ku(&fast) < optimal_ku(&slow));
+    }
+
+    #[test]
+    fn cheap_rebuild_means_rebuild_always() {
+        // t_u >= t_r -> updates pointless -> k = 0
+        let p = CostParams { t_r: 1.0, t_u: 2.0, t_q: 4.0, dq: 0.5 };
+        assert_eq!(optimal_ku(&p), 0.0);
+    }
+
+    #[test]
+    fn zero_degradation_never_rebuilds() {
+        let p = CostParams { t_r: 10.0, t_u: 0.1, t_q: 4.0, dq: 0.0 };
+        assert!(optimal_ku(&p) >= 1e5);
+    }
+
+    #[test]
+    fn cost_positive_and_k0_is_rebuild_every_step() {
+        let p = CostParams { t_r: 10.0, t_u: 1.0, t_q: 5.0, dq: 0.2 };
+        let c0 = simulation_cost(&p, 100.0, 0.0);
+        // k=0: every step pays t_r + t_q
+        assert!((c0 - 100.0 * (10.0 + 5.0)).abs() < 1e-9);
+    }
+}

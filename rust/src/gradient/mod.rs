@@ -1,0 +1,9 @@
+//! Contribution #1 — **gradient**: the adaptive real-time BVH
+//! update/rebuild ratio optimizer, plus the reference policies it is
+//! evaluated against (paper §3.1, §4.1 / Fig. 8).
+
+pub mod cost_model;
+pub mod policy;
+
+pub use cost_model::{optimal_ku, simulation_cost, CostParams};
+pub use policy::{AvgPolicy, BvhAction, FixedKPolicy, GradientPolicy, RebuildPolicy, StepObs};

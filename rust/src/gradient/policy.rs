@@ -1,0 +1,494 @@
+//! BVH rebuild/update policies.
+//!
+//! Three policies from the paper's §4.1 benchmark:
+//! * [`FixedKPolicy`] — rebuild every `k` steps (`fixed-200`);
+//! * [`AvgPolicy`] — rebuild once the average step cost since the last
+//!   rebuild exceeds the average cost of a rebuild step (`avg`);
+//! * [`GradientPolicy`] — the paper's contribution: estimate `t_u`, `t_r`
+//!   and `Δq` online and rebuild after `k_opt` updates (Eq. 8).
+//!
+//! The paper samples its timers with NVML; here the observations come from
+//! the simulated RT clock ([`crate::rtcore::timing`]) so runs are exactly
+//! reproducible (see DESIGN.md §Hardware-Adaptation).
+
+use super::cost_model::{optimal_ku, CostParams};
+
+/// What to do with the BVH before the next RT query.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BvhAction {
+    Build,
+    Update,
+}
+
+/// One step's timing observation fed back to the policy.
+#[derive(Clone, Copy, Debug)]
+pub struct StepObs {
+    /// Action that was taken this step.
+    pub action: BvhAction,
+    /// Cost of the build *or* update operation (simulated ms).
+    pub bvh_op_time: f64,
+    /// Cost of the RT query phase this step (simulated ms).
+    pub query_time: f64,
+    /// Energy of the BVH operation (simulated millijoules; 0 when the
+    /// caller does not meter energy). Used by [`GradientEePolicy`].
+    pub bvh_op_energy: f64,
+    /// Energy of the query phase (simulated millijoules).
+    pub query_energy: f64,
+}
+
+/// A rebuild/update decision policy.
+pub trait RebuildPolicy: Send {
+    /// Decide the action for the upcoming step.
+    fn decide(&mut self) -> BvhAction;
+    /// Feed back the observed costs of the step just executed.
+    fn observe(&mut self, obs: StepObs);
+    fn name(&self) -> String;
+    /// Current estimate of the update budget (diagnostic; NaN if n/a).
+    fn current_k(&self) -> f64 {
+        f64::NAN
+    }
+}
+
+// ---------------------------------------------------------------- fixed-k
+
+/// Rebuild every `k` steps, update otherwise (`fixed-200` in the paper).
+#[derive(Clone, Debug)]
+pub struct FixedKPolicy {
+    k: u64,
+    since_build: u64,
+    started: bool,
+}
+
+impl FixedKPolicy {
+    pub fn new(k: u64) -> Self {
+        FixedKPolicy { k: k.max(1), since_build: 0, started: false }
+    }
+}
+
+impl RebuildPolicy for FixedKPolicy {
+    fn decide(&mut self) -> BvhAction {
+        if !self.started {
+            self.started = true;
+            return BvhAction::Build;
+        }
+        if self.since_build + 1 >= self.k {
+            BvhAction::Build
+        } else {
+            BvhAction::Update
+        }
+    }
+
+    fn observe(&mut self, obs: StepObs) {
+        match obs.action {
+            BvhAction::Build => self.since_build = 0,
+            BvhAction::Update => self.since_build += 1,
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("fixed-{}", self.k)
+    }
+
+    fn current_k(&self) -> f64 {
+        self.k as f64
+    }
+}
+
+// ---------------------------------------------------------------- avg
+
+/// Rebuild when the average per-step cost since the last rebuild surpasses
+/// the average cost of a rebuild step (the `avg` baseline). Reacts slowly —
+/// the running average drags behind sudden dynamics changes, which is
+/// exactly the weakness Fig. 8 exposes.
+#[derive(Clone, Debug, Default)]
+pub struct AvgPolicy {
+    started: bool,
+    /// Mean cost of a rebuild step (build + query), running over all builds.
+    rebuild_step_avg: f64,
+    rebuild_steps: u64,
+    /// Accumulated cost and count of steps since the last rebuild.
+    since_cost: f64,
+    since_steps: u64,
+}
+
+impl AvgPolicy {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl RebuildPolicy for AvgPolicy {
+    fn decide(&mut self) -> BvhAction {
+        if !self.started {
+            self.started = true;
+            return BvhAction::Build;
+        }
+        if self.since_steps == 0 {
+            return BvhAction::Update;
+        }
+        let avg_since = self.since_cost / self.since_steps as f64;
+        if self.rebuild_steps > 0 && avg_since > self.rebuild_step_avg {
+            BvhAction::Build
+        } else {
+            BvhAction::Update
+        }
+    }
+
+    fn observe(&mut self, obs: StepObs) {
+        let step_cost = obs.bvh_op_time + obs.query_time;
+        match obs.action {
+            BvhAction::Build => {
+                self.rebuild_steps += 1;
+                let n = self.rebuild_steps as f64;
+                self.rebuild_step_avg += (step_cost - self.rebuild_step_avg) / n;
+                self.since_cost = 0.0;
+                self.since_steps = 0;
+            }
+            BvhAction::Update => {
+                self.since_cost += step_cost;
+                self.since_steps += 1;
+            }
+        }
+    }
+
+    fn name(&self) -> String {
+        "avg".into()
+    }
+}
+
+// ---------------------------------------------------------------- gradient
+
+/// The paper's adaptive optimizer. Maintains EMA estimates of `t_u`, `t_r`
+/// and the degradation slope `Δq`, and rebuilds once the number of updates
+/// since the last rebuild reaches `k_opt` (Eq. 8).
+#[derive(Clone, Debug)]
+pub struct GradientPolicy {
+    started: bool,
+    /// EMA smoothing factor for the time estimates.
+    alpha: f64,
+    t_r: f64,
+    t_u: f64,
+    /// Query cost right after the last rebuild (the `t_q` anchor).
+    q_fresh: f64,
+    /// EMA of the degradation slope Δq.
+    dq: f64,
+    updates_since_build: u64,
+    /// Previous step's query time, for slope sampling.
+    last_query: f64,
+    k_opt: f64,
+    /// Minimum updates before trusting the Δq estimate.
+    warmup: u64,
+}
+
+impl GradientPolicy {
+    pub fn new() -> Self {
+        GradientPolicy {
+            started: false,
+            alpha: 0.3,
+            t_r: f64::NAN,
+            t_u: f64::NAN,
+            q_fresh: f64::NAN,
+            dq: f64::NAN,
+            updates_since_build: 0,
+            last_query: f64::NAN,
+            k_opt: 8.0, // optimistic initial budget, refined online
+            warmup: 2,
+        }
+    }
+
+    fn ema(current: f64, sample: f64, alpha: f64) -> f64 {
+        if current.is_nan() {
+            sample
+        } else {
+            current + alpha * (sample - current)
+        }
+    }
+
+    /// Current parameter estimates (diagnostics / tests).
+    pub fn estimates(&self) -> CostParams {
+        CostParams {
+            t_r: self.t_r,
+            t_u: self.t_u,
+            t_q: self.q_fresh,
+            dq: self.dq,
+        }
+    }
+}
+
+impl Default for GradientPolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RebuildPolicy for GradientPolicy {
+    fn decide(&mut self) -> BvhAction {
+        if !self.started {
+            self.started = true;
+            return BvhAction::Build;
+        }
+        // Need at least one observed rebuild and update cost to decide.
+        if self.t_r.is_nan() || self.t_u.is_nan() {
+            return BvhAction::Update;
+        }
+        if self.updates_since_build >= self.warmup
+            && (self.updates_since_build as f64) >= self.k_opt
+        {
+            BvhAction::Build
+        } else {
+            BvhAction::Update
+        }
+    }
+
+    fn observe(&mut self, obs: StepObs) {
+        match obs.action {
+            BvhAction::Build => {
+                self.t_r = Self::ema(self.t_r, obs.bvh_op_time, self.alpha);
+                self.q_fresh = Self::ema(self.q_fresh, obs.query_time, self.alpha);
+                self.updates_since_build = 0;
+                self.last_query = obs.query_time;
+            }
+            BvhAction::Update => {
+                self.t_u = Self::ema(self.t_u, obs.bvh_op_time, self.alpha);
+                // Per-step degradation sample: rise of query cost since the
+                // previous step. Clamp at 0 — noise can make it negative.
+                if !self.last_query.is_nan() {
+                    let slope = (obs.query_time - self.last_query).max(0.0);
+                    self.dq = Self::ema(self.dq, slope, self.alpha);
+                }
+                self.last_query = obs.query_time;
+                self.updates_since_build += 1;
+            }
+        }
+        if !self.t_r.is_nan() && !self.t_u.is_nan() && !self.dq.is_nan() {
+            self.k_opt = optimal_ku(&self.estimates());
+        }
+    }
+
+    fn name(&self) -> String {
+        "gradient".into()
+    }
+
+    fn current_k(&self) -> f64 {
+        self.k_opt
+    }
+}
+
+// ---------------------------------------------------------------- gradient-ee
+
+/// The paper's §5 future-work extension: run the gradient cost model on
+/// *energy* instead of time — `t_r`, `t_u` and `Δq` become joules per step,
+/// so `k_opt` minimizes the total energy of the BVH pipeline. The math is
+/// identical (Eq. 5 integrates any additive per-step cost); only the
+/// observable changes.
+#[derive(Clone, Debug, Default)]
+pub struct GradientEePolicy {
+    inner: GradientPolicy,
+}
+
+impl GradientEePolicy {
+    pub fn new() -> Self {
+        GradientEePolicy { inner: GradientPolicy::new() }
+    }
+}
+
+impl RebuildPolicy for GradientEePolicy {
+    fn decide(&mut self) -> BvhAction {
+        self.inner.decide()
+    }
+
+    fn observe(&mut self, obs: StepObs) {
+        // Re-map the observation onto the energy axis; fall back to time
+        // when the caller supplied no energy metering.
+        let (op, q) = if obs.bvh_op_energy > 0.0 || obs.query_energy > 0.0 {
+            (obs.bvh_op_energy, obs.query_energy)
+        } else {
+            (obs.bvh_op_time, obs.query_time)
+        };
+        self.inner.observe(StepObs { bvh_op_time: op, query_time: q, ..obs });
+    }
+
+    fn name(&self) -> String {
+        "gradient-ee".into()
+    }
+
+    fn current_k(&self) -> f64 {
+        self.inner.current_k()
+    }
+}
+
+/// Parse a policy spec: `gradient`, `gradient-ee`, `avg`, `fixed-200`, ...
+pub fn parse_policy(s: &str) -> Option<Box<dyn RebuildPolicy>> {
+    let s = s.to_ascii_lowercase();
+    if s == "gradient" {
+        return Some(Box::new(GradientPolicy::new()));
+    }
+    if s == "gradient-ee" {
+        return Some(Box::new(GradientEePolicy::new()));
+    }
+    if s == "avg" {
+        return Some(Box::new(AvgPolicy::new()));
+    }
+    if let Some(k) = s.strip_prefix("fixed-") {
+        return k.parse().ok().map(|k| Box::new(FixedKPolicy::new(k)) as Box<dyn RebuildPolicy>);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive a policy against a synthetic BVH cost simulator where updates
+    /// cost `t_u`, rebuilds `t_r`, and query cost grows by `dq` per update.
+    fn drive(policy: &mut dyn RebuildPolicy, steps: usize, t_r: f64, t_u: f64, dq: f64) -> (f64, Vec<usize>) {
+        let t_q = 5.0;
+        let mut degradation = 0.0;
+        let mut total = 0.0;
+        let mut rebuild_steps = Vec::new();
+        for s in 0..steps {
+            let action = policy.decide();
+            let (op, q) = match action {
+                BvhAction::Build => {
+                    degradation = 0.0;
+                    rebuild_steps.push(s);
+                    (t_r, t_q)
+                }
+                BvhAction::Update => {
+                    degradation += dq;
+                    (t_u, t_q + degradation)
+                }
+            };
+            total += op + q;
+            policy.observe(StepObs {
+                action,
+                bvh_op_time: op,
+                query_time: q,
+                bvh_op_energy: 0.0,
+                query_energy: 0.0,
+            });
+        }
+        (total, rebuild_steps)
+    }
+
+    #[test]
+    fn fixed_k_rebuilds_on_schedule() {
+        let mut p = FixedKPolicy::new(10);
+        let (_, rebuilds) = drive(&mut p, 50, 10.0, 1.0, 0.5);
+        assert_eq!(rebuilds, vec![0, 10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn gradient_converges_to_kopt() {
+        let (t_r, t_u, dq) = (20.0, 1.0, 0.5);
+        let mut p = GradientPolicy::new();
+        drive(&mut p, 500, t_r, t_u, dq);
+        let k_true = optimal_ku(&CostParams { t_r, t_u, t_q: 5.0, dq });
+        assert!(
+            (p.current_k() - k_true).abs() < 0.25 * k_true + 1.0,
+            "estimated k={} true k={}",
+            p.current_k(),
+            k_true
+        );
+    }
+
+    #[test]
+    fn gradient_beats_bad_fixed_k_on_fast_dynamics() {
+        // fast dynamics: heavy degradation -> fixed-200 is terrible
+        let (t_r, t_u, dq) = (20.0, 1.0, 2.0);
+        let mut g = GradientPolicy::new();
+        let (cost_g, _) = drive(&mut g, 1000, t_r, t_u, dq);
+        let mut f = FixedKPolicy::new(200);
+        let (cost_f, _) = drive(&mut f, 1000, t_r, t_u, dq);
+        assert!(cost_g < cost_f * 0.5, "gradient={cost_g} fixed200={cost_f}");
+    }
+
+    #[test]
+    fn gradient_beats_eager_fixed_k_on_slow_dynamics() {
+        // slow dynamics: rebuilding every step wastes t_r
+        let (t_r, t_u, dq) = (50.0, 0.5, 0.01);
+        let mut g = GradientPolicy::new();
+        let (cost_g, _) = drive(&mut g, 1000, t_r, t_u, dq);
+        let mut f = FixedKPolicy::new(2);
+        let (cost_f, _) = drive(&mut f, 1000, t_r, t_u, dq);
+        assert!(cost_g < cost_f, "gradient={cost_g} fixed2={cost_f}");
+    }
+
+    #[test]
+    fn gradient_adapts_to_regime_change() {
+        // start slow, switch to fast dynamics; k estimate must drop
+        let mut p = GradientPolicy::new();
+        drive(&mut p, 400, 20.0, 1.0, 0.02);
+        let k_slow = p.current_k();
+        drive(&mut p, 400, 20.0, 1.0, 4.0);
+        let k_fast = p.current_k();
+        assert!(k_fast < k_slow * 0.5, "k_slow={k_slow} k_fast={k_fast}");
+    }
+
+    #[test]
+    fn avg_policy_eventually_rebuilds() {
+        let mut p = AvgPolicy::new();
+        let (_, rebuilds) = drive(&mut p, 300, 10.0, 1.0, 1.0);
+        assert!(rebuilds.len() > 2, "rebuilds={rebuilds:?}");
+        assert_eq!(rebuilds[0], 0);
+    }
+
+    #[test]
+    fn parse_policies() {
+        assert_eq!(parse_policy("gradient").unwrap().name(), "gradient");
+        assert_eq!(parse_policy("gradient-ee").unwrap().name(), "gradient-ee");
+        assert_eq!(parse_policy("avg").unwrap().name(), "avg");
+        assert_eq!(parse_policy("fixed-200").unwrap().name(), "fixed-200");
+        assert!(parse_policy("nope").is_none());
+    }
+
+    #[test]
+    fn gradient_ee_optimizes_energy_axis() {
+        // Energy observations scaled differently from time: if rebuilds are
+        // energy-cheap relative to updates' degradation energy, the EE
+        // policy must rebuild more eagerly than the time policy.
+        let mut drive_scaled = |p: &mut dyn RebuildPolicy, e_op: f64, e_q: f64| {
+            let t_q = 5.0;
+            let mut deg = 0.0;
+            for _ in 0..300 {
+                let action = p.decide();
+                let (op, q) = match action {
+                    BvhAction::Build => {
+                        deg = 0.0;
+                        (20.0, t_q)
+                    }
+                    BvhAction::Update => {
+                        deg += 0.5;
+                        (1.0, t_q + deg)
+                    }
+                };
+                p.observe(StepObs {
+                    action,
+                    bvh_op_time: op,
+                    query_time: q,
+                    bvh_op_energy: op * e_op,
+                    query_energy: q * e_q,
+                });
+            }
+        };
+        let mut time_p = GradientPolicy::new();
+        let mut ee_p = GradientEePolicy::new();
+        drive_scaled(&mut time_p, 0.0, 0.0);
+        drive_scaled(&mut ee_p, 0.3, 3.0);
+        // energy axis: rebuild 0.3x cheaper, degradation 3x dearer -> lower k
+        assert!(
+            ee_p.current_k() < time_p.current_k(),
+            "ee k={} time k={}",
+            ee_p.current_k(),
+            time_p.current_k()
+        );
+    }
+
+    #[test]
+    fn gradient_ee_falls_back_to_time_without_energy() {
+        let mut p = GradientEePolicy::new();
+        drive(&mut p, 300, 20.0, 1.0, 0.5);
+        let k_true = optimal_ku(&CostParams { t_r: 20.0, t_u: 1.0, t_q: 5.0, dq: 0.5 });
+        assert!((p.current_k() - k_true).abs() < 0.3 * k_true + 1.0);
+    }
+}

@@ -1,0 +1,37 @@
+//! # ORCS — Optimized Ray-tracing Core Simulation
+//!
+//! Reproduction of *"Advancing RT Core-Accelerated Fixed-Radius Nearest
+//! Neighbor Search"* (CS.DC 2026) on a three-layer Rust + JAX/Pallas + PJRT
+//! stack. The crate provides:
+//!
+//! * a software **BVH substrate** standing in for the GPU RT cores, with
+//!   exact operation counters ([`bvh`]);
+//! * the paper's three contributions: the **gradient** BVH update/rebuild
+//!   optimizer ([`gradient`]), the neighbor-list-free **ORCS** pipelines and
+//!   the ray-traced **periodic boundary conditions** ([`frnn`]);
+//! * reference baselines (CPU-CELL, GPU-CELL, RT-REF) ([`frnn`]);
+//! * a roofline **timing + power model** over four GPU generations
+//!   ([`rtcore`]);
+//! * a **PJRT runtime** executing AOT-lowered JAX/Pallas HLO artifacts on the
+//!   hot path ([`runtime`]);
+//! * the **coordinator** engine, metrics and reporting ([`coordinator`]);
+//! * the **benchmark suite** regenerating every table and figure of the
+//!   paper's evaluation ([`benchsuite`]).
+//!
+//! See `DESIGN.md` for the system inventory and the hardware-substitution
+//! rationale, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod core;
+pub mod parallel;
+pub mod physics;
+pub mod bvh;
+pub mod frnn;
+pub mod gradient;
+pub mod rtcore;
+pub mod runtime;
+pub mod coordinator;
+pub mod benchsuite;
+pub mod cli;
+pub mod testutil;
+
+pub use crate::core::{aabb::Aabb, rng::Rng, vec3::Vec3};

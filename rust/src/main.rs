@@ -1,0 +1,144 @@
+//! `orcs` — the leader binary: CLI over the coordinator engine and the
+//! benchmark suite. See `orcs help` / [`orcs::cli::USAGE`].
+
+use anyhow::Result;
+
+use orcs::benchsuite::{common::BenchOpts, fig11_12, fig13, fig8, fig9_10, table2};
+use orcs::cli::{Args, USAGE};
+use orcs::coordinator::report::{results_dir, CsvWriter};
+use orcs::coordinator::{Engine, EngineConfig};
+use orcs::core::config::Boundary;
+use orcs::frnn::ApproachKind;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    match args.subcommand.as_str() {
+        "simulate" => simulate(&args),
+        "bench-fig8" => fig8::run(&BenchOpts::from_args(&args)?),
+        "bench-table2" => table2::run(&BenchOpts::from_args(&args)?),
+        "bench-fig9" => fig9_10::run(&BenchOpts::from_args(&args)?, Boundary::Wall),
+        "bench-fig10" => fig9_10::run(&BenchOpts::from_args(&args)?, Boundary::Periodic),
+        "bench-fig11" | "bench-fig12" => fig11_12::run(&BenchOpts::from_args(&args)?),
+        "bench-fig13" => fig13::run(&BenchOpts::from_args(&args)?),
+        "inspect-artifacts" => inspect_artifacts(),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand `{other}`\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// `orcs simulate`: run one scenario end to end with full metering.
+fn simulate(args: &Args) -> Result<()> {
+    let sim = args.sim_config()?;
+    let approach = args.approach(ApproachKind::OrcsForces)?;
+    let steps = args.get_usize("steps", 100)?;
+    let policy = args.get_or("policy", "gradient").to_string();
+    let cfg = EngineConfig {
+        policy,
+        hw: args.hw()?,
+        threads: orcs::parallel::num_threads(),
+        check_oom: !args.has("no-oom-check"),
+        ..EngineConfig::new(sim.clone(), approach)
+    };
+    let kernels = Engine::kernels_for(sim.force_path, cfg.threads)?;
+    println!(
+        "simulate: {} | {} | policy={} | hw={} | kernels={} | {} steps",
+        cfg.sim.tag(),
+        approach,
+        cfg.policy,
+        cfg.hw.name,
+        kernels.name(),
+        steps
+    );
+    let mut engine = Engine::new(cfg, kernels)?;
+    let trace_path = args.get("trace").map(std::path::PathBuf::from);
+    let keep_trace = trace_path.is_some();
+    let report_every = (steps / 10).max(1);
+
+    let mut records = Vec::new();
+    for s in 0..steps {
+        let rec = engine.step()?;
+        if s % report_every == 0 || s + 1 == steps {
+            println!(
+                "  step {:>6}  sim {:>9.4} ms  rt {:>9.4} ms  {:>7.0} W  {:>10} int  {}",
+                rec.step,
+                rec.sim_ms,
+                rec.rt_ms,
+                rec.energy.avg_power_w,
+                rec.interactions,
+                match rec.bvh_action {
+                    Some(orcs::gradient::BvhAction::Build) => "rebuild",
+                    Some(orcs::gradient::BvhAction::Update) => "update",
+                    None => "",
+                },
+            );
+        }
+        if let Some(bytes) = rec.oom_bytes {
+            println!("  OOM: neighbor list would need {bytes} bytes on {}", engine.cfg.hw.name);
+            break;
+        }
+        if keep_trace {
+            records.push(rec);
+        }
+    }
+
+    let ke = engine.state.kinetic_energy();
+    println!(
+        "done: {} steps | KE {:.3} | momentum |p| {:.4} | finite={}",
+        engine.state.step_count,
+        ke,
+        engine.state.total_momentum().norm(),
+        engine.state.is_finite()
+    );
+
+    if let Some(path) = trace_path {
+        let mut csv = CsvWriter::create(
+            &path,
+            &["step", "sim_ms", "rt_ms", "power_w", "energy_j", "interactions", "action"],
+        )?;
+        for rec in &records {
+            csv.row(&[
+                rec.step.to_string(),
+                format!("{:.5}", rec.sim_ms),
+                format!("{:.5}", rec.rt_ms),
+                format!("{:.1}", rec.energy.avg_power_w),
+                format!("{:.6}", rec.energy.energy_j),
+                rec.interactions.to_string(),
+                format!("{:?}", rec.bvh_action),
+            ])?;
+        }
+        println!("trace: {}", path.display());
+    }
+    let _ = results_dir();
+    Ok(())
+}
+
+/// `orcs inspect-artifacts`: load and list the PJRT artifact set.
+fn inspect_artifacts() -> Result<()> {
+    let dir = orcs::runtime::XlaRuntime::default_dir();
+    println!("artifact dir: {}", dir.display());
+    let rt = orcs::runtime::XlaRuntime::load(&dir)?;
+    let mut ks: Vec<_> = rt.lj_forces.keys().collect();
+    ks.sort();
+    for k in ks {
+        println!("  lj_forces  K={k:<4} ({})", rt.lj_forces[k].name);
+    }
+    println!("  integrate        ({})", rt.integrate.name);
+    if let Some(r) = &rt.lj_forces_ref {
+        println!("  lj_forces_ref    ({})", r.name);
+    }
+    println!("all artifacts compiled on PJRT CPU OK");
+    Ok(())
+}

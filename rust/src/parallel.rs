@@ -1,0 +1,208 @@
+//! Scoped thread-pool parallelism — the OpenMP substitute for the CPU-CELL
+//! baseline (the offline vendor set has no `rayon`).
+//!
+//! `parallel_for_chunks` splits an index range into contiguous chunks and
+//! runs one std thread per chunk via `std::thread::scope`; worker closures
+//! get `(thread_id, range)` so callers can keep per-thread accumulation
+//! buffers (the standard race-free pattern for force scatter).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: `ORCS_THREADS` env override, else the
+/// available hardware parallelism.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("ORCS_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `body(thread_id, start..end)` over `0..n` split into `threads`
+/// contiguous chunks. Blocks until all workers finish.
+pub fn parallel_for_chunks<F>(n: usize, threads: usize, body: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || n < 2 {
+        body(0, 0..n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let body = &body;
+            s.spawn(move || body(t, lo..hi));
+        }
+    });
+}
+
+/// Dynamic work-stealing variant: workers atomically grab blocks of
+/// `block` indices. Better for irregular per-item cost (clustered scenes,
+/// variable radii) where static chunking load-imbalances.
+pub fn parallel_for_dynamic<F>(n: usize, threads: usize, block: usize, body: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 || n < 2 {
+        body(0, 0..n);
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    let block = block.max(1);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let body = &body;
+            let cursor = &cursor;
+            s.spawn(move || loop {
+                let lo = cursor.fetch_add(block, Ordering::Relaxed);
+                if lo >= n {
+                    break;
+                }
+                let hi = (lo + block).min(n);
+                body(t, lo..hi);
+            });
+        }
+    });
+}
+
+/// Map `0..n` in parallel into a pre-allocated output vector. `f` must be
+/// pure per-index.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        parallel_for_chunks(n, threads, |_, range| {
+            let p = out_ptr; // copy the Send wrapper into the closure
+            for i in range {
+                // SAFETY: chunks are disjoint; each index written once.
+                unsafe { *p.0.add(i) = f(i) };
+            }
+        });
+    }
+    out
+}
+
+/// Chunked parallel reduction: each worker builds a private accumulator
+/// with `init`, folds its index range into it with `body`, and the
+/// per-thread accumulators are returned in thread order (deterministic
+/// merging is the caller's job — this is the race-free substitute for GPU
+/// atomic scatter, see DESIGN.md §Hardware-Adaptation).
+pub fn parallel_reduce<R, I, F>(n: usize, threads: usize, init: I, body: F) -> Vec<R>
+where
+    R: Send,
+    I: Fn() -> R + Sync,
+    F: Fn(&mut R, usize) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        let mut acc = init();
+        for i in 0..n {
+            body(&mut acc, i);
+        }
+        return vec![acc];
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let init = &init;
+            let body = &body;
+            handles.push(s.spawn(move || {
+                let mut acc = init();
+                for i in lo..hi {
+                    body(&mut acc, i);
+                }
+                acc
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+/// Pointer wrapper asserting Send for disjoint-range writes.
+struct SendPtr<T>(*mut T);
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn chunks_cover_all_indices_once() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_chunks(1000, 7, |_, range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn dynamic_covers_all_indices_once() {
+        let hits: Vec<AtomicU64> = (0..1003).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_dynamic(1003, 5, 16, |_, range| {
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn map_matches_serial() {
+        let v = parallel_map(257, 4, |i| i * i);
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i * i);
+        }
+    }
+
+    #[test]
+    fn reduce_sums_correctly() {
+        let parts = parallel_reduce(1000, 8, || 0u64, |acc, i| *acc += i as u64);
+        let total: u64 = parts.into_iter().sum();
+        assert_eq!(total, 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn reduce_single_thread() {
+        let parts = parallel_reduce(10, 1, || 0u64, |acc, i| *acc += i as u64);
+        assert_eq!(parts.len(), 1);
+        assert_eq!(parts[0], 45);
+    }
+
+    #[test]
+    fn single_thread_and_empty() {
+        parallel_for_chunks(0, 4, |_, r| assert!(r.is_empty()));
+        let v = parallel_map(5, 1, |i| i + 1);
+        assert_eq!(v, vec![1, 2, 3, 4, 5]);
+    }
+}

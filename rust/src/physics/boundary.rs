@@ -1,0 +1,131 @@
+//! Boundary conditions: reflective walls and periodic wrap with
+//! minimum-image displacement.
+
+use crate::core::config::Boundary;
+use crate::core::vec3::Vec3;
+
+/// Displacement `p_i - p_j` respecting the boundary mode: minimum image for
+/// periodic boxes, plain difference for walls.
+#[inline(always)]
+pub fn displacement(p_i: Vec3, p_j: Vec3, boundary: Boundary, box_l: f32) -> Vec3 {
+    let d = p_i - p_j;
+    match boundary {
+        Boundary::Wall => d,
+        Boundary::Periodic => d.min_image(box_l),
+    }
+}
+
+/// Apply the boundary to one particle after integration. Returns the
+/// corrected position and (for walls) flips the corresponding velocity
+/// components.
+#[inline]
+pub fn apply(boundary: Boundary, box_l: f32, pos: &mut Vec3, vel: &mut Vec3) {
+    match boundary {
+        Boundary::Periodic => {
+            pos.x = wrap(pos.x, box_l);
+            pos.y = wrap(pos.y, box_l);
+            pos.z = wrap(pos.z, box_l);
+        }
+        Boundary::Wall => {
+            reflect(&mut pos.x, &mut vel.x, box_l);
+            reflect(&mut pos.y, &mut vel.y, box_l);
+            reflect(&mut pos.z, &mut vel.z, box_l);
+        }
+    }
+}
+
+/// Euclidean-mod wrap of a coordinate into `[0, l)`.
+#[inline(always)]
+pub fn wrap(x: f32, l: f32) -> f32 {
+    let w = x - l * (x / l).floor();
+    // floating point can land exactly on l
+    if w >= l {
+        0.0
+    } else {
+        w
+    }
+}
+
+/// Reflect a coordinate off the walls at 0 and `l`, flipping velocity.
+/// Handles multiple bounces (fast particles) by folding.
+#[inline]
+fn reflect(x: &mut f32, v: &mut f32, l: f32) {
+    if *x >= 0.0 && *x <= l {
+        return;
+    }
+    // Fold into the [0, 2l) sawtooth period.
+    let period = 2.0 * l;
+    let mut y = *x - period * (*x / period).floor();
+    let mut flipped = false;
+    if y > l {
+        y = period - y;
+        flipped = true;
+    }
+    *x = y.clamp(0.0, l);
+    if flipped {
+        *v = -*v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wrap_into_box() {
+        assert_eq!(wrap(5.0, 10.0), 5.0);
+        assert_eq!(wrap(15.0, 10.0), 5.0);
+        assert_eq!(wrap(-3.0, 10.0), 7.0);
+        assert!(wrap(10.0, 10.0) < 10.0);
+        assert_eq!(wrap(0.0, 10.0), 0.0);
+    }
+
+    #[test]
+    fn periodic_apply_wraps() {
+        let mut p = Vec3::new(11.0, -1.0, 5.0);
+        let mut v = Vec3::new(1.0, 1.0, 1.0);
+        apply(Boundary::Periodic, 10.0, &mut p, &mut v);
+        assert_eq!(p, Vec3::new(1.0, 9.0, 5.0));
+        assert_eq!(v, Vec3::new(1.0, 1.0, 1.0)); // velocity untouched
+    }
+
+    #[test]
+    fn wall_apply_reflects_and_flips() {
+        let mut p = Vec3::new(11.0, -2.0, 5.0);
+        let mut v = Vec3::new(3.0, -4.0, 5.0);
+        apply(Boundary::Wall, 10.0, &mut p, &mut v);
+        assert!((p.x - 9.0).abs() < 1e-5);
+        assert!((p.y - 2.0).abs() < 1e-5);
+        assert_eq!(p.z, 5.0);
+        assert_eq!(v.x, -3.0);
+        assert_eq!(v.y, 4.0);
+        assert_eq!(v.z, 5.0);
+    }
+
+    #[test]
+    fn wall_multiple_bounce_fold() {
+        // x = 25 with l = 10: 25 -> fold period 20 -> 5, one flip
+        let mut x = 25.0f32;
+        let mut v = 1.0f32;
+        reflect(&mut x, &mut v, 10.0);
+        assert!((x - 5.0).abs() < 1e-5);
+        // 25 = 2*10 + 5 -> within first half of next period -> no flip
+        assert_eq!(v, 1.0);
+        // x = -5: folds to 5 with flip
+        let mut x2 = -5.0f32;
+        let mut v2 = -2.0f32;
+        reflect(&mut x2, &mut v2, 10.0);
+        assert!((x2 - 5.0).abs() < 1e-5);
+        assert_eq!(v2, 2.0);
+    }
+
+    #[test]
+    fn displacement_min_image_only_when_periodic() {
+        let a = Vec3::new(9.5, 0.0, 0.0);
+        let b = Vec3::new(0.5, 0.0, 0.0);
+        let dw = displacement(a, b, Boundary::Wall, 10.0);
+        assert_eq!(dw.x, 9.0);
+        let dp = displacement(a, b, Boundary::Periodic, 10.0);
+        assert!((dp.x + 1.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,136 @@
+//! Symplectic-Euler integration and the optional velocity-rescale
+//! thermostat.
+//!
+//! The paper's pipelines end each step by "applying forces in parallel to
+//! the particles" (§3.2); this module is that kernel's Rust reference. The
+//! XLA artifact `integrate_c4096` implements the same update and is used on
+//! the hot path by RT-REF / ORCS-forces when `ForcePath::Xla` is selected;
+//! `integration_runtime.rs` cross-checks the two.
+
+use crate::physics::boundary;
+use crate::physics::state::SimState;
+
+/// Advance positions and velocities one step from `state.force`
+/// (unit mass): `v += F dt; x += v dt`, then apply boundary conditions.
+pub fn step(state: &mut SimState) {
+    let dt = state.dt;
+    let (boundary_mode, box_l) = (state.boundary, state.box_l);
+    for i in 0..state.n() {
+        let f = state.params.cap(state.force[i]);
+        let mut v = state.vel[i] + f * dt;
+        let mut p = state.pos[i] + v * dt;
+        boundary::apply(boundary_mode, box_l, &mut p, &mut v);
+        state.pos[i] = p;
+        state.vel[i] = v;
+    }
+    state.step_count += 1;
+}
+
+/// Integrate from externally supplied new positions/velocities (the XLA
+/// path computes the Euler update on-device; boundary handling stays in
+/// Rust — see DESIGN.md §Three-layer).
+pub fn apply_integrated(state: &mut SimState, new_pos: &[[f32; 3]], new_vel: &[[f32; 3]]) {
+    assert_eq!(new_pos.len(), state.n());
+    assert_eq!(new_vel.len(), state.n());
+    let (boundary_mode, box_l) = (state.boundary, state.box_l);
+    for i in 0..state.n() {
+        let mut p = crate::core::vec3::Vec3::new(new_pos[i][0], new_pos[i][1], new_pos[i][2]);
+        let mut v = crate::core::vec3::Vec3::new(new_vel[i][0], new_vel[i][1], new_vel[i][2]);
+        boundary::apply(boundary_mode, box_l, &mut p, &mut v);
+        state.pos[i] = p;
+        state.vel[i] = v;
+    }
+    state.step_count += 1;
+}
+
+/// Velocity-rescale thermostat: scale all velocities so the kinetic energy
+/// matches `target_ke`. Keeps long benchmark runs bounded; disabled unless a
+/// scenario requests it.
+pub fn rescale_to_ke(state: &mut SimState, target_ke: f64) {
+    let ke = state.kinetic_energy();
+    if ke <= 0.0 {
+        return;
+    }
+    let s = (target_ke / ke).sqrt() as f32;
+    for v in &mut state.vel {
+        *v = *v * s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::config::{Boundary, SimConfig};
+    use crate::core::vec3::Vec3;
+
+    fn tiny_state(boundary: Boundary) -> SimState {
+        let cfg = SimConfig { n: 2, boundary, dt: 0.1, ..SimConfig::default() };
+        let mut s = SimState::from_config(&cfg);
+        s.pos = vec![Vec3::new(1.0, 1.0, 1.0), Vec3::new(2.0, 2.0, 2.0)];
+        s.vel = vec![Vec3::ZERO; 2];
+        s.force = vec![Vec3::new(1.0, 0.0, 0.0), Vec3::ZERO];
+        s
+    }
+
+    #[test]
+    fn euler_update() {
+        let mut s = tiny_state(Boundary::Periodic);
+        step(&mut s);
+        // v = 1*0.1 = 0.1; x = 1 + 0.1*0.1 = 1.01
+        assert!((s.vel[0].x - 0.1).abs() < 1e-6);
+        assert!((s.pos[0].x - 1.01).abs() < 1e-6);
+        assert_eq!(s.pos[1], Vec3::new(2.0, 2.0, 2.0));
+        assert_eq!(s.step_count, 1);
+    }
+
+    #[test]
+    fn wall_reflection_in_step() {
+        let mut s = tiny_state(Boundary::Wall);
+        s.pos[0] = Vec3::new(999.9, 500.0, 500.0);
+        s.vel[0] = Vec3::new(10.0, 0.0, 0.0);
+        s.force[0] = Vec3::ZERO;
+        s.dt = 1.0;
+        step(&mut s);
+        assert!(s.pos[0].x <= 1000.0);
+        assert!(s.vel[0].x < 0.0, "velocity should flip");
+    }
+
+    #[test]
+    fn force_cap_applies() {
+        let mut s = tiny_state(Boundary::Periodic);
+        s.params.f_max = 0.5;
+        s.force[0] = Vec3::new(100.0, 0.0, 0.0);
+        step(&mut s);
+        assert!((s.vel[0].x - 0.05).abs() < 1e-6); // capped at 0.5 * dt
+    }
+
+    #[test]
+    fn apply_integrated_matches_step() {
+        let mut a = tiny_state(Boundary::Periodic);
+        let mut b = a.clone();
+        step(&mut a);
+        // replicate externally
+        let dt = b.dt;
+        let mut np = Vec::new();
+        let mut nv = Vec::new();
+        for i in 0..b.n() {
+            let f = b.params.cap(b.force[i]);
+            let v = b.vel[i] + f * dt;
+            let p = b.pos[i] + v * dt;
+            np.push([p.x, p.y, p.z]);
+            nv.push([v.x, v.y, v.z]);
+        }
+        apply_integrated(&mut b, &np, &nv);
+        assert_eq!(a.pos, b.pos);
+        assert_eq!(a.vel, b.vel);
+        assert_eq!(a.step_count, b.step_count);
+    }
+
+    #[test]
+    fn thermostat_rescales() {
+        let mut s = tiny_state(Boundary::Periodic);
+        s.vel = vec![Vec3::new(2.0, 0.0, 0.0), Vec3::new(0.0, 2.0, 0.0)];
+        rescale_to_ke(&mut s, 1.0);
+        assert!((s.kinetic_energy() - 1.0).abs() < 1e-5);
+    }
+}

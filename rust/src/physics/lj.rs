@@ -1,0 +1,168 @@
+//! Truncated Lennard-Jones potential and force (paper Eqs. 2–4).
+//!
+//! Conventions (documented in DESIGN.md §Physics):
+//! * `sigma_i = r_i / sigma_factor` with `sigma_factor = 2.5` (the classic
+//!   `r_c = 2.5 sigma` cutoff choice), so a particle's *search radius* is its
+//!   interaction cutoff;
+//! * pairs mix with Lorentz–Berthelot: `sigma_ij = (sigma_i + sigma_j)/2`;
+//! * a pair interacts iff `r < max(r_i, r_j)` — the detection set reachable
+//!   by the RT scheme of paper Fig. 5;
+//! * force magnitude capped at `f_max` and `r^2` floored to keep dense
+//!   clusters numerically stable (standard MD practice).
+
+use crate::core::vec3::Vec3;
+
+/// Minimum r² used in force/potential evaluation (overlap guard).
+pub const R2_MIN: f32 = 1e-4;
+
+/// Interaction parameters shared by every backend.
+#[derive(Clone, Copy, Debug)]
+pub struct LjParams {
+    pub epsilon: f32,
+    /// `sigma_i = radius_i / sigma_factor`.
+    pub sigma_factor: f32,
+    /// Per-component force cap.
+    pub f_max: f32,
+}
+
+impl Default for LjParams {
+    fn default() -> Self {
+        LjParams { epsilon: 1.0, sigma_factor: 2.5, f_max: 1e4 }
+    }
+}
+
+impl LjParams {
+    /// Pair sigma from the two search radii (Lorentz–Berthelot on
+    /// `sigma_i = r_i / sigma_factor`).
+    #[inline(always)]
+    pub fn sigma_pair(&self, r_i: f32, r_j: f32) -> f32 {
+        (r_i + r_j) * 0.5 / self.sigma_factor
+    }
+
+    /// Interaction cutoff for a pair: `max(r_i, r_j)` (see module docs).
+    #[inline(always)]
+    pub fn cutoff_pair(&self, r_i: f32, r_j: f32) -> f32 {
+        r_i.max(r_j)
+    }
+
+    /// Scalar multiplier `s` such that `F_ij = s * dx` where `dx = p_i - p_j`
+    /// (force acting on particle i). Positive s = repulsion.
+    ///
+    /// `F(r) = 24 eps [ 2 (sigma/r)^12 - (sigma/r)^6 ] / r^2 * dx`
+    #[inline(always)]
+    pub fn force_scalar(&self, r2: f32, sigma: f32) -> f32 {
+        let r2 = r2.max(R2_MIN);
+        let s2 = (sigma * sigma) / r2;
+        let s6 = s2 * s2 * s2;
+        24.0 * self.epsilon * (2.0 * s6 * s6 - s6) / r2
+    }
+
+    /// Truncated LJ potential energy of a pair at squared distance `r2`.
+    #[inline(always)]
+    pub fn potential(&self, r2: f32, sigma: f32) -> f32 {
+        let r2 = r2.max(R2_MIN);
+        let s2 = (sigma * sigma) / r2;
+        let s6 = s2 * s2 * s2;
+        4.0 * self.epsilon * (s6 * s6 - s6)
+    }
+
+    /// Full pair force on particle i given displacement `dx = p_i - p_j`
+    /// (already minimum-imaged by the caller when periodic) and the two
+    /// search radii. Returns `None` outside the cutoff.
+    #[inline(always)]
+    pub fn pair_force(&self, dx: Vec3, r_i: f32, r_j: f32) -> Option<Vec3> {
+        let rc = self.cutoff_pair(r_i, r_j);
+        let r2 = dx.norm2();
+        if r2 >= rc * rc || r2 == 0.0 {
+            return None;
+        }
+        let s = self.force_scalar(r2, self.sigma_pair(r_i, r_j));
+        Some(self.cap(dx * s))
+    }
+
+    /// Clamp each force component to `[-f_max, f_max]`.
+    #[inline(always)]
+    pub fn cap(&self, f: Vec3) -> Vec3 {
+        Vec3::new(
+            f.x.clamp(-self.f_max, self.f_max),
+            f.y.clamp(-self.f_max, self.f_max),
+            f.z.clamp(-self.f_max, self.f_max),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const P: LjParams = LjParams { epsilon: 1.0, sigma_factor: 2.5, f_max: 1e12 };
+
+    #[test]
+    fn potential_zero_at_sigma_min_at_pow2_1_6() {
+        let sigma = 1.0f32;
+        // U(sigma) = 0
+        assert!(P.potential(sigma * sigma, sigma).abs() < 1e-6);
+        // minimum at r = 2^(1/6) sigma, U = -eps
+        let rmin = 2f32.powf(1.0 / 6.0) * sigma;
+        assert!((P.potential(rmin * rmin, sigma) + 1.0).abs() < 1e-5);
+        // force zero at the minimum
+        assert!(P.force_scalar(rmin * rmin, sigma).abs() < 1e-4);
+    }
+
+    #[test]
+    fn force_sign_repulsive_inside_attractive_outside() {
+        let sigma = 1.0f32;
+        let rmin = 2f32.powf(1.0 / 6.0) * sigma;
+        // closer than the minimum: repulsive (positive scalar pushes i away from j)
+        assert!(P.force_scalar(0.9 * 0.9, sigma) > 0.0);
+        // beyond the minimum: attractive
+        assert!(P.force_scalar((rmin * 1.5).powi(2), sigma) < 0.0);
+    }
+
+    #[test]
+    fn force_is_negative_gradient_of_potential() {
+        // numeric dU/dr vs analytic F at several r
+        let sigma = 0.8f32;
+        for &r in &[0.75f32, 0.9, 1.0, 1.3, 1.8] {
+            let h = 1e-3f32;
+            let up = P.potential((r + h) * (r + h), sigma);
+            let um = P.potential((r - h) * (r - h), sigma);
+            let dudr = (up - um) / (2.0 * h);
+            // F_vec = s * dx, radial magnitude = s * r, and F_r = -dU/dr
+            let s = P.force_scalar(r * r, sigma);
+            let f_r = s * r;
+            assert!(
+                (f_r + dudr).abs() < 2e-2 * (1.0 + dudr.abs()),
+                "r={r}: f_r={f_r} -dU/dr={:.5}",
+                -dudr
+            );
+        }
+    }
+
+    #[test]
+    fn pair_force_cutoff_and_symmetry() {
+        let dx = Vec3::new(3.0, 0.0, 0.0);
+        // cutoff is max(r_i, r_j): with radii (1, 2), r=3 is outside
+        assert!(P.pair_force(dx, 1.0, 2.0).is_none());
+        // with radii (1, 4) it is inside
+        let f = P.pair_force(dx, 1.0, 4.0).unwrap();
+        // Newton's third law: swapping i/j flips dx and the force
+        let f_ji = P.pair_force(-dx, 4.0, 1.0).unwrap();
+        assert!((f + f_ji).norm() < 1e-6 * f.norm().max(1.0));
+    }
+
+    #[test]
+    fn cap_limits_components() {
+        let p = LjParams { f_max: 10.0, ..P };
+        let f = p.cap(Vec3::new(100.0, -100.0, 5.0));
+        assert_eq!(f, Vec3::new(10.0, -10.0, 5.0));
+    }
+
+    #[test]
+    fn overlap_guard_is_finite() {
+        let f = P.force_scalar(0.0, 1.0);
+        assert!(f.is_finite());
+        let u = P.potential(0.0, 1.0);
+        assert!(u.is_finite());
+    }
+}

@@ -1,0 +1,11 @@
+//! Lennard-Jones physics: potential/force (paper Eqs. 2–4), boundary
+//! conditions and the integrator.
+
+pub mod boundary;
+pub mod integrator;
+pub mod lj;
+pub mod state;
+
+pub use boundary::displacement;
+pub use lj::LjParams;
+pub use state::SimState;

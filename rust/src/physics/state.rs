@@ -1,0 +1,125 @@
+//! Mutable simulation state shared by every backend (structure-of-arrays).
+
+use crate::core::config::{Boundary, SimConfig};
+use crate::core::distributions::{self, Scene};
+use crate::core::vec3::Vec3;
+use crate::physics::lj::LjParams;
+
+/// Structure-of-arrays particle state plus the physics parameters.
+#[derive(Clone, Debug)]
+pub struct SimState {
+    pub pos: Vec<Vec3>,
+    pub vel: Vec<Vec3>,
+    /// Per-particle force accumulator for the current step.
+    pub force: Vec<Vec3>,
+    /// Per-particle search radius (= interaction cutoff contribution).
+    pub radius: Vec<f32>,
+    /// Largest radius in the system (gamma-ray trigger distance, §3.3).
+    pub r_max: f32,
+    pub box_l: f32,
+    pub boundary: Boundary,
+    pub dt: f32,
+    pub params: LjParams,
+    /// Steps simulated so far.
+    pub step_count: u64,
+}
+
+impl SimState {
+    /// Build the initial state for a configuration (deterministic in seed).
+    pub fn from_config(cfg: &SimConfig) -> Self {
+        let Scene { pos, vel, radius, r_max, box_l } = distributions::scene(cfg);
+        let n = pos.len();
+        SimState {
+            pos,
+            vel,
+            force: vec![Vec3::ZERO; n],
+            radius,
+            r_max,
+            box_l,
+            boundary: cfg.boundary,
+            dt: cfg.dt,
+            params: LjParams {
+                epsilon: cfg.epsilon,
+                sigma_factor: cfg.sigma_factor,
+                f_max: cfg.f_max,
+            },
+            step_count: 0,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.pos.len()
+    }
+
+    /// Zero the force accumulators (start of a step).
+    pub fn clear_forces(&mut self) {
+        for f in &mut self.force {
+            *f = Vec3::ZERO;
+        }
+    }
+
+    /// Total momentum (diagnostic: conserved in periodic boxes with
+    /// symmetric forces, up to f32 rounding and force caps).
+    pub fn total_momentum(&self) -> Vec3 {
+        self.vel.iter().fold(Vec3::ZERO, |a, &v| a + v)
+    }
+
+    /// Total kinetic energy (unit mass).
+    pub fn kinetic_energy(&self) -> f64 {
+        self.vel.iter().map(|v| 0.5 * v.norm2() as f64).sum()
+    }
+
+    /// True if every particle is inside the box (wall BC invariant).
+    pub fn all_in_box(&self) -> bool {
+        self.pos.iter().all(|p| {
+            (0.0..=self.box_l).contains(&p.x)
+                && (0.0..=self.box_l).contains(&p.y)
+                && (0.0..=self.box_l).contains(&p.z)
+        })
+    }
+
+    /// True if all positions and velocities are finite.
+    pub fn is_finite(&self) -> bool {
+        self.pos.iter().all(|p| p.is_finite()) && self.vel.iter().all(|v| v.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::config::{ParticleDist, RadiusDist};
+
+    #[test]
+    fn from_config_shapes() {
+        let cfg = SimConfig { n: 64, ..SimConfig::default() };
+        let s = SimState::from_config(&cfg);
+        assert_eq!(s.n(), 64);
+        assert_eq!(s.force.len(), 64);
+        assert_eq!(s.radius.len(), 64);
+        assert!(s.all_in_box());
+        assert!(s.is_finite());
+    }
+
+    #[test]
+    fn clear_forces_zeroes() {
+        let cfg = SimConfig { n: 8, ..SimConfig::default() };
+        let mut s = SimState::from_config(&cfg);
+        s.force[3] = Vec3::splat(5.0);
+        s.clear_forces();
+        assert!(s.force.iter().all(|f| *f == Vec3::ZERO));
+    }
+
+    #[test]
+    fn diagnostics_reasonable() {
+        let cfg = SimConfig {
+            n: 100,
+            particle_dist: ParticleDist::Lattice,
+            radius_dist: RadiusDist::Const(1.0),
+            ..SimConfig::default()
+        };
+        let s = SimState::from_config(&cfg);
+        assert!(s.kinetic_energy() > 0.0);
+        // velocity kick is zero-mean, so total momentum is small
+        assert!(s.total_momentum().norm() < 0.05 * 100.0);
+    }
+}

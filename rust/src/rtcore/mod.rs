@@ -1,0 +1,120 @@
+//! The simulated RT-core / GPU hardware layer.
+//!
+//! Real RT cores are opaque silicon: the paper measures them with CUDA
+//! events and NVML. Our substitute counts every operation the algorithms
+//! perform ([`OpCounts`]) and converts counts into *simulated time* through
+//! a roofline model parameterized per GPU generation ([`profile`],
+//! [`timing`]), plus an analytic power model ([`power`]). See DESIGN.md
+//! §Hardware-Adaptation for the calibration rationale.
+
+pub mod power;
+pub mod profile;
+pub mod timing;
+
+pub use profile::HwProfile;
+pub use timing::PhaseTimes;
+
+/// Operation counters for one simulation step. Backends fill the fields
+/// relevant to their pipeline; the timing model prices them.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OpCounts {
+    // ---- BVH lifecycle ----
+    /// Primitives processed by a full build this step (0 = no build).
+    pub bvh_built_prims: u64,
+    /// Primitives processed by a refit this step (0 = no refit).
+    pub bvh_refit_prims: u64,
+
+    // ---- RT traversal (RT-core box units + SM intersection shaders) ----
+    /// Ray–AABB tests.
+    pub aabb_tests: u64,
+    /// Sphere intersection tests (intersection-shader invocations).
+    pub sphere_tests: u64,
+    /// Rays launched (primary + gamma).
+    pub rays: u64,
+
+    // ---- In-shader work (ORCS pipelines) ----
+    /// LJ pair-force evaluations performed inside intersection shaders.
+    pub isect_force_evals: u64,
+    /// Payload accumulations (ORCS-persé).
+    pub payload_accums: u64,
+    /// Atomic global-memory adds (ORCS-forces scatter; RT-REF cross-list
+    /// inserts under variable radius).
+    pub atomic_adds: u64,
+
+    // ---- Neighbor list (RT-REF) ----
+    /// Entries appended to the neighbor list.
+    pub nbr_list_writes: u64,
+    /// Peak neighbor-list allocation in bytes (n * k_max * 4) — the OOM
+    /// quantity of §4.2.
+    pub nbr_list_bytes_peak: u64,
+
+    // ---- Separate compute kernels ----
+    /// Pair evaluations in the standalone force kernel (RT-REF).
+    pub force_kernel_pairs: u64,
+    /// Particles advanced by the integration kernel.
+    pub integrate_particles: u64,
+    /// Kernel launches (fixed overhead each).
+    pub kernel_launches: u64,
+
+    // ---- Cell-list methods ----
+    /// Candidate pair distance tests during cell sweeps.
+    pub cell_pair_tests: u64,
+    /// Cells visited during sweeps (per-particle lookup overhead — what a
+    /// cell method pays even when cells are empty, e.g. r=1 scenes).
+    pub cell_visits: u64,
+    /// Pair-force evaluations from cell sweeps.
+    pub cell_force_evals: u64,
+    /// Particles binned during grid construction.
+    pub grid_binned: u64,
+    /// Elements radix-sorted (GPU-CELL z-ordering).
+    pub sort_elems: u64,
+
+    // ---- Physics bookkeeping ----
+    /// Physical pair interactions, counted once per unordered pair (the
+    /// `I` of the paper's EE metric, Eq. 10).
+    pub interactions: u64,
+}
+
+impl OpCounts {
+    pub fn add(&mut self, o: &OpCounts) {
+        self.bvh_built_prims += o.bvh_built_prims;
+        self.bvh_refit_prims += o.bvh_refit_prims;
+        self.aabb_tests += o.aabb_tests;
+        self.sphere_tests += o.sphere_tests;
+        self.rays += o.rays;
+        self.isect_force_evals += o.isect_force_evals;
+        self.payload_accums += o.payload_accums;
+        self.atomic_adds += o.atomic_adds;
+        self.nbr_list_writes += o.nbr_list_writes;
+        self.nbr_list_bytes_peak = self.nbr_list_bytes_peak.max(o.nbr_list_bytes_peak);
+        self.force_kernel_pairs += o.force_kernel_pairs;
+        self.integrate_particles += o.integrate_particles;
+        self.kernel_launches += o.kernel_launches;
+        self.cell_pair_tests += o.cell_pair_tests;
+        self.cell_visits += o.cell_visits;
+        self.cell_force_evals += o.cell_force_evals;
+        self.grid_binned += o.grid_binned;
+        self.sort_elems += o.sort_elems;
+        self.interactions += o.interactions;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_accumulates_and_peaks() {
+        let mut a = OpCounts { aabb_tests: 10, nbr_list_bytes_peak: 100, ..Default::default() };
+        let b = OpCounts {
+            aabb_tests: 5,
+            nbr_list_bytes_peak: 50,
+            interactions: 3,
+            ..Default::default()
+        };
+        a.add(&b);
+        assert_eq!(a.aabb_tests, 15);
+        assert_eq!(a.nbr_list_bytes_peak, 100); // max, not sum
+        assert_eq!(a.interactions, 3);
+    }
+}

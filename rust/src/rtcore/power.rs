@@ -1,0 +1,192 @@
+//! Analytic power/energy model — the NVML substitute.
+//!
+//! Board power during a phase is `idle + activity * (peak - idle)`, with the
+//! activity factor determined by what the phase stresses. Calibration
+//! anchors from the paper's Fig. 11 (600 W Blackwell part): RT-REF traversal
+//! with heavy neighbor-list traffic ≈ 400 W (activity ≈ 0.6), ORCS variants
+//! in between, GPU-CELL lowest, CPU-CELL ≈ 250 W sustained on the EPYC host.
+//! Energy efficiency (Fig. 12) is interactions per Joule, Eq. 10.
+
+use super::profile::{DeviceKind, HwProfile};
+use super::timing::PhaseTimes;
+use super::OpCounts;
+
+/// Phase activity factors (fraction of dynamic power envelope engaged).
+#[derive(Clone, Copy, Debug)]
+pub struct ActivityFactors {
+    pub build: f64,
+    pub refit: f64,
+    pub traverse_base: f64,
+    /// Extra traverse activity when neighbor-list writes dominate (RT-REF's
+    /// memory-pressure signature in Fig. 11).
+    pub traverse_list_bonus: f64,
+    /// Extra traverse activity from in-shader force evaluation (ORCS).
+    pub traverse_shade_bonus: f64,
+    pub force_kernel: f64,
+    pub integrate: f64,
+    pub grid: f64,
+    pub cell: f64,
+    /// CPU approaches run flat-out on all cores.
+    pub cpu_flat: f64,
+}
+
+pub const DEFAULT_ACTIVITY: ActivityFactors = ActivityFactors {
+    build: 0.45,
+    refit: 0.30,
+    traverse_base: 0.42,
+    traverse_list_bonus: 0.20,
+    traverse_shade_bonus: 0.10,
+    force_kernel: 0.62,
+    integrate: 0.35,
+    grid: 0.45,
+    cell: 0.48,
+    cpu_flat: 0.80,
+};
+
+/// Power (watts) and energy (joules) for one step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepEnergy {
+    /// Time-weighted average board power over the step, watts.
+    pub avg_power_w: f64,
+    /// Energy consumed by the step, joules.
+    pub energy_j: f64,
+}
+
+/// Compute the energy of one step from its phase times and op counts.
+pub fn step_energy(times: &PhaseTimes, counts: &OpCounts, hw: &HwProfile) -> StepEnergy {
+    let a = DEFAULT_ACTIVITY;
+    let dyn_w = hw.peak_w - hw.idle_w;
+
+    if hw.kind == DeviceKind::Cpu {
+        let total = times.total();
+        let p = hw.idle_w + a.cpu_flat * dyn_w;
+        return StepEnergy { avg_power_w: p, energy_j: p * total };
+    }
+
+    // Traverse activity rises with list traffic and in-shader force work.
+    let hits = counts.sphere_tests.max(1) as f64;
+    let w_list = (counts.nbr_list_writes as f64 / hits).min(1.0);
+    let w_shade = (counts.isect_force_evals as f64 / hits).min(1.0);
+    let traverse_act =
+        a.traverse_base + a.traverse_list_bonus * w_list + a.traverse_shade_bonus * w_shade;
+
+    let mut energy = 0.0;
+    let mut time = 0.0;
+    let mut add = |t: f64, act: f64| {
+        if t > 0.0 {
+            energy += t * (hw.idle_w + act * dyn_w);
+            time += t;
+        }
+    };
+    add(times.build, a.build);
+    add(times.refit, a.refit);
+    add(times.traverse, traverse_act);
+    add(times.force_kernel, a.force_kernel);
+    add(times.integrate, a.integrate);
+    add(times.grid, a.grid);
+    add(times.cell, a.cell);
+
+    let avg = if time > 0.0 { energy / time } else { hw.idle_w };
+    StepEnergy { avg_power_w: avg, energy_j: energy }
+}
+
+/// Approximate board power of an isolated BVH phase (watts) — feeds the
+/// gradient-ee policy's energy observations.
+pub fn bvh_phase_power(hw: &HwProfile, phase: BvhPhase) -> f64 {
+    let a = DEFAULT_ACTIVITY;
+    let act = match phase {
+        BvhPhase::Build => a.build,
+        BvhPhase::Refit => a.refit,
+        BvhPhase::Traverse => a.traverse_base + 0.5 * a.traverse_list_bonus,
+    };
+    hw.idle_w + act * (hw.peak_w - hw.idle_w)
+}
+
+/// BVH pipeline phase identifier for [`bvh_phase_power`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BvhPhase {
+    Build,
+    Refit,
+    Traverse,
+}
+
+/// Energy efficiency: interactions per joule (paper Eq. 10).
+pub fn energy_efficiency(total_interactions: u64, total_energy_j: f64) -> f64 {
+    if total_energy_j <= 0.0 {
+        return 0.0;
+    }
+    total_interactions as f64 / total_energy_j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtcore::profile::{EPYC64, RTXPRO};
+    use crate::rtcore::timing::simulate;
+
+    #[test]
+    fn rt_ref_draws_more_than_orcs_per_traverse_second() {
+        // RT-REF: every hit writes the list; ORCS: every hit shades a force
+        let rt_ref = OpCounts {
+            rays: 1000,
+            sphere_tests: 1_000_000,
+            nbr_list_writes: 1_000_000,
+            ..Default::default()
+        };
+        let orcs = OpCounts {
+            rays: 1000,
+            sphere_tests: 1_000_000,
+            isect_force_evals: 1_000_000,
+            ..Default::default()
+        };
+        let t = PhaseTimes { traverse: 1.0, ..Default::default() };
+        let p_ref = step_energy(&t, &rt_ref, &RTXPRO).avg_power_w;
+        let p_orcs = step_energy(&t, &orcs, &RTXPRO).avg_power_w;
+        assert!(p_ref > p_orcs, "ref={p_ref} orcs={p_orcs}");
+        // calibration anchor: RT-REF traversal well below the 600 W peak,
+        // in the neighborhood of the paper's ~400 W
+        assert!(p_ref > 300.0 && p_ref < 500.0, "p_ref={p_ref}");
+    }
+
+    #[test]
+    fn cpu_power_near_paper_observation() {
+        let t = PhaseTimes { cell: 1.0, ..Default::default() };
+        let p = step_energy(&t, &OpCounts::default(), &EPYC64).avg_power_w;
+        // paper: ~250 W sustained on the EPYC host
+        assert!(p > 200.0 && p < 300.0, "p={p}");
+    }
+
+    #[test]
+    fn energy_scales_with_time() {
+        let counts = OpCounts { rays: 10, sphere_tests: 100, ..Default::default() };
+        let t1 = PhaseTimes { traverse: 1.0, ..Default::default() };
+        let t2 = PhaseTimes { traverse: 2.0, ..Default::default() };
+        let e1 = step_energy(&t1, &counts, &RTXPRO).energy_j;
+        let e2 = step_energy(&t2, &counts, &RTXPRO).energy_j;
+        assert!((e2 - 2.0 * e1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ee_definition() {
+        assert_eq!(energy_efficiency(1000, 10.0), 100.0);
+        assert_eq!(energy_efficiency(1000, 0.0), 0.0);
+    }
+
+    #[test]
+    fn full_step_pipeline_energy_positive() {
+        let counts = OpCounts {
+            bvh_refit_prims: 10_000,
+            rays: 10_000,
+            aabb_tests: 500_000,
+            sphere_tests: 80_000,
+            nbr_list_writes: 40_000,
+            force_kernel_pairs: 40_000,
+            integrate_particles: 10_000,
+            ..Default::default()
+        };
+        let t = simulate(&counts, &RTXPRO);
+        let e = step_energy(&t, &counts, &RTXPRO);
+        assert!(e.energy_j > 0.0);
+        assert!(e.avg_power_w >= RTXPRO.idle_w && e.avg_power_w <= RTXPRO.peak_w);
+    }
+}

@@ -1,0 +1,220 @@
+//! Hardware profiles for the four GPU generations of the paper's scaling
+//! study (Table 1 / Fig. 13) plus the CPU reference.
+//!
+//! Rates are *effective sustained* figures derived from public specs and
+//! calibrated so that the reproduced tables preserve the paper's ordering
+//! and approximate ratios (see EXPERIMENTS.md §Calibration). Absolute
+//! numbers are explicitly not the target — the shapes are.
+
+/// Which device executes an approach (affects the power model).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DeviceKind {
+    Gpu,
+    Cpu,
+}
+
+/// Sustained-rate hardware profile (all rates per second).
+#[derive(Clone, Copy, Debug)]
+pub struct HwProfile {
+    pub name: &'static str,
+    pub kind: DeviceKind,
+    /// Ray–AABB tests / s (RT-core box units).
+    pub rt_box_rate: f64,
+    /// Intersection-shader invocations / s.
+    pub rt_isect_rate: f64,
+    /// LJ pair-force evaluations / s in compute kernels (SM or CPU cores).
+    pub pair_eval_rate: f64,
+    /// Atomic f32 global adds / s.
+    pub atomic_rate: f64,
+    /// Main-memory bandwidth, bytes / s.
+    pub mem_bw: f64,
+    /// BVH full-build throughput, prims / s.
+    pub bvh_build_rate: f64,
+    /// BVH refit throughput, prims / s.
+    pub bvh_refit_rate: f64,
+    /// Radix-sort throughput, elems / s (GPU-CELL z-ordering).
+    pub sort_rate: f64,
+    /// Grid binning throughput, particles / s.
+    pub grid_rate: f64,
+    /// Cell lookups / s during sweeps (bounded by memory latency).
+    pub cell_visit_rate: f64,
+    /// Integration throughput, particles / s.
+    pub integrate_rate: f64,
+    /// Fixed kernel-launch overhead, seconds.
+    pub launch_overhead_s: f64,
+    /// Device memory capacity, bytes (neighbor-list OOM threshold, §4.2).
+    pub vram_bytes: u64,
+    /// Idle board power, watts.
+    pub idle_w: f64,
+    /// Peak board power, watts (600 W for the Blackwell part, Table 1).
+    pub peak_w: f64,
+}
+
+const GB: u64 = 1024 * 1024 * 1024;
+
+/// TITAN RTX — Turing, 2018. 72 RT cores, 24 GB GDDR6 @ 672 GB/s, 280 W.
+pub const TITANRTX: HwProfile = HwProfile {
+    name: "TITANRTX",
+    kind: DeviceKind::Gpu,
+    rt_box_rate: 110e9,
+    rt_isect_rate: 9e9,
+    pair_eval_rate: 11e9,
+    atomic_rate: 6.5e9,
+    mem_bw: 672e9,
+    bvh_build_rate: 0.55e9,
+    bvh_refit_rate: 4.5e9,
+    sort_rate: 1.8e9,
+    grid_rate: 6e9,
+    cell_visit_rate: 5e9,
+    integrate_rate: 9e9,
+    launch_overhead_s: 6e-6,
+    vram_bytes: 24 * GB,
+    idle_w: 65.0,
+    peak_w: 280.0,
+};
+
+/// A40 — Ampere, 2020. 84 RT cores (gen 2), 48 GB @ 696 GB/s, 300 W.
+pub const A40: HwProfile = HwProfile {
+    name: "A40",
+    kind: DeviceKind::Gpu,
+    rt_box_rate: 170e9,
+    rt_isect_rate: 14e9,
+    pair_eval_rate: 17e9,
+    atomic_rate: 10e9,
+    mem_bw: 696e9,
+    bvh_build_rate: 0.9e9,
+    bvh_refit_rate: 7e9,
+    sort_rate: 2.8e9,
+    grid_rate: 9e9,
+    cell_visit_rate: 8e9,
+    integrate_rate: 14e9,
+    launch_overhead_s: 5e-6,
+    vram_bytes: 48 * GB,
+    idle_w: 60.0,
+    peak_w: 300.0,
+};
+
+/// L40 — Ada Lovelace, 2022. 142 RT cores (gen 3), 48 GB @ 864 GB/s, 300 W.
+/// The paper singles this part out as the energy-efficiency sweet spot.
+pub const L40: HwProfile = HwProfile {
+    name: "L40",
+    kind: DeviceKind::Gpu,
+    rt_box_rate: 340e9,
+    rt_isect_rate: 26e9,
+    pair_eval_rate: 30e9,
+    atomic_rate: 18e9,
+    mem_bw: 864e9,
+    bvh_build_rate: 1.7e9,
+    bvh_refit_rate: 13e9,
+    sort_rate: 5e9,
+    grid_rate: 16e9,
+    cell_visit_rate: 14e9,
+    integrate_rate: 26e9,
+    launch_overhead_s: 4e-6,
+    vram_bytes: 48 * GB,
+    idle_w: 55.0,
+    peak_w: 300.0,
+};
+
+/// RTX Pro 6000 Blackwell Server Edition — 2025. 96 GB @ ~1.8 TB/s, 600 W.
+/// Performance scales up strongly; EE scales less (paper §4.3's observed
+/// trend change).
+pub const RTXPRO: HwProfile = HwProfile {
+    name: "RTXPRO",
+    kind: DeviceKind::Gpu,
+    rt_box_rate: 560e9,
+    rt_isect_rate: 42e9,
+    pair_eval_rate: 50e9,
+    atomic_rate: 28e9,
+    mem_bw: 1792e9,
+    bvh_build_rate: 2.8e9,
+    bvh_refit_rate: 22e9,
+    sort_rate: 8e9,
+    grid_rate: 26e9,
+    cell_visit_rate: 22e9,
+    integrate_rate: 42e9,
+    launch_overhead_s: 4e-6,
+    vram_bytes: 96 * GB,
+    idle_w: 90.0,
+    peak_w: 600.0,
+};
+
+/// AMD EPYC 9534, 64 cores — the CPU-CELL@64c reference host (Table 1).
+/// RT fields are unused (no RT units); pair rate models 64 cores of
+/// vectorized LJ.
+pub const EPYC64: HwProfile = HwProfile {
+    name: "CPU-EPYC64",
+    kind: DeviceKind::Cpu,
+    rt_box_rate: 0.0,
+    rt_isect_rate: 0.0,
+    pair_eval_rate: 2.2e9,
+    atomic_rate: 0.8e9,
+    mem_bw: 460e9,
+    bvh_build_rate: 0.08e9,
+    bvh_refit_rate: 0.6e9,
+    sort_rate: 0.6e9,
+    grid_rate: 2.5e9,
+    cell_visit_rate: 0.8e9,
+    integrate_rate: 3e9,
+    launch_overhead_s: 1e-6,
+    vram_bytes: 768 * GB, // host RAM
+    idle_w: 95.0,
+    peak_w: 290.0,
+};
+
+/// The scaling-study GPU set, oldest to newest (Fig. 13's x-axis).
+pub const GENERATIONS: [&HwProfile; 4] = [&TITANRTX, &A40, &L40, &RTXPRO];
+
+/// Default GPU for Table 2 / Figs 9–12 (the paper's testbed GPU, Table 1).
+pub const DEFAULT_GPU: &HwProfile = &RTXPRO;
+
+/// Look up a profile by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<&'static HwProfile> {
+    let n = name.to_ascii_uppercase();
+    match n.as_str() {
+        "TITANRTX" | "TITAN" | "TURING" => Some(&TITANRTX),
+        "A40" | "AMPERE" => Some(&A40),
+        "L40" | "LOVELACE" | "ADA" => Some(&L40),
+        "RTXPRO" | "BLACKWELL" => Some(&RTXPRO),
+        "CPU" | "EPYC64" | "CPU-EPYC64" => Some(&EPYC64),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generations_monotonically_faster() {
+        for w in GENERATIONS.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            assert!(b.rt_box_rate > a.rt_box_rate, "{} vs {}", a.name, b.name);
+            assert!(b.pair_eval_rate > a.pair_eval_rate);
+            assert!(b.mem_bw >= a.mem_bw);
+        }
+    }
+
+    #[test]
+    fn lovelace_jump_is_largest_rt_scaling() {
+        // the paper: strongest scaling A40 -> L40
+        let turing_to_ampere = A40.rt_box_rate / TITANRTX.rt_box_rate;
+        let ampere_to_lovelace = L40.rt_box_rate / A40.rt_box_rate;
+        let lovelace_to_blackwell = RTXPRO.rt_box_rate / L40.rt_box_rate;
+        assert!(ampere_to_lovelace > turing_to_ampere);
+        assert!(ampere_to_lovelace > lovelace_to_blackwell);
+    }
+
+    #[test]
+    fn blackwell_power_jump() {
+        assert_eq!(RTXPRO.peak_w, 600.0);
+        assert_eq!(L40.peak_w, 300.0);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("l40").unwrap().name, "L40");
+        assert_eq!(by_name("blackwell").unwrap().name, "RTXPRO");
+        assert!(by_name("h100").is_none());
+    }
+}

@@ -1,0 +1,76 @@
+//! Chunk/pad bucketing: map arbitrary `(n, per-particle list length)`
+//! workloads onto the static artifact shapes `(CHUNK, K_BUCKETS)`.
+//!
+//! * particles are processed in `CHUNK`-sized blocks (tail zero-padded and
+//!   masked out);
+//! * each block's neighbor lists go into the smallest `K` bucket that fits
+//!   the block's widest list;
+//! * lists wider than the largest bucket are split into segments and the
+//!   partial forces summed (forces are additive over neighbors).
+
+use super::K_BUCKETS;
+
+/// Smallest bucket with `bucket >= k`, or `None` if `k` exceeds the widest.
+pub fn bucket_for(k: usize) -> Option<usize> {
+    K_BUCKETS.iter().copied().find(|&b| b >= k)
+}
+
+/// Split a list width into (bucket, number of segments): segments of the
+/// widest bucket plus a final bucket sized for the remainder.
+///
+/// Returns the per-segment plan as (segment_count_full, tail_bucket).
+pub fn segment_plan(k: usize) -> (usize, Option<usize>) {
+    let widest = *K_BUCKETS.last().unwrap();
+    if k == 0 {
+        return (0, Some(K_BUCKETS[0])); // one all-masked segment keeps shapes simple
+    }
+    if let Some(b) = bucket_for(k) {
+        return (0, Some(b));
+    }
+    let full = k / widest;
+    let rem = k % widest;
+    if rem == 0 {
+        (full, None)
+    } else {
+        (full, Some(bucket_for(rem).unwrap()))
+    }
+}
+
+/// Number of chunks needed for `n` particles.
+pub fn chunk_count(n: usize, chunk: usize) -> usize {
+    n.div_ceil(chunk.max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        assert_eq!(bucket_for(0), Some(16));
+        assert_eq!(bucket_for(16), Some(16));
+        assert_eq!(bucket_for(17), Some(64));
+        assert_eq!(bucket_for(256), Some(256));
+        assert_eq!(bucket_for(257), None);
+    }
+
+    #[test]
+    fn segment_plans() {
+        assert_eq!(segment_plan(0), (0, Some(16)));
+        assert_eq!(segment_plan(10), (0, Some(16)));
+        assert_eq!(segment_plan(200), (0, Some(256)));
+        assert_eq!(segment_plan(256), (0, Some(256)));
+        assert_eq!(segment_plan(300), (1, Some(64)));
+        assert_eq!(segment_plan(512), (2, None));
+        assert_eq!(segment_plan(513), (2, Some(16)));
+        assert_eq!(segment_plan(1000), (3, Some(256)));
+    }
+
+    #[test]
+    fn chunk_counts() {
+        assert_eq!(chunk_count(0, 4096), 0);
+        assert_eq!(chunk_count(1, 4096), 1);
+        assert_eq!(chunk_count(4096, 4096), 1);
+        assert_eq!(chunk_count(4097, 4096), 2);
+    }
+}

@@ -1,0 +1,86 @@
+//! Bench-suite smoke: every table/figure generator runs end-to-end at tiny
+//! sizes and writes its CSV outputs.
+
+use std::sync::{Arc, Mutex};
+
+use orcs::benchsuite::common::BenchOpts;
+use orcs::core::config::Boundary;
+use orcs::frnn::RustKernels;
+
+/// `ORCS_RESULTS` is process-global; serialize the smoke tests around it.
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+fn with_results_dir<F: FnOnce(&BenchOpts)>(dir: &std::path::Path, f: F) {
+    let _guard = ENV_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    std::env::set_var("ORCS_RESULTS", dir);
+    let opts = BenchOpts {
+        threads: 2,
+        hw: orcs::rtcore::profile::DEFAULT_GPU,
+        kernels: Arc::new(RustKernels { threads: 2 }),
+        quick: false,
+        steps_override: Some(4),
+        n_override: Some(300),
+        seed: 1,
+    };
+    f(&opts);
+}
+
+#[test]
+fn fig8_smoke() {
+    let dir = std::env::temp_dir().join("orcs_smoke_fig8");
+    with_results_dir(&dir, |opts| orcs::benchsuite::fig8::run(opts).unwrap());
+    assert!(dir.join("fig8_bvh_policies.csv").exists());
+    let text = std::fs::read_to_string(dir.join("fig8_bvh_policies.csv")).unwrap();
+    assert!(text.lines().count() > 12 * 3 * 4, "expected per-step rows for 36 runs");
+    assert!(text.contains("gradient") && text.contains("fixed-200") && text.contains("avg"));
+}
+
+#[test]
+fn table2_smoke() {
+    let dir = std::env::temp_dir().join("orcs_smoke_table2");
+    with_results_dir(&dir, |opts| orcs::benchsuite::table2::run(opts).unwrap());
+    let text = std::fs::read_to_string(dir.join("table2_sim_perf.csv")).unwrap();
+    // 12 cases x 4 columns x 5 approaches minus unsupported perse cells
+    let rows = text.lines().count() - 1;
+    assert!(rows >= 12 * 4 * 4, "rows={rows}");
+    assert!(text.contains("RT-REF") && text.contains("CPU-CELL@64c"));
+}
+
+#[test]
+fn fig9_fig10_smoke() {
+    let dir = std::env::temp_dir().join("orcs_smoke_fig910");
+    with_results_dir(&dir, |opts| {
+        orcs::benchsuite::fig9_10::run(opts, Boundary::Wall).unwrap();
+        orcs::benchsuite::fig9_10::run(opts, Boundary::Periodic).unwrap();
+    });
+    let wall = std::fs::read_to_string(dir.join("fig9_speedup_wall.csv")).unwrap();
+    let periodic = std::fs::read_to_string(dir.join("fig10_speedup_periodic.csv")).unwrap();
+    assert!(wall.contains("speedup") && wall.lines().count() > 10);
+    assert!(periodic.lines().count() > 10);
+}
+
+#[test]
+fn fig11_fig12_smoke() {
+    let dir = std::env::temp_dir().join("orcs_smoke_fig1112");
+    with_results_dir(&dir, |opts| orcs::benchsuite::fig11_12::run(opts).unwrap());
+    let power = std::fs::read_to_string(dir.join("fig11_power.csv")).unwrap();
+    let ee = std::fs::read_to_string(dir.join("fig12_energy_eff.csv")).unwrap();
+    assert!(power.lines().count() > 20);
+    // 2 BCs x 3 cases x 5 approaches (minus '-' cells) rows
+    assert!(ee.lines().count() > 20);
+    // power values must sit between idle and peak of the profile
+    for line in power.lines().skip(1) {
+        let w: f64 = line.rsplit(',').next().unwrap().parse().unwrap();
+        assert!(w >= 50.0 && w <= 600.0, "implausible power {w}");
+    }
+}
+
+#[test]
+fn fig13_smoke() {
+    let dir = std::env::temp_dir().join("orcs_smoke_fig13");
+    with_results_dir(&dir, |opts| orcs::benchsuite::fig13::run(opts).unwrap());
+    let text = std::fs::read_to_string(dir.join("fig13_scaling.csv")).unwrap();
+    for gpu in ["TITANRTX", "A40", "L40", "RTXPRO"] {
+        assert!(text.contains(gpu), "missing {gpu}");
+    }
+}

@@ -1,0 +1,131 @@
+//! The gradient optimizer in a real simulation: it must adapt its rebuild
+//! budget to the dynamics and never lose badly to the reference policies —
+//! the paper's Fig. 8 claims at test scale.
+
+use std::sync::Arc;
+
+use orcs::coordinator::{Engine, EngineConfig, RunSummary};
+use orcs::core::config::{Boundary, ParticleDist, RadiusDist, SimConfig};
+use orcs::frnn::{ApproachKind, RustKernels};
+use orcs::gradient::BvhAction;
+
+fn run_policy(cfg: &SimConfig, policy: &str, steps: usize) -> RunSummary {
+    let ec = EngineConfig {
+        policy: policy.into(),
+        threads: 2,
+        check_oom: false,
+        ..EngineConfig::new(cfg.clone(), ApproachKind::RtRef)
+    };
+    let mut e = Engine::new(ec, Arc::new(RustKernels { threads: 2 })).unwrap();
+    e.run(steps, true).unwrap()
+}
+
+fn dynamic_cluster() -> SimConfig {
+    // collapsing cluster: strong dynamics early, relaxing later — the
+    // adaptive case of Fig. 8
+    SimConfig {
+        n: 1200,
+        box_l: 150.0,
+        particle_dist: ParticleDist::Cluster,
+        radius_dist: RadiusDist::Const(8.0),
+        boundary: Boundary::Periodic,
+        seed: 77,
+        dt: 2e-3,
+        ..SimConfig::default()
+    }
+}
+
+#[test]
+fn gradient_rebuilds_adaptively_not_on_schedule() {
+    let s = run_policy(&dynamic_cluster(), "gradient", 120);
+    let rebuild_steps: Vec<u64> = s
+        .records
+        .iter()
+        .filter(|r| r.bvh_action == Some(BvhAction::Build))
+        .map(|r| r.step)
+        .collect();
+    assert!(rebuild_steps.len() > 2, "gradient never rebuilt: {rebuild_steps:?}");
+    // intervals must vary (adaptivity), unlike fixed-k
+    let intervals: Vec<u64> = rebuild_steps.windows(2).map(|w| w[1] - w[0]).collect();
+    let min = intervals.iter().min().copied().unwrap_or(0);
+    let max = intervals.iter().max().copied().unwrap_or(0);
+    assert!(max > min, "intervals constant ({intervals:?}) — not adapting");
+}
+
+#[test]
+fn gradient_competitive_with_best_fixed_policy() {
+    let cfg = dynamic_cluster();
+    let steps = 120;
+    let g = run_policy(&cfg, "gradient", steps);
+    // fixed-200 never rebuilds within this horizon; fixed-5 rebuilds hard
+    let f200 = run_policy(&cfg, "fixed-200", steps);
+    let f5 = run_policy(&cfg, "fixed-5", steps);
+    let avg = run_policy(&cfg, "avg", steps);
+    let best_ref = f200.total_rt_ms.min(f5.total_rt_ms).min(avg.total_rt_ms);
+    assert!(
+        g.total_rt_ms <= best_ref * 1.25,
+        "gradient {:.3} ms vs best reference {:.3} ms (f200 {:.3}, f5 {:.3}, avg {:.3})",
+        g.total_rt_ms,
+        best_ref,
+        f200.total_rt_ms,
+        f5.total_rt_ms,
+        avg.total_rt_ms
+    );
+}
+
+#[test]
+fn gradient_beats_fixed_200_on_fast_dynamics() {
+    // hot, fast-moving dense system degrades the BVH quickly: waiting 200
+    // steps to rebuild must lose
+    let mut cfg = dynamic_cluster();
+    cfg.dt = 5e-3;
+    cfg.n = 1500;
+    let steps = 100;
+    let g = run_policy(&cfg, "gradient", steps);
+    let f200 = run_policy(&cfg, "fixed-200", steps);
+    assert!(
+        g.total_rt_ms < f200.total_rt_ms,
+        "gradient {:.3} ms should beat fixed-200 {:.3} ms on fast dynamics",
+        g.total_rt_ms,
+        f200.total_rt_ms
+    );
+}
+
+#[test]
+fn query_cost_degrades_between_rebuilds() {
+    // within one policy cycle the simulated traverse cost grows with
+    // updates — the Δq the cost model integrates (Fig. 3)
+    let s = run_policy(&dynamic_cluster(), "fixed-40", 41);
+    let recs = &s.records;
+    let first_cycle: Vec<&orcs::coordinator::StepRecord> =
+        recs.iter().skip(1).take(35).collect(); // updates after the initial build
+    let early: f64 = first_cycle[..5].iter().map(|r| r.sim_times.traverse).sum::<f64>() / 5.0;
+    let late: f64 =
+        first_cycle[first_cycle.len() - 5..].iter().map(|r| r.sim_times.traverse).sum::<f64>()
+            / 5.0;
+    assert!(
+        late > early,
+        "traverse cost should degrade: early {early:.3e} late {late:.3e}"
+    );
+}
+
+#[test]
+fn all_policies_preserve_physics() {
+    // the BVH policy changes cost only, never trajectories
+    let cfg = dynamic_cluster();
+    let mut positions = Vec::new();
+    for policy in ["gradient", "avg", "fixed-7"] {
+        let ec = EngineConfig {
+            policy: policy.into(),
+            threads: 2,
+            check_oom: false,
+            ..EngineConfig::new(cfg.clone(), ApproachKind::RtRef)
+        };
+        let mut e = Engine::new(ec, Arc::new(RustKernels { threads: 2 })).unwrap();
+        e.run(15, false).unwrap();
+        positions.push(e.state.pos.clone());
+    }
+    for other in &positions[1..] {
+        assert_eq!(&positions[0], other, "policies changed the physics");
+    }
+}

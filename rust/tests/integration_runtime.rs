@@ -1,0 +1,168 @@
+//! PJRT runtime integration: artifacts load and compile, the XLA kernels
+//! agree with the pure-Rust oracle (the L1/L2 ↔ L3 numeric contract), and
+//! the bucket/chunk plumbing handles every shape edge.
+//!
+//! Requires `make artifacts` (skips with a message otherwise, but `make
+//! test` always builds them first).
+
+use std::sync::Arc;
+
+use orcs::coordinator::{Engine, EngineConfig};
+use orcs::core::config::{Boundary, ParticleDist, RadiusDist, SimConfig};
+use orcs::frnn::{ApproachKind, NeighborLists, PhysicsKernels, RustKernels};
+use orcs::physics::state::SimState;
+use orcs::rtcore::OpCounts;
+use orcs::runtime::kernels::XlaKernels;
+
+fn load_kernels() -> Option<XlaKernels> {
+    match XlaKernels::load_default() {
+        Ok(k) => Some(k),
+        Err(e) => {
+            eprintln!("skipping runtime tests (run `make artifacts` first): {e:#}");
+            None
+        }
+    }
+}
+
+fn scene(n: usize, boundary: Boundary, radius: RadiusDist, seed: u64) -> SimState {
+    let cfg = SimConfig {
+        n,
+        box_l: 150.0,
+        particle_dist: ParticleDist::Disordered,
+        radius_dist: radius,
+        boundary,
+        seed,
+        ..SimConfig::default()
+    };
+    SimState::from_config(&cfg)
+}
+
+/// Interaction neighbor lists via brute force (test input builder).
+fn brute_lists(state: &SimState) -> NeighborLists {
+    let lists: Vec<Vec<u32>> = (0..state.n())
+        .map(|i| {
+            orcs::frnn::brute::interaction_neighbors(
+                i,
+                &state.pos,
+                &state.radius,
+                state.boundary,
+                state.box_l,
+            )
+            .into_iter()
+            .map(|j| j as u32)
+            .collect()
+        })
+        .collect();
+    NeighborLists::from_vecs(&lists)
+}
+
+#[test]
+fn xla_forces_match_rust_oracle() {
+    let Some(xla) = load_kernels() else { return };
+    let rust = RustKernels { threads: 2 };
+    for boundary in Boundary::ALL {
+        for radius in [RadiusDist::Const(12.0), RadiusDist::Uniform(3.0, 25.0)] {
+            let state = scene(500, boundary, radius, 21);
+            let lists = brute_lists(&state);
+            let mut c1 = OpCounts::default();
+            let mut c2 = OpCounts::default();
+            let f_xla = xla.lj_forces(&state, &lists, &mut c1).unwrap();
+            let f_rust = rust.lj_forces(&state, &lists, &mut c2).unwrap();
+            for i in 0..state.n() {
+                let d = (f_xla[i] - f_rust[i]).norm();
+                let scale = f_rust[i].norm().max(1.0);
+                assert!(
+                    d < 1e-3 * scale,
+                    "{boundary:?}/{radius:?} particle {i}: xla {:?} rust {:?}",
+                    f_xla[i],
+                    f_rust[i]
+                );
+            }
+            assert!(c1.kernel_launches > 0);
+        }
+    }
+}
+
+#[test]
+fn xla_integrate_matches_rust() {
+    let Some(xla) = load_kernels() else { return };
+    for boundary in Boundary::ALL {
+        let mut s_xla = scene(700, boundary, RadiusDist::Const(5.0), 31);
+        // nonzero forces to integrate
+        for (i, f) in s_xla.force.iter_mut().enumerate() {
+            let k = i as f32;
+            *f = orcs::core::vec3::Vec3::new((k * 0.37).sin() * 50.0, (k * 0.11).cos() * 50.0, 1.0);
+        }
+        let mut s_rust = s_xla.clone();
+        let mut c = OpCounts::default();
+        xla.integrate(&mut s_xla, &mut c).unwrap();
+        orcs::physics::integrator::step(&mut s_rust);
+        for i in 0..s_rust.n() {
+            let dp = (s_xla.pos[i] - s_rust.pos[i]).norm();
+            let dv = (s_xla.vel[i] - s_rust.vel[i]).norm();
+            assert!(dp < 1e-4 && dv < 1e-4, "{boundary:?} particle {i}: dp={dp} dv={dv}");
+        }
+        assert_eq!(s_xla.step_count, 1);
+    }
+}
+
+#[test]
+fn bucket_segmentation_handles_wide_lists() {
+    let Some(xla) = load_kernels() else { return };
+    let rust = RustKernels { threads: 1 };
+    // dense scene: some lists exceed the widest bucket (256)
+    let state = scene(2_000, Boundary::Periodic, RadiusDist::Const(50.0), 41);
+    let lists = brute_lists(&state);
+    assert!(lists.k_max() > 256, "test needs k_max > widest bucket, got {}", lists.k_max());
+    let mut c1 = OpCounts::default();
+    let mut c2 = OpCounts::default();
+    let f_xla = xla.lj_forces(&state, &lists, &mut c1).unwrap();
+    let f_rust = rust.lj_forces(&state, &lists, &mut c2).unwrap();
+    for i in 0..state.n() {
+        let d = (f_xla[i] - f_rust[i]).norm();
+        assert!(d < 2e-3 * f_rust[i].norm().max(1.0), "particle {i}: {d}");
+    }
+    // multiple launches required for the segmented lists
+    assert!(c1.kernel_launches > 1);
+}
+
+#[test]
+fn empty_lists_are_fine() {
+    let Some(xla) = load_kernels() else { return };
+    let state = scene(64, Boundary::Wall, RadiusDist::Const(0.1), 51);
+    let lists = NeighborLists::from_vecs(&vec![Vec::new(); 64]);
+    let mut c = OpCounts::default();
+    let f = xla.lj_forces(&state, &lists, &mut c).unwrap();
+    assert!(f.iter().all(|v| v.norm() == 0.0));
+}
+
+#[test]
+fn rt_ref_on_xla_path_matches_rust_path_end_to_end() {
+    let Some(_probe) = load_kernels() else { return };
+    let cfg = SimConfig {
+        n: 400,
+        box_l: 150.0,
+        particle_dist: ParticleDist::Disordered,
+        radius_dist: RadiusDist::Uniform(3.0, 20.0),
+        boundary: Boundary::Periodic,
+        seed: 61,
+        ..SimConfig::default()
+    };
+    let run = |kernels: Arc<dyn PhysicsKernels>| {
+        let ec = EngineConfig {
+            policy: "fixed-4".into(),
+            threads: 2,
+            check_oom: false,
+            ..EngineConfig::new(cfg.clone(), ApproachKind::RtRef)
+        };
+        let mut e = Engine::new(ec, kernels).unwrap();
+        e.run(5, false).unwrap();
+        e.state.pos.clone()
+    };
+    let pos_rust = run(Arc::new(RustKernels { threads: 2 }));
+    let pos_xla = run(Arc::new(XlaKernels::load_default().unwrap()));
+    for i in 0..cfg.n {
+        let d = (pos_rust[i] - pos_xla[i]).norm();
+        assert!(d < 1e-2, "particle {i} diverged between force paths: {d}");
+    }
+}

@@ -1,0 +1,155 @@
+//! Multi-step simulation invariants: stability, boundary containment,
+//! momentum behavior, interaction accounting and cross-backend trajectory
+//! agreement over longer horizons.
+
+use std::sync::Arc;
+
+use orcs::coordinator::{Engine, EngineConfig};
+use orcs::core::config::{Boundary, ParticleDist, RadiusDist, SimConfig};
+use orcs::frnn::{ApproachKind, RustKernels};
+
+fn engine(cfg: &SimConfig, approach: ApproachKind, policy: &str) -> Engine {
+    let ec = EngineConfig {
+        policy: policy.into(),
+        threads: 2,
+        check_oom: false,
+        ..EngineConfig::new(cfg.clone(), approach)
+    };
+    Engine::new(ec, Arc::new(RustKernels { threads: 2 })).unwrap()
+}
+
+fn dense_cfg(boundary: Boundary) -> SimConfig {
+    SimConfig {
+        n: 300,
+        box_l: 60.0,
+        particle_dist: ParticleDist::Cluster,
+        radius_dist: RadiusDist::Const(5.0),
+        boundary,
+        seed: 11,
+        ..SimConfig::default()
+    }
+}
+
+#[test]
+fn long_run_stays_finite_and_contained() {
+    for boundary in Boundary::ALL {
+        for approach in [ApproachKind::OrcsForces, ApproachKind::CpuCell] {
+            let mut e = engine(&dense_cfg(boundary), approach, "gradient");
+            e.run(60, false).unwrap();
+            assert!(e.state.is_finite(), "{approach} {boundary}");
+            assert!(e.state.all_in_box(), "{approach} {boundary}");
+            assert_eq!(e.state.step_count, 60);
+        }
+    }
+}
+
+#[test]
+fn momentum_drift_bounded_in_periodic_box() {
+    // Pair forces are exactly antisymmetric, so momentum is conserved as
+    // long as the *total-force* cap in the integrator never engages (the
+    // cap is per-particle and breaks symmetry by design — a stability
+    // valve). Use a moderate gas where forces stay far below f_max.
+    let cfg = SimConfig {
+        n: 400,
+        box_l: 120.0,
+        particle_dist: ParticleDist::Disordered,
+        radius_dist: RadiusDist::Const(8.0),
+        boundary: Boundary::Periodic,
+        seed: 13,
+        f_max: 1e9, // effectively uncapped
+        ..SimConfig::default()
+    };
+    let mut e = engine(&cfg, ApproachKind::OrcsForces, "fixed-10");
+    let p0 = e.state.total_momentum();
+    e.run(40, false).unwrap();
+    let p1 = e.state.total_momentum();
+    let drift = (p1 - p0).norm();
+    assert!(drift < 1.0, "momentum drift {drift}");
+}
+
+#[test]
+fn interactions_grow_when_cluster_collapses_then_relax() {
+    // a dense LJ cluster first interacts intensely, then the repulsion term
+    // spreads it out (paper §3: "the system stabilizes thanks to the
+    // repulsion term")
+    let mut e = engine(&dense_cfg(Boundary::Wall), ApproachKind::OrcsForces, "gradient");
+    let first = e.step().unwrap().interactions;
+    e.run(80, false).unwrap();
+    let last = e.step().unwrap().interactions;
+    assert!(first > 0);
+    assert!(
+        last <= first,
+        "interactions should not grow after relaxation: first={first} last={last}"
+    );
+}
+
+#[test]
+fn deterministic_across_identical_runs() {
+    let cfg = dense_cfg(Boundary::Periodic);
+    let run = |threads: usize| {
+        let ec = EngineConfig {
+            policy: "gradient".into(),
+            threads,
+            check_oom: false,
+            ..EngineConfig::new(cfg.clone(), ApproachKind::RtRef)
+        };
+        let mut e = Engine::new(ec, Arc::new(RustKernels { threads })).unwrap();
+        e.run(10, false).unwrap();
+        e.state.pos.clone()
+    };
+    let a = run(2);
+    let b = run(2);
+    assert_eq!(a, b, "same thread count must be bitwise deterministic");
+}
+
+#[test]
+fn simulated_times_track_interaction_load() {
+    // r=1 (nearly no interactions) must be much cheaper than r=10 (dense).
+    // n must be large enough that per-step work dominates the fixed
+    // kernel-launch overhead in the GPU timing model (as in the paper,
+    // which runs 50k-1M particles for exactly this reason).
+    let base = SimConfig {
+        n: 12_000,
+        box_l: 60.0,
+        particle_dist: ParticleDist::Disordered,
+        boundary: Boundary::Periodic,
+        seed: 17,
+        ..SimConfig::default()
+    };
+    let dense_cfg = SimConfig { radius_dist: RadiusDist::Const(10.0), ..base.clone() };
+    let cheap_cfg = SimConfig { radius_dist: RadiusDist::Const(1.0), ..base };
+    let mut dense = engine(&dense_cfg, ApproachKind::RtRef, "gradient");
+    let mut cheap = engine(&cheap_cfg, ApproachKind::RtRef, "gradient");
+    let sd = dense.run(5, false).unwrap();
+    let sc = cheap.run(5, false).unwrap();
+    assert!(
+        sd.avg_sim_ms > 2.0 * sc.avg_sim_ms,
+        "dense {} vs cheap {}",
+        sd.avg_sim_ms,
+        sc.avg_sim_ms
+    );
+}
+
+#[test]
+fn wall_vs_periodic_differ_near_boundaries() {
+    // the same initial scene must evolve differently under the two BCs when
+    // particles sit near the walls
+    let mut cfg = SimConfig {
+        n: 200,
+        box_l: 50.0,
+        particle_dist: ParticleDist::Disordered,
+        radius_dist: RadiusDist::Const(8.0),
+        seed: 5,
+        ..SimConfig::default()
+    };
+    cfg.boundary = Boundary::Wall;
+    let mut ew = engine(&cfg, ApproachKind::OrcsForces, "fixed-5");
+    cfg.boundary = Boundary::Periodic;
+    let mut ep = engine(&cfg, ApproachKind::OrcsForces, "fixed-5");
+    ew.run(10, false).unwrap();
+    ep.run(10, false).unwrap();
+    let diff = (0..200)
+        .map(|i| (ew.state.pos[i] - ep.state.pos[i]).norm())
+        .fold(0.0f32, f32::max);
+    assert!(diff > 1e-4, "BC modes produced identical trajectories");
+}

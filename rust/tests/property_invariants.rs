@@ -1,0 +1,260 @@
+//! Randomized property tests over the core invariants (in-house driver —
+//! see `orcs::testutil`): BVH completeness/correctness across refits,
+//! neighbor-set equality between every discovery mechanism and brute force,
+//! force symmetry, gamma-ray minimality, bucket-plan coverage, and the
+//! gradient cost model's optimality.
+
+use orcs::bvh::traverse::TraversalStats;
+use orcs::bvh::{BuildKind, Bvh};
+use orcs::core::config::Boundary;
+use orcs::core::rng::Rng;
+use orcs::core::vec3::Vec3;
+use orcs::frnn::{brute, gamma};
+use orcs::gradient::{optimal_ku, simulation_cost, CostParams};
+use orcs::physics::state::SimState;
+use orcs::testutil::{gen, prop_check};
+
+fn random_scene(rng: &mut Rng, n: usize, box_l: f32, r_max: f32) -> (Vec<Vec3>, Vec<f32>) {
+    let pos = (0..n)
+        .map(|_| {
+            Vec3::new(
+                rng.range_f32(0.0, box_l),
+                rng.range_f32(0.0, box_l),
+                rng.range_f32(0.0, box_l),
+            )
+        })
+        .collect();
+    let radius = (0..n).map(|_| rng.range_f32(0.2, r_max)).collect();
+    (pos, radius)
+}
+
+#[test]
+fn prop_bvh_queries_equal_brute_force_after_any_refit_sequence() {
+    prop_check("bvh-query-vs-brute", 25, |rng| {
+        let n = 20 + rng.below(200);
+        let (mut pos, radius) = random_scene(rng, n, 80.0, 10.0);
+        let kind = if rng.f32() < 0.5 { BuildKind::Median } else { BuildKind::BinnedSah };
+        let mut bvh = Bvh::build(&pos, &radius, kind);
+        let refits = rng.below(6);
+        for _ in 0..refits {
+            for p in pos.iter_mut() {
+                *p += Vec3::new(
+                    rng.range_f32(-3.0, 3.0),
+                    rng.range_f32(-3.0, 3.0),
+                    rng.range_f32(-3.0, 3.0),
+                );
+            }
+            bvh.refit(&pos, &radius);
+        }
+        bvh.check_invariants(&pos, &radius).map_err(|e| e.to_string())?;
+        let mut stats = TraversalStats::default();
+        for i in 0..n {
+            let mut got = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut stats);
+            got.sort_unstable();
+            let want = brute::detection_neighbors(i, &pos, &radius, Boundary::Wall, 80.0);
+            if got != want {
+                return Err(format!("query mismatch at {i}: {got:?} vs {want:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gamma_rays_complete_and_minimal() {
+    prop_check("gamma-completeness", 30, |rng| {
+        let box_l = 60.0;
+        let trigger = rng.range_f32(1.0, 25.0);
+        let p = Vec3::new(
+            rng.range_f32(0.0, box_l),
+            rng.range_f32(0.0, box_l),
+            rng.range_f32(0.0, box_l),
+        );
+        let mut origins = Vec::new();
+        gamma::gamma_origins(p, trigger, box_l, &mut origins);
+        // count = 2^(active axes) - 1
+        let active = [p.x, p.y, p.z]
+            .iter()
+            .filter(|&&x| x < trigger || x > box_l - trigger)
+            .count();
+        if origins.len() != (1usize << active) - 1 {
+            return Err(format!("count {} for {active} active axes", origins.len()));
+        }
+        // every origin is the particle shifted by a +-box combination and
+        // lies outside the box on the shifted axes
+        for o in &origins {
+            let d = *o - p;
+            for c in [d.x, d.y, d.z] {
+                if !(c == 0.0 || (c - box_l).abs() < 1e-3 || (c + box_l).abs() < 1e-3) {
+                    return Err(format!("bad shift component {c}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_forces_antisymmetric_under_min_image() {
+    prop_check("force-antisymmetry", 40, |rng| {
+        let cfg = gen::small_config(rng, 20, 80);
+        let state = SimState::from_config(&cfg);
+        for _ in 0..30 {
+            let i = rng.below(state.n());
+            let j = rng.below(state.n());
+            if i == j {
+                continue;
+            }
+            let d_ij = orcs::physics::boundary::displacement(
+                state.pos[i],
+                state.pos[j],
+                state.boundary,
+                state.box_l,
+            );
+            let f_ij = state.params.pair_force(d_ij, state.radius[i], state.radius[j]);
+            let d_ji = orcs::physics::boundary::displacement(
+                state.pos[j],
+                state.pos[i],
+                state.boundary,
+                state.box_l,
+            );
+            let f_ji = state.params.pair_force(d_ji, state.radius[j], state.radius[i]);
+            match (f_ij, f_ji) {
+                (None, None) => {}
+                (Some(a), Some(b)) => {
+                    if (a + b).norm() > 1e-3 * a.norm().max(1.0) {
+                        return Err(format!("f_ij {a:?} != -f_ji {b:?}"));
+                    }
+                }
+                _ => return Err("cutoff asymmetry between i->j and j->i".into()),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_detection_union_covers_interaction_set() {
+    // i's detections ∪ {j : j detects i} must equal the interaction set —
+    // the identity that makes ORCS-forces' handler rule complete (Fig. 5)
+    prop_check("detection-covers-interaction", 25, |rng| {
+        let cfg = gen::small_config(rng, 20, 100);
+        let state = SimState::from_config(&cfg);
+        for i in 0..state.n() {
+            let mut union = brute::detection_neighbors(
+                i,
+                &state.pos,
+                &state.radius,
+                state.boundary,
+                state.box_l,
+            );
+            for j in 0..state.n() {
+                if j != i {
+                    let dj = brute::detection_neighbors(
+                        j,
+                        &state.pos,
+                        &state.radius,
+                        state.boundary,
+                        state.box_l,
+                    );
+                    if dj.contains(&i) {
+                        union.push(j);
+                    }
+                }
+            }
+            union.sort_unstable();
+            union.dedup();
+            let want = brute::interaction_neighbors(
+                i,
+                &state.pos,
+                &state.radius,
+                state.boundary,
+                state.box_l,
+            );
+            if union != want {
+                return Err(format!("coverage gap at {i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gradient_kopt_minimizes_cost_model() {
+    prop_check("kopt-optimality", 200, |rng| {
+        let p = CostParams {
+            t_r: rng.range_f32(1.0, 200.0) as f64,
+            t_u: rng.range_f32(0.01, 0.9) as f64,
+            t_q: rng.range_f32(0.1, 50.0) as f64,
+            dq: rng.range_f32(1e-4, 10.0) as f64,
+        };
+        let k = optimal_ku(&p);
+        // the cost curve is unimodal in k, so the discrete argmin must be
+        // floor(k*) or ceil(k*); no other integer may beat both
+        let floor = k.floor().max(0.0);
+        let ceil = k.ceil();
+        let best =
+            simulation_cost(&p, 1000.0, floor).min(simulation_cost(&p, 1000.0, ceil));
+        for delta in -3i64..=3 {
+            let kk = (floor + delta as f64).max(0.0);
+            if kk == floor || kk == ceil {
+                continue;
+            }
+            let ck = simulation_cost(&p, 1000.0, kk);
+            if ck < best * (1.0 - 1e-9) {
+                return Err(format!(
+                    "k*={k:.3}: cost({kk})={ck:.4} < best-of-floor/ceil={best:.4} for {p:?}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bucket_plans_cover_exactly() {
+    prop_check("bucket-coverage", 300, |rng| {
+        let k = rng.below(2000);
+        let (full, tail) = orcs::runtime::buckets::segment_plan(k);
+        let widest = 256;
+        let covered = full * widest + tail.unwrap_or(0);
+        if k == 0 {
+            return if covered >= 16 { Ok(()) } else { Err("zero plan".into()) };
+        }
+        if covered < k {
+            return Err(format!("k={k} covered only {covered}"));
+        }
+        if covered >= k + widest {
+            return Err(format!("k={k} over-covered {covered}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_wall_reflection_conserves_speed() {
+    prop_check("reflection-speed", 100, |rng| {
+        let box_l = 50.0;
+        let mut pos = Vec3::new(
+            rng.range_f32(-20.0, 70.0),
+            rng.range_f32(-20.0, 70.0),
+            rng.range_f32(-20.0, 70.0),
+        );
+        let mut vel = Vec3::new(
+            rng.range_f32(-5.0, 5.0),
+            rng.range_f32(-5.0, 5.0),
+            rng.range_f32(-5.0, 5.0),
+        );
+        let speed = vel.norm();
+        orcs::physics::boundary::apply(Boundary::Wall, box_l, &mut pos, &mut vel);
+        if (vel.norm() - speed).abs() > 1e-4 {
+            return Err("reflection changed speed".into());
+        }
+        for c in [pos.x, pos.y, pos.z] {
+            if !(0.0..=box_l).contains(&c) {
+                return Err(format!("position {c} escaped the box"));
+            }
+        }
+        Ok(())
+    });
+}
