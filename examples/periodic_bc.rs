@@ -39,8 +39,7 @@ fn main() -> anyhow::Result<()> {
     // with the reverse edges (cross-inserts / the handler rule), so the
     // completeness property to check is: rays(i) ∪ {j : i ∈ rays(j)} must
     // equal the minimum-image interaction set, for every particle.
-    let mut stats = orcs::bvh::traverse::TraversalStats::default();
-    let mut gamma_buf = Vec::new();
+    let mut scratch = orcs::bvh::traverse::QueryScratch::new();
     let mut detected: Vec<Vec<usize>> = vec![Vec::new(); state.n()];
     let mut boundary_particles = 0usize;
     for i in 0..state.n() {
@@ -52,8 +51,7 @@ fn main() -> anyhow::Result<()> {
             state.boundary,
             state.box_l,
             state.r_max,
-            &mut gamma_buf,
-            &mut stats,
+            &mut scratch,
             |j, _| detected[i].push(j),
         );
         if orcs::frnn::gamma::gamma_count(state.pos[i], state.r_max, state.box_l) > 0 {
@@ -86,7 +84,7 @@ fn main() -> anyhow::Result<()> {
     println!("  particles            : {}", state.n());
     println!("  boundary particles   : {boundary_particles} (launch gamma rays)");
     println!("  rays launched        : {} (primary {} + gamma {})",
-        stats.rays, state.n(), stats.rays as usize - state.n());
+        scratch.stats.rays, state.n(), scratch.stats.rays as usize - state.n());
     println!("  mismatches           : {mismatches}  <- must be 0");
     assert_eq!(mismatches, 0, "gamma rays missed neighbors");
 

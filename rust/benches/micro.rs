@@ -74,12 +74,29 @@ fn main() {
     });
 
     let bvh = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
-    bench("bvh query x n (point, uniform scene)", reps, || {
-        let mut stats = orcs::bvh::traverse::TraversalStats::default();
+    bench("bvh query x n (per-point, 1 thread)", reps, || {
+        let mut scratch = orcs::bvh::traverse::QueryScratch::new();
         let mut acc = 0usize;
         for i in 0..n {
-            bvh.query_point(pos[i], i, &pos, &radius, &mut stats, |_| acc += 1);
+            bvh.query_point(pos[i], i, &pos, &radius, &mut scratch, |_| acc += 1);
         }
+        std::hint::black_box((acc, scratch.stats.aabb_tests));
+    });
+    let threads = orcs::parallel::num_threads();
+    bench(&format!("bvh query_batch x n ({threads} threads)"), reps, || {
+        let (hits, stats) = bvh.query_batch(
+            n,
+            threads,
+            || (),
+            |_, scratch, range| {
+                let mut acc = 0usize;
+                for i in range {
+                    bvh.query_point(pos[i], i, &pos, &radius, scratch, |_| acc += 1);
+                }
+                acc
+            },
+        );
+        let acc: usize = hits.iter().sum();
         std::hint::black_box((acc, stats.aabb_tests));
     });
 
@@ -100,12 +117,23 @@ fn main() {
         std::hint::black_box((f.len(), t, e, v));
     });
 
-    bench("radix sort (morton pairs)", reps, || {
+    bench("radix sort (morton pairs, serial)", reps, || {
         let mut keys: Vec<u32> =
             pos.iter().map(|&p| orcs::frnn::gpu_cell::morton30(p, 1000.0)).collect();
         let mut vals: Vec<u32> = (0..n as u32).collect();
         radix_sort_pairs(&mut keys, &mut vals);
         std::hint::black_box(keys[0]);
+    });
+    bench(&format!("radix sort (morton pairs, {threads} threads)"), reps, || {
+        let mut keys: Vec<u32> =
+            pos.iter().map(|&p| orcs::frnn::gpu_cell::morton30(p, 1000.0)).collect();
+        let mut vals: Vec<u32> = (0..n as u32).collect();
+        orcs::frnn::gpu_cell::radix_sort_pairs_mt(&mut keys, &mut vals, threads);
+        std::hint::black_box(keys[0]);
+    });
+    bench("bvh build (binned SAH, 1 thread)", reps, || {
+        let b = Bvh::build_with_threads(&pos, &radius, BuildKind::BinnedSah, 1);
+        std::hint::black_box(b.node_count());
     });
 
     // XLA dispatch cost (needs artifacts; skipped when absent)

@@ -1,15 +1,33 @@
-//! BVH construction: median split and binned-SAH builders.
+//! BVH construction: median split, binned-SAH and Morton (LBVH) builders,
+//! parallelized across the host cores.
 //!
-//! Both builders produce the same node layout (children consecutive, always
+//! All builders produce the same node layout (children consecutive, always
 //! after the parent) so refit and traversal are builder-agnostic. The
 //! median builder models fast hardware LBVH-style construction; binned SAH
 //! models a high-quality build. The timing model charges builds by
 //! primitive count regardless of kind (hardware builds are opaque), but the
 //! *query* cost difference between tree qualities is real and measured.
+//!
+//! # Parallel construction
+//!
+//! Rebuilds sit on the hot path of the `gradient` update/rebuild policy, so
+//! build wall time directly shapes the optimizer's cost regime (paper §i).
+//! The build parallelizes in two stages, scaling with `ORCS_THREADS`:
+//!
+//! * **LBVH keying/sorting**: Morton codes via `parallel_map`, then a
+//!   chunked parallel LSD radix sort (`radix_sort_pairs_mt`) — identical
+//!   output to the serial sort (stable), so tree structure is unchanged.
+//! * **Top-down splitting** (all kinds): the top of the tree is split
+//!   serially until subtree ranges drop below a per-thread grain, then the
+//!   subtrees build concurrently into task-local node arrays that are
+//!   spliced (with index fix-up) after the join. Split decisions are
+//!   identical to the serial build, so the *tree* is identical up to node
+//!   array layout; traversal visits the same nodes either way.
 
 use super::{Bvh, BuildKind, Node, LEAF_SIZE};
 use crate::core::aabb::Aabb;
 use crate::core::vec3::Vec3;
+use crate::parallel;
 
 /// Number of SAH bins per axis.
 const SAH_BINS: usize = 16;
@@ -19,19 +37,43 @@ const SAH_BINS: usize = 16;
 const COST_TRAVERSE: f32 = 1.0;
 const COST_INTERSECT: f32 = 1.0;
 
+/// Below this primitive count a parallel build costs more than it saves.
+const PARALLEL_BUILD_MIN: usize = 8192;
+
+/// Serial top-phase depth guard against pathologically unbalanced SAH
+/// splits producing O(n) serial descent.
+const MAX_TOP_DEPTH: usize = 24;
+
 struct BuildCtx<'a> {
-    centroids: Vec<Vec3>,
-    prim_bbs: Vec<Aabb>,
+    centroids: &'a [Vec3],
+    prim_bbs: &'a [Aabb],
+    /// The slice of the global `prim_order` this context builds over.
     order: &'a mut [u32],
+    /// Global index of `order[0]` — leaves store `base + local_offset`.
+    base: usize,
     nodes: Vec<Node>,
 }
 
+const EMPTY_NODE: Node = Node { aabb: Aabb::EMPTY, left_first: 0, count: 0 };
+
 impl Bvh {
-    /// Build a fresh BVH over spheres `(pos[i], radius[i])`.
+    /// Build a fresh BVH over spheres `(pos[i], radius[i])`, parallelized
+    /// over [`crate::parallel::num_threads`] workers (`ORCS_THREADS`).
     pub fn build(pos: &[Vec3], radius: &[f32], kind: BuildKind) -> Bvh {
+        Self::build_with_threads(pos, radius, kind, parallel::num_threads())
+    }
+
+    /// [`Bvh::build`] with an explicit worker count.
+    pub fn build_with_threads(
+        pos: &[Vec3],
+        radius: &[f32],
+        kind: BuildKind,
+        threads: usize,
+    ) -> Bvh {
         assert_eq!(pos.len(), radius.len());
         assert!(!pos.is_empty(), "cannot build a BVH over zero primitives");
         let n = pos.len();
+        let threads = threads.max(1);
         let mut order: Vec<u32> = (0..n as u32).collect();
 
         if kind == BuildKind::Lbvh {
@@ -42,67 +84,183 @@ impl Bvh {
                 a
             });
             let span = (bb.hi - bb.lo).max_component().max(1e-6);
-            let mut keys: Vec<u32> = pos
-                .iter()
-                .map(|&p| crate::frnn::gpu_cell::morton30((p - bb.lo) * (1000.0 / span), 1000.0))
-                .collect();
-            crate::frnn::gpu_cell::radix_sort_pairs(&mut keys, &mut order);
+            let mut keys: Vec<u32> = parallel::parallel_map(n, threads, |i| {
+                crate::frnn::gpu_cell::morton30((pos[i] - bb.lo) * (1000.0 / span), 1000.0)
+            });
+            crate::frnn::gpu_cell::radix_sort_pairs_mt(&mut keys, &mut order, threads);
         }
         let prim_bbs: Vec<Aabb> =
-            (0..n).map(|i| Aabb::of_sphere(pos[i], radius[i])).collect();
+            parallel::parallel_map(n, threads, |i| Aabb::of_sphere(pos[i], radius[i]));
         let centroids: Vec<Vec3> = pos.to_vec();
 
         let mut ctx = BuildCtx {
-            centroids,
-            prim_bbs,
+            centroids: &centroids,
+            prim_bbs: &prim_bbs,
             order: &mut order,
+            base: 0,
             nodes: Vec::with_capacity(2 * n / LEAF_SIZE + 2),
         };
         // reserve root
-        ctx.nodes.push(Node { aabb: Aabb::EMPTY, left_first: 0, count: 0 });
-        build_range(&mut ctx, 0, 0, n, kind);
-        let nodes = ctx.nodes;
+        ctx.nodes.push(EMPTY_NODE);
+
+        if threads == 1 || n < PARALLEL_BUILD_MIN {
+            build_range(&mut ctx, 0, 0, n, kind);
+            let nodes = ctx.nodes;
+            return Bvh { nodes, prim_order: order, n_prims: n, kind, refits_since_build: 0 };
+        }
+
+        // --- Parallel path: serial top split into subtree tasks ---
+        let grain = (n / (threads * 4)).max(LEAF_SIZE * 8);
+        let mut tasks: Vec<(usize, usize, usize)> = Vec::new(); // (node, lo, hi)
+        split_top(&mut ctx, 0, 0, n, kind, grain, 0, &mut tasks);
+        let mut nodes = std::mem::take(&mut ctx.nodes);
+        drop(ctx);
+
+        // Concurrent subtree builds into task-local node arrays. Each task
+        // owns the disjoint `order[lo..hi]` slice.
+        let mut results: Vec<Vec<Node>> = (0..tasks.len()).map(|_| Vec::new()).collect();
+        let order_ptr = parallel::SendPtr(order.as_mut_ptr());
+        let res_ptr = parallel::SendPtr(results.as_mut_ptr());
+        let tasks_ref = &tasks;
+        let (centroids_ref, prim_bbs_ref) = (&centroids, &prim_bbs);
+        parallel::parallel_for_dynamic(tasks.len(), threads, 1, |_, range| {
+            for t in range {
+                let (_, lo, hi) = tasks_ref[t];
+                // SAFETY: task ranges partition 0..n, so the order slices
+                // are disjoint; each results slot is written exactly once.
+                let sub =
+                    unsafe { std::slice::from_raw_parts_mut(order_ptr.0.add(lo), hi - lo) };
+                let mut sub_ctx = BuildCtx {
+                    centroids: centroids_ref,
+                    prim_bbs: prim_bbs_ref,
+                    order: sub,
+                    base: lo,
+                    nodes: Vec::with_capacity(2 * (hi - lo) / LEAF_SIZE + 2),
+                };
+                sub_ctx.nodes.push(EMPTY_NODE);
+                build_range(&mut sub_ctx, 0, 0, hi - lo, kind);
+                unsafe { *res_ptr.0.add(t) = sub_ctx.nodes };
+            }
+        });
+
+        // Splice: task-local node 0 lands in the pre-reserved parent slot;
+        // the rest append after the serial top, with child indices shifted.
+        let mut base = nodes.len();
+        for (t, &(node_idx, _, _)) in tasks.iter().enumerate() {
+            let local = std::mem::take(&mut results[t]);
+            let shift = |nd: &Node, b: usize| -> Node {
+                if nd.is_leaf() {
+                    *nd
+                } else {
+                    Node {
+                        aabb: nd.aabb,
+                        left_first: (b + nd.left_first as usize - 1) as u32,
+                        count: 0,
+                    }
+                }
+            };
+            nodes[node_idx] = shift(&local[0], base);
+            for nd in &local[1..] {
+                nodes.push(shift(nd, base));
+            }
+            base += local.len() - 1;
+        }
 
         Bvh { nodes, prim_order: order, n_prims: n, kind, refits_since_build: 0 }
     }
 }
 
-/// Recursively build the subtree for `order[lo..hi]` into `nodes[node_idx]`.
-fn build_range(ctx: &mut BuildCtx, node_idx: usize, lo: usize, hi: usize, kind: BuildKind) {
-    let count = hi - lo;
+/// Bounding boxes (node + centroid) of `order[lo..hi]`.
+fn range_bounds(ctx: &BuildCtx, lo: usize, hi: usize) -> (Aabb, Aabb) {
     let mut bb = Aabb::EMPTY;
-    let mut cb = Aabb::EMPTY; // centroid bounds
+    let mut cb = Aabb::EMPTY;
     for k in lo..hi {
         let p = ctx.order[k] as usize;
         bb.grow(&ctx.prim_bbs[p]);
         let c = ctx.centroids[p];
         cb.grow(&Aabb::new(c, c));
     }
+    (bb, cb)
+}
 
-    if count <= LEAF_SIZE {
-        ctx.nodes[node_idx] =
-            Node { aabb: bb, left_first: lo as u32, count: count as u32 };
-        return;
-    }
-
+/// Pick the split position for `order[lo..hi]` (relative indices), with the
+/// degenerate-split fallback. Shared by the serial top phase and the
+/// subtree recursion so both produce identical tree structure.
+fn choose_split(
+    ctx: &mut BuildCtx,
+    lo: usize,
+    hi: usize,
+    cb: &Aabb,
+    bb: &Aabb,
+    kind: BuildKind,
+) -> usize {
+    let count = hi - lo;
     let split = match kind {
-        BuildKind::Median => split_median(ctx, lo, hi, &cb),
+        BuildKind::Median => split_median(ctx, lo, hi, cb),
         BuildKind::BinnedSah => {
-            split_sah(ctx, lo, hi, &cb, &bb).unwrap_or_else(|| split_median(ctx, lo, hi, &cb))
+            split_sah(ctx, lo, hi, cb, bb).unwrap_or_else(|| split_median(ctx, lo, hi, cb))
         }
         // order is already morton-sorted: midpoint = prefix split
         BuildKind::Lbvh => lo + count / 2,
     };
-
     // Degenerate split (all centroids identical): force a half split.
-    let mid = if split <= lo || split >= hi { lo + count / 2 } else { split };
+    if split <= lo || split >= hi {
+        lo + count / 2
+    } else {
+        split
+    }
+}
+
+/// Recursively build the subtree for `order[lo..hi]` into `nodes[node_idx]`.
+/// `lo`/`hi` are relative to `ctx.order`; leaves store `ctx.base + lo`.
+fn build_range(ctx: &mut BuildCtx, node_idx: usize, lo: usize, hi: usize, kind: BuildKind) {
+    let count = hi - lo;
+    let (bb, cb) = range_bounds(ctx, lo, hi);
+
+    if count <= LEAF_SIZE {
+        ctx.nodes[node_idx] =
+            Node { aabb: bb, left_first: (ctx.base + lo) as u32, count: count as u32 };
+        return;
+    }
+
+    let mid = choose_split(ctx, lo, hi, &cb, &bb, kind);
 
     let left = ctx.nodes.len();
-    ctx.nodes.push(Node { aabb: Aabb::EMPTY, left_first: 0, count: 0 });
-    ctx.nodes.push(Node { aabb: Aabb::EMPTY, left_first: 0, count: 0 });
+    ctx.nodes.push(EMPTY_NODE);
+    ctx.nodes.push(EMPTY_NODE);
     ctx.nodes[node_idx] = Node { aabb: bb, left_first: left as u32, count: 0 };
     build_range(ctx, left, lo, mid, kind);
     build_range(ctx, left + 1, mid, hi, kind);
+}
+
+/// Serial top phase of a parallel build: split exactly like [`build_range`]
+/// until ranges reach the per-thread `grain` (or the depth guard), then
+/// record a subtree task against the pre-reserved node slot.
+#[allow(clippy::too_many_arguments)]
+fn split_top(
+    ctx: &mut BuildCtx,
+    node_idx: usize,
+    lo: usize,
+    hi: usize,
+    kind: BuildKind,
+    grain: usize,
+    depth: usize,
+    tasks: &mut Vec<(usize, usize, usize)>,
+) {
+    let count = hi - lo;
+    if count <= grain.max(LEAF_SIZE) || depth >= MAX_TOP_DEPTH {
+        tasks.push((node_idx, lo, hi));
+        return;
+    }
+    let (bb, cb) = range_bounds(ctx, lo, hi);
+    let mid = choose_split(ctx, lo, hi, &cb, &bb, kind);
+
+    let left = ctx.nodes.len();
+    ctx.nodes.push(EMPTY_NODE);
+    ctx.nodes.push(EMPTY_NODE);
+    ctx.nodes[node_idx] = Node { aabb: bb, left_first: left as u32, count: 0 };
+    split_top(ctx, left, lo, mid, kind, grain, depth + 1, tasks);
+    split_top(ctx, left + 1, mid, hi, kind, grain, depth + 1, tasks);
 }
 
 /// Median split: partition around the median centroid on the longest axis.
@@ -266,9 +424,9 @@ mod tests {
     fn lbvh_queries_match_brute_force() {
         let (pos, radius) = scene(600, 6);
         let bvh = Bvh::build(&pos, &radius, BuildKind::Lbvh);
-        let mut stats = crate::bvh::traverse::TraversalStats::default();
+        let mut scratch = crate::bvh::traverse::QueryScratch::new();
         for i in (0..pos.len()).step_by(13) {
-            let mut got = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut stats);
+            let mut got = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut scratch);
             got.sort_unstable();
             let want: Vec<usize> = (0..pos.len())
                 .filter(|&j| {
@@ -286,6 +444,46 @@ mod tests {
         for (i, n) in bvh.nodes.iter().enumerate() {
             if !n.is_leaf() {
                 assert!(n.left_first as usize > i);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_build_equals_serial_tree() {
+        // Above PARALLEL_BUILD_MIN the multi-threaded path must produce a
+        // tree with identical traversal behavior and invariants for every
+        // build kind, and an identical primitive permutation per leaf set.
+        let (pos, radius) = scene(PARALLEL_BUILD_MIN + 3000, 9);
+        for kind in [BuildKind::Median, BuildKind::BinnedSah, BuildKind::Lbvh] {
+            let serial = Bvh::build_with_threads(&pos, &radius, kind, 1);
+            let par = Bvh::build_with_threads(&pos, &radius, kind, 8);
+            par.check_invariants(&pos, &radius).unwrap();
+            assert_eq!(par.n_prims, serial.n_prims);
+            // same split decisions -> same primitive ordering
+            assert_eq!(par.prim_order, serial.prim_order, "{kind:?}");
+            assert_eq!(par.node_count(), serial.node_count(), "{kind:?}");
+            // identical query results on a sample of points
+            let mut s1 = crate::bvh::traverse::QueryScratch::new();
+            let mut s2 = crate::bvh::traverse::QueryScratch::new();
+            for i in (0..pos.len()).step_by(97) {
+                let mut a = serial.query_point_collect(pos[i], i, &pos, &radius, &mut s1);
+                let mut b = par.query_point_collect(pos[i], i, &pos, &radius, &mut s2);
+                a.sort_unstable();
+                b.sort_unstable();
+                assert_eq!(a, b, "{kind:?} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_build_children_follow_parents() {
+        let (pos, radius) = scene(PARALLEL_BUILD_MIN + 1000, 10);
+        for kind in [BuildKind::Median, BuildKind::BinnedSah, BuildKind::Lbvh] {
+            let bvh = Bvh::build_with_threads(&pos, &radius, kind, 6);
+            for (i, n) in bvh.nodes.iter().enumerate() {
+                if !n.is_leaf() {
+                    assert!(n.left_first as usize > i, "{kind:?} node {i}");
+                }
             }
         }
     }

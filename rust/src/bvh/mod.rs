@@ -9,6 +9,11 @@
 //! ([`crate::rtcore`]). Refit-induced degradation — the phenomenon the
 //! `gradient` optimizer exploits — emerges structurally: as particles move,
 //! refitted node bounds overlap more and traversal touches more nodes.
+//!
+//! Builds are multi-threaded (see [`builder`]) and queries run through the
+//! batched, allocation-free traversal engine (see [`traverse`]:
+//! [`traverse::QueryScratch`] / [`Bvh::query_batch`]); both scale with
+//! `ORCS_THREADS`.
 
 pub mod builder;
 pub mod quality;

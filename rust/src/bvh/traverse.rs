@@ -1,5 +1,5 @@
 //! BVH traversal with exact operation counters — the simulated RT-core
-//! query.
+//! query, plus the batched traversal engine every RT backend routes through.
 //!
 //! The paper's FRNN scheme launches an *infinitesimal ray* at each particle
 //! position and collects sphere intersections (Fig. 1): geometrically this is
@@ -7,9 +7,29 @@
 //! visits every node whose AABB contains the query point and tests spheres
 //! at the leaves. Counters mirror what RT silicon does per ray: box tests
 //! (RT-core units) and intersection-shader invocations (SM units).
+//!
+//! # The batched engine
+//!
+//! RT hardware gets its throughput from sweeping *batches* of coherent rays,
+//! not from one-at-a-time launches (RTNN, Zhu 2022). The CPU model mirrors
+//! that in two layers:
+//!
+//! * [`QueryScratch`] — per-worker reusable state (fixed traversal stack +
+//!   heap spill + gamma-origin buffer + stats accumulator), so a single ray
+//!   through [`Bvh::query_point`] touches **no allocator** in steady state;
+//! * [`Bvh::query_batch`] — sweeps a whole query set with thread-local
+//!   scratch and chunked work-stealing ([`crate::parallel`]), merging
+//!   [`TraversalStats`] once per worker instead of once per ray. Chunk
+//!   outputs come back in chunk order, so callers that fold them
+//!   sequentially stay bitwise deterministic under dynamic scheduling.
 
 use super::Bvh;
 use crate::core::vec3::Vec3;
+
+/// Fixed traversal-stack depth. Tree height is ~log2(n/LEAF_SIZE) for sane
+/// builds; 96 covers every realistic scene, and deeper (degenerate-refit)
+/// trees spill to the scratch's heap vector.
+const STACK_DEPTH: usize = 96;
 
 /// Per-query (or accumulated) traversal statistics. These feed
 /// [`crate::rtcore::timing`] to produce simulated GPU time.
@@ -34,10 +54,49 @@ impl TraversalStats {
     }
 }
 
+/// Reusable per-worker traversal state: fixed stack + spill vector + gamma
+/// origin buffer + stats accumulator. One ray performs zero heap
+/// allocations once the scratch is warm; allocations happen only at worker
+/// setup (and on first-ever spill/gamma growth, whose capacity is retained).
+pub struct QueryScratch {
+    stack: [u32; STACK_DEPTH],
+    spill: Vec<u32>,
+    /// Gamma-ray origin buffer (periodic BC) — filled and drained by
+    /// [`crate::frnn::rt_common::launch_rays`]; capacity retained across
+    /// particles.
+    pub gamma: Vec<Vec3>,
+    /// Stats accumulated by every query through this scratch. Merge into
+    /// step counters once per worker/chunk, not per ray.
+    pub stats: TraversalStats,
+}
+
+impl QueryScratch {
+    pub fn new() -> Self {
+        QueryScratch {
+            stack: [0; STACK_DEPTH],
+            spill: Vec::new(),
+            gamma: Vec::new(),
+            stats: TraversalStats::default(),
+        }
+    }
+
+    /// Extract and reset the accumulated stats.
+    pub fn take_stats(&mut self) -> TraversalStats {
+        std::mem::take(&mut self.stats)
+    }
+}
+
+impl Default for QueryScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl Bvh {
     /// Query all spheres containing point `p`, excluding primitive
     /// `exclude` (a particle never neighbors itself; pass `usize::MAX` to
-    /// keep all). Calls `visit(j)` for every hit and updates `stats`.
+    /// keep all). Calls `visit(j)` for every hit and accumulates counters
+    /// into `scratch.stats`.
     ///
     /// `pos`/`radius` are the *current* particle arrays: the BVH prunes by
     /// node bounds (possibly stale-loose after refits — exactly like RT
@@ -49,15 +108,13 @@ impl Bvh {
         exclude: usize,
         pos: &[Vec3],
         radius: &[f32],
-        stats: &mut TraversalStats,
+        scratch: &mut QueryScratch,
         mut visit: F,
     ) {
+        let QueryScratch { stack, spill, stats, .. } = scratch;
         stats.rays += 1;
-        // Manual stack; depth bounded by tree height (can grow after many
-        // degenerate refits, so use a SmallVec-like spill pattern).
-        let mut stack = [0u32; 96];
         let mut sp = 0usize;
-        let mut spill: Vec<u32> = Vec::new();
+        debug_assert!(spill.is_empty());
 
         let mut current = 0u32;
         loop {
@@ -86,7 +143,7 @@ impl Bvh {
                 } else {
                     // push right, descend left
                     let l = node.left_first;
-                    if sp < stack.len() {
+                    if sp < STACK_DEPTH {
                         stack[sp] = l + 1;
                         sp += 1;
                     } else {
@@ -116,12 +173,60 @@ impl Bvh {
         exclude: usize,
         pos: &[Vec3],
         radius: &[f32],
-        stats: &mut TraversalStats,
+        scratch: &mut QueryScratch,
     ) -> Vec<usize> {
         let mut out = Vec::new();
-        self.query_point(p, exclude, pos, radius, stats, |j| out.push(j));
+        self.query_point(p, exclude, pos, radius, scratch, |j| out.push(j));
         out
     }
+
+    /// Batched query sweep over `0..n` query indices: chunked work-stealing
+    /// across `threads` workers, each owning a thread-local accumulator
+    /// from `init` plus a [`QueryScratch`] that is reused for every ray the
+    /// worker processes. `body` handles one chunk of query indices (running
+    /// its rays through [`Bvh::query_point`] / `launch_rays` with the
+    /// provided scratch) and returns the chunk's output.
+    ///
+    /// Returns the chunk outputs **in chunk order** (bitwise-deterministic
+    /// merging regardless of scheduling) plus the traversal stats merged
+    /// once per worker.
+    pub fn query_batch<A, O, I, F>(
+        &self,
+        n: usize,
+        threads: usize,
+        init: I,
+        body: F,
+    ) -> (Vec<O>, TraversalStats)
+    where
+        A: Send,
+        O: Send,
+        I: Fn() -> A + Sync,
+        F: Fn(&mut A, &mut QueryScratch, std::ops::Range<usize>) -> O + Sync,
+    {
+        let block = batch_block(n);
+        let (outs, states) = crate::parallel::parallel_chunk_map(
+            n,
+            threads,
+            block,
+            || (init(), QueryScratch::new()),
+            |state, range| body(&mut state.0, &mut state.1, range),
+        );
+        let mut stats = TraversalStats::default();
+        for (_, scratch) in &states {
+            stats.add(&scratch.stats);
+        }
+        (outs, stats)
+    }
+}
+
+/// Chunk size for a batched sweep: ~64 chunks total for stealing slack,
+/// bounded so tiny sweeps stay single-chunk and huge sweeps keep per-chunk
+/// merge overhead negligible. Deliberately independent of the worker count:
+/// the chunk partition (and therefore every chunk-ordered merge downstream,
+/// e.g. the ORCS-forces scatter reduction) is bitwise identical across
+/// `ORCS_THREADS` settings, not just across runs at a fixed setting.
+fn batch_block(n: usize) -> usize {
+    (n / 64).clamp(32, 4096)
 }
 
 #[cfg(test)]
@@ -159,14 +264,14 @@ mod tests {
         let (pos, radius) = scene(400, 21, 8.0);
         for kind in [BuildKind::Median, BuildKind::BinnedSah] {
             let bvh = Bvh::build(&pos, &radius, kind);
-            let mut stats = TraversalStats::default();
+            let mut scratch = QueryScratch::new();
             for i in 0..pos.len() {
-                let mut got = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut stats);
+                let mut got = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut scratch);
                 got.sort_unstable();
                 assert_eq!(got, brute(pos[i], i, &pos, &radius), "i={i} kind={kind:?}");
             }
-            assert_eq!(stats.rays, 400);
-            assert!(stats.aabb_tests > 0 && stats.sphere_tests > 0);
+            assert_eq!(scratch.stats.rays, 400);
+            assert!(scratch.stats.aabb_tests > 0 && scratch.stats.sphere_tests > 0);
         }
     }
 
@@ -175,6 +280,7 @@ mod tests {
         let (mut pos, radius) = scene(300, 22, 6.0);
         let mut bvh = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
         let mut rng = Rng::new(5);
+        let mut scratch = QueryScratch::new();
         for _ in 0..4 {
             for p in pos.iter_mut() {
                 *p += Vec3::new(
@@ -184,9 +290,8 @@ mod tests {
                 );
             }
             bvh.refit(&pos, &radius);
-            let mut stats = TraversalStats::default();
             for i in (0..pos.len()).step_by(7) {
-                let mut got = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut stats);
+                let mut got = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut scratch);
                 got.sort_unstable();
                 assert_eq!(got, brute(pos[i], i, &pos, &radius));
             }
@@ -210,15 +315,16 @@ mod tests {
             }
             bvh.refit(&pos, &radius);
         }
-        let mut refit_stats = TraversalStats::default();
+        let mut scratch = QueryScratch::new();
         for i in 0..pos.len() {
-            bvh.query_point(pos[i], i, &pos, &radius, &mut refit_stats, |_| {});
+            bvh.query_point(pos[i], i, &pos, &radius, &mut scratch, |_| {});
         }
+        let refit_stats = scratch.take_stats();
         let fresh = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
-        let mut fresh_stats = TraversalStats::default();
         for i in 0..pos.len() {
-            fresh.query_point(pos[i], i, &pos, &radius, &mut fresh_stats, |_| {});
+            fresh.query_point(pos[i], i, &pos, &radius, &mut scratch, |_| {});
         }
+        let fresh_stats = scratch.take_stats();
         // hits identical (correctness), cost strictly larger (degradation)
         assert_eq!(refit_stats.hits, fresh_stats.hits);
         assert!(
@@ -234,8 +340,39 @@ mod tests {
         let pos = vec![Vec3::ZERO, Vec3::new(1.0, 0.0, 0.0)];
         let radius = vec![2.0f32, 2.0];
         let bvh = Bvh::build(&pos, &radius, BuildKind::Median);
-        let mut stats = TraversalStats::default();
-        let got = bvh.query_point_collect(Vec3::ZERO, usize::MAX, &pos, &radius, &mut stats);
+        let mut scratch = QueryScratch::new();
+        let got = bvh.query_point_collect(Vec3::ZERO, usize::MAX, &pos, &radius, &mut scratch);
         assert_eq!(got.len(), 2); // both spheres contain the origin
+    }
+
+    #[test]
+    fn batch_matches_per_point_queries() {
+        let (pos, radius) = scene(700, 24, 7.0);
+        for kind in [BuildKind::Median, BuildKind::BinnedSah, BuildKind::Lbvh] {
+            let bvh = Bvh::build(&pos, &radius, kind);
+            // per-point reference
+            let mut scratch = QueryScratch::new();
+            let serial: Vec<Vec<usize>> = (0..pos.len())
+                .map(|i| bvh.query_point_collect(pos[i], i, &pos, &radius, &mut scratch))
+                .collect();
+            let serial_stats = scratch.take_stats();
+            for threads in [1, 4] {
+                let (chunks, stats) = bvh.query_batch(
+                    pos.len(),
+                    threads,
+                    || (),
+                    |_, scratch, range| {
+                        range
+                            .map(|i| {
+                                bvh.query_point_collect(pos[i], i, &pos, &radius, scratch)
+                            })
+                            .collect::<Vec<_>>()
+                    },
+                );
+                let batched: Vec<Vec<usize>> = chunks.into_iter().flatten().collect();
+                assert_eq!(batched, serial, "kind={kind:?} threads={threads}");
+                assert_eq!(stats, serial_stats, "kind={kind:?} threads={threads}");
+            }
+        }
     }
 }

@@ -60,6 +60,73 @@ pub fn radix_sort_pairs(keys: &mut Vec<u32>, vals: &mut Vec<u32>) {
     }
 }
 
+/// Parallel variant of [`radix_sort_pairs`]: per-chunk histograms, a serial
+/// bucket-major prefix to assign every (chunk, bucket) a disjoint output
+/// region, then parallel stable scatter. Output is bit-identical to the
+/// serial sort (chunk order preserved within each bucket), so LBVH builds
+/// are thread-count independent. Falls back to serial for small inputs.
+pub fn radix_sort_pairs_mt(keys: &mut Vec<u32>, vals: &mut Vec<u32>, threads: usize) {
+    let n = keys.len();
+    if threads <= 1 || n < 1 << 14 {
+        return radix_sort_pairs(keys, vals);
+    }
+    let threads = threads.min(n);
+    let mut k_tmp = vec![0u32; n];
+    let mut v_tmp = vec![0u32; n];
+    for pass in 0..4 {
+        let shift = pass * 8;
+        // Per-chunk histograms; parallel_for_chunks assigns chunk t the
+        // range [t*ceil(n/threads), ...), matching the scatter below.
+        let mut hists = vec![[0u32; 256]; threads];
+        {
+            let hist_ptr = crate::parallel::SendPtr(hists.as_mut_ptr());
+            let keys_ref: &[u32] = keys;
+            crate::parallel::parallel_for_chunks(n, threads, |t, range| {
+                let mut h = [0u32; 256];
+                for i in range {
+                    h[((keys_ref[i] >> shift) & 0xff) as usize] += 1;
+                }
+                // SAFETY: one slot per worker, written exactly once.
+                unsafe { *hist_ptr.0.add(t) = h };
+            });
+        }
+        // Bucket-major exclusive prefix: starts[t][b] is chunk t's first
+        // output slot for bucket b.
+        let mut running = 0u32;
+        let mut starts = vec![[0u32; 256]; threads];
+        for b in 0..256 {
+            for t in 0..threads {
+                starts[t][b] = running;
+                running += hists[t][b];
+            }
+        }
+        // Parallel scatter into disjoint (chunk, bucket) regions.
+        {
+            let kt_ptr = crate::parallel::SendPtr(k_tmp.as_mut_ptr());
+            let vt_ptr = crate::parallel::SendPtr(v_tmp.as_mut_ptr());
+            let keys_ref: &[u32] = keys;
+            let vals_ref: &[u32] = vals;
+            let starts_ref = &starts;
+            crate::parallel::parallel_for_chunks(n, threads, |t, range| {
+                let mut cursors = starts_ref[t];
+                for i in range {
+                    let b = ((keys_ref[i] >> shift) & 0xff) as usize;
+                    let dst = cursors[b] as usize;
+                    cursors[b] += 1;
+                    // SAFETY: (chunk, bucket) output regions are disjoint
+                    // by construction of `starts`.
+                    unsafe {
+                        *kt_ptr.0.add(dst) = keys_ref[i];
+                        *vt_ptr.0.add(dst) = vals_ref[i];
+                    }
+                }
+            });
+        }
+        std::mem::swap(keys, &mut k_tmp);
+        std::mem::swap(vals, &mut v_tmp);
+    }
+}
+
 /// GPU-CELL backend.
 pub struct GpuCell {
     /// Scratch reused across steps (device-resident buffers on real GPUs).
@@ -100,7 +167,7 @@ impl Backend for GpuCell {
         self.keys.extend(state.pos.iter().map(|&p| morton30(p, state.box_l)));
         self.order.clear();
         self.order.extend(0..n as u32);
-        radix_sort_pairs(&mut self.keys, &mut self.order);
+        radix_sort_pairs_mt(&mut self.keys, &mut self.order, ctx.threads);
         counts.sort_elems += n as u64;
 
         // Phase 2: grid build (dense or compact-hashed by resolution).
@@ -160,6 +227,23 @@ mod tests {
         // permutation consistent: vals maps sorted slot -> original index
         for (slot, &v) in vals.iter().enumerate() {
             assert_eq!(keys[slot], orig[v as usize]);
+        }
+    }
+
+    #[test]
+    fn radix_sort_mt_matches_serial() {
+        // above the serial fallback threshold, with an uneven tail chunk
+        let n = (1 << 14) + 37;
+        let mut rng = Rng::new(9);
+        let keys: Vec<u32> = (0..n).map(|_| rng.next_u64() as u32 & 0x3FFF_FFFF).collect();
+        let vals: Vec<u32> = (0..n as u32).collect();
+        let (mut k1, mut v1) = (keys.clone(), vals.clone());
+        radix_sort_pairs(&mut k1, &mut v1);
+        for threads in [2, 5, 8] {
+            let (mut k2, mut v2) = (keys.clone(), vals.clone());
+            radix_sort_pairs_mt(&mut k2, &mut v2, threads);
+            assert_eq!(k1, k2, "threads={threads}");
+            assert_eq!(v1, v2, "threads={threads} (stability)");
         }
     }
 

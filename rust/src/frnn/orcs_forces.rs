@@ -17,12 +17,10 @@
 
 use std::time::Instant;
 
-use crate::bvh::traverse::TraversalStats;
 use crate::core::vec3::Vec3;
 use crate::frnn::rt_common::{fold_stats, gamma_trigger, launch_rays, BvhManager};
 use crate::frnn::{Backend, StepCtx, StepResult, WallPhases};
 use crate::gradient::RebuildPolicy;
-use crate::parallel;
 use crate::physics::state::SimState;
 use crate::rtcore::OpCounts;
 
@@ -61,70 +59,98 @@ impl Backend for OrcsForces {
         let action = self.mgr.prepare(&state.pos, &state.radius, &mut counts);
         wall.bvh = t0.elapsed().as_secs_f64();
 
-        // Phase 2: traversal with in-shader force scatter.
+        // Phase 2: batched traversal with in-shader force scatter. Each
+        // worker scatters into a dense thread-local buffer (epoch-stamped
+        // so it re-zeroes lazily) and flushes the touched entries as a
+        // sparse per-chunk delta list; the deltas are applied in chunk
+        // order, so the reduction is bitwise deterministic regardless of
+        // which worker ran which chunk — the race-free substitute for the
+        // GPU's atomicAdd (DESIGN.md §Hardware-Adaptation).
         let t1 = Instant::now();
         let bvh = self.mgr.bvh();
         let trigger = gamma_trigger(state);
-        struct ThreadOut {
-            forces: Vec<Vec3>,
-            stats: TraversalStats,
+        struct Scatter {
+            buf: Vec<Vec3>,
+            stamp: Vec<u32>,
+            epoch: u32,
+            touched: Vec<u32>,
+        }
+        struct ChunkOut {
+            deltas: Vec<(u32, Vec3)>,
             pairs: u64,
             evals: u64,
         }
-        let parts = parallel::parallel_reduce(
+        let (chunks, stats) = bvh.query_batch(
             n,
             ctx.threads,
-            || ThreadOut {
-                forces: vec![Vec3::ZERO; n],
-                stats: TraversalStats::default(),
-                pairs: 0,
-                evals: 0,
+            || Scatter {
+                buf: vec![Vec3::ZERO; n],
+                stamp: vec![0u32; n],
+                epoch: 0,
+                touched: Vec::new(),
             },
-            |out, i| {
-                let mut gamma_buf = Vec::new();
-                let r_i = state.radius[i];
-                let forces = &mut out.forces;
-                let pairs = &mut out.pairs;
-                let evals = &mut out.evals;
-                launch_rays(
-                    bvh,
-                    i,
-                    &state.pos,
-                    &state.radius,
-                    state.boundary,
-                    state.box_l,
-                    trigger,
-                    &mut gamma_buf,
-                    &mut out.stats,
-                    |j, dx| {
-                        let r_j = state.radius[j];
-                        let mutual = dx.norm2() < r_i * r_i;
-                        if !handles_pair(i, r_i, j, r_j, mutual) {
-                            return;
+            |sc, scratch, range| {
+                sc.epoch += 1;
+                sc.touched.clear();
+                let mut pairs = 0u64;
+                let mut evals = 0u64;
+                for i in range {
+                    let r_i = state.radius[i];
+                    let (buf, stamp, touched) =
+                        (&mut sc.buf, &mut sc.stamp, &mut sc.touched);
+                    let epoch = sc.epoch;
+                    let mut add = |idx: usize, f: Vec3| {
+                        if stamp[idx] != epoch {
+                            stamp[idx] = epoch;
+                            touched.push(idx as u32);
                         }
-                        *evals += 1;
-                        if let Some(fij) = state.params.pair_force(dx, r_i, r_j) {
-                            forces[i] += fij;
-                            forces[j] -= fij; // "atomicAdd" on real hardware
-                            *pairs += 1;
-                        }
-                    },
-                );
+                        buf[idx] += f;
+                    };
+                    launch_rays(
+                        bvh,
+                        i,
+                        &state.pos,
+                        &state.radius,
+                        state.boundary,
+                        state.box_l,
+                        trigger,
+                        scratch,
+                        |j, dx| {
+                            let r_j = state.radius[j];
+                            let mutual = dx.norm2() < r_i * r_i;
+                            if !handles_pair(i, r_i, j, r_j, mutual) {
+                                return;
+                            }
+                            evals += 1;
+                            if let Some(fij) = state.params.pair_force(dx, r_i, r_j) {
+                                add(i, fij);
+                                add(j, -fij); // "atomicAdd" on real hardware
+                                pairs += 1;
+                            }
+                        },
+                    );
+                }
+                // Flush touched entries (zeroing them for the next chunk).
+                let mut deltas = Vec::with_capacity(sc.touched.len());
+                for &idx in &sc.touched {
+                    let idx = idx as usize;
+                    deltas.push((idx as u32, sc.buf[idx]));
+                    sc.buf[idx] = Vec3::ZERO;
+                }
+                ChunkOut { deltas, pairs, evals }
             },
         );
 
-        // Deterministic reduction of the per-thread scatter buffers.
+        // Chunk-ordered deterministic reduction.
         let mut force = vec![Vec3::ZERO; n];
-        let mut stats = TraversalStats::default();
         let mut pairs = 0u64;
         let mut evals = 0u64;
-        for part in parts {
-            for (a, b) in force.iter_mut().zip(part.forces) {
-                *a += b;
+        for c in chunks {
+            for (idx, f) in c.deltas {
+                force[idx as usize] += f;
             }
-            stats.add(&part.stats);
-            pairs += part.pairs;
-            evals += part.evals;
+            pairs += c.pairs;
+            evals += c.evals;
         }
         state.force = force;
         fold_stats(&mut counts, &stats);

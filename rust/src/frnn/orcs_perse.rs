@@ -13,12 +13,10 @@
 
 use std::time::Instant;
 
-use crate::bvh::traverse::TraversalStats;
 use crate::core::vec3::Vec3;
 use crate::frnn::rt_common::{fold_stats, launch_rays, BvhManager};
 use crate::frnn::{Backend, StepCtx, StepResult, WallPhases};
 use crate::gradient::RebuildPolicy;
-use crate::parallel;
 use crate::physics::{boundary, state::SimState};
 use crate::rtcore::OpCounts;
 
@@ -56,65 +54,77 @@ impl Backend for OrcsPerse {
         let action = self.mgr.prepare(&state.pos, &state.radius, &mut counts);
         wall.bvh = t0.elapsed().as_secs_f64();
 
-        // Phase 2: the entire step inside the RT pipeline.
+        // Phase 2: the entire step inside the RT pipeline — batched sweep,
+        // one payload per ray thread, in-shader integration. Each chunk
+        // returns its particles' integrated (pos, vel) pairs; slots are
+        // disjoint so the merge is trivially deterministic.
         let t1 = Instant::now();
         let bvh = self.mgr.bvh();
         // uniform radius: gamma trigger is *the* radius (§3.3 fast case)
         let trigger = state.r_max;
         let dt = state.dt;
         let (boundary_mode, box_l) = (state.boundary, state.box_l);
-        struct ThreadOut {
-            /// (i, new_pos, new_vel) for this thread's particles.
-            moved: Vec<(u32, Vec3, Vec3)>,
-            stats: TraversalStats,
+        struct ChunkOut {
+            /// First particle index of the chunk.
+            lo: usize,
+            /// (new_pos, new_vel) per particle, chunk-relative.
+            moved: Vec<(Vec3, Vec3)>,
             accums: u64,
         }
-        let parts = parallel::parallel_reduce(
+        let (chunks, stats) = bvh.query_batch(
             n,
             ctx.threads,
-            || ThreadOut { moved: Vec::new(), stats: TraversalStats::default(), accums: 0 },
-            |out, i| {
-                let mut gamma_buf = Vec::new();
-                // ray payload: the force accumulator
-                let mut payload = Vec3::ZERO;
-                let r = state.radius[i];
-                let accums = &mut out.accums;
-                launch_rays(
-                    bvh,
-                    i,
-                    &state.pos,
-                    &state.radius,
-                    boundary_mode,
-                    box_l,
-                    trigger,
-                    &mut gamma_buf,
-                    &mut out.stats,
-                    |j, dx| {
-                        if let Some(fij) = state.params.pair_force(dx, r, state.radius[j]) {
-                            payload += fij;
-                            *accums += 1;
-                        }
-                    },
-                );
-                // in-shader integration of p_i from the payload force
-                let f = state.params.cap(payload);
-                let mut v = state.vel[i] + f * dt;
-                let mut p = state.pos[i] + v * dt;
-                boundary::apply(boundary_mode, box_l, &mut p, &mut v);
-                out.moved.push((i as u32, p, v));
+            || (),
+            |_, scratch, range| {
+                let mut out = ChunkOut {
+                    lo: range.start,
+                    moved: Vec::with_capacity(range.len()),
+                    accums: 0,
+                };
+                for i in range {
+                    // ray payload: the force accumulator
+                    let mut payload = Vec3::ZERO;
+                    let r = state.radius[i];
+                    let accums = &mut out.accums;
+                    launch_rays(
+                        bvh,
+                        i,
+                        &state.pos,
+                        &state.radius,
+                        boundary_mode,
+                        box_l,
+                        trigger,
+                        scratch,
+                        |j, dx| {
+                            if let Some(fij) =
+                                state.params.pair_force(dx, r, state.radius[j])
+                            {
+                                payload += fij;
+                                *accums += 1;
+                            }
+                        },
+                    );
+                    // in-shader integration of p_i from the payload force
+                    let f = state.params.cap(payload);
+                    let mut v = state.vel[i] + f * dt;
+                    let mut p = state.pos[i] + v * dt;
+                    boundary::apply(boundary_mode, box_l, &mut p, &mut v);
+                    out.moved.push((p, v));
+                }
+                out
             },
         );
 
-        let mut stats = TraversalStats::default();
+        // Double-buffered positions: rays read the step's inputs above,
+        // integrated outputs land in fresh buffers here.
         let mut accums = 0u64;
         let mut new_pos = state.pos.clone();
         let mut new_vel = state.vel.clone();
-        for part in parts {
-            stats.add(&part.stats);
-            accums += part.accums;
-            for (i, p, v) in part.moved {
-                new_pos[i as usize] = p;
-                new_vel[i as usize] = v;
+        for c in chunks {
+            accums += c.accums;
+            for (k, (p, v)) in c.moved.into_iter().enumerate() {
+                new_pos[c.lo + k] = p;
+                new_vel[c.lo + k] = v;
             }
         }
         state.pos = new_pos;

@@ -1,7 +1,7 @@
 //! Shared infrastructure for the three RT-core backends: BVH lifecycle
 //! management under a rebuild policy, and the parallel ray-launch loop.
 
-use crate::bvh::traverse::TraversalStats;
+use crate::bvh::traverse::{QueryScratch, TraversalStats};
 use crate::bvh::{BuildKind, Bvh};
 use crate::core::config::Boundary;
 use crate::core::vec3::Vec3;
@@ -77,7 +77,10 @@ impl BvhManager {
 /// neighbor id and the displacement `origin - p_j` (which equals the
 /// minimum-image displacement for gamma hits).
 ///
-/// Returns per-call traversal stats (caller accumulates).
+/// All per-ray state (traversal stack, gamma origins, stats) lives in the
+/// caller-owned [`QueryScratch`]: the hot loop performs no heap
+/// allocations once the scratch is warm. Batched sweeps get a per-worker
+/// scratch from [`Bvh::query_batch`]; one-off callers create their own.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 pub fn launch_rays<F: FnMut(usize, Vec3)>(
@@ -88,22 +91,24 @@ pub fn launch_rays<F: FnMut(usize, Vec3)>(
     boundary: Boundary,
     box_l: f32,
     gamma_trigger: f32,
-    gamma_buf: &mut Vec<Vec3>,
-    stats: &mut TraversalStats,
+    scratch: &mut QueryScratch,
     mut visit: F,
 ) {
     let p = pos[i];
-    bvh.query_point(p, i, pos, radius, stats, |j| {
+    bvh.query_point(p, i, pos, radius, scratch, |j| {
         visit(j, p - pos[j]);
     });
     if boundary == Boundary::Periodic {
-        crate::frnn::gamma::gamma_origins(p, gamma_trigger, box_l, gamma_buf);
-        for g_idx in 0..gamma_buf.len() {
-            let o = gamma_buf[g_idx];
-            bvh.query_point(o, i, pos, radius, stats, |j| {
+        // Detach the gamma buffer so the scratch can be reborrowed by the
+        // gamma queries (pointer swap, no allocation).
+        let mut gamma = std::mem::take(&mut scratch.gamma);
+        crate::frnn::gamma::gamma_origins(p, gamma_trigger, box_l, &mut gamma);
+        for &o in &gamma {
+            bvh.query_point(o, i, pos, radius, scratch, |j| {
                 visit(j, o - pos[j]);
             });
         }
+        scratch.gamma = gamma;
     }
 }
 
@@ -151,8 +156,7 @@ mod tests {
         let mut mgr = BvhManager::new(Box::new(FixedKPolicy::new(5)));
         let mut counts = OpCounts::default();
         mgr.prepare(&state.pos, &state.radius, &mut counts);
-        let mut gamma_buf = Vec::new();
-        let mut stats = TraversalStats::default();
+        let mut scratch = QueryScratch::new();
         for i in 0..state.n() {
             let mut found = Vec::new();
             launch_rays(
@@ -163,8 +167,7 @@ mod tests {
                 state.boundary,
                 state.box_l,
                 gamma_trigger(&state),
-                &mut gamma_buf,
-                &mut stats,
+                &mut scratch,
                 |j, _| found.push(j),
             );
             found.sort_unstable();
@@ -178,7 +181,7 @@ mod tests {
             );
             assert_eq!(found, want, "particle {i}");
         }
-        assert!(stats.rays as usize >= state.n());
+        assert!(scratch.stats.rays as usize >= state.n());
     }
 
     #[test]
@@ -191,8 +194,7 @@ mod tests {
         let mut mgr = BvhManager::new(Box::new(FixedKPolicy::new(5)));
         let mut counts = OpCounts::default();
         mgr.prepare(&state.pos, &state.radius, &mut counts);
-        let mut gamma_buf = Vec::new();
-        let mut stats = TraversalStats::default();
+        let mut scratch = QueryScratch::new();
         let mut seen = Vec::new();
         launch_rays(
             mgr.bvh(),
@@ -202,8 +204,7 @@ mod tests {
             state.boundary,
             state.box_l,
             5.0,
-            &mut gamma_buf,
-            &mut stats,
+            &mut scratch,
             |j, dx| seen.push((j, dx)),
         );
         assert_eq!(seen.len(), 1);

@@ -14,11 +14,9 @@
 
 use std::time::Instant;
 
-use crate::bvh::traverse::TraversalStats;
 use crate::frnn::rt_common::{fold_stats, gamma_trigger, launch_rays, BvhManager};
 use crate::frnn::{Backend, NeighborLists, StepCtx, StepResult, WallPhases};
 use crate::gradient::RebuildPolicy;
-use crate::parallel;
 use crate::physics::state::SimState;
 use crate::rtcore::OpCounts;
 
@@ -54,61 +52,104 @@ impl Backend for RtRef {
         let action = self.mgr.prepare(&state.pos, &state.radius, &mut counts);
         wall.bvh = t0.elapsed().as_secs_f64();
 
-        // Phase 2: ray traversal filling per-particle neighbor lists.
+        // Phase 2: batched ray traversal. Each chunk emits a flat
+        // (per-particle count, item) stream plus its cross-inserts; the CSR
+        // lists are then assembled directly with a count-then-fill two-pass
+        // — no per-particle Vec, no intermediate Vec<Vec<u32>>.
         let t1 = Instant::now();
         let bvh = self.mgr.bvh();
         let trigger = gamma_trigger(state);
-        struct ThreadOut {
-            lists: Vec<(u32, Vec<u32>)>,
-            cross: Vec<(u32, u32)>, // (dst list, inserted id)
-            stats: TraversalStats,
+        struct ChunkOut {
+            /// First particle index of the chunk.
+            lo: usize,
+            /// Per-particle hit counts, chunk-relative.
+            lens: Vec<u32>,
+            /// Flat neighbor ids in discovery order.
+            items: Vec<u32>,
+            /// (dst list, inserted id) — atomic appends on real hardware.
+            cross: Vec<(u32, u32)>,
         }
-        let parts = parallel::parallel_reduce(
+        let (chunks, stats) = bvh.query_batch(
             n,
             ctx.threads,
-            || ThreadOut { lists: Vec::new(), cross: Vec::new(), stats: TraversalStats::default() },
-            |out, i| {
-                let mut gamma_buf = Vec::new();
-                let mut list = Vec::new();
-                let r_i = state.radius[i];
-                launch_rays(
-                    bvh,
-                    i,
-                    &state.pos,
-                    &state.radius,
-                    state.boundary,
-                    state.box_l,
-                    trigger,
-                    &mut gamma_buf,
-                    &mut out.stats,
-                    |j, dx| {
-                        list.push(j as u32);
-                        // cross-insert when j's ray cannot see i
-                        let r2 = dx.norm2();
-                        if r2 >= r_i * r_i {
-                            out.cross.push((j as u32, i as u32));
-                        }
-                    },
-                );
-                out.lists.push((i as u32, list));
+            || (),
+            |_, scratch, range| {
+                let mut out = ChunkOut {
+                    lo: range.start,
+                    lens: Vec::with_capacity(range.len()),
+                    items: Vec::new(),
+                    cross: Vec::new(),
+                };
+                for i in range {
+                    let before = out.items.len();
+                    let r_i = state.radius[i];
+                    launch_rays(
+                        bvh,
+                        i,
+                        &state.pos,
+                        &state.radius,
+                        state.boundary,
+                        state.box_l,
+                        trigger,
+                        scratch,
+                        |j, dx| {
+                            out.items.push(j as u32);
+                            // cross-insert when j's ray cannot see i
+                            if dx.norm2() >= r_i * r_i {
+                                out.cross.push((j as u32, i as u32));
+                            }
+                        },
+                    );
+                    out.lens.push((out.items.len() - before) as u32);
+                }
+                out
             },
         );
+        fold_stats(&mut counts, &stats);
 
-        let mut lists: Vec<Vec<u32>> = vec![Vec::new(); n];
-        let mut stats = TraversalStats::default();
+        // Pass 1: per-particle totals (ray hits + incoming cross-inserts).
+        let mut lens = vec![0u32; n];
         let mut cross_inserts = 0u64;
-        for part in parts {
-            stats.add(&part.stats);
-            for (i, l) in part.lists {
-                lists[i as usize] = l;
+        for c in &chunks {
+            for (k, &len) in c.lens.iter().enumerate() {
+                lens[c.lo + k] = len;
             }
-            for (dst, v) in part.cross {
-                lists[dst as usize].push(v);
+            for &(dst, _) in &c.cross {
+                lens[dst as usize] += 1;
                 cross_inserts += 1;
             }
         }
-        fold_stats(&mut counts, &stats);
-        let nl = NeighborLists::from_vecs(&lists);
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut total = 0u32;
+        offsets.push(0u32);
+        for &len in &lens {
+            total += len;
+            offsets.push(total);
+        }
+        // Pass 2: scatter items into place. Chunks are in chunk order, so
+        // the fill (and thus the physics downstream) is deterministic no
+        // matter which worker produced which chunk.
+        let mut cursor: Vec<u32> = offsets[..n].to_vec();
+        let mut items = vec![0u32; total as usize];
+        for c in &chunks {
+            let mut consumed = 0usize;
+            for (k, &len) in c.lens.iter().enumerate() {
+                let i = c.lo + k;
+                let dst = cursor[i] as usize;
+                items[dst..dst + len as usize]
+                    .copy_from_slice(&c.items[consumed..consumed + len as usize]);
+                cursor[i] += len;
+                consumed += len as usize;
+            }
+        }
+        for c in &chunks {
+            for &(dst, src) in &c.cross {
+                let d = dst as usize;
+                items[cursor[d] as usize] = src;
+                cursor[d] += 1;
+            }
+        }
+        let nl = NeighborLists { offsets, items };
         counts.nbr_list_writes += nl.total_entries() as u64;
         counts.atomic_adds += cross_inserts; // atomic appends on real hardware
         self.k_max_seen = self.k_max_seen.max(nl.k_max());

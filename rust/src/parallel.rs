@@ -78,23 +78,94 @@ where
 
 /// Map `0..n` in parallel into a pre-allocated output vector. `f` must be
 /// pure per-index.
+///
+/// Writes go straight into the vector's spare capacity (`MaybeUninit`), so
+/// there is no `T: Default + Clone` bound and no redundant zero-init pass
+/// over large buffers (force arrays, per-primitive AABBs).
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
 where
-    T: Send + Default + Clone,
+    T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let mut out = vec![T::default(); n];
+    let mut out: Vec<T> = Vec::with_capacity(n);
     {
-        let out_ptr = SendPtr(out.as_mut_ptr());
+        let out_ptr = SendPtr(out.spare_capacity_mut().as_mut_ptr() as *mut T);
         parallel_for_chunks(n, threads, |_, range| {
             let p = out_ptr; // copy the Send wrapper into the closure
             for i in range {
-                // SAFETY: chunks are disjoint; each index written once.
-                unsafe { *p.0.add(i) = f(i) };
+                // SAFETY: chunks are disjoint; each index written once, so
+                // every slot in 0..n is initialized exactly once.
+                unsafe { p.0.add(i).write(f(i)) };
             }
         });
     }
+    // SAFETY: parallel_for_chunks covered 0..n, initializing every element.
+    unsafe { out.set_len(n) };
     out
+}
+
+/// Work-stealing chunked map: workers atomically grab `block`-sized chunks
+/// of `0..n`; each worker owns a thread-local state built by `init` (scratch
+/// buffers, accumulators) that lives for the worker's whole run. Chunk
+/// outputs are returned **in chunk order** — independent of which worker
+/// processed which chunk — so callers that merge them sequentially get
+/// bitwise-deterministic results under dynamic scheduling. The per-worker
+/// states are returned in thread order (for merging order-insensitive
+/// accumulators such as counters).
+pub fn parallel_chunk_map<A, O, I, F>(
+    n: usize,
+    threads: usize,
+    block: usize,
+    init: I,
+    body: F,
+) -> (Vec<O>, Vec<A>)
+where
+    A: Send,
+    O: Send,
+    I: Fn() -> A + Sync,
+    F: Fn(&mut A, std::ops::Range<usize>) -> O + Sync,
+{
+    let block = block.max(1);
+    let n_chunks = n.div_ceil(block);
+    let threads = threads.max(1).min(n_chunks.max(1));
+    if threads == 1 || n_chunks <= 1 {
+        let mut state = init();
+        let outs = (0..n_chunks)
+            .map(|c| body(&mut state, c * block..((c + 1) * block).min(n)))
+            .collect();
+        return (outs, vec![state]);
+    }
+    let mut outs: Vec<Option<O>> = (0..n_chunks).map(|_| None).collect();
+    let out_ptr = SendPtr(outs.as_mut_ptr());
+    let cursor = AtomicUsize::new(0);
+    let states = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let init = &init;
+            let body = &body;
+            let cursor = &cursor;
+            handles.push(s.spawn(move || {
+                let mut state = init();
+                loop {
+                    let c = cursor.fetch_add(1, Ordering::Relaxed);
+                    if c >= n_chunks {
+                        break;
+                    }
+                    let lo = c * block;
+                    let hi = (lo + block).min(n);
+                    let o = body(&mut state, lo..hi);
+                    // SAFETY: chunk indices are claimed exactly once, so
+                    // each slot is written by exactly one worker; the scope
+                    // join provides the happens-before for the final read.
+                    unsafe { *out_ptr.0.add(c) = Some(o) };
+                }
+                state
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+    let outs = outs.into_iter().map(|o| o.expect("chunk not produced")).collect();
+    (outs, states)
 }
 
 /// Chunked parallel reduction: each worker builds a private accumulator
@@ -140,7 +211,7 @@ where
 }
 
 /// Pointer wrapper asserting Send for disjoint-range writes.
-struct SendPtr<T>(*mut T);
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 impl<T> Clone for SendPtr<T> {
     fn clone(&self) -> Self {
         *self
@@ -204,5 +275,46 @@ mod tests {
         parallel_for_chunks(0, 4, |_, r| assert!(r.is_empty()));
         let v = parallel_map(5, 1, |i| i + 1);
         assert_eq!(v, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn map_supports_non_default_types() {
+        // String has Default but &'static str references inside a struct
+        // without Default exercise the MaybeUninit path.
+        struct NoDefault(usize);
+        let v = parallel_map(100, 4, NoDefault);
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(x.0, i);
+        }
+    }
+
+    #[test]
+    fn chunk_map_outputs_in_chunk_order() {
+        // chunk c covers [c*7, min((c+1)*7, n)) and must land in slot c
+        let (outs, states) = parallel_chunk_map(
+            100,
+            5,
+            7,
+            || 0usize,
+            |count, range| {
+                *count += range.len();
+                range.start
+            },
+        );
+        assert_eq!(outs.len(), 100usize.div_ceil(7));
+        for (c, &start) in outs.iter().enumerate() {
+            assert_eq!(start, c * 7);
+        }
+        let total: usize = states.iter().sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn chunk_map_single_thread_and_tiny() {
+        let (outs, states) = parallel_chunk_map(3, 1, 16, || (), |_, r| r.len());
+        assert_eq!(outs, vec![3]);
+        assert_eq!(states.len(), 1);
+        let (outs, _) = parallel_chunk_map(0, 4, 16, || (), |_, r| r.len());
+        assert!(outs.is_empty());
     }
 }

@@ -1,208 +1,274 @@
-//! [`XlaKernels`] — the [`PhysicsKernels`] implementation backed by the
-//! PJRT executables. This is the paper-faithful configuration: neighbor
-//! discovery happens in the (simulated) RT cores, physics in separate
-//! AOT-compiled compute kernels, Python never in the loop.
+//! [`XlaKernels`] — the [`crate::frnn::PhysicsKernels`] implementation
+//! backed by the PJRT executables. This is the paper-faithful
+//! configuration: neighbor discovery happens in the (simulated) RT cores,
+//! physics in separate AOT-compiled compute kernels, Python never in the
+//! loop.
+//!
+//! Gated behind the `xla` cargo feature (see [`crate::runtime`]); the
+//! stub's `load_default` returns `Err`, which every caller already treats
+//! as "artifacts unavailable — use the Rust kernels".
 
-use anyhow::Result;
+#[cfg(feature = "xla")]
+mod pjrt {
+    use anyhow::Result;
 
-use super::buckets::segment_plan;
-use super::{literal_f32, XlaRuntime, CHUNK, WALL_BOX};
-use crate::core::config::Boundary;
-use crate::core::vec3::Vec3;
-use crate::frnn::{NeighborLists, PhysicsKernels};
-use crate::physics::state::SimState;
-use crate::rtcore::OpCounts;
+    use crate::core::config::Boundary;
+    use crate::core::vec3::Vec3;
+    use crate::frnn::{NeighborLists, PhysicsKernels};
+    use crate::physics::state::SimState;
+    use crate::rtcore::OpCounts;
+    use crate::runtime::buckets::segment_plan;
+    use crate::runtime::{literal_f32, XlaRuntime, CHUNK, WALL_BOX};
 
-pub struct XlaKernels {
-    pub rt: XlaRuntime,
-}
-
-// SAFETY: the PJRT client wrappers hold raw pointers without Send/Sync
-// markers, but every call site in this crate invokes the kernels from the
-// single coordinator thread (backends parallelize traversal, never kernel
-// execution). The PJRT CPU client itself is internally synchronized.
-unsafe impl Send for XlaKernels {}
-unsafe impl Sync for XlaKernels {}
-
-impl XlaKernels {
-    pub fn load_default() -> Result<Self> {
-        Ok(XlaKernels { rt: XlaRuntime::load(&XlaRuntime::default_dir())? })
+    pub struct XlaKernels {
+        pub rt: XlaRuntime,
     }
 
-    /// Effective box length for the min-image term: the sentinel disables
-    /// wrapping under wall BC.
-    fn model_box(state: &SimState) -> f32 {
-        match state.boundary {
-            Boundary::Periodic => state.box_l,
-            Boundary::Wall => WALL_BOX,
+    // SAFETY: the PJRT client wrappers hold raw pointers without Send/Sync
+    // markers, but every call site in this crate invokes the kernels from the
+    // single coordinator thread (backends parallelize traversal, never kernel
+    // execution). The PJRT CPU client itself is internally synchronized.
+    unsafe impl Send for XlaKernels {}
+    unsafe impl Sync for XlaKernels {}
+
+    impl XlaKernels {
+        pub fn load_default() -> Result<Self> {
+            Ok(XlaKernels { rt: XlaRuntime::load(&XlaRuntime::default_dir())? })
         }
-    }
 
-    /// Execute the force kernel for particles `[lo, lo+CHUNK)` (tail
-    /// zero-padded) over one K-segment of their neighbor lists.
-    #[allow(clippy::too_many_arguments)]
-    fn run_force_chunk(
-        &self,
-        state: &SimState,
-        lists: &NeighborLists,
-        lo: usize,
-        seg_start: usize,
-        k_bucket: usize,
-        forces: &mut [Vec3],
-        counts: &mut OpCounts,
-    ) -> Result<()> {
-        let n = state.n();
-        let hi = (lo + CHUNK).min(n);
-        let c = CHUNK;
-
-        let mut pos = vec![0f32; c * 3];
-        let mut rad = vec![1f32; c];
-        let mut nbr_pos = vec![0f32; c * k_bucket * 3];
-        let mut nbr_rad = vec![1f32; c * k_bucket];
-        let mut mask = vec![0f32; c * k_bucket];
-
-        let mut real_pairs = 0u64;
-        for i in lo..hi {
-            let row = i - lo;
-            let p = state.pos[i];
-            pos[row * 3] = p.x;
-            pos[row * 3 + 1] = p.y;
-            pos[row * 3 + 2] = p.z;
-            rad[row] = state.radius[i];
-            let nbrs = lists.neighbors(i);
-            let seg =
-                &nbrs[seg_start.min(nbrs.len())..(seg_start + k_bucket).min(nbrs.len())];
-            for (slot, &j) in seg.iter().enumerate() {
-                let j = j as usize;
-                let q = state.pos[j];
-                let base = (row * k_bucket + slot) * 3;
-                nbr_pos[base] = q.x;
-                nbr_pos[base + 1] = q.y;
-                nbr_pos[base + 2] = q.z;
-                nbr_rad[row * k_bucket + slot] = state.radius[j];
-                mask[row * k_bucket + slot] = 1.0;
-                real_pairs += 1;
+        /// Effective box length for the min-image term: the sentinel disables
+        /// wrapping under wall BC.
+        fn model_box(state: &SimState) -> f32 {
+            match state.boundary {
+                Boundary::Periodic => state.box_l,
+                Boundary::Wall => WALL_BOX,
             }
         }
-        if real_pairs == 0 {
-            return Ok(());
-        }
 
-        let scal = [
-            Self::model_box(state),
-            state.params.epsilon,
-            state.params.sigma_factor,
-            state.params.f_max,
-        ];
-        let exe = self
-            .rt
-            .lj_forces
-            .get(&k_bucket)
-            .ok_or_else(|| anyhow::anyhow!("no artifact for K={k_bucket}"))?;
-        let out = exe.run(&[
-            literal_f32(&pos, &[c, 3])?,
-            literal_f32(&nbr_pos, &[c, k_bucket, 3])?,
-            literal_f32(&rad, &[c])?,
-            literal_f32(&nbr_rad, &[c, k_bucket])?,
-            literal_f32(&mask, &[c, k_bucket])?,
-            literal_f32(&scal, &[4])?,
-        ])?;
-        let f = out[0].to_vec::<f32>()?;
-        for i in lo..hi {
-            let row = i - lo;
-            forces[i] += Vec3::new(f[row * 3], f[row * 3 + 1], f[row * 3 + 2]);
-        }
-        // force_kernel_pairs is charged by the caller on the fixed-slot
-        // layout (see rt_ref.rs); here we only count launches.
-        let _ = real_pairs;
-        counts.kernel_launches += 1;
-        Ok(())
-    }
-}
-
-impl PhysicsKernels for XlaKernels {
-    fn lj_forces(
-        &self,
-        state: &SimState,
-        lists: &NeighborLists,
-        counts: &mut OpCounts,
-    ) -> Result<Vec<Vec3>> {
-        let n = state.n();
-        let mut forces = vec![Vec3::ZERO; n];
-        let widest = *super::K_BUCKETS.last().unwrap();
-        let mut lo = 0;
-        while lo < n {
+        /// Execute the force kernel for particles `[lo, lo+CHUNK)` (tail
+        /// zero-padded) over one K-segment of their neighbor lists.
+        #[allow(clippy::too_many_arguments)]
+        fn run_force_chunk(
+            &self,
+            state: &SimState,
+            lists: &NeighborLists,
+            lo: usize,
+            seg_start: usize,
+            k_bucket: usize,
+            forces: &mut [Vec3],
+            counts: &mut OpCounts,
+        ) -> Result<()> {
+            let n = state.n();
             let hi = (lo + CHUNK).min(n);
-            // widest list in this chunk decides the segmentation
-            let k_max =
-                (lo..hi).map(|i| lists.neighbors(i).len()).max().unwrap_or(0);
-            let (full_segs, tail) = segment_plan(k_max);
-            for s in 0..full_segs {
-                self.run_force_chunk(state, lists, lo, s * widest, widest, &mut forces, counts)?;
-            }
-            if let Some(tb) = tail {
-                self.run_force_chunk(
-                    state,
-                    lists,
-                    lo,
-                    full_segs * widest,
-                    tb,
-                    &mut forces,
-                    counts,
-                )?;
-            }
-            lo = hi;
-        }
-        Ok(forces)
-    }
+            let c = CHUNK;
 
-    fn integrate(&self, state: &mut SimState, counts: &mut OpCounts) -> Result<()> {
-        let n = state.n();
-        let c = CHUNK;
-        let mut new_pos = vec![[0f32; 3]; n];
-        let mut new_vel = vec![[0f32; 3]; n];
-        let scal = [state.dt, state.params.f_max];
-        let mut lo = 0;
-        while lo < n {
-            let hi = (lo + c).min(n);
             let mut pos = vec![0f32; c * 3];
-            let mut vel = vec![0f32; c * 3];
-            let mut force = vec![0f32; c * 3];
+            let mut rad = vec![1f32; c];
+            let mut nbr_pos = vec![0f32; c * k_bucket * 3];
+            let mut nbr_rad = vec![1f32; c * k_bucket];
+            let mut mask = vec![0f32; c * k_bucket];
+
+            let mut real_pairs = 0u64;
             for i in lo..hi {
                 let row = i - lo;
-                for (dst, v) in [
-                    (&mut pos, state.pos[i]),
-                    (&mut vel, state.vel[i]),
-                    (&mut force, state.force[i]),
-                ] {
-                    dst[row * 3] = v.x;
-                    dst[row * 3 + 1] = v.y;
-                    dst[row * 3 + 2] = v.z;
+                let p = state.pos[i];
+                pos[row * 3] = p.x;
+                pos[row * 3 + 1] = p.y;
+                pos[row * 3 + 2] = p.z;
+                rad[row] = state.radius[i];
+                let nbrs = lists.neighbors(i);
+                let seg =
+                    &nbrs[seg_start.min(nbrs.len())..(seg_start + k_bucket).min(nbrs.len())];
+                for (slot, &j) in seg.iter().enumerate() {
+                    let j = j as usize;
+                    let q = state.pos[j];
+                    let base = (row * k_bucket + slot) * 3;
+                    nbr_pos[base] = q.x;
+                    nbr_pos[base + 1] = q.y;
+                    nbr_pos[base + 2] = q.z;
+                    nbr_rad[row * k_bucket + slot] = state.radius[j];
+                    mask[row * k_bucket + slot] = 1.0;
+                    real_pairs += 1;
                 }
             }
-            let out = self.rt.integrate.run(&[
+            if real_pairs == 0 {
+                return Ok(());
+            }
+
+            let scal = [
+                Self::model_box(state),
+                state.params.epsilon,
+                state.params.sigma_factor,
+                state.params.f_max,
+            ];
+            let exe = self
+                .rt
+                .lj_forces
+                .get(&k_bucket)
+                .ok_or_else(|| anyhow::anyhow!("no artifact for K={k_bucket}"))?;
+            let out = exe.run(&[
                 literal_f32(&pos, &[c, 3])?,
-                literal_f32(&vel, &[c, 3])?,
-                literal_f32(&force, &[c, 3])?,
-                literal_f32(&scal, &[2])?,
+                literal_f32(&nbr_pos, &[c, k_bucket, 3])?,
+                literal_f32(&rad, &[c])?,
+                literal_f32(&nbr_rad, &[c, k_bucket])?,
+                literal_f32(&mask, &[c, k_bucket])?,
+                literal_f32(&scal, &[4])?,
             ])?;
-            let np = out[0].to_vec::<f32>()?;
-            let nv = out[1].to_vec::<f32>()?;
+            let f = out[0].to_vec::<f32>()?;
             for i in lo..hi {
                 let row = i - lo;
-                new_pos[i] = [np[row * 3], np[row * 3 + 1], np[row * 3 + 2]];
-                new_vel[i] = [nv[row * 3], nv[row * 3 + 1], nv[row * 3 + 2]];
+                forces[i] += Vec3::new(f[row * 3], f[row * 3 + 1], f[row * 3 + 2]);
             }
+            // force_kernel_pairs is charged by the caller on the fixed-slot
+            // layout (see rt_ref.rs); here we only count launches.
+            let _ = real_pairs;
             counts.kernel_launches += 1;
-            lo = hi;
+            Ok(())
         }
-        // boundary handling stays on the coordinator (DESIGN.md §Three-layer)
-        crate::physics::integrator::apply_integrated(state, &new_pos, &new_vel);
-        counts.integrate_particles += n as u64;
-        Ok(())
     }
 
-    fn name(&self) -> &'static str {
-        "xla"
+    impl PhysicsKernels for XlaKernels {
+        fn lj_forces(
+            &self,
+            state: &SimState,
+            lists: &NeighborLists,
+            counts: &mut OpCounts,
+        ) -> Result<Vec<Vec3>> {
+            let n = state.n();
+            let mut forces = vec![Vec3::ZERO; n];
+            let widest = *crate::runtime::K_BUCKETS.last().unwrap();
+            let mut lo = 0;
+            while lo < n {
+                let hi = (lo + CHUNK).min(n);
+                // widest list in this chunk decides the segmentation
+                let k_max =
+                    (lo..hi).map(|i| lists.neighbors(i).len()).max().unwrap_or(0);
+                let (full_segs, tail) = segment_plan(k_max);
+                for s in 0..full_segs {
+                    self.run_force_chunk(
+                        state,
+                        lists,
+                        lo,
+                        s * widest,
+                        widest,
+                        &mut forces,
+                        counts,
+                    )?;
+                }
+                if let Some(tb) = tail {
+                    self.run_force_chunk(
+                        state,
+                        lists,
+                        lo,
+                        full_segs * widest,
+                        tb,
+                        &mut forces,
+                        counts,
+                    )?;
+                }
+                lo = hi;
+            }
+            Ok(forces)
+        }
+
+        fn integrate(&self, state: &mut SimState, counts: &mut OpCounts) -> Result<()> {
+            let n = state.n();
+            let c = CHUNK;
+            let mut new_pos = vec![[0f32; 3]; n];
+            let mut new_vel = vec![[0f32; 3]; n];
+            let scal = [state.dt, state.params.f_max];
+            let mut lo = 0;
+            while lo < n {
+                let hi = (lo + c).min(n);
+                let mut pos = vec![0f32; c * 3];
+                let mut vel = vec![0f32; c * 3];
+                let mut force = vec![0f32; c * 3];
+                for i in lo..hi {
+                    let row = i - lo;
+                    for (dst, v) in [
+                        (&mut pos, state.pos[i]),
+                        (&mut vel, state.vel[i]),
+                        (&mut force, state.force[i]),
+                    ] {
+                        dst[row * 3] = v.x;
+                        dst[row * 3 + 1] = v.y;
+                        dst[row * 3 + 2] = v.z;
+                    }
+                }
+                let out = self.rt.integrate.run(&[
+                    literal_f32(&pos, &[c, 3])?,
+                    literal_f32(&vel, &[c, 3])?,
+                    literal_f32(&force, &[c, 3])?,
+                    literal_f32(&scal, &[2])?,
+                ])?;
+                let np = out[0].to_vec::<f32>()?;
+                let nv = out[1].to_vec::<f32>()?;
+                for i in lo..hi {
+                    let row = i - lo;
+                    new_pos[i] = [np[row * 3], np[row * 3 + 1], np[row * 3 + 2]];
+                    new_vel[i] = [nv[row * 3], nv[row * 3 + 1], nv[row * 3 + 2]];
+                }
+                counts.kernel_launches += 1;
+                lo = hi;
+            }
+            // boundary handling stays on the coordinator (DESIGN.md §Three-layer)
+            crate::physics::integrator::apply_integrated(state, &new_pos, &new_vel);
+            counts.integrate_particles += n as u64;
+            Ok(())
+        }
+
+        fn name(&self) -> &'static str {
+            "xla"
+        }
     }
 }
+
+#[cfg(feature = "xla")]
+pub use pjrt::XlaKernels;
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use anyhow::Result;
+
+    use crate::core::vec3::Vec3;
+    use crate::frnn::{NeighborLists, PhysicsKernels};
+    use crate::physics::state::SimState;
+    use crate::rtcore::OpCounts;
+
+    /// Feature-off stand-in: `load_default` always errors, so the kernel
+    /// methods below are unreachable in practice (there is no other way to
+    /// construct the type).
+    pub struct XlaKernels {
+        _private: (),
+    }
+
+    impl XlaKernels {
+        pub fn load_default() -> Result<Self> {
+            Err(anyhow::anyhow!(
+                "XLA kernels unavailable: crate built without the `xla` cargo feature"
+            ))
+        }
+    }
+
+    impl PhysicsKernels for XlaKernels {
+        fn lj_forces(
+            &self,
+            _state: &SimState,
+            _lists: &NeighborLists,
+            _counts: &mut OpCounts,
+        ) -> Result<Vec<Vec3>> {
+            Err(anyhow::anyhow!("xla feature disabled"))
+        }
+
+        fn integrate(&self, _state: &mut SimState, _counts: &mut OpCounts) -> Result<()> {
+            Err(anyhow::anyhow!("xla feature disabled"))
+        }
+
+        fn name(&self) -> &'static str {
+            "xla-stub"
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaKernels;

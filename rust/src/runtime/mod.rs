@@ -6,14 +6,17 @@
 //! (once per shape bucket, at startup) → `execute` per step. See
 //! /opt/xla-example/load_hlo/ for the reference wiring and
 //! python/compile/aot.py for why the interchange format is HLO *text*.
+//!
+//! The PJRT bindings (`xla` crate) are not part of the offline vendor set,
+//! so the whole runtime is gated behind the `xla` cargo feature. Without
+//! it this module compiles a stub whose loaders return `Err`, and every
+//! caller (CLI, benches, integration tests) falls back to the pure-Rust
+//! kernels exactly as it does when the artifacts are missing.
 
 pub mod buckets;
 pub mod kernels;
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-
-use anyhow::{Context, Result};
+use std::path::PathBuf;
 
 /// Static shapes shared with `python/compile/shapes.py` — change together.
 pub const CHUNK: usize = 4096;
@@ -21,117 +24,188 @@ pub const K_BUCKETS: [usize; 3] = [16, 64, 256];
 /// Box-length sentinel disabling minimum-image wrap (wall BC).
 pub const WALL_BOX: f32 = 1e30;
 
-/// A loaded, compiled PJRT executable with its input layout.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
-
-impl Executable {
-    /// Execute with literal inputs; returns the decomposed output tuple.
-    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let result = self
-            .exe
-            .execute::<xla::Literal>(inputs)
-            .with_context(|| format!("executing {}", self.name))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .with_context(|| format!("fetching result of {}", self.name))?;
-        // aot.py lowers with return_tuple=True
-        Ok(out.to_tuple()?)
-    }
-}
-
-/// The compiled artifact set.
-pub struct XlaRuntime {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    /// K-bucket → force executable.
-    pub lj_forces: HashMap<usize, Executable>,
-    pub integrate: Executable,
-    /// Pure-jnp variant of the K=64 bucket (cross-check tests).
-    pub lj_forces_ref: Option<Executable>,
-    pub artifact_dir: PathBuf,
-}
-
-fn load_one(client: &xla::PjRtClient, dir: &Path, name: &str) -> Result<Executable> {
-    let path = dir.join(name);
-    let proto = xla::HloModuleProto::from_text_file(&path)
-        .with_context(|| format!("parsing {}", path.display()))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    let exe = client.compile(&comp).with_context(|| format!("compiling {name}"))?;
-    Ok(Executable { exe, name: name.to_string() })
-}
-
-impl XlaRuntime {
-    /// Load and compile every artifact in `dir` (built by `make artifacts`).
-    pub fn load(dir: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let mut lj_forces = HashMap::new();
-        for k in K_BUCKETS {
-            let name = format!("lj_forces_c{CHUNK}_k{k}.hlo.txt");
-            lj_forces.insert(k, load_one(&client, dir, &name)?);
+/// Default artifact directory: `$ORCS_ARTIFACTS` or `./artifacts`,
+/// falling back to the crate-root copy for tests run elsewhere.
+fn default_artifact_dir() -> PathBuf {
+    std::env::var("ORCS_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+        let local = PathBuf::from("artifacts");
+        if local.join(format!("integrate_c{CHUNK}.hlo.txt")).exists() {
+            local
+        } else {
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
         }
-        let integrate = load_one(&client, dir, &format!("integrate_c{CHUNK}.hlo.txt"))?;
-        let lj_forces_ref =
-            load_one(&client, dir, &format!("lj_forces_ref_c{CHUNK}_k64.hlo.txt")).ok();
-        Ok(XlaRuntime {
-            client,
-            lj_forces,
-            integrate,
-            lj_forces_ref,
-            artifact_dir: dir.to_path_buf(),
-        })
+    })
+}
+
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{Context, Result};
+
+    use super::{default_artifact_dir, CHUNK, K_BUCKETS};
+
+    /// A loaded, compiled PJRT executable with its input layout.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
     }
 
-    /// Default artifact directory: `$ORCS_ARTIFACTS` or `./artifacts`,
-    /// falling back to the crate-root copy for tests run elsewhere.
-    pub fn default_dir() -> PathBuf {
-        std::env::var("ORCS_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
-            let local = PathBuf::from("artifacts");
-            if local.join(format!("integrate_c{CHUNK}.hlo.txt")).exists() {
-                local
-            } else {
-                PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    impl Executable {
+        /// Execute with literal inputs; returns the decomposed output tuple.
+        pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+            let result = self
+                .exe
+                .execute::<xla::Literal>(inputs)
+                .with_context(|| format!("executing {}", self.name))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .with_context(|| format!("fetching result of {}", self.name))?;
+            // aot.py lowers with return_tuple=True
+            Ok(out.to_tuple()?)
+        }
+    }
+
+    /// The compiled artifact set.
+    pub struct XlaRuntime {
+        #[allow(dead_code)]
+        client: xla::PjRtClient,
+        /// K-bucket → force executable.
+        pub lj_forces: HashMap<usize, Executable>,
+        pub integrate: Executable,
+        /// Pure-jnp variant of the K=64 bucket (cross-check tests).
+        pub lj_forces_ref: Option<Executable>,
+        pub artifact_dir: PathBuf,
+    }
+
+    fn load_one(client: &xla::PjRtClient, dir: &Path, name: &str) -> Result<Executable> {
+        let path = dir.join(name);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        Ok(Executable { exe, name: name.to_string() })
+    }
+
+    impl XlaRuntime {
+        /// Load and compile every artifact in `dir` (built by `make artifacts`).
+        pub fn load(dir: &Path) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let mut lj_forces = HashMap::new();
+            for k in K_BUCKETS {
+                let name = format!("lj_forces_c{CHUNK}_k{k}.hlo.txt");
+                lj_forces.insert(k, load_one(&client, dir, &name)?);
             }
-        })
+            let integrate = load_one(&client, dir, &format!("integrate_c{CHUNK}.hlo.txt"))?;
+            let lj_forces_ref =
+                load_one(&client, dir, &format!("lj_forces_ref_c{CHUNK}_k64.hlo.txt")).ok();
+            Ok(XlaRuntime {
+                client,
+                lj_forces,
+                integrate,
+                lj_forces_ref,
+                artifact_dir: dir.to_path_buf(),
+            })
+        }
+
+        /// See [`super::default_artifact_dir`].
+        pub fn default_dir() -> PathBuf {
+            default_artifact_dir()
+        }
+    }
+
+    /// f32 slice → PJRT literal of the given dims.
+    pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        let expected: usize = dims.iter().product();
+        anyhow::ensure!(data.len() == expected, "literal size {} != {:?}", data.len(), dims);
+        let bytes =
+            unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            dims,
+            bytes,
+        )?)
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn literal_roundtrip() {
+            let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+            let lit = literal_f32(&data, &[2, 3]).unwrap();
+            let back = lit.to_vec::<f32>().unwrap();
+            assert_eq!(back, data);
+        }
+
+        #[test]
+        fn literal_size_mismatch_rejected() {
+            assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
+        }
     }
 }
 
-/// f32 slice → PJRT literal of the given dims.
-pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
-    let expected: usize = dims.iter().product();
-    anyhow::ensure!(data.len() == expected, "literal size {} != {:?}", data.len(), dims);
-    let bytes =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32,
-        dims,
-        bytes,
-    )?)
+#[cfg(feature = "xla")]
+pub use pjrt::{literal_f32, Executable, XlaRuntime};
+
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    use anyhow::{bail, Result};
+
+    /// Shape-compatible stand-in so callers (e.g. `orcs
+    /// inspect-artifacts`) compile without the `xla` feature; never
+    /// constructed because [`XlaRuntime::load`] always errors.
+    pub struct Executable {
+        pub name: String,
+    }
+
+    /// Stub runtime: [`XlaRuntime::load`] reports the missing feature.
+    pub struct XlaRuntime {
+        pub lj_forces: HashMap<usize, Executable>,
+        pub integrate: Executable,
+        pub lj_forces_ref: Option<Executable>,
+        pub artifact_dir: PathBuf,
+    }
+
+    impl XlaRuntime {
+        pub fn load(dir: &Path) -> Result<Self> {
+            bail!(
+                "PJRT runtime unavailable: built without the `xla` cargo feature \
+                 (the offline vendor set has no PJRT bindings); artifact dir was {}",
+                dir.display()
+            )
+        }
+
+        /// See [`super::default_artifact_dir`].
+        pub fn default_dir() -> PathBuf {
+            super::default_artifact_dir()
+        }
+    }
 }
+
+#[cfg(not(feature = "xla"))]
+pub use stub::{Executable, XlaRuntime};
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn literal_roundtrip() {
-        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
-        let lit = literal_f32(&data, &[2, 3]).unwrap();
-        let back = lit.to_vec::<f32>().unwrap();
-        assert_eq!(back, data);
-    }
-
-    #[test]
-    fn literal_size_mismatch_rejected() {
-        assert!(literal_f32(&[1.0, 2.0], &[3]).is_err());
-    }
-
-    #[test]
     fn constants_mirror_python() {
         // guard against drift with python/compile/shapes.py
         assert_eq!(CHUNK, 4096);
         assert_eq!(K_BUCKETS, [16, 64, 256]);
+    }
+
+    #[cfg(not(feature = "xla"))]
+    #[test]
+    fn stub_runtime_reports_missing_feature() {
+        let err = XlaRuntime::load(&default_artifact_dir()).unwrap_err();
+        assert!(err.to_string().contains("xla"), "{err}");
     }
 }

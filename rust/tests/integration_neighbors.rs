@@ -90,8 +90,7 @@ fn periodic_neighbors_match_wrapped_brute_force() {
     ));
     let mut counts = orcs::rtcore::OpCounts::default();
     mgr.prepare(&state.pos, &state.radius, &mut counts);
-    let mut gamma_buf = Vec::new();
-    let mut stats = orcs::bvh::traverse::TraversalStats::default();
+    let mut scratch = orcs::bvh::traverse::QueryScratch::new();
     for i in 0..state.n() {
         let mut found = Vec::new();
         orcs::frnn::rt_common::launch_rays(
@@ -102,8 +101,7 @@ fn periodic_neighbors_match_wrapped_brute_force() {
             state.boundary,
             state.box_l,
             state.r_max,
-            &mut gamma_buf,
-            &mut stats,
+            &mut scratch,
             |j, _| found.push(j),
         );
         found.sort_unstable();

@@ -4,7 +4,7 @@
 //! force symmetry, gamma-ray minimality, bucket-plan coverage, and the
 //! gradient cost model's optimality.
 
-use orcs::bvh::traverse::TraversalStats;
+use orcs::bvh::traverse::QueryScratch;
 use orcs::bvh::{BuildKind, Bvh};
 use orcs::core::config::Boundary;
 use orcs::core::rng::Rng;
@@ -47,9 +47,9 @@ fn prop_bvh_queries_equal_brute_force_after_any_refit_sequence() {
             bvh.refit(&pos, &radius);
         }
         bvh.check_invariants(&pos, &radius).map_err(|e| e.to_string())?;
-        let mut stats = TraversalStats::default();
+        let mut scratch = QueryScratch::new();
         for i in 0..n {
-            let mut got = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut stats);
+            let mut got = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut scratch);
             got.sort_unstable();
             let want = brute::detection_neighbors(i, &pos, &radius, Boundary::Wall, 80.0);
             if got != want {

@@ -1,0 +1,181 @@
+//! Property tests for the batched traversal engine: `Bvh::query_batch`
+//! (with gamma rays under periodic BC) must return **bit-identical**
+//! neighbor streams and traversal stats to the per-point `query_point` /
+//! `launch_rays` path — across all three `BuildKind`s, after arbitrary
+//! refit sequences, and for any worker count.
+
+use orcs::bvh::traverse::QueryScratch;
+use orcs::bvh::{BuildKind, Bvh};
+use orcs::core::config::Boundary;
+use orcs::core::rng::Rng;
+use orcs::core::vec3::Vec3;
+use orcs::frnn::rt_common::launch_rays;
+use orcs::testutil::prop_check;
+
+fn random_scene(rng: &mut Rng, n: usize, box_l: f32, r_max: f32) -> (Vec<Vec3>, Vec<f32>) {
+    let pos = (0..n)
+        .map(|_| {
+            Vec3::new(
+                rng.range_f32(0.0, box_l),
+                rng.range_f32(0.0, box_l),
+                rng.range_f32(0.0, box_l),
+            )
+        })
+        .collect();
+    let radius = (0..n).map(|_| rng.range_f32(0.3, r_max)).collect();
+    (pos, radius)
+}
+
+fn build_kind(rng: &mut Rng) -> BuildKind {
+    match rng.below(3) {
+        0 => BuildKind::Median,
+        1 => BuildKind::BinnedSah,
+        _ => BuildKind::Lbvh,
+    }
+}
+
+/// Per-particle `(neighbor, displacement)` streams via the per-point path.
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
+fn per_point_lists(
+    bvh: &Bvh,
+    pos: &[Vec3],
+    radius: &[f32],
+    boundary: Boundary,
+    box_l: f32,
+    trigger: f32,
+) -> (Vec<Vec<(u32, Vec3)>>, orcs::bvh::traverse::TraversalStats) {
+    let mut scratch = QueryScratch::new();
+    let lists = (0..pos.len())
+        .map(|i| {
+            let mut list = Vec::new();
+            launch_rays(bvh, i, pos, radius, boundary, box_l, trigger, &mut scratch, |j, dx| {
+                list.push((j as u32, dx));
+            });
+            list
+        })
+        .collect();
+    (lists, scratch.take_stats())
+}
+
+#[test]
+fn prop_query_batch_bit_identical_to_per_point() {
+    prop_check("query-batch-vs-per-point", 20, |rng| {
+        let n = 30 + rng.below(250);
+        let box_l = 70.0;
+        let (mut pos, radius) = random_scene(rng, n, box_l, 12.0);
+        let kind = build_kind(rng);
+        let boundary =
+            if rng.f32() < 0.5 { Boundary::Wall } else { Boundary::Periodic };
+        let trigger = radius.iter().fold(0.0f32, |a, &r| a.max(r));
+
+        let mut bvh = Bvh::build(&pos, &radius, kind);
+        // several refit rounds so stale-loose bounds are exercised too
+        let refits = rng.below(4);
+        for _ in 0..refits {
+            for p in pos.iter_mut() {
+                *p += Vec3::new(
+                    rng.range_f32(-2.0, 2.0),
+                    rng.range_f32(-2.0, 2.0),
+                    rng.range_f32(-2.0, 2.0),
+                );
+            }
+            bvh.refit(&pos, &radius);
+        }
+
+        let (want, want_stats) =
+            per_point_lists(&bvh, &pos, &radius, boundary, box_l, trigger);
+
+        for threads in [1usize, 2, 5] {
+            let (chunks, stats) = bvh.query_batch(
+                n,
+                threads,
+                || (),
+                |_, scratch, range| {
+                    range
+                        .map(|i| {
+                            let mut list = Vec::new();
+                            launch_rays(
+                                &bvh,
+                                i,
+                                &pos,
+                                &radius,
+                                boundary,
+                                box_l,
+                                trigger,
+                                scratch,
+                                |j, dx| list.push((j as u32, dx)),
+                            );
+                            list
+                        })
+                        .collect::<Vec<_>>()
+                },
+            );
+            let got: Vec<Vec<(u32, Vec3)>> = chunks.into_iter().flatten().collect();
+            if got != want {
+                return Err(format!(
+                    "{kind:?}/{boundary:?}/refits={refits}/threads={threads}: \
+                     batched neighbor streams differ from per-point"
+                ));
+            }
+            if stats != want_stats {
+                return Err(format!(
+                    "{kind:?}/{boundary:?}/threads={threads}: stats {stats:?} != {want_stats:?}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_query_batch_matches_brute_detection_sets() {
+    // anchor the batched path against the O(n^2) oracle, dedup'd across
+    // primary + gamma rays
+    prop_check("query-batch-vs-brute", 15, |rng| {
+        let n = 30 + rng.below(150);
+        let box_l = 60.0;
+        let (pos, radius) = random_scene(rng, n, box_l, 10.0);
+        let kind = build_kind(rng);
+        let boundary =
+            if rng.f32() < 0.5 { Boundary::Wall } else { Boundary::Periodic };
+        let trigger = radius.iter().fold(0.0f32, |a, &r| a.max(r));
+        let bvh = Bvh::build(&pos, &radius, kind);
+
+        let (chunks, _) = bvh.query_batch(
+            n,
+            3,
+            || (),
+            |_, scratch, range| {
+                range
+                    .map(|i| {
+                        let mut list = Vec::new();
+                        launch_rays(
+                            &bvh,
+                            i,
+                            &pos,
+                            &radius,
+                            boundary,
+                            box_l,
+                            trigger,
+                            scratch,
+                            |j, _| list.push(j),
+                        );
+                        list.sort_unstable();
+                        list.dedup();
+                        list
+                    })
+                    .collect::<Vec<_>>()
+            },
+        );
+        let got: Vec<Vec<usize>> = chunks.into_iter().flatten().collect();
+        for i in 0..n {
+            let want = orcs::frnn::brute::detection_neighbors(
+                i, &pos, &radius, boundary, box_l,
+            );
+            if got[i] != want {
+                return Err(format!("{kind:?}/{boundary:?} particle {i} set mismatch"));
+            }
+        }
+        Ok(())
+    });
+}

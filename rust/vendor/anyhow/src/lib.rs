@@ -1,0 +1,207 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The offline vendor set this repository builds against has no registry
+//! crates, so this path dependency provides the small slice of `anyhow`'s
+//! API the codebase actually uses: [`Error`], [`Result`], the `anyhow!`,
+//! `bail!` and `ensure!` macros, and the [`Context`] extension trait. The
+//! crate is API-compatible with real `anyhow` for these uses, so swapping
+//! in the upstream crate later is a manifest-only change.
+//!
+//! Differences from upstream: errors are flattened to a message string at
+//! construction (no backtraces, no downcasting) — sufficient for a CLI
+//! whose only consumer of errors is `eprintln!("{e:#}")`.
+
+use std::fmt;
+
+/// A flattened, message-carrying error type.
+///
+/// Deliberately does **not** implement `std::error::Error`: that is what
+/// makes the blanket `From<E: std::error::Error>` impl below coherent
+/// (the same trick upstream `anyhow` uses), which in turn makes `?` work
+/// on any standard error type inside a `Result<T, Error>` function.
+pub struct Error {
+    msg: String,
+}
+
+/// `Result` defaulting the error type to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    fn wrap(context: impl fmt::Display, cause: &Error) -> Error {
+        Error { msg: format!("{context}: {}", cause.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        // Flatten the source chain into one line, as `{:#}` would print.
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// Extension trait adding `.context()` / `.with_context()` to `Result`
+/// and `Option`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::wrap(context, &Error::from(e)))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::wrap(f(), &Error::from(e)))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_port(s: &str) -> Result<u16> {
+        let p: u16 = s.parse()?; // ParseIntError -> Error via blanket From
+        ensure!(p > 1024, "port {p} is privileged");
+        Ok(p)
+    }
+
+    #[test]
+    fn question_mark_and_ensure() {
+        assert!(parse_port("8080").is_ok());
+        assert!(parse_port("80").unwrap_err().to_string().contains("privileged"));
+        assert!(parse_port("not-a-number").is_err());
+    }
+
+    #[test]
+    fn macros_format() {
+        let n = 3;
+        let e = anyhow!("bad value {n}");
+        assert_eq!(e.to_string(), "bad value 3");
+        let e = anyhow!("bad value {}", 4);
+        assert_eq!(e.to_string(), "bad value 4");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(e.to_string(), "owned");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(1).unwrap(), 1);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative: -1");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"));
+        let e = r.context("reading config").unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "), "{e}");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "field")).unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+    }
+}
