@@ -1,9 +1,13 @@
 //! Micro-benchmarks of the hot paths (the §Perf profiling harness):
-//! BVH build / refit / query, cell sweep, radix sort, and the XLA force
-//! kernel dispatch. Plain timing loops (no criterion in the offline vendor
-//! set) with min/mean reporting over R repetitions.
+//! BVH build / refit / query (plain and Morton-ordered), cell sweep, radix
+//! sort, and the XLA force kernel dispatch. Plain timing loops (no
+//! criterion in the offline vendor set) with min/mean reporting over R
+//! repetitions.
 //!
-//! `cargo bench --bench micro [-- --n N]`
+//! `cargo bench --bench micro [-- --n N] [-- --json PATH]`
+//!
+//! `--json PATH` additionally writes the results as a machine-readable
+//! table (used by CI to publish `BENCH_micro.json`).
 
 use std::time::Instant;
 
@@ -15,7 +19,13 @@ use orcs::frnn::cell_list::{cell_forces, Grid};
 use orcs::frnn::gpu_cell::radix_sort_pairs;
 use orcs::physics::state::SimState;
 
-fn bench<F: FnMut()>(name: &str, reps: usize, mut f: F) {
+struct BenchRow {
+    name: String,
+    min_ms: f64,
+    mean_ms: f64,
+}
+
+fn bench<F: FnMut()>(rows: &mut Vec<BenchRow>, name: &str, reps: usize, mut f: F) {
     // warmup
     f();
     let mut best = f64::INFINITY;
@@ -27,21 +37,51 @@ fn bench<F: FnMut()>(name: &str, reps: usize, mut f: F) {
         best = best.min(dt);
         total += dt;
     }
-    println!(
-        "{name:<44} min {:>10.3} ms   mean {:>10.3} ms",
-        best * 1e3,
-        total / reps as f64 * 1e3
-    );
+    let min_ms = best * 1e3;
+    let mean_ms = total / reps as f64 * 1e3;
+    println!("{name:<52} min {min_ms:>10.3} ms   mean {mean_ms:>10.3} ms");
+    rows.push(BenchRow { name: name.to_string(), min_ms, mean_ms });
+}
+
+fn arg_after(flag: &str) -> Option<String> {
+    std::env::args().skip_while(|a| a != flag).nth(1)
+}
+
+fn write_json(
+    path: &str,
+    n: usize,
+    threads: usize,
+    aabb_tests_per_ray: f64,
+    rows: &[BenchRow],
+) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"n\": {n},\n"));
+    s.push_str(&format!("  \"threads\": {threads},\n"));
+    s.push_str(&format!("  \"aabb_tests_per_ray\": {aabb_tests_per_ray:.4},\n"));
+    s.push_str("  \"benches\": {\n");
+    for (k, r) in rows.iter().enumerate() {
+        let comma = if k + 1 == rows.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    \"{}\": {{\"min_ms\": {:.4}, \"mean_ms\": {:.4}}}{comma}\n",
+            r.name, r.min_ms, r.mean_ms
+        ));
+    }
+    s.push_str("  }\n}\n");
+    match std::fs::write(path, s) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
 }
 
 fn main() {
-    let n: usize = std::env::args()
-        .skip_while(|a| a != "--n")
-        .nth(1)
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(50_000);
+    let n: usize = arg_after("--n").and_then(|v| v.parse().ok()).unwrap_or(50_000);
+    let json_path = arg_after("--json");
     let reps = 5;
-    println!("== micro benches (n={n}, reps={reps}) ==");
+    let threads = orcs::parallel::num_threads();
+    println!("== micro benches (n={n}, reps={reps}, ORCS_THREADS={threads}) ==");
+    let mut rows: Vec<BenchRow> = Vec::new();
+    let rows = &mut rows;
 
     let mut rng = Rng::new(42);
     let pos: Vec<Vec3> = (0..n)
@@ -55,26 +95,29 @@ fn main() {
         .collect();
     let radius: Vec<f32> = (0..n).map(|_| rng.range_f32(1.0, 20.0)).collect();
 
-    bench("bvh build (binned SAH)", reps, || {
+    bench(rows, "bvh build (binned SAH)", reps, || {
         let b = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
         std::hint::black_box(b.node_count());
     });
-    bench("bvh build (median)", reps, || {
+    bench(rows, "bvh build (median)", reps, || {
         let b = Bvh::build(&pos, &radius, BuildKind::Median);
         std::hint::black_box(b.node_count());
     });
-    bench("bvh build (LBVH / morton)", reps, || {
+    bench(rows, "bvh build (LBVH / morton)", reps, || {
         let b = Bvh::build(&pos, &radius, BuildKind::Lbvh);
         std::hint::black_box(b.node_count());
     });
 
     let mut bvh = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
-    bench("bvh refit", reps, || {
-        bvh.refit(&pos, &radius);
+    bench(rows, "bvh refit (1 thread)", reps, || {
+        bvh.refit_with_threads(&pos, &radius, 1);
+    });
+    bench(rows, &format!("bvh refit ({threads} threads, level-parallel)"), reps, || {
+        bvh.refit_with_threads(&pos, &radius, threads);
     });
 
     let bvh = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
-    bench("bvh query x n (per-point, 1 thread)", reps, || {
+    bench(rows, "bvh query x n (per-point, 1 thread)", reps, || {
         let mut scratch = orcs::bvh::traverse::QueryScratch::new();
         let mut acc = 0usize;
         for i in 0..n {
@@ -82,8 +125,7 @@ fn main() {
         }
         std::hint::black_box((acc, scratch.stats.aabb_tests));
     });
-    let threads = orcs::parallel::num_threads();
-    bench(&format!("bvh query_batch x n ({threads} threads)"), reps, || {
+    bench(rows, &format!("bvh query_batch x n ({threads} threads)"), reps, || {
         let (hits, stats) = bvh.query_batch(
             n,
             threads,
@@ -99,6 +141,35 @@ fn main() {
         let acc: usize = hits.iter().sum();
         std::hint::black_box((acc, stats.aabb_tests));
     });
+    let mut aabb_tests_per_ray = 0.0;
+    bench(
+        rows,
+        &format!("bvh query_batch morton-ordered x n ({threads} threads)"),
+        reps,
+        || {
+            let (hits, stats) = bvh.query_batch_ordered(
+                &pos,
+                1000.0,
+                threads,
+                || (),
+                |_, scratch, ids| {
+                    let mut acc = 0usize;
+                    for &iu in ids {
+                        let i = iu as usize;
+                        bvh.query_point(pos[i], i, &pos, &radius, scratch, |_| acc += 1);
+                    }
+                    acc
+                },
+            );
+            let acc: usize = hits.iter().sum();
+            aabb_tests_per_ray = stats.aabb_tests as f64 / stats.rays.max(1) as f64;
+            std::hint::black_box((acc, stats.aabb_tests));
+        },
+    );
+    println!(
+        "{:<52} {aabb_tests_per_ray:>14.2}   (1 unit = one 4-wide node test)",
+        "aabb_tests / ray"
+    );
 
     let cfg = SimConfig {
         n,
@@ -107,31 +178,31 @@ fn main() {
         ..SimConfig::default()
     };
     let state = SimState::from_config(&cfg);
-    bench("cell grid build", reps, || {
+    bench(rows, "cell grid build", reps, || {
         let g = Grid::build(&state.pos, state.box_l, state.r_max);
         std::hint::black_box(matches!(g, Grid::Dense(_)));
     });
     let grid = Grid::build(&state.pos, state.box_l, state.r_max);
-    bench("cell sweep forces", reps, || {
+    bench(rows, "cell sweep forces", reps, || {
         let (f, t, e, v) = cell_forces(&state, &grid, orcs::parallel::num_threads());
         std::hint::black_box((f.len(), t, e, v));
     });
 
-    bench("radix sort (morton pairs, serial)", reps, || {
+    bench(rows, "radix sort (morton pairs, serial)", reps, || {
         let mut keys: Vec<u32> =
             pos.iter().map(|&p| orcs::frnn::gpu_cell::morton30(p, 1000.0)).collect();
         let mut vals: Vec<u32> = (0..n as u32).collect();
         radix_sort_pairs(&mut keys, &mut vals);
         std::hint::black_box(keys[0]);
     });
-    bench(&format!("radix sort (morton pairs, {threads} threads)"), reps, || {
+    bench(rows, &format!("radix sort (morton pairs, {threads} threads)"), reps, || {
         let mut keys: Vec<u32> =
             pos.iter().map(|&p| orcs::frnn::gpu_cell::morton30(p, 1000.0)).collect();
         let mut vals: Vec<u32> = (0..n as u32).collect();
         orcs::frnn::gpu_cell::radix_sort_pairs_mt(&mut keys, &mut vals, threads);
         std::hint::black_box(keys[0]);
     });
-    bench("bvh build (binned SAH, 1 thread)", reps, || {
+    bench(rows, "bvh build (binned SAH, 1 thread)", reps, || {
         let b = Bvh::build_with_threads(&pos, &radius, BuildKind::BinnedSah, 1);
         std::hint::black_box(b.node_count());
     });
@@ -148,14 +219,18 @@ fn main() {
                     .collect::<Vec<_>>(),
             );
             let mut counts = orcs::rtcore::OpCounts::default();
-            bench("xla lj_forces (1 chunk, k=16)", reps, || {
+            bench(rows, "xla lj_forces (1 chunk, k=16)", reps, || {
                 let f = kernels.lj_forces(&sstate, &lists, &mut counts).unwrap();
                 std::hint::black_box(f.len());
             });
-            bench("xla integrate (1 chunk)", reps, || {
+            bench(rows, "xla integrate (1 chunk)", reps, || {
                 kernels.integrate(&mut sstate, &mut counts).unwrap();
             });
         }
         Err(e) => println!("xla benches skipped: {e}"),
+    }
+
+    if let Some(path) = json_path {
+        write_json(&path, n, threads, aabb_tests_per_ray, rows);
     }
 }

@@ -1,12 +1,15 @@
 //! BVH construction: median split, binned-SAH and Morton (LBVH) builders,
-//! parallelized across the host cores.
+//! parallelized across the host cores, collapsed into the 4-wide SoA node
+//! layout ([`Bvh4Node`]).
 //!
-//! All builders produce the same node layout (children consecutive, always
-//! after the parent) so refit and traversal are builder-agnostic. The
-//! median builder models fast hardware LBVH-style construction; binned SAH
-//! models a high-quality build. The timing model charges builds by
-//! primitive count regardless of kind (hardware builds are opaque), but the
-//! *query* cost difference between tree qualities is real and measured.
+//! All builders produce the same binary *topology* as before (children
+//! consecutive, always after the parent); the final [`Bvh`] is produced by
+//! collapsing that topology into breadth-first-ordered BVH4 nodes, so refit
+//! and traversal are builder-agnostic. The median builder models fast
+//! hardware LBVH-style construction; binned SAH models a high-quality
+//! build. The timing model charges builds by primitive count regardless of
+//! kind (hardware builds are opaque), but the *query* cost difference
+//! between tree qualities is real and measured.
 //!
 //! # Parallel construction
 //!
@@ -23,8 +26,22 @@
 //!   spliced (with index fix-up) after the join. Split decisions are
 //!   identical to the serial build, so the *tree* is identical up to node
 //!   array layout; traversal visits the same nodes either way.
+//!
+//! # BVH2 → BVH4 collapse
+//!
+//! [`collapse_bvh4`] turns the binary node array into the wide layout: each
+//! BVH4 node's lanes are the (up to four) *grandchildren* of a binary
+//! internal node — a binary child that is a leaf stays as a leaf lane; a
+//! binary child that is internal contributes its two children as lanes. The
+//! intermediate binary child's own box disappears (its bounds equal the
+//! union of the lanes it contributed), which is exactly the memory-traffic
+//! saving of wide nodes. Slots are assigned breadth-first, so children
+//! always land at higher indices than their parent and every depth level is
+//! one contiguous range ([`Bvh::level_starts`]) — the property the
+//! level-parallel refit relies on. The collapse is deterministic, so the
+//! parallel and serial builds still produce identical trees.
 
-use super::{Bvh, BuildKind, Node, LEAF_SIZE};
+use super::{Bvh, Bvh4Node, BuildKind, BVH4_WIDTH, LEAF_SIZE};
 use crate::core::aabb::Aabb;
 use crate::core::vec3::Vec3;
 use crate::parallel;
@@ -44,6 +61,26 @@ const PARALLEL_BUILD_MIN: usize = 8192;
 /// splits producing O(n) serial descent.
 const MAX_TOP_DEPTH: usize = 24;
 
+/// Intermediate binary node used during construction, before the collapse
+/// into [`Bvh4Node`]. Children of internal nodes are allocated
+/// consecutively (`left`, `left + 1`) and always after their parent.
+#[derive(Clone, Copy, Debug)]
+struct BinNode {
+    aabb: Aabb,
+    /// Internal: index of the left child (right = left + 1).
+    /// Leaf: first index into [`Bvh::prim_order`].
+    left_first: u32,
+    /// 0 for internal nodes; primitive count for leaves.
+    count: u32,
+}
+
+impl BinNode {
+    #[inline(always)]
+    fn is_leaf(&self) -> bool {
+        self.count > 0
+    }
+}
+
 struct BuildCtx<'a> {
     centroids: &'a [Vec3],
     prim_bbs: &'a [Aabb],
@@ -51,10 +88,10 @@ struct BuildCtx<'a> {
     order: &'a mut [u32],
     /// Global index of `order[0]` — leaves store `base + local_offset`.
     base: usize,
-    nodes: Vec<Node>,
+    nodes: Vec<BinNode>,
 }
 
-const EMPTY_NODE: Node = Node { aabb: Aabb::EMPTY, left_first: 0, count: 0 };
+const EMPTY_BIN: BinNode = BinNode { aabb: Aabb::EMPTY, left_first: 0, count: 0 };
 
 impl Bvh {
     /// Build a fresh BVH over spheres `(pos[i], radius[i])`, parallelized
@@ -71,8 +108,19 @@ impl Bvh {
         threads: usize,
     ) -> Bvh {
         assert_eq!(pos.len(), radius.len());
-        assert!(!pos.is_empty(), "cannot build a BVH over zero primitives");
         let n = pos.len();
+        if n == 0 {
+            // Zero-primitive scenes are legal (empty simulation steps):
+            // queries terminate immediately, refits are no-ops.
+            return Bvh {
+                nodes: Vec::new(),
+                level_starts: vec![0],
+                prim_order: Vec::new(),
+                n_prims: 0,
+                kind,
+                refits_since_build: 0,
+            };
+        }
         let threads = threads.max(1);
         let mut order: Vec<u32> = (0..n as u32).collect();
 
@@ -101,12 +149,19 @@ impl Bvh {
             nodes: Vec::with_capacity(2 * n / LEAF_SIZE + 2),
         };
         // reserve root
-        ctx.nodes.push(EMPTY_NODE);
+        ctx.nodes.push(EMPTY_BIN);
 
         if threads == 1 || n < PARALLEL_BUILD_MIN {
             build_range(&mut ctx, 0, 0, n, kind);
-            let nodes = ctx.nodes;
-            return Bvh { nodes, prim_order: order, n_prims: n, kind, refits_since_build: 0 };
+            let (nodes, level_starts) = collapse_bvh4(&ctx.nodes);
+            return Bvh {
+                nodes,
+                level_starts,
+                prim_order: order,
+                n_prims: n,
+                kind,
+                refits_since_build: 0,
+            };
         }
 
         // --- Parallel path: serial top split into subtree tasks ---
@@ -118,7 +173,7 @@ impl Bvh {
 
         // Concurrent subtree builds into task-local node arrays. Each task
         // owns the disjoint `order[lo..hi]` slice.
-        let mut results: Vec<Vec<Node>> = (0..tasks.len()).map(|_| Vec::new()).collect();
+        let mut results: Vec<Vec<BinNode>> = (0..tasks.len()).map(|_| Vec::new()).collect();
         let order_ptr = parallel::SendPtr(order.as_mut_ptr());
         let res_ptr = parallel::SendPtr(results.as_mut_ptr());
         let tasks_ref = &tasks;
@@ -137,7 +192,7 @@ impl Bvh {
                     base: lo,
                     nodes: Vec::with_capacity(2 * (hi - lo) / LEAF_SIZE + 2),
                 };
-                sub_ctx.nodes.push(EMPTY_NODE);
+                sub_ctx.nodes.push(EMPTY_BIN);
                 build_range(&mut sub_ctx, 0, 0, hi - lo, kind);
                 unsafe { *res_ptr.0.add(t) = sub_ctx.nodes };
             }
@@ -148,11 +203,11 @@ impl Bvh {
         let mut base = nodes.len();
         for (t, &(node_idx, _, _)) in tasks.iter().enumerate() {
             let local = std::mem::take(&mut results[t]);
-            let shift = |nd: &Node, b: usize| -> Node {
+            let shift = |nd: &BinNode, b: usize| -> BinNode {
                 if nd.is_leaf() {
                     *nd
                 } else {
-                    Node {
+                    BinNode {
                         aabb: nd.aabb,
                         left_first: (b + nd.left_first as usize - 1) as u32,
                         count: 0,
@@ -166,8 +221,96 @@ impl Bvh {
             base += local.len() - 1;
         }
 
-        Bvh { nodes, prim_order: order, n_prims: n, kind, refits_since_build: 0 }
+        let (nodes4, level_starts) = collapse_bvh4(&nodes);
+        Bvh {
+            nodes: nodes4,
+            level_starts,
+            prim_order: order,
+            n_prims: n,
+            kind,
+            refits_since_build: 0,
+        }
     }
+}
+
+/// The lanes of the BVH4 node derived from binary internal node `b`: for
+/// each binary child, itself when it is a leaf, otherwise its two children.
+/// Returns 2–4 lane entries (binary node indices).
+fn gather_lanes(bnodes: &[BinNode], b: u32) -> ([u32; BVH4_WIDTH], usize) {
+    let l = bnodes[b as usize].left_first;
+    let mut out = [0u32; BVH4_WIDTH];
+    let mut k = 0;
+    for c in [l, l + 1] {
+        let cn = &bnodes[c as usize];
+        if cn.is_leaf() {
+            out[k] = c;
+            k += 1;
+        } else {
+            out[k] = cn.left_first;
+            out[k + 1] = cn.left_first + 1;
+            k += 2;
+        }
+    }
+    (out, k)
+}
+
+/// Collapse the binary topology into breadth-first-ordered BVH4 nodes plus
+/// the per-depth level table (see module docs). Deterministic in the input
+/// array, independent of thread count.
+fn collapse_bvh4(bnodes: &[BinNode]) -> (Vec<Bvh4Node>, Vec<u32>) {
+    if bnodes[0].is_leaf() {
+        // whole scene fits one leaf: a single node with one leaf lane
+        let mut node = Bvh4Node::EMPTY;
+        node.set_lane(0, &bnodes[0].aabb, bnodes[0].left_first, bnodes[0].count);
+        return (vec![node], vec![0, 1]);
+    }
+    // BFS over binary internal nodes; every visited entry becomes one BVH4
+    // node, slots assigned in discovery order (level by level).
+    let mut slot_of = vec![u32::MAX; bnodes.len()];
+    slot_of[0] = 0;
+    let mut total = 1u32;
+    let mut levels: Vec<Vec<u32>> = Vec::new();
+    let mut current = vec![0u32];
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &b in &current {
+            let (lanes, k) = gather_lanes(bnodes, b);
+            for &lane_bin in &lanes[..k] {
+                if !bnodes[lane_bin as usize].is_leaf() {
+                    slot_of[lane_bin as usize] = total;
+                    total += 1;
+                    next.push(lane_bin);
+                }
+            }
+        }
+        levels.push(current);
+        current = next;
+    }
+    let mut level_starts = Vec::with_capacity(levels.len() + 1);
+    level_starts.push(0u32);
+    let mut acc = 0u32;
+    for lv in &levels {
+        acc += lv.len() as u32;
+        level_starts.push(acc);
+    }
+    let mut nodes = vec![Bvh4Node::EMPTY; total as usize];
+    for lv in &levels {
+        for &b in lv {
+            let slot = slot_of[b as usize] as usize;
+            let (lanes, k) = gather_lanes(bnodes, b);
+            let mut node = Bvh4Node::EMPTY;
+            for (lane, &lane_bin) in lanes[..k].iter().enumerate() {
+                let bn = &bnodes[lane_bin as usize];
+                if bn.is_leaf() {
+                    node.set_lane(lane, &bn.aabb, bn.left_first, bn.count);
+                } else {
+                    node.set_lane(lane, &bn.aabb, slot_of[lane_bin as usize], 0);
+                }
+            }
+            nodes[slot] = node;
+        }
+    }
+    (nodes, level_starts)
 }
 
 /// Bounding boxes (node + centroid) of `order[lo..hi]`.
@@ -219,16 +362,16 @@ fn build_range(ctx: &mut BuildCtx, node_idx: usize, lo: usize, hi: usize, kind: 
 
     if count <= LEAF_SIZE {
         ctx.nodes[node_idx] =
-            Node { aabb: bb, left_first: (ctx.base + lo) as u32, count: count as u32 };
+            BinNode { aabb: bb, left_first: (ctx.base + lo) as u32, count: count as u32 };
         return;
     }
 
     let mid = choose_split(ctx, lo, hi, &cb, &bb, kind);
 
     let left = ctx.nodes.len();
-    ctx.nodes.push(EMPTY_NODE);
-    ctx.nodes.push(EMPTY_NODE);
-    ctx.nodes[node_idx] = Node { aabb: bb, left_first: left as u32, count: 0 };
+    ctx.nodes.push(EMPTY_BIN);
+    ctx.nodes.push(EMPTY_BIN);
+    ctx.nodes[node_idx] = BinNode { aabb: bb, left_first: left as u32, count: 0 };
     build_range(ctx, left, lo, mid, kind);
     build_range(ctx, left + 1, mid, hi, kind);
 }
@@ -256,9 +399,9 @@ fn split_top(
     let mid = choose_split(ctx, lo, hi, &cb, &bb, kind);
 
     let left = ctx.nodes.len();
-    ctx.nodes.push(EMPTY_NODE);
-    ctx.nodes.push(EMPTY_NODE);
-    ctx.nodes[node_idx] = Node { aabb: bb, left_first: left as u32, count: 0 };
+    ctx.nodes.push(EMPTY_BIN);
+    ctx.nodes.push(EMPTY_BIN);
+    ctx.nodes[node_idx] = BinNode { aabb: bb, left_first: left as u32, count: 0 };
     split_top(ctx, left, lo, mid, kind, grain, depth + 1, tasks);
     split_top(ctx, left + 1, mid, hi, kind, grain, depth + 1, tasks);
 }
@@ -383,9 +526,9 @@ mod tests {
     fn node_count_bounds() {
         let (pos, radius) = scene(1000, 1);
         let bvh = Bvh::build(&pos, &radius, BuildKind::Median);
-        // binary tree over ceil(n/LEAF) leaves
-        assert!(bvh.node_count() >= 2 * (1000 / LEAF_SIZE) - 1);
-        assert!(bvh.node_count() <= 2 * 1000);
+        // a BVH4 node holds at most BVH4_WIDTH leaf lanes of LEAF_SIZE prims
+        assert!(bvh.node_count() >= 1000 / (LEAF_SIZE * BVH4_WIDTH));
+        assert!(bvh.node_count() <= 1000);
     }
 
     #[test]
@@ -442,8 +585,10 @@ mod tests {
         let (pos, radius) = scene(512, 4);
         let bvh = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
         for (i, n) in bvh.nodes.iter().enumerate() {
-            if !n.is_leaf() {
-                assert!(n.left_first as usize > i);
+            for lane in 0..BVH4_WIDTH {
+                if n.lane_used(lane) && !n.lane_is_leaf(lane) {
+                    assert!(n.child[lane] as usize > i);
+                }
             }
         }
     }
@@ -462,6 +607,7 @@ mod tests {
             // same split decisions -> same primitive ordering
             assert_eq!(par.prim_order, serial.prim_order, "{kind:?}");
             assert_eq!(par.node_count(), serial.node_count(), "{kind:?}");
+            assert_eq!(par.level_starts, serial.level_starts, "{kind:?}");
             // identical query results on a sample of points
             let mut s1 = crate::bvh::traverse::QueryScratch::new();
             let mut s2 = crate::bvh::traverse::QueryScratch::new();
@@ -481,8 +627,10 @@ mod tests {
         for kind in [BuildKind::Median, BuildKind::BinnedSah, BuildKind::Lbvh] {
             let bvh = Bvh::build_with_threads(&pos, &radius, kind, 6);
             for (i, n) in bvh.nodes.iter().enumerate() {
-                if !n.is_leaf() {
-                    assert!(n.left_first as usize > i, "{kind:?} node {i}");
+                for lane in 0..BVH4_WIDTH {
+                    if n.lane_used(lane) && !n.lane_is_leaf(lane) {
+                        assert!(n.child[lane] as usize > i, "{kind:?} node {i} lane {lane}");
+                    }
                 }
             }
         }

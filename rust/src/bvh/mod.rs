@@ -10,10 +10,24 @@
 //! `gradient` optimizer exploits — emerges structurally: as particles move,
 //! refitted node bounds overlap more and traversal touches more nodes.
 //!
-//! Builds are multi-threaded (see [`builder`]) and queries run through the
-//! batched, allocation-free traversal engine (see [`traverse`]:
-//! [`traverse::QueryScratch`] / [`Bvh::query_batch`]); both scale with
-//! `ORCS_THREADS`.
+//! # Node layout: 4-wide SoA (BVH4)
+//!
+//! Nodes are **4-wide** ([`Bvh4Node`]), mirroring the wide BVHs RT silicon
+//! actually traverses: each node stores the AABBs of up to four children in
+//! transposed structure-of-arrays form (`min_x[4]; min_y[4]; …`), so one
+//! point-in-box step tests all four children from a single 128-byte node
+//! fetch. The array is laid out in **breadth-first order** — all nodes of
+//! depth `d` precede depth `d + 1` (ranges recorded in
+//! [`Bvh::level_starts`]) — which makes a reverse index sweep a valid
+//! bottom-up order *and* lets [`Bvh::refit`] process each level as an
+//! embarrassingly parallel slice (level-partitioned refit, bit-identical to
+//! the serial sweep).
+//!
+//! Builds collapse a binary topology into this layout (see [`builder`]) and
+//! are multi-threaded; queries run through the batched, allocation-free
+//! traversal engine (see [`traverse`]: [`traverse::QueryScratch`] /
+//! [`Bvh::query_batch`] / [`Bvh::query_batch_ordered`]); builds, refits and
+//! queries all scale with `ORCS_THREADS`.
 
 pub mod builder;
 pub mod quality;
@@ -21,27 +35,103 @@ pub mod traverse;
 
 use crate::core::aabb::Aabb;
 use crate::core::vec3::Vec3;
+use crate::parallel;
 
-/// Maximum primitives per leaf. 4 mirrors typical hardware BVH widths.
+/// Maximum primitives per leaf lane. 4 mirrors typical hardware BVH widths.
 pub const LEAF_SIZE: usize = 4;
 
-/// One BVH node. Children of internal nodes are allocated consecutively
-/// (`left`, `left + 1`), and always at higher indices than their parent, so
-/// a reverse-index sweep is a valid bottom-up order (used by refit).
-#[derive(Clone, Copy, Debug)]
-pub struct Node {
-    pub aabb: Aabb,
-    /// Internal: index of the left child (right = left + 1).
-    /// Leaf: first index into [`Bvh::prim_order`].
-    pub left_first: u32,
-    /// 0 for internal nodes; primitive count for leaves.
-    pub count: u32,
+/// Branching factor of the wide SoA node layout.
+pub const BVH4_WIDTH: usize = 4;
+
+/// Sentinel child value marking an unused lane.
+pub const INVALID_LANE: u32 = u32::MAX;
+
+/// One 4-wide SoA BVH node. Child AABBs are stored transposed (per-axis
+/// lanes) so a point query tests four boxes with straight-line array code.
+/// Lane `l` is:
+///
+/// * **internal** when `count[l] == 0` and `child[l] != INVALID_LANE` —
+///   `child[l]` is the node index of the subtree;
+/// * **leaf** when `count[l] > 0` — `child[l]` is the first index of a
+///   `count[l]`-long range of [`Bvh::prim_order`];
+/// * **empty** when `child[l] == INVALID_LANE` — its bounds are
+///   `+inf/-inf`, so every point-in-box test fails and no special-casing is
+///   needed on the traversal hot path.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Bvh4Node {
+    pub min_x: [f32; BVH4_WIDTH],
+    pub min_y: [f32; BVH4_WIDTH],
+    pub min_z: [f32; BVH4_WIDTH],
+    pub max_x: [f32; BVH4_WIDTH],
+    pub max_y: [f32; BVH4_WIDTH],
+    pub max_z: [f32; BVH4_WIDTH],
+    /// Per-lane child reference (node index or `prim_order` start).
+    pub child: [u32; BVH4_WIDTH],
+    /// Per-lane primitive count (0 for internal and empty lanes).
+    pub count: [u32; BVH4_WIDTH],
 }
 
-impl Node {
+impl Bvh4Node {
+    /// A node with four empty lanes (all boxes inverted-infinite).
+    pub const EMPTY: Bvh4Node = Bvh4Node {
+        min_x: [f32::INFINITY; BVH4_WIDTH],
+        min_y: [f32::INFINITY; BVH4_WIDTH],
+        min_z: [f32::INFINITY; BVH4_WIDTH],
+        max_x: [f32::NEG_INFINITY; BVH4_WIDTH],
+        max_y: [f32::NEG_INFINITY; BVH4_WIDTH],
+        max_z: [f32::NEG_INFINITY; BVH4_WIDTH],
+        child: [INVALID_LANE; BVH4_WIDTH],
+        count: [0; BVH4_WIDTH],
+    };
+
     #[inline(always)]
-    pub fn is_leaf(&self) -> bool {
-        self.count > 0
+    pub fn lane_used(&self, lane: usize) -> bool {
+        self.child[lane] != INVALID_LANE
+    }
+
+    #[inline(always)]
+    pub fn lane_is_leaf(&self, lane: usize) -> bool {
+        self.count[lane] > 0
+    }
+
+    /// Reassemble one lane's box from the SoA fields.
+    #[inline(always)]
+    pub fn lane_aabb(&self, lane: usize) -> Aabb {
+        Aabb::new(
+            Vec3::new(self.min_x[lane], self.min_y[lane], self.min_z[lane]),
+            Vec3::new(self.max_x[lane], self.max_y[lane], self.max_z[lane]),
+        )
+    }
+
+    /// Write one lane's box into the SoA fields.
+    #[inline(always)]
+    pub fn set_lane_aabb(&mut self, lane: usize, bb: &Aabb) {
+        self.min_x[lane] = bb.lo.x;
+        self.min_y[lane] = bb.lo.y;
+        self.min_z[lane] = bb.lo.z;
+        self.max_x[lane] = bb.hi.x;
+        self.max_y[lane] = bb.hi.y;
+        self.max_z[lane] = bb.hi.z;
+    }
+
+    /// Populate a lane (box + child reference + count).
+    #[inline(always)]
+    pub fn set_lane(&mut self, lane: usize, bb: &Aabb, child: u32, count: u32) {
+        self.set_lane_aabb(lane, bb);
+        self.child[lane] = child;
+        self.count[lane] = count;
+    }
+
+    /// Union of all used lane boxes = overall bounds of this node's subtree.
+    /// (Empty lanes carry inverted-infinite boxes, so growing by them is a
+    /// no-op.)
+    #[inline]
+    pub fn lanes_union(&self) -> Aabb {
+        let mut bb = Aabb::EMPTY;
+        for lane in 0..BVH4_WIDTH {
+            bb.grow(&self.lane_aabb(lane));
+        }
+        bb
     }
 }
 
@@ -64,8 +154,15 @@ pub enum BuildKind {
 /// A bounding volume hierarchy over particle search spheres.
 #[derive(Clone, Debug)]
 pub struct Bvh {
-    pub nodes: Vec<Node>,
-    /// Permutation of primitive ids; leaves reference ranges of it.
+    /// BVH4 nodes in breadth-first order: children always live at higher
+    /// indices than their parent, and each depth occupies one contiguous
+    /// range (see [`Bvh::level_starts`]). Empty for a zero-primitive scene.
+    pub nodes: Vec<Bvh4Node>,
+    /// `level_starts[d]..level_starts[d + 1]` is the node range at depth
+    /// `d`; `level_starts.last() == nodes.len()`. Drives the
+    /// level-partitioned parallel refit.
+    pub level_starts: Vec<u32>,
+    /// Permutation of primitive ids; leaf lanes reference ranges of it.
     pub prim_order: Vec<u32>,
     pub n_prims: usize,
     pub kind: BuildKind,
@@ -73,36 +170,67 @@ pub struct Bvh {
     pub refits_since_build: u32,
 }
 
+/// Minimum nodes in one depth level before the refit sweep goes parallel
+/// (below this, thread spawn costs more than the per-node work saves).
+const REFIT_PARALLEL_MIN: usize = 128;
+
 impl Bvh {
-    /// Number of nodes (internal + leaf).
+    /// Number of (4-wide) nodes.
     pub fn node_count(&self) -> usize {
         self.nodes.len()
     }
 
-    /// Root bounding box.
+    /// Root bounding box ([`Aabb::EMPTY`] for a zero-primitive scene).
     pub fn root_aabb(&self) -> Aabb {
-        self.nodes[0].aabb
+        self.nodes.first().map_or(Aabb::EMPTY, |n| n.lanes_union())
     }
 
-    /// Refit ("update" in RT-core terms): recompute every node's AABB from
-    /// current sphere positions without changing the topology. O(nodes).
+    /// Refit ("update" in RT-core terms): recompute every lane's AABB from
+    /// current sphere positions without changing the topology. O(nodes),
+    /// parallelized over [`crate::parallel::num_threads`] workers.
     pub fn refit(&mut self, pos: &[Vec3], radius: &[f32]) {
+        self.refit_with_threads(pos, radius, parallel::num_threads());
+    }
+
+    /// [`Bvh::refit`] with an explicit worker count.
+    ///
+    /// The sweep is **level-partitioned**: depth levels are processed
+    /// bottom-up (the same reverse-topological guarantee as a reverse index
+    /// sweep over the BFS layout), and the nodes *within* one level are
+    /// mutually independent — a leaf lane reads only primitive data and an
+    /// internal lane reads only strictly deeper (already-refit) nodes — so
+    /// each level fans out across threads. Every node executes the exact
+    /// same arithmetic as the serial sweep, so the result is bit-identical
+    /// for any thread count.
+    pub fn refit_with_threads(&mut self, pos: &[Vec3], radius: &[f32], threads: usize) {
         debug_assert_eq!(pos.len(), self.n_prims);
-        for i in (0..self.nodes.len()).rev() {
-            let node = self.nodes[i];
-            let mut bb = Aabb::EMPTY;
-            if node.is_leaf() {
-                let first = node.left_first as usize;
-                for k in first..first + node.count as usize {
-                    let p = self.prim_order[k] as usize;
-                    bb.grow(&Aabb::of_sphere(pos[p], radius[p]));
+        let threads = threads.max(1);
+        {
+            let Bvh { nodes, level_starts, prim_order, .. } = self;
+            let node_ptr = parallel::SendPtr(nodes.as_mut_ptr());
+            let prim_order: &[u32] = prim_order.as_slice();
+            let levels = level_starts.len().saturating_sub(1);
+            for level in (0..levels).rev() {
+                let lo = level_starts[level] as usize;
+                let hi = level_starts[level + 1] as usize;
+                let width = hi - lo;
+                if threads == 1 || width < REFIT_PARALLEL_MIN {
+                    for slot in lo..hi {
+                        // SAFETY: serial sweep, no concurrent access.
+                        unsafe { refit_node(node_ptr.0, slot, prim_order, pos, radius) };
+                    }
+                } else {
+                    parallel::parallel_for_chunks_grained(width, threads, 64, |_, range| {
+                        for k in range {
+                            // SAFETY: slots within one level are written by
+                            // exactly one worker each (disjoint chunks) and
+                            // child reads target strictly deeper levels,
+                            // which were completed before this level began.
+                            unsafe { refit_node(node_ptr.0, lo + k, prim_order, pos, radius) };
+                        }
+                    });
                 }
-            } else {
-                // children have higher indices -> already refit
-                bb.grow(&self.nodes[node.left_first as usize].aabb);
-                bb.grow(&self.nodes[node.left_first as usize + 1].aabb);
             }
-            self.nodes[i].aabb = bb;
         }
         self.refits_since_build += 1;
     }
@@ -124,33 +252,105 @@ impl Bvh {
         if !seen.iter().all(|&s| s) {
             return Err("prim_order not a full permutation".into());
         }
-        // every node's AABB contains its content; children after parents
+        if self.n_prims == 0 {
+            if !self.nodes.is_empty() {
+                return Err("empty scene must have no nodes".into());
+            }
+            return Ok(());
+        }
+        if self.nodes.is_empty() {
+            return Err("non-empty scene with no nodes".into());
+        }
+        // level table sane
+        if self.level_starts.first() != Some(&0)
+            || self.level_starts.last().copied() != Some(self.nodes.len() as u32)
+            || self.level_starts.windows(2).any(|w| w[0] >= w[1])
+        {
+            return Err(format!("bad level_starts {:?}", self.level_starts));
+        }
+        // every lane bounds its content; leaf lanes cover prim_order
+        // exactly once; internal lanes point strictly forward
+        let mut covered = vec![false; self.n_prims];
         for (i, n) in self.nodes.iter().enumerate() {
-            if n.is_leaf() {
-                let first = n.left_first as usize;
-                if first + n.count as usize > self.prim_order.len() {
-                    return Err(format!("leaf {i} range out of bounds"));
-                }
-                for k in first..first + n.count as usize {
-                    let p = self.prim_order[k] as usize;
-                    let sb = Aabb::of_sphere(pos[p], radius[p]);
-                    if !contains_box(&n.aabb, &sb) {
-                        return Err(format!("leaf {i} does not bound prim {p}"));
+            for lane in 0..BVH4_WIDTH {
+                if !n.lane_used(lane) {
+                    if n.count[lane] != 0 {
+                        return Err(format!("node {i} empty lane {lane} with count"));
                     }
+                    continue;
                 }
-            } else {
-                let l = n.left_first as usize;
-                if l <= i || l + 1 >= self.nodes.len() {
-                    return Err(format!("node {i} bad child index {l}"));
-                }
-                for c in [l, l + 1] {
-                    if !contains_box(&n.aabb, &self.nodes[c].aabb) {
-                        return Err(format!("node {i} does not bound child {c}"));
+                let bb = n.lane_aabb(lane);
+                if n.lane_is_leaf(lane) {
+                    let first = n.child[lane] as usize;
+                    let cnt = n.count[lane] as usize;
+                    if first + cnt > self.prim_order.len() {
+                        return Err(format!("node {i} lane {lane} range out of bounds"));
+                    }
+                    for k in first..first + cnt {
+                        if covered[k] {
+                            return Err(format!("prim slot {k} referenced twice"));
+                        }
+                        covered[k] = true;
+                        let p = self.prim_order[k] as usize;
+                        let sb = Aabb::of_sphere(pos[p], radius[p]);
+                        if !contains_box(&bb, &sb) {
+                            return Err(format!("node {i} lane {lane} does not bound prim {p}"));
+                        }
+                    }
+                } else {
+                    let c = n.child[lane] as usize;
+                    if c <= i || c >= self.nodes.len() {
+                        return Err(format!("node {i} lane {lane} bad child index {c}"));
+                    }
+                    let cb = self.nodes[c].lanes_union();
+                    if !contains_box(&bb, &cb) {
+                        return Err(format!("node {i} lane {lane} does not bound child {c}"));
                     }
                 }
             }
         }
+        if !covered.iter().all(|&c| c) {
+            return Err("leaf lanes do not cover every prim_order slot".into());
+        }
         Ok(())
+    }
+}
+
+/// Recompute the lane boxes of `nodes[slot]`: leaf lanes from current
+/// primitive spheres, internal lanes from the (already-refit) child node's
+/// lane union. Shared by the serial and the level-parallel sweeps so both
+/// produce bit-identical results.
+///
+/// # Safety
+/// `nodes` must be valid for the whole node array; `nodes[slot]` must not
+/// be accessed concurrently, and the child slots referenced by `slot` must
+/// not be written concurrently (guaranteed by bottom-up level ordering).
+unsafe fn refit_node(
+    nodes: *mut Bvh4Node,
+    slot: usize,
+    prim_order: &[u32],
+    pos: &[Vec3],
+    radius: &[f32],
+) {
+    let node = &mut *nodes.add(slot);
+    for lane in 0..BVH4_WIDTH {
+        let c = node.child[lane];
+        if c == INVALID_LANE {
+            continue;
+        }
+        let bb = if node.count[lane] > 0 {
+            let first = c as usize;
+            let mut bb = Aabb::EMPTY;
+            for k in first..first + node.count[lane] as usize {
+                let p = prim_order[k] as usize;
+                bb.grow(&Aabb::of_sphere(pos[p], radius[p]));
+            }
+            bb
+        } else {
+            // children live at higher indices -> already refit
+            (*nodes.add(c as usize)).lanes_union()
+        };
+        node.set_lane_aabb(lane, &bb);
     }
 }
 
@@ -222,7 +422,20 @@ mod tests {
         let bvh = Bvh::build(&pos, &radius, BuildKind::Median);
         bvh.check_invariants(&pos, &radius).unwrap();
         assert_eq!(bvh.node_count(), 1);
-        assert!(bvh.nodes[0].is_leaf());
+        assert!(bvh.nodes[0].lane_is_leaf(0));
+        assert_eq!(bvh.nodes[0].count[0], 1);
+        assert!(!bvh.nodes[0].lane_used(1));
+    }
+
+    #[test]
+    fn empty_scene_is_valid() {
+        let bvh = Bvh::build(&[], &[], BuildKind::BinnedSah);
+        bvh.check_invariants(&[], &[]).unwrap();
+        assert_eq!(bvh.node_count(), 0);
+        assert!(bvh.root_aabb().is_empty());
+        let mut bvh = bvh;
+        bvh.refit(&[], &[]); // must not panic
+        assert_eq!(bvh.refits_since_build, 1);
     }
 
     #[test]
@@ -236,5 +449,47 @@ mod tests {
         bvh.refit(&pos, &radius);
         assert!(bvh.root_aabb().surface_area() > before);
         bvh.check_invariants(&pos, &radius).unwrap();
+    }
+
+    #[test]
+    fn parallel_refit_equals_serial_node_for_node() {
+        // large enough that leaf levels clear REFIT_PARALLEL_MIN
+        let (mut pos, radius) = random_scene(20_000, 12);
+        let base = Bvh::build_with_threads(&pos, &radius, BuildKind::BinnedSah, 1);
+        let mut rng = Rng::new(13);
+        let mut serial = base.clone();
+        let mut par = base;
+        for _ in 0..3 {
+            for p in pos.iter_mut() {
+                *p += Vec3::new(
+                    rng.range_f32(-2.0, 2.0),
+                    rng.range_f32(-2.0, 2.0),
+                    rng.range_f32(-2.0, 2.0),
+                );
+            }
+            serial.refit_with_threads(&pos, &radius, 1);
+            par.refit_with_threads(&pos, &radius, 8);
+            assert_eq!(serial.nodes, par.nodes, "parallel refit diverged from serial");
+        }
+        par.check_invariants(&pos, &radius).unwrap();
+    }
+
+    #[test]
+    fn bfs_levels_partition_nodes() {
+        let (pos, radius) = random_scene(5000, 14);
+        let bvh = Bvh::build(&pos, &radius, BuildKind::Median);
+        assert_eq!(*bvh.level_starts.last().unwrap() as usize, bvh.node_count());
+        // every internal lane points into a strictly deeper level
+        for level in 0..bvh.level_starts.len() - 1 {
+            let next = bvh.level_starts[level + 1];
+            for s in bvh.level_starts[level]..next {
+                let n = &bvh.nodes[s as usize];
+                for lane in 0..BVH4_WIDTH {
+                    if n.lane_used(lane) && !n.lane_is_leaf(lane) {
+                        assert!(n.child[lane] >= next, "child in same or earlier level");
+                    }
+                }
+            }
+        }
     }
 }

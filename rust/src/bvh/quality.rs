@@ -2,47 +2,64 @@
 //! degradation measures. Used by tests (SAH builds beat median builds) and
 //! by the benchmark reports to show how refits degrade the tree — the
 //! phenomenon the `gradient` policy models as `Δq` (paper Fig. 3).
+//!
+//! Both metrics walk the BVH4 lane boxes: every *used* lane corresponds to
+//! one materialized binary node of the pre-collapse topology, so the sums
+//! track the classic binary formulations (minus the collapsed intermediate
+//! nodes, a uniform shift that preserves the build-quality ordering).
 
-use super::Bvh;
+use super::{Bvh, BVH4_WIDTH};
 
 /// Expected traversal cost under the Surface Area Heuristic:
-/// `C = Ct * Σ_internal SA(n)/SA(root) + Ci * Σ_leaf SA(l)/SA(root) * count(l)`.
+/// `C = Ct * Σ_internal SA(lane)/SA(root) + Ci * Σ_leaf SA(lane)/SA(root) * count(lane)`.
 pub fn sah_cost(bvh: &Bvh) -> f64 {
-    let root_sa = bvh.nodes[0].aabb.surface_area() as f64;
+    let root_sa = bvh.root_aabb().surface_area() as f64;
     if root_sa <= 0.0 {
         return 0.0;
     }
     let mut cost = 0.0;
     for n in &bvh.nodes {
-        let sa = n.aabb.surface_area() as f64 / root_sa;
-        if n.is_leaf() {
-            cost += sa * n.count as f64;
-        } else {
-            cost += sa;
+        for lane in 0..BVH4_WIDTH {
+            if !n.lane_used(lane) {
+                continue;
+            }
+            let sa = n.lane_aabb(lane).surface_area() as f64 / root_sa;
+            if n.lane_is_leaf(lane) {
+                cost += sa * n.count[lane] as f64;
+            } else {
+                cost += sa;
+            }
         }
     }
     cost
 }
 
-/// Sum of child-overlap surface areas normalized by the root — grows as
-/// refits accumulate and sibling boxes start intersecting.
+/// Sum of pairwise lane-overlap surface areas normalized by the root —
+/// grows as refits accumulate and sibling boxes start intersecting.
 pub fn overlap_metric(bvh: &Bvh) -> f64 {
-    let root_sa = bvh.nodes[0].aabb.surface_area() as f64;
+    let root_sa = bvh.root_aabb().surface_area() as f64;
     if root_sa <= 0.0 {
         return 0.0;
     }
     let mut total = 0.0;
     for n in &bvh.nodes {
-        if n.is_leaf() {
-            continue;
-        }
-        let a = bvh.nodes[n.left_first as usize].aabb;
-        let b = bvh.nodes[n.left_first as usize + 1].aabb;
-        let lo = a.lo.max(b.lo);
-        let hi = a.hi.min(b.hi);
-        let d = hi - lo;
-        if d.x > 0.0 && d.y > 0.0 && d.z > 0.0 {
-            total += 2.0 * (d.x * d.y + d.y * d.z + d.z * d.x) as f64 / root_sa;
+        for a in 0..BVH4_WIDTH {
+            if !n.lane_used(a) {
+                continue;
+            }
+            let ba = n.lane_aabb(a);
+            for b in (a + 1)..BVH4_WIDTH {
+                if !n.lane_used(b) {
+                    continue;
+                }
+                let bb = n.lane_aabb(b);
+                let lo = ba.lo.max(bb.lo);
+                let hi = ba.hi.min(bb.hi);
+                let d = hi - lo;
+                if d.x > 0.0 && d.y > 0.0 && d.z > 0.0 {
+                    total += 2.0 * (d.x * d.y + d.y * d.z + d.z * d.x) as f64 / root_sa;
+                }
+            }
         }
     }
     total
@@ -90,8 +107,15 @@ mod tests {
         let pos = vec![Vec3::ZERO; 2];
         let radius = vec![1.0f32; 2];
         let bvh = Bvh::build(&pos, &radius, BuildKind::Median);
-        // one leaf node, sa ratio 1, two prims
+        // one node with a single leaf lane, sa ratio 1, two prims
         assert!((sah_cost(&bvh) - 2.0).abs() < 1e-6);
+        assert_eq!(overlap_metric(&bvh), 0.0);
+    }
+
+    #[test]
+    fn empty_tree_costs_nothing() {
+        let bvh = Bvh::build(&[], &[], BuildKind::Median);
+        assert_eq!(sah_cost(&bvh), 0.0);
         assert_eq!(overlap_metric(&bvh), 0.0);
     }
 }

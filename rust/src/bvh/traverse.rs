@@ -1,41 +1,73 @@
-//! BVH traversal with exact operation counters — the simulated RT-core
+//! BVH4 traversal with exact operation counters — the simulated RT-core
 //! query, plus the batched traversal engine every RT backend routes through.
 //!
 //! The paper's FRNN scheme launches an *infinitesimal ray* at each particle
 //! position and collects sphere intersections (Fig. 1): geometrically this is
 //! a point query — `p_i` hits sphere `j` iff `|p_i - p_j| < r_j`. Traversal
 //! visits every node whose AABB contains the query point and tests spheres
-//! at the leaves. Counters mirror what RT silicon does per ray: box tests
-//! (RT-core units) and intersection-shader invocations (SM units).
+//! at the leaves.
+//!
+//! # The 4-wide hot loop and counter semantics
+//!
+//! Nodes are 4-wide SoA ([`crate::bvh::Bvh4Node`]): one traversal step
+//! loads a single 128-byte node and tests the query point against **all
+//! four child boxes** with branch-free per-axis array compares — the wide
+//! sweep RT silicon performs per node fetch. Counters mirror that:
+//!
+//! * `aabb_tests` — **one unit per 4-wide node test**, *not* per child box.
+//!   The [`crate::rtcore::timing`] model multiplies by
+//!   [`crate::bvh::BVH4_WIDTH`] to price the box units and charges one
+//!   (wider) node fetch per unit, so simulated GPU time stays calibrated
+//!   against the seed's binary-BVH traversal (see
+//!   `timing::BOX_TESTS_PER_AABB_UNIT`).
+//! * `sphere_tests` — intersection-shader invocations (unchanged).
+//! * `hits`, `rays` — unchanged.
+//!
+//! Lane hits are processed leaf-lanes-first; internal lanes are pushed onto
+//! the stack in reverse lane order so traversal order is deterministic
+//! (first hit lane is descended first).
 //!
 //! # The batched engine
 //!
 //! RT hardware gets its throughput from sweeping *batches* of coherent rays,
 //! not from one-at-a-time launches (RTNN, Zhu 2022). The CPU model mirrors
-//! that in two layers:
+//! that in three layers:
 //!
 //! * [`QueryScratch`] — per-worker reusable state (fixed traversal stack +
-//!   heap spill + gamma-origin buffer + stats accumulator), so a single ray
-//!   through [`Bvh::query_point`] touches **no allocator** in steady state;
-//! * [`Bvh::query_batch`] — sweeps a whole query set with thread-local
-//!   scratch and chunked work-stealing ([`crate::parallel`]), merging
-//!   [`TraversalStats`] once per worker instead of once per ray. Chunk
-//!   outputs come back in chunk order, so callers that fold them
+//!   heap spill + gamma-origin buffer + dedup buffer + stats accumulator),
+//!   so a single ray through [`Bvh::query_point`] touches **no allocator**
+//!   in steady state;
+//! * [`Bvh::query_batch`] — sweeps a query set in index order with
+//!   thread-local scratch and chunked work-stealing ([`crate::parallel`]),
+//!   merging [`TraversalStats`] once per worker instead of once per ray.
+//!   Chunk outputs come back in chunk order, so callers that fold them
 //!   sequentially stay bitwise deterministic under dynamic scheduling.
+//! * [`Bvh::query_batch_ordered`] — the RTNN-style coherence win: query
+//!   indices are sorted by the Z-order (Morton) key of their position (the
+//!   same `morton30` keys GPU-CELL computes) and swept in that order, so
+//!   consecutive rays traverse the same subtrees and the node working set
+//!   stays cache-resident. Chunks are slices of the *sorted* order; callers
+//!   scatter per-particle outputs back to particle order through the ids
+//!   each chunk reports — the merge stays chunk-ordered and therefore
+//!   bitwise deterministic across thread counts (the key sort itself is the
+//!   thread-count-independent `radix_sort_pairs_mt`).
 
-use super::Bvh;
+use super::{Bvh, BVH4_WIDTH};
 use crate::core::vec3::Vec3;
 
-/// Fixed traversal-stack depth. Tree height is ~log2(n/LEAF_SIZE) for sane
-/// builds; 96 covers every realistic scene, and deeper (degenerate-refit)
-/// trees spill to the scratch's heap vector.
+/// Fixed traversal-stack depth. A BVH4 step can push up to `BVH4_WIDTH`
+/// internal lanes (all four lanes of a node may be internal), i.e. net +3
+/// per level after the pop, and BFS depth is ~log4 of the node count for
+/// sane builds; 96 covers every realistic scene, and deeper
+/// (degenerate-refit) trees spill to the scratch's heap vector.
 const STACK_DEPTH: usize = 96;
 
 /// Per-query (or accumulated) traversal statistics. These feed
 /// [`crate::rtcore::timing`] to produce simulated GPU time.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct TraversalStats {
-    /// Ray–AABB tests executed (RT-core box units).
+    /// 4-wide node tests executed (one unit = one SoA node = `BVH4_WIDTH`
+    /// child-box tests on the RT-core box units; see module docs).
     pub aabb_tests: u64,
     /// Sphere (primitive) tests — intersection-shader invocations.
     pub sphere_tests: u64,
@@ -55,16 +87,25 @@ impl TraversalStats {
 }
 
 /// Reusable per-worker traversal state: fixed stack + spill vector + gamma
-/// origin buffer + stats accumulator. One ray performs zero heap
-/// allocations once the scratch is warm; allocations happen only at worker
-/// setup (and on first-ever spill/gamma growth, whose capacity is retained).
+/// origin buffer + dedup buffer + stats accumulator. One ray performs zero
+/// heap allocations once the scratch is warm; allocations happen only at
+/// worker setup (and on first-ever spill/gamma growth, whose capacity is
+/// retained).
 pub struct QueryScratch {
     stack: [u32; STACK_DEPTH],
+    /// Effective fixed-stack depth before spilling. Always `STACK_DEPTH` in
+    /// production; tests lower it (via [`QueryScratch::with_stack_limit`])
+    /// to exercise the spill path deterministically.
+    stack_limit: usize,
     spill: Vec<u32>,
     /// Gamma-ray origin buffer (periodic BC) — filled and drained by
     /// [`crate::frnn::rt_common::launch_rays`]; capacity retained across
     /// particles.
     pub gamma: Vec<Vec3>,
+    /// Hit-id dedup buffer for the large-radius periodic path
+    /// (`r_max > box_l / 2`, see `rt_common::launch_rays`); capacity
+    /// retained across particles.
+    pub hit_ids: Vec<u32>,
     /// Stats accumulated by every query through this scratch. Merge into
     /// step counters once per worker/chunk, not per ray.
     pub stats: TraversalStats,
@@ -74,10 +115,21 @@ impl QueryScratch {
     pub fn new() -> Self {
         QueryScratch {
             stack: [0; STACK_DEPTH],
+            stack_limit: STACK_DEPTH,
             spill: Vec::new(),
             gamma: Vec::new(),
+            hit_ids: Vec::new(),
             stats: TraversalStats::default(),
         }
+    }
+
+    /// A scratch whose fixed stack spills after `limit` entries — for tests
+    /// that exercise the heap-spill path on trees far shallower than
+    /// `STACK_DEPTH`. Results are identical to the default scratch.
+    pub fn with_stack_limit(limit: usize) -> Self {
+        let mut s = Self::new();
+        s.stack_limit = limit.min(STACK_DEPTH);
+        s
     }
 
     /// Extract and reset the accumulated stats.
@@ -111,24 +163,42 @@ impl Bvh {
         scratch: &mut QueryScratch,
         mut visit: F,
     ) {
-        let QueryScratch { stack, spill, stats, .. } = scratch;
+        let QueryScratch { stack, stack_limit, spill, stats, .. } = scratch;
+        let limit = *stack_limit;
         stats.rays += 1;
+        if self.nodes.is_empty() {
+            return;
+        }
         let mut sp = 0usize;
         debug_assert!(spill.is_empty());
 
         let mut current = 0u32;
         loop {
-            // SAFETY: `current` is always a node index produced by the
-            // builder (root 0, children `left_first`/`left_first+1` which
-            // `check_invariants` proves in-bounds); prim_order indices are
-            // a permutation of 0..n_prims. Skipping the bounds checks is
-            // worth ~8% on this hottest loop (EXPERIMENTS.md §Perf #6).
+            // SAFETY: `current` is always a node slot produced by the
+            // collapse (root 0, lane children which `check_invariants`
+            // proves in-bounds); prim_order indices are a permutation of
+            // 0..n_prims. Skipping the bounds checks is worth ~8% on this
+            // hottest loop (EXPERIMENTS.md §Perf #6).
             let node = unsafe { self.nodes.get_unchecked(current as usize) };
-            stats.aabb_tests += 1;
-            if node.aabb.contains(p) {
-                if node.is_leaf() {
-                    let first = node.left_first as usize;
-                    for k in first..first + node.count as usize {
+            stats.aabb_tests += 1; // one 4-wide SoA node test
+            let mut pending = [0u32; BVH4_WIDTH];
+            let mut n_pending = 0usize;
+            for lane in 0..BVH4_WIDTH {
+                // empty lanes carry +inf/-inf bounds and fail automatically;
+                // all-mins-then-all-maxs mirrors the SIMD compare grouping
+                let inside = p.x >= node.min_x[lane]
+                    && p.y >= node.min_y[lane]
+                    && p.z >= node.min_z[lane]
+                    && p.x <= node.max_x[lane]
+                    && p.y <= node.max_y[lane]
+                    && p.z <= node.max_z[lane];
+                if !inside {
+                    continue;
+                }
+                let cnt = node.count[lane];
+                if cnt > 0 {
+                    let first = node.child[lane] as usize;
+                    for k in first..first + cnt as usize {
                         let j = unsafe { *self.prim_order.get_unchecked(k) } as usize;
                         stats.sphere_tests += 1;
                         if j != exclude {
@@ -141,16 +211,17 @@ impl Bvh {
                         }
                     }
                 } else {
-                    // push right, descend left
-                    let l = node.left_first;
-                    if sp < STACK_DEPTH {
-                        stack[sp] = l + 1;
-                        sp += 1;
-                    } else {
-                        spill.push(l + 1);
-                    }
-                    current = l;
-                    continue;
+                    pending[n_pending] = node.child[lane];
+                    n_pending += 1;
+                }
+            }
+            // push in reverse so the first hit lane is descended first
+            for k in (0..n_pending).rev() {
+                if sp < limit {
+                    stack[sp] = pending[k];
+                    sp += 1;
+                } else {
+                    spill.push(pending[k]);
                 }
             }
             // pop
@@ -210,6 +281,57 @@ impl Bvh {
             block,
             || (init(), QueryScratch::new()),
             |state, range| body(&mut state.0, &mut state.1, range),
+        );
+        let mut stats = TraversalStats::default();
+        for (_, scratch) in &states {
+            stats.add(&scratch.stats);
+        }
+        (outs, stats)
+    }
+
+    /// Morton-ordered batched sweep — [`Bvh::query_batch`] with RTNN-style
+    /// query-coherence scheduling. Query indices `0..queries.len()` are
+    /// sorted by the 30-bit Z-order key of their position (scaled to
+    /// `box_l`, same encoding GPU-CELL uses) and swept in that order, so
+    /// consecutive rays enter the same subtrees and node fetches stay hot
+    /// in cache. `body` receives each chunk as a slice of query ids (in
+    /// sorted order) and must key any per-particle output by those ids so
+    /// the caller can scatter results back to particle order.
+    ///
+    /// Determinism: the key sort (`radix_sort_pairs_mt`) and the chunk
+    /// partition are both thread-count independent, and chunk outputs
+    /// return in chunk order, so chunk-ordered merges downstream are
+    /// bitwise identical across `ORCS_THREADS` settings.
+    pub fn query_batch_ordered<A, O, I, F>(
+        &self,
+        queries: &[Vec3],
+        box_l: f32,
+        threads: usize,
+        init: I,
+        body: F,
+    ) -> (Vec<O>, TraversalStats)
+    where
+        A: Send,
+        O: Send,
+        I: Fn() -> A + Sync,
+        F: Fn(&mut A, &mut QueryScratch, &[u32]) -> O + Sync,
+    {
+        let n = queries.len();
+        let scale = if box_l > 0.0 { box_l } else { 1.0 };
+        let mut keys: Vec<u32> = crate::parallel::parallel_map(n, threads, |i| {
+            crate::frnn::gpu_cell::morton30(queries[i], scale)
+        });
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        crate::frnn::gpu_cell::radix_sort_pairs_mt(&mut keys, &mut order, threads);
+
+        let block = batch_block(n);
+        let order_ref: &[u32] = &order;
+        let (outs, states) = crate::parallel::parallel_chunk_map(
+            n,
+            threads,
+            block,
+            || (init(), QueryScratch::new()),
+            |state, range| body(&mut state.0, &mut state.1, &order_ref[range]),
         );
         let mut stats = TraversalStats::default();
         for (_, scratch) in &states {
@@ -346,6 +468,24 @@ mod tests {
     }
 
     #[test]
+    fn forced_stack_spill_matches_default() {
+        // a tiny stack limit routes every push through the spill vector;
+        // hit sets and visit order must be unchanged
+        let (pos, radius) = scene(2000, 29, 6.0);
+        for kind in [BuildKind::Median, BuildKind::BinnedSah, BuildKind::Lbvh] {
+            let bvh = Bvh::build(&pos, &radius, kind);
+            let mut plain = QueryScratch::new();
+            let mut spilly = QueryScratch::with_stack_limit(1);
+            for i in (0..pos.len()).step_by(11) {
+                let a = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut plain);
+                let b = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut spilly);
+                assert_eq!(a, b, "kind={kind:?} i={i}");
+            }
+            assert_eq!(plain.take_stats(), spilly.take_stats(), "kind={kind:?}");
+        }
+    }
+
+    #[test]
     fn batch_matches_per_point_queries() {
         let (pos, radius) = scene(700, 24, 7.0);
         for kind in [BuildKind::Median, BuildKind::BinnedSah, BuildKind::Lbvh] {
@@ -373,6 +513,54 @@ mod tests {
                 assert_eq!(batched, serial, "kind={kind:?} threads={threads}");
                 assert_eq!(stats, serial_stats, "kind={kind:?} threads={threads}");
             }
+        }
+    }
+
+    #[test]
+    fn ordered_batch_covers_all_queries_once_and_matches() {
+        let (pos, radius) = scene(900, 25, 7.0);
+        let bvh = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
+        // per-point reference in particle order
+        let mut scratch = QueryScratch::new();
+        let want: Vec<Vec<usize>> = (0..pos.len())
+            .map(|i| {
+                let mut v = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut scratch);
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        let want_stats = scratch.take_stats();
+        for threads in [1, 3, 8] {
+            let (chunks, stats) = bvh.query_batch_ordered(
+                &pos,
+                100.0,
+                threads,
+                || (),
+                |_, scratch, ids| {
+                    ids.iter()
+                        .map(|&iu| {
+                            let i = iu as usize;
+                            let mut v =
+                                bvh.query_point_collect(pos[i], i, &pos, &radius, scratch);
+                            v.sort_unstable();
+                            (iu, v)
+                        })
+                        .collect::<Vec<_>>()
+                },
+            );
+            let mut got = vec![Vec::new(); pos.len()];
+            let mut filled = vec![false; pos.len()];
+            for (iu, v) in chunks.into_iter().flatten() {
+                assert!(!filled[iu as usize], "query {iu} swept twice");
+                filled[iu as usize] = true;
+                got[iu as usize] = v;
+            }
+            assert!(filled.iter().all(|&f| f), "some query was never swept");
+            for (i, g) in got.into_iter().enumerate() {
+                assert_eq!(g, want[i], "threads={threads} i={i}");
+            }
+            // totals are order-independent, so stats match the plain sweep
+            assert_eq!(stats, want_stats, "threads={threads}");
         }
     }
 }

@@ -59,13 +59,17 @@ impl Backend for OrcsForces {
         let action = self.mgr.prepare(&state.pos, &state.radius, &mut counts);
         wall.bvh = t0.elapsed().as_secs_f64();
 
-        // Phase 2: batched traversal with in-shader force scatter. Each
-        // worker scatters into a dense thread-local buffer (epoch-stamped
-        // so it re-zeroes lazily) and flushes the touched entries as a
-        // sparse per-chunk delta list; the deltas are applied in chunk
-        // order, so the reduction is bitwise deterministic regardless of
-        // which worker ran which chunk — the race-free substitute for the
-        // GPU's atomicAdd (DESIGN.md §Hardware-Adaptation).
+        // Phase 2: batched traversal with in-shader force scatter, swept in
+        // Morton order of the ray origins (coherent rays share subtrees, so
+        // BVH4 node fetches stay cache-hot — and the scatter buffer is
+        // touched in spatially-local runs too). Each worker scatters into a
+        // dense thread-local buffer (epoch-stamped so it re-zeroes lazily)
+        // and flushes the touched entries as a sparse per-chunk delta list;
+        // the deltas are applied in chunk order and the Morton permutation
+        // is thread-count independent, so the reduction is bitwise
+        // deterministic regardless of which worker ran which chunk — the
+        // race-free substitute for the GPU's atomicAdd (DESIGN.md
+        // §Hardware-Adaptation).
         let t1 = Instant::now();
         let bvh = self.mgr.bvh();
         let trigger = gamma_trigger(state);
@@ -80,8 +84,9 @@ impl Backend for OrcsForces {
             pairs: u64,
             evals: u64,
         }
-        let (chunks, stats) = bvh.query_batch(
-            n,
+        let (chunks, stats) = bvh.query_batch_ordered(
+            &state.pos,
+            state.box_l,
             ctx.threads,
             || Scatter {
                 buf: vec![Vec3::ZERO; n],
@@ -89,12 +94,13 @@ impl Backend for OrcsForces {
                 epoch: 0,
                 touched: Vec::new(),
             },
-            |sc, scratch, range| {
+            |sc, scratch, ids| {
                 sc.epoch += 1;
                 sc.touched.clear();
                 let mut pairs = 0u64;
                 let mut evals = 0u64;
-                for i in range {
+                for &iu in ids {
+                    let i = iu as usize;
                     let r_i = state.radius[i];
                     let (buf, stamp, touched) =
                         (&mut sc.buf, &mut sc.stamp, &mut sc.touched);

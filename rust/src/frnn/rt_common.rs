@@ -73,14 +73,31 @@ impl BvhManager {
 }
 
 /// One particle's ray set: primary origin plus gamma origins (periodic BC).
-/// Visits every sphere hit by any of the rays; `visit(j, dx)` receives the
+/// Visits every discovered sphere exactly once; `visit(j, dx)` receives the
 /// neighbor id and the displacement `origin - p_j` (which equals the
-/// minimum-image displacement for gamma hits).
+/// minimum-image displacement for gamma hits and, in the large-radius
+/// periodic regime below, is explicitly minimum-imaged).
 ///
-/// All per-ray state (traversal stack, gamma origins, stats) lives in the
-/// caller-owned [`QueryScratch`]: the hot loop performs no heap
-/// allocations once the scratch is warm. Batched sweeps get a per-worker
-/// scratch from [`Bvh::query_batch`]; one-off callers create their own.
+/// When a search radius exceeds `box_l / 2` (log-normal tails), the gamma
+/// machinery breaks down in two ways. A primary ray and a gamma ray can
+/// both hit the same sphere — `2 r_j > box_l` means both images of `j` are
+/// within reach — and the primary displacement `p - p_j` need not be the
+/// minimum image, so emitting both would double the pair's LJ contribution
+/// (one of them with the wrong image). And with *variable* radii, the
+/// one-shift-per-axis gamma origins are no longer complete: a particle in
+/// the band where both walls are within the trigger gets only the `+L`
+/// shift, yet a smaller sphere on the `-L` side can satisfy
+/// `|d_min| < r_j <= |p - p_j|` and is then never discovered. In that
+/// regime (`gamma_trigger > box_l / 2`, conservative since the trigger is
+/// `r_max`) rays are launched from **all 26 non-zero image offsets** in
+/// `{-L, 0, +L}³`, hits are deduplicated per neighbor, and each neighbor is
+/// emitted once with the minimum-image displacement.
+///
+/// All per-ray state (traversal stack, gamma origins, dedup buffer, stats)
+/// lives in the caller-owned [`QueryScratch`]: the hot loop performs no
+/// heap allocations once the scratch is warm. Batched sweeps get a
+/// per-worker scratch from [`Bvh::query_batch`] /
+/// [`Bvh::query_batch_ordered`]; one-off callers create their own.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 pub fn launch_rays<F: FnMut(usize, Vec3)>(
@@ -95,6 +112,41 @@ pub fn launch_rays<F: FnMut(usize, Vec3)>(
     mut visit: F,
 ) {
     let p = pos[i];
+    if boundary == Boundary::Periodic && gamma_trigger > 0.5 * box_l {
+        // Large-radius periodic regime: dedup + min-image (see docs above).
+        // Below the threshold a sphere is strictly smaller than the box
+        // half-width, so at most one ray origin can be inside it and every
+        // emitted displacement is already the minimum image — the fast
+        // paths below stay exact.
+        let mut hits = std::mem::take(&mut scratch.hit_ids);
+        debug_assert!(hits.is_empty());
+        bvh.query_point(p, i, pos, radius, scratch, |j| hits.push(j as u32));
+        let mut gamma = std::mem::take(&mut scratch.gamma);
+        gamma.clear();
+        for sx in [-box_l, 0.0, box_l] {
+            for sy in [-box_l, 0.0, box_l] {
+                for sz in [-box_l, 0.0, box_l] {
+                    if sx == 0.0 && sy == 0.0 && sz == 0.0 {
+                        continue;
+                    }
+                    gamma.push(p + Vec3::new(sx, sy, sz));
+                }
+            }
+        }
+        for &o in &gamma {
+            bvh.query_point(o, i, pos, radius, scratch, |j| hits.push(j as u32));
+        }
+        scratch.gamma = gamma;
+        hits.sort_unstable();
+        hits.dedup();
+        for &ju in &hits {
+            let j = ju as usize;
+            visit(j, (p - pos[j]).min_image(box_l));
+        }
+        hits.clear();
+        scratch.hit_ids = hits;
+        return;
+    }
     bvh.query_point(p, i, pos, radius, scratch, |j| {
         visit(j, p - pos[j]);
     });
@@ -212,6 +264,71 @@ mod tests {
         assert_eq!(j, 1);
         // min image of (1 - 99) across 100 is +2
         assert!((dx.x - 2.0).abs() < 1e-5, "dx={dx:?}");
+    }
+
+    #[test]
+    fn periodic_large_radius_dedups_and_min_images() {
+        // Regression for the r > box_l / 2 double-hit bug: particle 0 at
+        // x=1 and particle 1 at x=9 in a 10-box with radius 9. The primary
+        // ray hits sphere 1 directly (|p0 - p1| = 8 < 9, displacement -8 —
+        // NOT the minimum image) and the gamma_x ray at x=11 hits the same
+        // sphere (|11 - 9| = 2 < 9). Pre-fix, `visit` fired twice for j=1
+        // (once with the wrong image); post-fix it fires exactly once with
+        // the minimum-image displacement +2.
+        let box_l = 10.0;
+        let pos = vec![Vec3::new(1.0, 5.0, 5.0), Vec3::new(9.0, 5.0, 5.0)];
+        let radius = vec![9.0f32, 9.0];
+        let bvh = crate::bvh::Bvh::build(&pos, &radius, crate::bvh::BuildKind::BinnedSah);
+        let mut scratch = QueryScratch::new();
+        let mut seen = Vec::new();
+        launch_rays(
+            &bvh,
+            0,
+            &pos,
+            &radius,
+            Boundary::Periodic,
+            box_l,
+            9.0,
+            &mut scratch,
+            |j, dx| seen.push((j, dx)),
+        );
+        assert_eq!(seen.len(), 1, "duplicate periodic hits: {seen:?}");
+        let (j, dx) = seen[0];
+        assert_eq!(j, 1);
+        assert!(
+            (dx.x - 2.0).abs() < 1e-5 && dx.y.abs() < 1e-5 && dx.z.abs() < 1e-5,
+            "displacement {dx:?} is not the minimum image"
+        );
+        // forces built from the ray set must now match the brute-force
+        // min-image oracle in this regime
+        let params = crate::physics::lj::LjParams::default();
+        let want = brute::forces_raw(&pos, &radius, &params, Boundary::Periodic, box_l);
+        let mut got = vec![Vec3::ZERO; 2];
+        for i in 0..2 {
+            launch_rays(
+                &bvh,
+                i,
+                &pos,
+                &radius,
+                Boundary::Periodic,
+                box_l,
+                9.0,
+                &mut scratch,
+                |j, dx| {
+                    if let Some(fij) = params.pair_force(dx, radius[i], radius[j]) {
+                        got[i] += fij;
+                    }
+                },
+            );
+        }
+        for i in 0..2 {
+            assert!(
+                (got[i] - want[i]).norm() <= 1e-4 * want[i].norm().max(1.0),
+                "particle {i}: got {:?} want {:?}",
+                got[i],
+                want[i]
+            );
+        }
     }
 
     #[test]

@@ -52,35 +52,41 @@ impl Backend for RtRef {
         let action = self.mgr.prepare(&state.pos, &state.radius, &mut counts);
         wall.bvh = t0.elapsed().as_secs_f64();
 
-        // Phase 2: batched ray traversal. Each chunk emits a flat
-        // (per-particle count, item) stream plus its cross-inserts; the CSR
-        // lists are then assembled directly with a count-then-fill two-pass
-        // — no per-particle Vec, no intermediate Vec<Vec<u32>>.
+        // Phase 2: batched ray traversal, swept in Morton order of the
+        // query positions (RTNN-style coherence: consecutive rays enter the
+        // same subtrees, so BVH4 node fetches stay cache-hot). Each chunk
+        // emits its particle ids plus a flat (per-particle count, item)
+        // stream and its cross-inserts; the CSR lists are then assembled
+        // directly with a count-then-fill two-pass keyed by those ids — no
+        // per-particle Vec, no intermediate Vec<Vec<u32>>, and the scatter
+        // lands results back in particle order.
         let t1 = Instant::now();
         let bvh = self.mgr.bvh();
         let trigger = gamma_trigger(state);
         struct ChunkOut {
-            /// First particle index of the chunk.
-            lo: usize,
-            /// Per-particle hit counts, chunk-relative.
+            /// Particle ids swept by this chunk (Morton order).
+            ids: Vec<u32>,
+            /// Per-particle hit counts, parallel to `ids`.
             lens: Vec<u32>,
             /// Flat neighbor ids in discovery order.
             items: Vec<u32>,
             /// (dst list, inserted id) — atomic appends on real hardware.
             cross: Vec<(u32, u32)>,
         }
-        let (chunks, stats) = bvh.query_batch(
-            n,
+        let (chunks, stats) = bvh.query_batch_ordered(
+            &state.pos,
+            state.box_l,
             ctx.threads,
             || (),
-            |_, scratch, range| {
+            |_, scratch, ids| {
                 let mut out = ChunkOut {
-                    lo: range.start,
-                    lens: Vec::with_capacity(range.len()),
+                    ids: ids.to_vec(),
+                    lens: Vec::with_capacity(ids.len()),
                     items: Vec::new(),
                     cross: Vec::new(),
                 };
-                for i in range {
+                for &iu in ids {
+                    let i = iu as usize;
                     let before = out.items.len();
                     let r_i = state.radius[i];
                     launch_rays(
@@ -96,7 +102,7 @@ impl Backend for RtRef {
                             out.items.push(j as u32);
                             // cross-insert when j's ray cannot see i
                             if dx.norm2() >= r_i * r_i {
-                                out.cross.push((j as u32, i as u32));
+                                out.cross.push((j as u32, iu));
                             }
                         },
                     );
@@ -108,12 +114,19 @@ impl Backend for RtRef {
         fold_stats(&mut counts, &stats);
 
         // Pass 1: per-particle totals (ray hits + incoming cross-inserts).
+        // All direct lens are assigned before any cross increment: a
+        // cross-insert may target a particle swept by a *later* chunk, and
+        // interleaving would let that chunk's plain assignment clobber the
+        // already-reserved extra slot (shortening the offsets array and
+        // corrupting the pass-2 scatter).
         let mut lens = vec![0u32; n];
-        let mut cross_inserts = 0u64;
         for c in &chunks {
             for (k, &len) in c.lens.iter().enumerate() {
-                lens[c.lo + k] = len;
+                lens[c.ids[k] as usize] = len;
             }
+        }
+        let mut cross_inserts = 0u64;
+        for c in &chunks {
             for &(dst, _) in &c.cross {
                 lens[dst as usize] += 1;
                 cross_inserts += 1;
@@ -126,15 +139,16 @@ impl Backend for RtRef {
             total += len;
             offsets.push(total);
         }
-        // Pass 2: scatter items into place. Chunks are in chunk order, so
-        // the fill (and thus the physics downstream) is deterministic no
-        // matter which worker produced which chunk.
+        // Pass 2: scatter items into place. Chunks come back in chunk order
+        // and the Morton permutation is thread-count independent, so the
+        // fill (and thus the physics downstream) is deterministic no matter
+        // which worker produced which chunk or how many threads ran.
         let mut cursor: Vec<u32> = offsets[..n].to_vec();
         let mut items = vec![0u32; total as usize];
         for c in &chunks {
             let mut consumed = 0usize;
             for (k, &len) in c.lens.iter().enumerate() {
-                let i = c.lo + k;
+                let i = c.ids[k] as usize;
                 let dst = cursor[i] as usize;
                 items[dst..dst + len as usize]
                     .copy_from_slice(&c.items[consumed..consumed + len as usize]);
@@ -282,6 +296,60 @@ mod tests {
     }
 
     #[test]
+    fn csr_handles_empty_and_singleton_scenes() {
+        // n = 0 (used to panic in the BVH build) and n = 1 (no possible
+        // neighbor): the CSR assembly must produce the trivial offsets
+        // array and a fully-zero step without panicking.
+        for n in [0usize, 1] {
+            let cfg = SimConfig {
+                n,
+                boundary: Boundary::Wall,
+                radius_dist: RadiusDist::Const(5.0),
+                box_l: 100.0,
+                ..SimConfig::default()
+            };
+            let mut state = SimState::from_config(&cfg);
+            let kernels = RustKernels { threads: 2 };
+            let mut ctx =
+                StepCtx { threads: 2, kernels: &kernels, hw: &RTXPRO, check_oom: false };
+            let mut backend = RtRef::new(Box::new(FixedKPolicy::new(4)));
+            for _ in 0..3 {
+                let r = backend.step(&mut state, &mut ctx).unwrap();
+                assert_eq!(r.counts.nbr_list_writes, 0, "n={n}");
+                assert_eq!(r.counts.interactions, 0, "n={n}");
+                assert_eq!(r.counts.atomic_adds, 0, "n={n}");
+                assert!(r.oom_bytes.is_none());
+            }
+            assert!(state.is_finite());
+            assert_eq!(state.n(), n);
+        }
+    }
+
+    #[test]
+    fn csr_all_isolated_particles_produce_zero_lists() {
+        // Tiny radii on a sparse lattice: every neighbor list is empty, so
+        // the offsets array is all zeros and no items are written.
+        let cfg = SimConfig {
+            n: 64,
+            boundary: Boundary::Wall,
+            radius_dist: RadiusDist::Const(0.01),
+            box_l: 1000.0,
+            particle_dist: crate::core::config::ParticleDist::Lattice,
+            ..SimConfig::default()
+        };
+        let mut state = SimState::from_config(&cfg);
+        let kernels = RustKernels { threads: 2 };
+        let mut ctx = StepCtx { threads: 2, kernels: &kernels, hw: &RTXPRO, check_oom: false };
+        let mut backend = RtRef::new(Box::new(FixedKPolicy::new(4)));
+        let r = backend.step(&mut state, &mut ctx).unwrap();
+        assert_eq!(r.counts.nbr_list_writes, 0);
+        assert_eq!(r.counts.interactions, 0);
+        // forces over empty lists are exactly zero -> free flight
+        assert!(state.force.iter().all(|f| *f == crate::core::vec3::Vec3::ZERO));
+        assert!(state.is_finite());
+    }
+
+    #[test]
     fn interactions_counted_once_per_pair() {
         let (_, _, r) = run_one(200, Boundary::Periodic, RadiusDist::Const(10.0));
         let cfg = SimConfig {
@@ -292,7 +360,8 @@ mod tests {
             ..SimConfig::default()
         };
         let state = SimState::from_config(&cfg);
-        let want = brute::count_interactions(&state.pos, &state.radius, state.boundary, state.box_l);
+        let want =
+            brute::count_interactions(&state.pos, &state.radius, state.boundary, state.box_l);
         assert_eq!(r.counts.interactions, want);
     }
 }

@@ -46,6 +46,19 @@ where
     });
 }
 
+/// Like [`parallel_for_chunks`] but caps the worker count so every worker
+/// gets at least `min_grain` items. For sweeps whose per-item work is tiny
+/// (e.g. per-node BVH refit levels), spawning a thread for a handful of
+/// items costs more than it saves; this keeps small inputs on few threads
+/// while preserving the deterministic chunk partition of the capped count.
+pub fn parallel_for_chunks_grained<F>(n: usize, threads: usize, min_grain: usize, body: F)
+where
+    F: Fn(usize, std::ops::Range<usize>) + Sync,
+{
+    let cap = (n / min_grain.max(1)).max(1);
+    parallel_for_chunks(n, threads.min(cap), body);
+}
+
 /// Dynamic work-stealing variant: workers atomically grab blocks of
 /// `block` indices. Better for irregular per-item cost (clustered scenes,
 /// variable radii) where static chunking load-imbalances.
@@ -235,6 +248,21 @@ mod tests {
             }
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn grained_covers_all_indices_once_and_caps_workers() {
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        let max_tid = AtomicU64::new(0);
+        parallel_for_chunks_grained(100, 16, 50, |t, range| {
+            max_tid.fetch_max(t as u64, Ordering::Relaxed);
+            for i in range {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // 100 items / 50 grain -> at most 2 workers (thread ids 0 and 1)
+        assert!(max_tid.load(Ordering::Relaxed) <= 1);
     }
 
     #[test]

@@ -1,0 +1,256 @@
+//! Degenerate-geometry property tests for the BVH4 SoA path: coincident
+//! particles, fewer primitives than the node width, zero radii, empty
+//! scenes, refit-degraded trees queried through a forced traversal stack
+//! spill, and the periodic large-radius (`r > box_l / 2`) ray regime.
+//! Every case is anchored against the O(n²) oracle.
+
+use orcs::bvh::traverse::QueryScratch;
+use orcs::bvh::{BuildKind, Bvh, BVH4_WIDTH};
+use orcs::core::config::Boundary;
+use orcs::core::rng::Rng;
+use orcs::core::vec3::Vec3;
+use orcs::frnn::{brute, rt_common::launch_rays};
+use orcs::testutil::prop_check;
+
+fn brute(p: Vec3, exclude: usize, pos: &[Vec3], radius: &[f32]) -> Vec<usize> {
+    (0..pos.len())
+        .filter(|&j| j != exclude && (p - pos[j]).norm2() < radius[j] * radius[j])
+        .collect()
+}
+
+fn build_kind(rng: &mut Rng) -> BuildKind {
+    match rng.below(3) {
+        0 => BuildKind::Median,
+        1 => BuildKind::BinnedSah,
+        _ => BuildKind::Lbvh,
+    }
+}
+
+#[test]
+fn prop_all_coincident_particles() {
+    // every centroid identical: splits degenerate to forced half splits,
+    // and every query point is inside every lane box
+    prop_check("bvh4-coincident", 20, |rng| {
+        let n = 1 + rng.below(60);
+        let at = Vec3::new(
+            rng.range_f32(0.0, 50.0),
+            rng.range_f32(0.0, 50.0),
+            rng.range_f32(0.0, 50.0),
+        );
+        let pos = vec![at; n];
+        let radius: Vec<f32> = (0..n).map(|_| rng.range_f32(0.1, 5.0)).collect();
+        let kind = build_kind(rng);
+        let bvh = Bvh::build(&pos, &radius, kind);
+        bvh.check_invariants(&pos, &radius).map_err(|e| e.to_string())?;
+        let mut scratch = QueryScratch::new();
+        for i in 0..n {
+            let mut got = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut scratch);
+            got.sort_unstable();
+            if got != brute(pos[i], i, &pos, &radius) {
+                return Err(format!("{kind:?} coincident mismatch at {i} (n={n})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fewer_prims_than_node_width() {
+    // n < 4: the whole tree is a single node with one leaf lane
+    prop_check("bvh4-tiny-n", 30, |rng| {
+        let n = 1 + rng.below(BVH4_WIDTH - 1); // 1..=3
+        let pos: Vec<Vec3> = (0..n)
+            .map(|_| {
+                Vec3::new(
+                    rng.range_f32(0.0, 20.0),
+                    rng.range_f32(0.0, 20.0),
+                    rng.range_f32(0.0, 20.0),
+                )
+            })
+            .collect();
+        let radius: Vec<f32> = (0..n).map(|_| rng.range_f32(0.5, 10.0)).collect();
+        let kind = build_kind(rng);
+        let bvh = Bvh::build(&pos, &radius, kind);
+        bvh.check_invariants(&pos, &radius).map_err(|e| e.to_string())?;
+        if bvh.node_count() != 1 {
+            return Err(format!("n={n} built {} nodes", bvh.node_count()));
+        }
+        let mut scratch = QueryScratch::new();
+        // query from every particle and from an outside point
+        for i in 0..n {
+            let mut got = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut scratch);
+            got.sort_unstable();
+            if got != brute(pos[i], i, &pos, &radius) {
+                return Err(format!("{kind:?} tiny-n mismatch at {i}"));
+            }
+        }
+        let far = Vec3::splat(1000.0);
+        if !bvh.query_point_collect(far, usize::MAX, &pos, &radius, &mut scratch).is_empty() {
+            return Err("far point found phantom neighbors".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zero_radii_find_nothing() {
+    // r = 0 spheres contain no point (strict inequality), even their own
+    // center; the BVH must agree with the oracle everywhere
+    prop_check("bvh4-zero-radius", 15, |rng| {
+        let n = 5 + rng.below(100);
+        let pos: Vec<Vec3> = (0..n)
+            .map(|_| {
+                Vec3::new(
+                    rng.range_f32(0.0, 30.0),
+                    rng.range_f32(0.0, 30.0),
+                    rng.range_f32(0.0, 30.0),
+                )
+            })
+            .collect();
+        let radius = vec![0.0f32; n];
+        let kind = build_kind(rng);
+        let bvh = Bvh::build(&pos, &radius, kind);
+        bvh.check_invariants(&pos, &radius).map_err(|e| e.to_string())?;
+        let mut scratch = QueryScratch::new();
+        for i in 0..n {
+            let got = bvh.query_point_collect(pos[i], usize::MAX, &pos, &radius, &mut scratch);
+            if !got.is_empty() {
+                return Err(format!("zero radius produced hits {got:?} at {i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_refit_degraded_tree_with_forced_stack_spill() {
+    // long refit sequences inflate lane boxes (deep multi-lane descents);
+    // a stack limit of 1 routes nearly every push through the heap spill —
+    // results and stats must match the default scratch and the oracle
+    prop_check("bvh4-spill-after-refits", 10, |rng| {
+        let n = 200 + rng.below(600);
+        let mut pos: Vec<Vec3> = (0..n)
+            .map(|_| {
+                Vec3::new(
+                    rng.range_f32(0.0, 60.0),
+                    rng.range_f32(0.0, 60.0),
+                    rng.range_f32(0.0, 60.0),
+                )
+            })
+            .collect();
+        let radius: Vec<f32> = (0..n).map(|_| rng.range_f32(0.5, 8.0)).collect();
+        let kind = build_kind(rng);
+        let mut bvh = Bvh::build(&pos, &radius, kind);
+        for _ in 0..6 {
+            for p in pos.iter_mut() {
+                *p += Vec3::new(
+                    rng.range_f32(-4.0, 4.0),
+                    rng.range_f32(-4.0, 4.0),
+                    rng.range_f32(-4.0, 4.0),
+                );
+            }
+            bvh.refit(&pos, &radius);
+        }
+        bvh.check_invariants(&pos, &radius).map_err(|e| e.to_string())?;
+        let mut plain = QueryScratch::new();
+        let mut spilly = QueryScratch::with_stack_limit(1);
+        for i in 0..n {
+            let a = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut plain);
+            let b = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut spilly);
+            if a != b {
+                return Err(format!("{kind:?} spill diverged at {i}"));
+            }
+            let mut sorted = a;
+            sorted.sort_unstable();
+            if sorted != brute(pos[i], i, &pos, &radius) {
+                return Err(format!("{kind:?} degraded-tree mismatch at {i}"));
+            }
+        }
+        if plain.take_stats() != spilly.take_stats() {
+            return Err("spill changed traversal stats".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_periodic_large_radius_matches_min_image_oracle() {
+    // log-normal-tail regime: at least one search radius above box_l / 2.
+    // The pre-fix ray set double-counted neighbors (primary + gamma both
+    // hit) with non-min-image displacements and could miss neighbors
+    // outright (one-shift-per-axis gammas are incomplete here); post-fix,
+    // every particle's emissions must equal the brute min-image detection
+    // set exactly once each, with min-image displacements.
+    prop_check("periodic-large-radius-rays", 15, |rng| {
+        let box_l = rng.range_f32(8.0, 40.0);
+        let n = 2 + rng.below(20);
+        let pos: Vec<Vec3> = (0..n)
+            .map(|_| {
+                Vec3::new(
+                    rng.range_f32(0.0, box_l),
+                    rng.range_f32(0.0, box_l),
+                    rng.range_f32(0.0, box_l),
+                )
+            })
+            .collect();
+        let mut radius: Vec<f32> =
+            (0..n).map(|_| rng.range_f32(0.1 * box_l, 1.2 * box_l)).collect();
+        radius[0] = rng.range_f32(0.55 * box_l, 1.2 * box_l); // force the regime
+        let trigger = radius.iter().fold(0.0f32, |a, &r| a.max(r));
+        let kind = build_kind(rng);
+        let bvh = Bvh::build(&pos, &radius, kind);
+        let mut scratch = QueryScratch::new();
+        for i in 0..n {
+            let mut got: Vec<(usize, Vec3)> = Vec::new();
+            launch_rays(
+                &bvh,
+                i,
+                &pos,
+                &radius,
+                Boundary::Periodic,
+                box_l,
+                trigger,
+                &mut scratch,
+                |j, dx| got.push((j, dx)),
+            );
+            let ids: Vec<usize> = got.iter().map(|&(j, _)| j).collect();
+            let mut uniq = ids.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            if uniq.len() != ids.len() {
+                return Err(format!("{kind:?} particle {i}: duplicate emissions {ids:?}"));
+            }
+            let want =
+                brute::detection_neighbors(i, &pos, &radius, Boundary::Periodic, box_l);
+            if uniq != want {
+                return Err(format!(
+                    "{kind:?} particle {i}: ids {uniq:?} != oracle {want:?} \
+                     (box_l={box_l}, trigger={trigger})"
+                ));
+            }
+            for &(j, dx) in &got {
+                let dmin = (pos[i] - pos[j]).min_image(box_l);
+                if (dx - dmin).norm() > 1e-5 * box_l {
+                    return Err(format!(
+                        "{kind:?} pair ({i},{j}): dx {dx:?} is not min-image {dmin:?}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn empty_scene_queries_and_refits() {
+    let bvh = Bvh::build(&[], &[], BuildKind::Lbvh);
+    bvh.check_invariants(&[], &[]).unwrap();
+    let mut scratch = QueryScratch::new();
+    let got = bvh.query_point_collect(Vec3::ZERO, usize::MAX, &[], &[], &mut scratch);
+    assert!(got.is_empty());
+    assert_eq!(scratch.stats.rays, 1);
+    assert_eq!(scratch.stats.aabb_tests, 0);
+    let mut bvh = bvh;
+    bvh.refit(&[], &[]);
+    bvh.check_invariants(&[], &[]).unwrap();
+}

@@ -1,8 +1,10 @@
 //! Property tests for the batched traversal engine: `Bvh::query_batch`
-//! (with gamma rays under periodic BC) must return **bit-identical**
-//! neighbor streams and traversal stats to the per-point `query_point` /
-//! `launch_rays` path — across all three `BuildKind`s, after arbitrary
-//! refit sequences, and for any worker count.
+//! and the Morton-ordered `Bvh::query_batch_ordered` (with gamma rays
+//! under periodic BC) must return **bit-identical** neighbor streams and
+//! traversal stats to the per-point `query_point` / `launch_rays` path —
+//! across all three `BuildKind`s, after arbitrary refit sequences, and for
+//! any worker count — and the level-parallel refit must equal the serial
+//! sweep node-for-node.
 
 use orcs::bvh::traverse::QueryScratch;
 use orcs::bvh::{BuildKind, Bvh};
@@ -123,6 +125,131 @@ fn prop_query_batch_bit_identical_to_per_point() {
                 ));
             }
         }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_query_batch_ordered_bit_identical_to_per_point() {
+    // the Morton-ordered sweep must produce, per particle, exactly the
+    // per-point neighbor stream (ids and displacements bit-identical) for
+    // every thread count, with order-independent stats totals
+    prop_check("query-batch-ordered-vs-per-point", 20, |rng| {
+        let n = 30 + rng.below(250);
+        let box_l = 70.0;
+        let (mut pos, radius) = random_scene(rng, n, box_l, 12.0);
+        let kind = build_kind(rng);
+        let boundary =
+            if rng.f32() < 0.5 { Boundary::Wall } else { Boundary::Periodic };
+        let trigger = radius.iter().fold(0.0f32, |a, &r| a.max(r));
+
+        let mut bvh = Bvh::build(&pos, &radius, kind);
+        let refits = rng.below(4);
+        for _ in 0..refits {
+            for p in pos.iter_mut() {
+                *p += Vec3::new(
+                    rng.range_f32(-2.0, 2.0),
+                    rng.range_f32(-2.0, 2.0),
+                    rng.range_f32(-2.0, 2.0),
+                );
+            }
+            bvh.refit(&pos, &radius);
+        }
+
+        let (want, want_stats) =
+            per_point_lists(&bvh, &pos, &radius, boundary, box_l, trigger);
+
+        for threads in [1usize, 2, 5] {
+            let (chunks, stats) = bvh.query_batch_ordered(
+                &pos,
+                box_l,
+                threads,
+                || (),
+                |_, scratch, ids| {
+                    ids.iter()
+                        .map(|&iu| {
+                            let i = iu as usize;
+                            let mut list = Vec::new();
+                            launch_rays(
+                                &bvh,
+                                i,
+                                &pos,
+                                &radius,
+                                boundary,
+                                box_l,
+                                trigger,
+                                scratch,
+                                |j, dx| list.push((j as u32, dx)),
+                            );
+                            (iu, list)
+                        })
+                        .collect::<Vec<_>>()
+                },
+            );
+            // scatter back to particle order; every particle exactly once
+            let mut got = vec![Vec::new(); n];
+            let mut filled = vec![false; n];
+            for (iu, list) in chunks.into_iter().flatten() {
+                if filled[iu as usize] {
+                    return Err(format!(
+                        "{kind:?}/{boundary:?}/threads={threads}: particle {iu} swept twice"
+                    ));
+                }
+                filled[iu as usize] = true;
+                got[iu as usize] = list;
+            }
+            for (i, g) in got.into_iter().enumerate() {
+                if !filled[i] {
+                    return Err(format!(
+                        "{kind:?}/{boundary:?}/threads={threads}: particle {i} missed"
+                    ));
+                }
+                if g != want[i] {
+                    return Err(format!(
+                        "{kind:?}/{boundary:?}/refits={refits}/threads={threads}: \
+                         ordered stream differs from per-point at particle {i}"
+                    ));
+                }
+            }
+            if stats != want_stats {
+                return Err(format!(
+                    "{kind:?}/{boundary:?}/threads={threads}: stats {stats:?} != {want_stats:?}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_refit_equals_serial_node_for_node() {
+    // the level-partitioned refit must produce bit-identical lane boxes to
+    // the serial bottom-up sweep, for every build kind and thread count
+    prop_check("parallel-refit-vs-serial", 8, |rng| {
+        let n = 3000 + rng.below(4000);
+        let (mut pos, radius) = random_scene(rng, n, 90.0, 6.0);
+        let kind = build_kind(rng);
+        let base = Bvh::build_with_threads(&pos, &radius, kind, 1);
+        let mut serial = base.clone();
+        let mut par = base;
+        let threads = 2 + rng.below(7);
+        for round in 0..3 {
+            for p in pos.iter_mut() {
+                *p += Vec3::new(
+                    rng.range_f32(-2.0, 2.0),
+                    rng.range_f32(-2.0, 2.0),
+                    rng.range_f32(-2.0, 2.0),
+                );
+            }
+            serial.refit_with_threads(&pos, &radius, 1);
+            par.refit_with_threads(&pos, &radius, threads);
+            if serial.nodes != par.nodes {
+                return Err(format!(
+                    "{kind:?} threads={threads}: refit diverged at round {round}"
+                ));
+            }
+        }
+        par.check_invariants(&pos, &radius).map_err(|e| e.to_string())?;
         Ok(())
     });
 }
