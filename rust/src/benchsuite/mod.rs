@@ -8,4 +8,5 @@ pub mod fig11_12;
 pub mod fig13;
 pub mod fig8;
 pub mod fig9_10;
+pub mod sharded;
 pub mod table2;

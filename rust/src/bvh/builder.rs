@@ -107,6 +107,25 @@ impl Bvh {
         kind: BuildKind,
         threads: usize,
     ) -> Bvh {
+        Self::build_with_threads_ordered(pos, radius, kind, threads, None)
+    }
+
+    /// [`Bvh::build_with_threads`] with an optional precomputed Morton
+    /// permutation of `0..n` (the per-step Z-order cache,
+    /// [`crate::frnn::zorder::ZOrderCache`]). LBVH builds use it as the
+    /// primitive order directly, skipping the builder's own keying + radix
+    /// sort; the other kinds derive their order from splits and ignore it.
+    /// Box-space keys give a marginally coarser curve than the scene-AABB
+    /// normalization of the self-keying path on tightly clustered scenes,
+    /// but the tree is valid for any permutation and the build/quality
+    /// trade-off the ablation measures is unchanged.
+    pub fn build_with_threads_ordered(
+        pos: &[Vec3],
+        radius: &[f32],
+        kind: BuildKind,
+        threads: usize,
+        zorder: Option<&[u32]>,
+    ) -> Bvh {
         assert_eq!(pos.len(), radius.len());
         let n = pos.len();
         if n == 0 {
@@ -125,17 +144,24 @@ impl Bvh {
         let mut order: Vec<u32> = (0..n as u32).collect();
 
         if kind == BuildKind::Lbvh {
-            // Z-order the primitives once; range-midpoint splits below then
-            // approximate morton-prefix splits (HLBVH-style).
-            let bb = pos.iter().zip(radius).fold(Aabb::EMPTY, |mut a, (&p, &r)| {
-                a.grow(&Aabb::of_sphere(p, r));
-                a
-            });
-            let span = (bb.hi - bb.lo).max_component().max(1e-6);
-            let mut keys: Vec<u32> = parallel::parallel_map(n, threads, |i| {
-                crate::frnn::gpu_cell::morton30((pos[i] - bb.lo) * (1000.0 / span), 1000.0)
-            });
-            crate::frnn::gpu_cell::radix_sort_pairs_mt(&mut keys, &mut order, threads);
+            if let Some(z) = zorder {
+                // Reuse the step's cached Z-order permutation (one sort per
+                // step instead of one per phase).
+                assert_eq!(z.len(), n, "zorder permutation length mismatch");
+                order.copy_from_slice(z);
+            } else {
+                // Z-order the primitives once; range-midpoint splits below
+                // then approximate morton-prefix splits (HLBVH-style).
+                let bb = pos.iter().zip(radius).fold(Aabb::EMPTY, |mut a, (&p, &r)| {
+                    a.grow(&Aabb::of_sphere(p, r));
+                    a
+                });
+                let span = (bb.hi - bb.lo).max_component().max(1e-6);
+                let mut keys: Vec<u32> = parallel::parallel_map(n, threads, |i| {
+                    crate::frnn::gpu_cell::morton30((pos[i] - bb.lo) * (1000.0 / span), 1000.0)
+                });
+                crate::frnn::gpu_cell::radix_sort_pairs_mt(&mut keys, &mut order, threads);
+            }
         }
         let prim_bbs: Vec<Aabb> =
             parallel::parallel_map(n, threads, |i| Aabb::of_sphere(pos[i], radius[i]));
@@ -575,6 +601,31 @@ mod tests {
                 .filter(|&j| {
                     j != i && (pos[i] - pos[j]).norm2() < radius[j] * radius[j]
                 })
+                .collect();
+            assert_eq!(got, want, "i={i}");
+        }
+    }
+
+    #[test]
+    fn lbvh_with_supplied_zorder_is_valid_and_exact() {
+        // a box-space Z-order permutation (the per-step cache) must yield a
+        // valid tree whose queries match brute force, for serial + parallel
+        let (pos, radius) = scene(PARALLEL_BUILD_MIN + 500, 7);
+        let mut cache = crate::frnn::zorder::ZOrderCache::new();
+        cache.compute(&pos, 50.0, 4);
+        let serial =
+            Bvh::build_with_threads_ordered(&pos, &radius, BuildKind::Lbvh, 1, Some(cache.order()));
+        let par =
+            Bvh::build_with_threads_ordered(&pos, &radius, BuildKind::Lbvh, 8, Some(cache.order()));
+        serial.check_invariants(&pos, &radius).unwrap();
+        assert_eq!(serial.prim_order, par.prim_order);
+        assert_eq!(serial.level_starts, par.level_starts);
+        let mut scratch = crate::bvh::traverse::QueryScratch::new();
+        for i in (0..pos.len()).step_by(131) {
+            let mut got = serial.query_point_collect(pos[i], i, &pos, &radius, &mut scratch);
+            got.sort_unstable();
+            let want: Vec<usize> = (0..pos.len())
+                .filter(|&j| j != i && (pos[i] - pos[j]).norm2() < radius[j] * radius[j])
                 .collect();
             assert_eq!(got, want, "i={i}");
         }

@@ -323,15 +323,44 @@ impl Bvh {
         });
         let mut order: Vec<u32> = (0..n as u32).collect();
         crate::frnn::gpu_cell::radix_sort_pairs_mt(&mut keys, &mut order, threads);
+        self.query_batch_with_order(&order, threads, init, body)
+    }
 
+    /// [`Bvh::query_batch_ordered`] with a *caller-supplied* sweep
+    /// permutation — the reuse entry point for the per-step Z-order cache
+    /// ([`crate::frnn::zorder::ZOrderCache`]): RT backends key + sort once
+    /// per step and hand the same permutation to the LBVH build and this
+    /// sweep, instead of each phase re-sorting. `order` may be any
+    /// permutation of query ids (chunks are slices of it, in order), though
+    /// only a spatially coherent one delivers the cache-locality win.
+    /// The caller owns the coverage contract: `order` must enumerate the
+    /// intended query set exactly once and be current for this step (a
+    /// stale cache after a particle-count change would silently drop or
+    /// misindex queries — backends recompute their [`ZOrderCache`] at the
+    /// top of every step and debug-assert the length).
+    ///
+    /// [`ZOrderCache`]: crate::frnn::zorder::ZOrderCache
+    pub fn query_batch_with_order<A, O, I, F>(
+        &self,
+        order: &[u32],
+        threads: usize,
+        init: I,
+        body: F,
+    ) -> (Vec<O>, TraversalStats)
+    where
+        A: Send,
+        O: Send,
+        I: Fn() -> A + Sync,
+        F: Fn(&mut A, &mut QueryScratch, &[u32]) -> O + Sync,
+    {
+        let n = order.len();
         let block = batch_block(n);
-        let order_ref: &[u32] = &order;
         let (outs, states) = crate::parallel::parallel_chunk_map(
             n,
             threads,
             block,
             || (init(), QueryScratch::new()),
-            |state, range| body(&mut state.0, &mut state.1, &order_ref[range]),
+            |state, range| body(&mut state.0, &mut state.1, &order[range]),
         );
         let mut stats = TraversalStats::default();
         for (_, scratch) in &states {
@@ -514,6 +543,28 @@ mod tests {
                 assert_eq!(stats, serial_stats, "kind={kind:?} threads={threads}");
             }
         }
+    }
+
+    #[test]
+    fn cached_order_sweep_equals_self_sorting_sweep() {
+        // query_batch_with_order fed the per-step Z-order cache must chunk
+        // and sweep exactly like query_batch_ordered's own key + sort
+        let (pos, radius) = scene(800, 31, 6.0);
+        let bvh = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
+        let body = |_: &mut (), scratch: &mut QueryScratch, ids: &[u32]| {
+            ids.iter()
+                .map(|&iu| {
+                    let i = iu as usize;
+                    (iu, bvh.query_point_collect(pos[i], i, &pos, &radius, scratch))
+                })
+                .collect::<Vec<_>>()
+        };
+        let (want, want_stats) = bvh.query_batch_ordered(&pos, 100.0, 3, || (), body);
+        let mut cache = crate::frnn::zorder::ZOrderCache::new();
+        cache.compute(&pos, 100.0, 3);
+        let (got, got_stats) = bvh.query_batch_with_order(cache.order(), 3, || (), body);
+        assert_eq!(got, want);
+        assert_eq!(got_stats, want_stats);
     }
 
     #[test]

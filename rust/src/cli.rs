@@ -6,7 +6,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-use crate::core::config::{Boundary, ForcePath, ParticleDist, RadiusDist, SimConfig};
+use crate::core::config::{Boundary, ForcePath, ParticleDist, RadiusDist, ShardSpec, SimConfig};
 use crate::frnn::ApproachKind;
 use crate::rtcore::profile;
 use crate::rtcore::HwProfile;
@@ -115,6 +115,27 @@ impl Args {
                 .ok_or_else(|| anyhow::anyhow!("bad --hw {h} (titanrtx|a40|l40|rtxpro)")),
         }
     }
+
+    /// Sharded decomposition requested on the command line (`--shards S`).
+    pub fn shards(&self) -> Result<Option<ShardSpec>> {
+        match self.get("shards") {
+            None => Ok(None),
+            Some(v) => ShardSpec::parse(v)
+                .map(Some)
+                .ok_or_else(|| anyhow::anyhow!("bad --shards {v} (S or SxSxS, cubic)")),
+        }
+    }
+
+    /// Heterogeneous device fleet (`--fleet titanrtx,l40`), bound
+    /// round-robin across the shards.
+    pub fn fleet(&self) -> Result<Option<Vec<&'static HwProfile>>> {
+        match self.get("fleet") {
+            None => Ok(None),
+            Some(v) => crate::rtcore::fleet::parse_fleet(v)
+                .map(Some)
+                .ok_or_else(|| anyhow::anyhow!("bad --fleet {v} (titanrtx|a40|l40|rtxpro)")),
+        }
+    }
 }
 
 pub const USAGE: &str = "\
@@ -124,6 +145,7 @@ USAGE:
   orcs simulate   [scenario flags] [--approach A] [--steps N]
                   [--policy gradient|gradient-ee|avg|fixed-K]
                   [--force-path xla|rust] [--hw GPU] [--trace out.csv]
+                  [--shards S [--fleet GPU[,GPU...]]]
   orcs bench-fig8        regenerate Fig. 8 (BVH policies time series)
   orcs bench-table2      regenerate Table 2 (avg ms/step grid)
   orcs bench-fig9        regenerate Fig. 9 (speedup, wall BC)
@@ -131,6 +153,8 @@ USAGE:
   orcs bench-fig11       regenerate Fig. 11 (power time series)
   orcs bench-fig12       regenerate Fig. 12 (energy efficiency)
   orcs bench-fig13       regenerate Fig. 13 (GPU-generation scaling)
+  orcs bench-sharded     sharded-scaling table (per-shard BVH policies,
+                         OOM relief, heterogeneous fleet)
   orcs inspect-artifacts print the loaded PJRT artifact set
 
 Scenario flags:
@@ -141,6 +165,9 @@ Scenario flags:
   --box L              box side                   (default 1000)
   --dt DT              time step                  (default 1e-3)
   --seed S             RNG seed
+Sharding flags:
+  --shards S           decompose into an SxSxS shard grid (sharded engine)
+  --fleet L            comma-separated GPU list bound round-robin to shards
 Bench flags:
   --scale F            shrink paper sizes by F (default per-bench)
   --steps N            step count override
@@ -192,5 +219,16 @@ mod tests {
         assert_eq!(parse(&["x"]).hw().unwrap().name, "RTXPRO");
         assert_eq!(parse(&["x", "--hw", "l40"]).hw().unwrap().name, "L40");
         assert!(parse(&["x", "--hw", "h100"]).hw().is_err());
+    }
+
+    #[test]
+    fn sharding_flags() {
+        assert_eq!(parse(&["x"]).shards().unwrap(), None);
+        assert_eq!(parse(&["x", "--shards", "2"]).shards().unwrap(), Some(ShardSpec::new(2)));
+        assert!(parse(&["x", "--shards", "2x2x3"]).shards().is_err());
+        assert!(parse(&["x"]).fleet().unwrap().is_none());
+        let f = parse(&["x", "--fleet", "titanrtx,l40"]).fleet().unwrap().unwrap();
+        assert_eq!(f.len(), 2);
+        assert!(parse(&["x", "--fleet", "h100"]).fleet().is_err());
     }
 }

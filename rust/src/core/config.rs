@@ -138,6 +138,55 @@ impl fmt::Display for Boundary {
     }
 }
 
+/// Sharded domain decomposition spec: the box splits into an `s × s × s`
+/// grid of equal subdomains, each stepped as its own device with a private
+/// BVH and rebuild-policy instance (see [`crate::shard`]). `s = 1` is the
+/// degenerate single-shard decomposition (one subdomain covering the box,
+/// still exercising the halo/ghost machinery).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Subdomains per axis.
+    pub s: usize,
+}
+
+impl ShardSpec {
+    pub fn new(s: usize) -> Self {
+        ShardSpec { s: s.max(1) }
+    }
+
+    /// Total shard count, `s³`.
+    pub fn count(&self) -> usize {
+        self.s * self.s * self.s
+    }
+
+    /// Parse `"2"` (or `"2x2x2"`) into a spec. Only cubic grids are
+    /// supported; a mismatched `AxBxC` form is rejected.
+    pub fn parse(spec: &str) -> Option<Self> {
+        let spec = spec.trim().to_ascii_lowercase();
+        if let Some((a, rest)) = spec.split_once('x') {
+            let (b, c) = rest.split_once('x')?;
+            let (a, b, c): (usize, usize, usize) =
+                (a.parse().ok()?, b.parse().ok()?, c.parse().ok()?);
+            if a != b || b != c || a == 0 {
+                return None;
+            }
+            return Some(ShardSpec::new(a));
+        }
+        let s: usize = spec.parse().ok()?;
+        if s == 0 {
+            None
+        } else {
+            Some(ShardSpec::new(s))
+        }
+    }
+}
+
+impl fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{0}x{0}x{0}", self.s)
+    }
+}
+
 /// Which physics-kernel path the coordinator uses for gather-style force
 /// evaluation (RT-REF) and integration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -241,6 +290,17 @@ mod tests {
         assert_eq!(set[1], RadiusDist::Const(160.0));
         assert!(set[0].is_uniform_radius());
         assert!(!set[2].is_uniform_radius());
+    }
+
+    #[test]
+    fn shard_spec_parses_and_counts() {
+        assert_eq!(ShardSpec::parse("2"), Some(ShardSpec::new(2)));
+        assert_eq!(ShardSpec::parse("3x3x3"), Some(ShardSpec::new(3)));
+        assert_eq!(ShardSpec::parse("2x2x3"), None);
+        assert_eq!(ShardSpec::parse("0"), None);
+        assert_eq!(ShardSpec::parse("blob"), None);
+        assert_eq!(ShardSpec::new(3).count(), 27);
+        assert_eq!(ShardSpec::new(2).to_string(), "2x2x2");
     }
 
     #[test]

@@ -129,19 +129,20 @@ pub fn radix_sort_pairs_mt(keys: &mut Vec<u32>, vals: &mut Vec<u32>, threads: us
 
 /// GPU-CELL backend.
 pub struct GpuCell {
-    /// Scratch reused across steps (device-resident buffers on real GPUs).
-    keys: Vec<u32>,
-    order: Vec<u32>,
+    /// Z-order scratch reused across steps (device-resident buffers on real
+    /// GPUs) — the same per-step Morton cache the RT backends use, so all
+    /// keying/sorting machinery is shared.
+    zcache: crate::frnn::zorder::ZOrderCache,
 }
 
 impl GpuCell {
     pub fn new() -> Self {
-        GpuCell { keys: Vec::new(), order: Vec::new() }
+        GpuCell { zcache: crate::frnn::zorder::ZOrderCache::new() }
     }
 
     /// The Z-order permutation computed for the current step (diagnostic).
     pub fn z_order(&self) -> &[u32] {
-        &self.order
+        self.zcache.order()
     }
 }
 
@@ -163,11 +164,7 @@ impl Backend for GpuCell {
 
         // Phase 1: Z-order radix sort (locality for the sweep).
         let t0 = Instant::now();
-        self.keys.clear();
-        self.keys.extend(state.pos.iter().map(|&p| morton30(p, state.box_l)));
-        self.order.clear();
-        self.order.extend(0..n as u32);
-        radix_sort_pairs_mt(&mut self.keys, &mut self.order, ctx.threads);
+        self.zcache.compute(&state.pos, state.box_l, ctx.threads);
         counts.sort_elems += n as u64;
 
         // Phase 2: grid build (dense or compact-hashed by resolution).

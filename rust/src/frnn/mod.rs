@@ -22,6 +22,7 @@ pub mod orcs_forces;
 pub mod orcs_perse;
 pub mod rt_common;
 pub mod rt_ref;
+pub mod zorder;
 
 use crate::core::vec3::Vec3;
 use crate::gradient::BvhAction;
@@ -65,6 +66,30 @@ impl NeighborLists {
     /// fixed-slot GPU allocation `n * k_max * 4` bytes).
     pub fn k_max(&self) -> usize {
         (0..self.n()).map(|i| self.neighbors(i).len()).max().unwrap_or(0)
+    }
+
+    /// Sort every per-particle segment ascending by neighbor id — the
+    /// *canonical* list order. Downstream force kernels sum contributions in
+    /// list order, so canonical ordering makes the f32 accumulation
+    /// independent of discovery order; it is what lets the sharded engine
+    /// ([`crate::shard`]) reproduce the single-domain forces bit for bit
+    /// (and it matches the ascending-id order of the brute-force oracle).
+    /// Segments are disjoint, so they sort in parallel.
+    pub fn sort_segments(&mut self, threads: usize) {
+        let n = self.n();
+        let offsets = &self.offsets;
+        let items_ptr = crate::parallel::SendPtr(self.items.as_mut_ptr());
+        crate::parallel::parallel_for_chunks_grained(n, threads, 512, |_, range| {
+            for i in range {
+                let lo = offsets[i] as usize;
+                let hi = offsets[i + 1] as usize;
+                // SAFETY: CSR segments are disjoint; each one is sorted by
+                // exactly one worker.
+                let seg =
+                    unsafe { std::slice::from_raw_parts_mut(items_ptr.0.add(lo), hi - lo) };
+                seg.sort_unstable();
+            }
+        });
     }
 }
 
@@ -274,6 +299,23 @@ mod tests {
         assert_eq!(nl.neighbors(1), &[] as &[u32]);
         assert_eq!(nl.neighbors(2), &[0, 1, 3]);
         assert_eq!(nl.total_entries(), 6);
+        assert_eq!(nl.k_max(), 3);
+    }
+
+    #[test]
+    fn sort_segments_canonicalizes_each_list() {
+        let lists = vec![vec![9u32, 1, 4], vec![], vec![7, 0], vec![3]];
+        let mut nl = NeighborLists::from_vecs(&lists);
+        for threads in [1, 4] {
+            let mut s = nl.clone();
+            s.sort_segments(threads);
+            assert_eq!(s.neighbors(0), &[1, 4, 9]);
+            assert_eq!(s.neighbors(1), &[] as &[u32]);
+            assert_eq!(s.neighbors(2), &[0, 7]);
+            assert_eq!(s.neighbors(3), &[3]);
+            assert_eq!(s.offsets, nl.offsets, "offsets untouched");
+        }
+        nl.sort_segments(2);
         assert_eq!(nl.k_max(), 3);
     }
 

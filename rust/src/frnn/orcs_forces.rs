@@ -19,6 +19,7 @@ use std::time::Instant;
 
 use crate::core::vec3::Vec3;
 use crate::frnn::rt_common::{fold_stats, gamma_trigger, launch_rays, BvhManager};
+use crate::frnn::zorder::ZOrderCache;
 use crate::frnn::{Backend, StepCtx, StepResult, WallPhases};
 use crate::gradient::RebuildPolicy;
 use crate::physics::state::SimState;
@@ -26,11 +27,13 @@ use crate::rtcore::OpCounts;
 
 pub struct OrcsForces {
     mgr: BvhManager,
+    /// Per-step Morton cache shared by LBVH builds and the query sweep.
+    zcache: ZOrderCache,
 }
 
 impl OrcsForces {
     pub fn new(policy: Box<dyn RebuildPolicy>) -> Self {
-        OrcsForces { mgr: BvhManager::new(policy) }
+        OrcsForces { mgr: BvhManager::new(policy), zcache: ZOrderCache::new() }
     }
 }
 
@@ -54,9 +57,23 @@ impl Backend for OrcsForces {
         let mut wall = WallPhases::default();
         let n = state.n();
 
+        // Phase 0: one Morton keying + sort per step (shared by build +
+        // sweep); wall time charged to the search phase below.
+        let t_sort = Instant::now();
+        self.zcache.compute(&state.pos, state.box_l, ctx.threads);
+        let sort_wall = t_sort.elapsed().as_secs_f64();
+        debug_assert_eq!(self.zcache.order().len(), n);
+
         // Phase 1: BVH maintenance.
         let t0 = Instant::now();
-        let action = self.mgr.prepare(&state.pos, &state.radius, &mut counts);
+        let action = self.mgr.prepare_with(
+            &state.pos,
+            &state.radius,
+            &mut counts,
+            ctx.threads,
+            false,
+            Some(self.zcache.order()),
+        );
         wall.bvh = t0.elapsed().as_secs_f64();
 
         // Phase 2: batched traversal with in-shader force scatter, swept in
@@ -84,9 +101,8 @@ impl Backend for OrcsForces {
             pairs: u64,
             evals: u64,
         }
-        let (chunks, stats) = bvh.query_batch_ordered(
-            &state.pos,
-            state.box_l,
+        let (chunks, stats) = bvh.query_batch_with_order(
+            self.zcache.order(),
             ctx.threads,
             || Scatter {
                 buf: vec![Vec3::ZERO; n],
@@ -163,7 +179,7 @@ impl Backend for OrcsForces {
         counts.isect_force_evals += evals;
         counts.atomic_adds += 2 * pairs; // both endpoints, atomically
         counts.interactions += pairs;
-        wall.search = t1.elapsed().as_secs_f64();
+        wall.search = sort_wall + t1.elapsed().as_secs_f64();
 
         // Phase 3: the one extra compute kernel — integration.
         let t2 = Instant::now();

@@ -15,6 +15,7 @@ use std::time::Instant;
 
 use crate::core::vec3::Vec3;
 use crate::frnn::rt_common::{fold_stats, launch_rays, BvhManager};
+use crate::frnn::zorder::ZOrderCache;
 use crate::frnn::{Backend, StepCtx, StepResult, WallPhases};
 use crate::gradient::RebuildPolicy;
 use crate::physics::{boundary, state::SimState};
@@ -22,11 +23,13 @@ use crate::rtcore::OpCounts;
 
 pub struct OrcsPerse {
     mgr: BvhManager,
+    /// Per-step Morton cache shared by LBVH builds and the query sweep.
+    zcache: ZOrderCache,
 }
 
 impl OrcsPerse {
     pub fn new(policy: Box<dyn RebuildPolicy>) -> Self {
-        OrcsPerse { mgr: BvhManager::new(policy) }
+        OrcsPerse { mgr: BvhManager::new(policy), zcache: ZOrderCache::new() }
     }
 }
 
@@ -48,9 +51,23 @@ impl Backend for OrcsPerse {
         let mut counts = OpCounts::default();
         let mut wall = WallPhases::default();
 
+        // Phase 0: one Morton keying + sort per step (shared by build +
+        // sweep); wall time charged to the search phase below.
+        let t_sort = Instant::now();
+        self.zcache.compute(&state.pos, state.box_l, ctx.threads);
+        let sort_wall = t_sort.elapsed().as_secs_f64();
+        debug_assert_eq!(self.zcache.order().len(), state.n());
+
         // Phase 1: BVH maintenance.
         let t0 = Instant::now();
-        let action = self.mgr.prepare(&state.pos, &state.radius, &mut counts);
+        let action = self.mgr.prepare_with(
+            &state.pos,
+            &state.radius,
+            &mut counts,
+            ctx.threads,
+            false,
+            Some(self.zcache.order()),
+        );
         wall.bvh = t0.elapsed().as_secs_f64();
 
         // Phase 2: the entire step inside the RT pipeline — batched sweep
@@ -73,9 +90,8 @@ impl Backend for OrcsPerse {
             moved: Vec<(Vec3, Vec3)>,
             accums: u64,
         }
-        let (chunks, stats) = bvh.query_batch_ordered(
-            &state.pos,
-            state.box_l,
+        let (chunks, stats) = bvh.query_batch_with_order(
+            self.zcache.order(),
             ctx.threads,
             || (),
             |_, scratch, ids| {
@@ -140,7 +156,7 @@ impl Backend for OrcsPerse {
         counts.isect_force_evals += accums;
         // uniform radius: detection symmetric, each pair seen twice
         counts.interactions += accums / 2;
-        wall.search = t1.elapsed().as_secs_f64();
+        wall.search = sort_wall + t1.elapsed().as_secs_f64();
 
         self.mgr.observe(action, &counts, ctx.hw);
         Ok(StepResult { counts, bvh_action: Some(action), oom_bytes: None, wall })

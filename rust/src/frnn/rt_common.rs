@@ -29,17 +29,53 @@ impl BvhManager {
         radius: &[f32],
         counts: &mut OpCounts,
     ) -> BvhAction {
-        let mut action = self.policy.decide();
+        self.prepare_with(pos, radius, counts, crate::parallel::num_threads(), false, None)
+    }
+
+    /// [`BvhManager::prepare`] with three extension points:
+    ///
+    /// * `threads` caps the build/refit worker count (the backends pass the
+    ///   step context's count so every phase honors the same setting);
+    /// * `force_build` overrides the policy with a build — the sharded
+    ///   engine forces one whenever a shard's membership (owned set + halo)
+    ///   churned, since a refit is only meaningful over an unchanged
+    ///   primitive set. The policy still observes the build afterwards, so
+    ///   its cost estimates stay live.
+    /// * `zorder` is the step's cached Morton permutation
+    ///   ([`crate::frnn::zorder::ZOrderCache`]), reused by LBVH builds
+    ///   instead of re-sorting.
+    pub fn prepare_with(
+        &mut self,
+        pos: &[Vec3],
+        radius: &[f32],
+        counts: &mut OpCounts,
+        threads: usize,
+        force_build: bool,
+        zorder: Option<&[u32]>,
+    ) -> BvhAction {
+        // Always consult the policy (its decide/observe cycle keeps
+        // internal counters live), then override when forced.
+        let decided = self.policy.decide();
+        let mut action = if force_build { BvhAction::Build } else { decided };
         if self.bvh.is_none() {
             action = BvhAction::Build; // nothing to refit yet
         }
         match action {
             BvhAction::Build => {
-                self.bvh = Some(Bvh::build(pos, radius, self.build_kind));
+                self.bvh = Some(Bvh::build_with_threads_ordered(
+                    pos,
+                    radius,
+                    self.build_kind,
+                    threads,
+                    zorder,
+                ));
                 counts.bvh_built_prims += pos.len() as u64;
             }
             BvhAction::Update => {
-                self.bvh.as_mut().expect("update before first build").refit(pos, radius);
+                self.bvh
+                    .as_mut()
+                    .expect("update before first build")
+                    .refit_with_threads(pos, radius, threads);
                 counts.bvh_refit_prims += pos.len() as u64;
             }
         }

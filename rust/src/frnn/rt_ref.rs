@@ -15,6 +15,7 @@
 use std::time::Instant;
 
 use crate::frnn::rt_common::{fold_stats, gamma_trigger, launch_rays, BvhManager};
+use crate::frnn::zorder::ZOrderCache;
 use crate::frnn::{Backend, NeighborLists, StepCtx, StepResult, WallPhases};
 use crate::gradient::RebuildPolicy;
 use crate::physics::state::SimState;
@@ -25,11 +26,14 @@ pub struct RtRef {
     /// Running worst-case list width (real implementations size the fixed
     /// allocation from it and must re-allocate upward).
     k_max_seen: usize,
+    /// Per-step Morton keys + permutation, shared by the LBVH build path
+    /// and the query sweep (one sort per step instead of one per phase).
+    zcache: ZOrderCache,
 }
 
 impl RtRef {
     pub fn new(policy: Box<dyn RebuildPolicy>) -> Self {
-        RtRef { mgr: BvhManager::new(policy), k_max_seen: 0 }
+        RtRef { mgr: BvhManager::new(policy), k_max_seen: 0, zcache: ZOrderCache::new() }
     }
 
     pub fn policy_name(&self) -> String {
@@ -47,9 +51,24 @@ impl Backend for RtRef {
         let mut wall = WallPhases::default();
         let n = state.n();
 
+        // Phase 0: one Morton keying + sort for the whole step, shared by
+        // the (LBVH) build and the query sweep below. Its wall time is
+        // charged to the search phase (it schedules the sweep).
+        let t_sort = Instant::now();
+        self.zcache.compute(&state.pos, state.box_l, ctx.threads);
+        let sort_wall = t_sort.elapsed().as_secs_f64();
+        debug_assert_eq!(self.zcache.order().len(), n);
+
         // Phase 1: BVH maintenance under the rebuild policy.
         let t0 = Instant::now();
-        let action = self.mgr.prepare(&state.pos, &state.radius, &mut counts);
+        let action = self.mgr.prepare_with(
+            &state.pos,
+            &state.radius,
+            &mut counts,
+            ctx.threads,
+            false,
+            Some(self.zcache.order()),
+        );
         wall.bvh = t0.elapsed().as_secs_f64();
 
         // Phase 2: batched ray traversal, swept in Morton order of the
@@ -73,9 +92,8 @@ impl Backend for RtRef {
             /// (dst list, inserted id) — atomic appends on real hardware.
             cross: Vec<(u32, u32)>,
         }
-        let (chunks, stats) = bvh.query_batch_ordered(
-            &state.pos,
-            state.box_l,
+        let (chunks, stats) = bvh.query_batch_with_order(
+            self.zcache.order(),
             ctx.threads,
             || (),
             |_, scratch, ids| {
@@ -132,13 +150,12 @@ impl Backend for RtRef {
                 cross_inserts += 1;
             }
         }
-        let mut offsets = Vec::with_capacity(n + 1);
-        let mut total = 0u32;
-        offsets.push(0u32);
-        for &len in &lens {
-            total += len;
-            offsets.push(total);
-        }
+        // Offsets via the three-phase parallel exclusive scan — the serial
+        // accumulation here was the next bottleneck at n = 1M (the two
+        // counting loops above touch only the sparse cross lists; this scan
+        // walks the full n-length array).
+        let offsets = crate::parallel::exclusive_scan_u32(&lens, ctx.threads);
+        let total = *offsets.last().unwrap();
         // Pass 2: scatter items into place. Chunks come back in chunk order
         // and the Morton permutation is thread-count independent, so the
         // fill (and thus the physics downstream) is deterministic no matter
@@ -163,7 +180,12 @@ impl Backend for RtRef {
                 cursor[d] += 1;
             }
         }
-        let nl = NeighborLists { offsets, items };
+        let mut nl = NeighborLists { offsets, items };
+        // Canonical ascending-id order per list: the force kernel sums
+        // contributions in list order, so this fixes the f32 accumulation
+        // order independently of ray discovery order — the invariant the
+        // sharded engine relies on to be bitwise identical to this path.
+        nl.sort_segments(ctx.threads);
         counts.nbr_list_writes += nl.total_entries() as u64;
         counts.atomic_adds += cross_inserts; // atomic appends on real hardware
         self.k_max_seen = self.k_max_seen.max(nl.k_max());
@@ -171,7 +193,7 @@ impl Backend for RtRef {
         counts.nbr_list_bytes_peak = list_bytes;
         // every interacting pair ends up in both endpoint lists exactly once
         counts.interactions += nl.total_entries() as u64 / 2;
-        wall.search = t1.elapsed().as_secs_f64();
+        wall.search = sort_wall + t1.elapsed().as_secs_f64();
 
         if ctx.check_oom && list_bytes > ctx.hw.vram_bytes {
             self.mgr.observe(action, &counts, ctx.hw);

@@ -1,0 +1,130 @@
+//! Per-step Z-order (Morton) cache — one keying + one sort per step,
+//! shared by every consumer (ROADMAP item "reuse per-step Morton keys").
+//!
+//! Three places used to compute the *same* 30-bit Morton permutation of the
+//! current particle positions independently, each with its own radix sort:
+//!
+//! * [`Bvh::query_batch_ordered`] — the RTNN-style coherent query schedule
+//!   (re-keyed and re-sorted every step by every RT backend);
+//! * LBVH builds — Z-order the primitives before midpoint splitting;
+//! * GPU-CELL — the pipeline's explicit Z-order sort phase.
+//!
+//! [`ZOrderCache`] computes the keys and the sorted permutation once per
+//! step into reusable buffers; the RT backends hand the permutation to both
+//! the BVH build ([`crate::bvh::Bvh::build_with_threads_ordered`]) and the
+//! query sweep ([`Bvh::query_batch_with_order`]), collapsing the previous
+//! two sorts per RT step into one. GPU-CELL routes its (priced) sort phase
+//! through the same cache, so all Morton machinery lives in one place.
+//!
+//! Determinism: keying is pure per-index and the sort is the
+//! thread-count-independent [`radix_sort_pairs_mt`], so the permutation is
+//! bit-identical across `ORCS_THREADS` settings — every chunk-ordered merge
+//! scheduled by it stays bitwise deterministic.
+//!
+//! [`Bvh::query_batch_ordered`]: crate::bvh::Bvh::query_batch_ordered
+//! [`Bvh::query_batch_with_order`]: crate::bvh::Bvh::query_batch_with_order
+//! [`Bvh::build_with_threads_ordered`]: crate::bvh::Bvh::build_with_threads_ordered
+
+use crate::core::vec3::Vec3;
+use crate::frnn::gpu_cell::{morton30, radix_sort_pairs_mt};
+
+/// Reusable per-step Morton keys + sorted query permutation.
+#[derive(Default)]
+pub struct ZOrderCache {
+    /// Morton keys, sorted ascending after [`ZOrderCache::compute`]
+    /// (parallel to `order`).
+    keys: Vec<u32>,
+    /// Particle ids permuted into Z-order.
+    order: Vec<u32>,
+}
+
+impl ZOrderCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Recompute keys and the sorted permutation for the current positions.
+    /// Buffers are reused across steps — no steady-state allocation, and the
+    /// keys are written straight into spare capacity (no dead zero-fill
+    /// before the parallel pass overwrites every slot).
+    pub fn compute(&mut self, pos: &[Vec3], box_l: f32, threads: usize) {
+        let n = pos.len();
+        let scale = if box_l > 0.0 { box_l } else { 1.0 };
+        self.keys.clear();
+        self.keys.reserve(n);
+        {
+            let keys_ptr =
+                crate::parallel::SendPtr(self.keys.spare_capacity_mut().as_mut_ptr() as *mut u32);
+            crate::parallel::parallel_for_chunks(n, threads, |_, range| {
+                for i in range {
+                    // SAFETY: chunks are disjoint; each key written once, so
+                    // every slot in 0..n is initialized exactly once.
+                    unsafe { keys_ptr.0.add(i).write(morton30(pos[i], scale)) };
+                }
+            });
+        }
+        // SAFETY: the parallel pass initialized every slot in 0..n.
+        unsafe { self.keys.set_len(n) };
+        self.order.clear();
+        self.order.extend(0..n as u32);
+        radix_sort_pairs_mt(&mut self.keys, &mut self.order, threads);
+    }
+
+    /// The Z-order permutation of the last [`ZOrderCache::compute`].
+    pub fn order(&self) -> &[u32] {
+        &self.order
+    }
+
+    /// The sorted Morton keys of the last [`ZOrderCache::compute`].
+    pub fn keys(&self) -> &[u32] {
+        &self.keys
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::rng::Rng;
+
+    fn scene(n: usize, seed: u64) -> Vec<Vec3> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                Vec3::new(
+                    rng.range_f32(0.0, 100.0),
+                    rng.range_f32(0.0, 100.0),
+                    rng.range_f32(0.0, 100.0),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cache_matches_direct_key_sort_for_any_thread_count() {
+        let pos = scene(3000, 41);
+        let mut want_keys: Vec<u32> = pos.iter().map(|&p| morton30(p, 100.0)).collect();
+        let mut want_order: Vec<u32> = (0..3000).collect();
+        crate::frnn::gpu_cell::radix_sort_pairs(&mut want_keys, &mut want_order);
+        let mut cache = ZOrderCache::new();
+        for threads in [1, 3, 8] {
+            cache.compute(&pos, 100.0, threads);
+            assert_eq!(cache.keys(), &want_keys[..], "threads={threads}");
+            assert_eq!(cache.order(), &want_order[..], "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn cache_reuses_buffers_across_steps() {
+        let mut cache = ZOrderCache::new();
+        let pos = scene(500, 42);
+        cache.compute(&pos, 100.0, 2);
+        assert_eq!(cache.order().len(), 500);
+        // shrink: a smaller step must not carry stale tail entries
+        cache.compute(&pos[..100], 100.0, 2);
+        assert_eq!(cache.order().len(), 100);
+        assert!(cache.keys().windows(2).all(|w| w[0] <= w[1]));
+        // empty scenes are legal
+        cache.compute(&[], 100.0, 2);
+        assert!(cache.order().is_empty());
+    }
+}

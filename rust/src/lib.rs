@@ -10,13 +10,16 @@
 //!   optimizer ([`gradient`]), the neighbor-list-free **ORCS** pipelines and
 //!   the ray-traced **periodic boundary conditions** ([`frnn`]);
 //! * reference baselines (CPU-CELL, GPU-CELL, RT-REF) ([`frnn`]);
-//! * a roofline **timing + power model** over four GPU generations
-//!   ([`rtcore`]);
+//! * a roofline **timing + power model** over four GPU generations,
+//!   including heterogeneous multi-device fleet aggregation ([`rtcore`]);
 //! * a **PJRT runtime** executing AOT-lowered JAX/Pallas HLO artifacts on the
 //!   hot path ([`runtime`]);
 //! * the **coordinator** engine, metrics and reporting ([`coordinator`]);
+//! * the **sharded domain decomposition**: per-shard BVHs and rebuild
+//!   policies over an `S³` grid with periodic halo exchange, per-shard OOM
+//!   metering and heterogeneous multi-device stepping ([`shard`]);
 //! * the **benchmark suite** regenerating every table and figure of the
-//!   paper's evaluation ([`benchsuite`]).
+//!   paper's evaluation, plus the sharded-scaling study ([`benchsuite`]).
 //!
 //! See `DESIGN.md` for the system inventory and the hardware-substitution
 //! rationale, and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -30,6 +33,7 @@ pub mod gradient;
 pub mod rtcore;
 pub mod runtime;
 pub mod coordinator;
+pub mod shard;
 pub mod benchsuite;
 pub mod cli;
 pub mod testutil;

@@ -3,12 +3,13 @@
 
 use anyhow::Result;
 
-use orcs::benchsuite::{common::BenchOpts, fig11_12, fig13, fig8, fig9_10, table2};
+use orcs::benchsuite::{common::BenchOpts, fig11_12, fig13, fig8, fig9_10, sharded, table2};
 use orcs::cli::{Args, USAGE};
-use orcs::coordinator::report::{results_dir, CsvWriter};
+use orcs::coordinator::report::{results_dir, CsvWriter, TextTable};
 use orcs::coordinator::{Engine, EngineConfig};
-use orcs::core::config::Boundary;
+use orcs::core::config::{Boundary, ShardSpec};
 use orcs::frnn::ApproachKind;
+use orcs::shard::{ShardedConfig, ShardedEngine};
 
 fn main() {
     if let Err(e) = run() {
@@ -27,6 +28,7 @@ fn run() -> Result<()> {
         "bench-fig10" => fig9_10::run(&BenchOpts::from_args(&args)?, Boundary::Periodic),
         "bench-fig11" | "bench-fig12" => fig11_12::run(&BenchOpts::from_args(&args)?),
         "bench-fig13" => fig13::run(&BenchOpts::from_args(&args)?),
+        "bench-sharded" => sharded::run(&BenchOpts::from_args(&args)?),
         "inspect-artifacts" => inspect_artifacts(),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -41,6 +43,9 @@ fn run() -> Result<()> {
 
 /// `orcs simulate`: run one scenario end to end with full metering.
 fn simulate(args: &Args) -> Result<()> {
+    if let Some(spec) = args.shards()? {
+        return simulate_sharded(args, spec);
+    }
     let sim = args.sim_config()?;
     let approach = args.approach(ApproachKind::OrcsForces)?;
     let steps = args.get_usize("steps", 100)?;
@@ -122,6 +127,92 @@ fn simulate(args: &Args) -> Result<()> {
         println!("trace: {}", path.display());
     }
     let _ = results_dir();
+    Ok(())
+}
+
+/// `orcs simulate --shards S`: the sharded engine — per-shard BVHs and
+/// policies, halo exchange, per-shard OOM, optional heterogeneous fleet.
+fn simulate_sharded(args: &Args, spec: ShardSpec) -> Result<()> {
+    // the sharded engine implements the RT-REF list pipeline (see ROADMAP
+    // "Sharded ORCS backends") and has no per-step CSV trace yet — reject
+    // rather than silently ignore these simulate flags
+    anyhow::ensure!(
+        args.get("approach").is_none(),
+        "--approach is not supported with --shards (the sharded engine runs the RT-REF pipeline)"
+    );
+    anyhow::ensure!(args.get("trace").is_none(), "--trace is not supported with --shards yet");
+    anyhow::ensure!(
+        args.get("fleet").is_none() || args.get("hw").is_none(),
+        "--hw conflicts with --fleet (the fleet list binds per-shard devices)"
+    );
+    let sim = args.sim_config()?;
+    let steps = args.get_usize("steps", 100)?;
+    let policy = args.get_or("policy", "gradient").to_string();
+    let fleet = match args.fleet()? {
+        Some(f) => f,
+        None => vec![args.hw()?],
+    };
+    let cfg = ShardedConfig {
+        policy,
+        fleet,
+        threads: orcs::parallel::num_threads(),
+        check_oom: !args.has("no-oom-check"),
+        ..ShardedConfig::new(sim.clone(), spec)
+    };
+    let kernels = Engine::kernels_for(sim.force_path, cfg.threads)?;
+    println!(
+        "simulate (sharded): {} | grid {} | policy={} | kernels={} | {} steps",
+        cfg.sim.tag(),
+        cfg.spec,
+        cfg.policy,
+        kernels.name(),
+        steps
+    );
+    let mut engine = ShardedEngine::new(cfg, kernels)?;
+    let summary = engine.run(steps, true)?;
+    let report_every = (steps / 10).max(1);
+    for (k, rec) in summary.records.iter().enumerate() {
+        if k % report_every == 0 || k + 1 == summary.records.len() {
+            println!(
+                "  step {:>6}  sim {:>9.4} ms  straggler s{:<3} {:>9.4} J  {:>8} ghosts  {:>6} migr",
+                rec.step, rec.sim_ms, rec.straggler, rec.energy_j, rec.ghost_entries,
+                rec.migrations,
+            );
+        }
+        if let Some((shard, bytes)) = rec.oom {
+            println!(
+                "  OOM: shard {shard} neighbor list would need {bytes} bytes on {}",
+                engine.shard_hw(shard).name
+            );
+        }
+    }
+    let mut t = TextTable::new(&[
+        "shard", "hw", "owned", "ghosts", "builds", "updates", "forced", "upd/build", "k_max",
+    ]);
+    for (k, tot) in summary.per_shard.iter().enumerate() {
+        let st = summary.steps.max(1);
+        t.row(vec![
+            k.to_string(),
+            engine.shard_hw(k).name.to_string(),
+            format!("{:.0}", tot.owned_sum as f64 / st as f64),
+            format!("{:.0}", tot.ghosts_sum as f64 / st as f64),
+            tot.builds.to_string(),
+            tot.updates.to_string(),
+            tot.forced_builds.to_string(),
+            format!("{:.2}", tot.update_ratio()),
+            tot.max_k_max.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "done: {} steps | fleet {} | avg step {:.4} ms | {:.3} J | EE {:.1} int/J | finite={}",
+        summary.steps,
+        summary.fleet,
+        summary.avg_sim_ms,
+        summary.total_energy_j,
+        summary.ee,
+        engine.state.is_finite()
+    );
     Ok(())
 }
 

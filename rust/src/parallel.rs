@@ -223,6 +223,68 @@ where
     })
 }
 
+/// Exclusive prefix sum of `lens` into a CSR offsets array of length
+/// `lens.len() + 1` (`offsets[0] == 0`, `offsets[n] ==` the total). The
+/// classic three-phase parallel scan: per-chunk sums in parallel, a serial
+/// exclusive scan over the (few) chunk totals, then a parallel fill of each
+/// chunk's offsets from its base. Integer addition is associative, so the
+/// output is identical for every thread count; small inputs fall back to
+/// the serial scan (the parallel passes only pay off once the array no
+/// longer fits cache).
+pub fn exclusive_scan_u32(lens: &[u32], threads: usize) -> Vec<u32> {
+    let n = lens.len();
+    let threads = threads.max(1).min(n.max(1));
+    let mut offsets: Vec<u32> = Vec::with_capacity(n + 1);
+    if threads == 1 || n < 1 << 15 {
+        let mut acc = 0u32;
+        offsets.push(0);
+        for &l in lens {
+            acc += l;
+            offsets.push(acc);
+        }
+        return offsets;
+    }
+    // Phase 1: per-chunk sums. `parallel_for_chunks` assigns chunk t the
+    // range [t*ceil(n/threads), ...) — the same partition phase 3 sees.
+    let mut sums = vec![0u32; threads];
+    {
+        let sums_ptr = SendPtr(sums.as_mut_ptr());
+        parallel_for_chunks(n, threads, |t, range| {
+            let mut s = 0u32;
+            for i in range {
+                s += lens[i];
+            }
+            // SAFETY: one slot per worker, written exactly once.
+            unsafe { *sums_ptr.0.add(t) = s };
+        });
+    }
+    // Phase 2: serial exclusive scan over the chunk sums.
+    let mut bases = Vec::with_capacity(threads);
+    let mut acc = 0u32;
+    for &s in &sums {
+        bases.push(acc);
+        acc += s;
+    }
+    let total = acc;
+    // Phase 3: fill each chunk's offsets from its base.
+    {
+        let out_ptr = SendPtr(offsets.spare_capacity_mut().as_mut_ptr() as *mut u32);
+        let bases_ref = &bases;
+        parallel_for_chunks(n, threads, |t, range| {
+            let mut acc = bases_ref[t];
+            for i in range {
+                // SAFETY: chunks are disjoint; offsets[i] written once.
+                unsafe { out_ptr.0.add(i).write(acc) };
+                acc += lens[i];
+            }
+        });
+        // SAFETY: every slot in 0..n was initialized by exactly one chunk.
+        unsafe { offsets.set_len(n) };
+    }
+    offsets.push(total);
+    offsets
+}
+
 /// Pointer wrapper asserting Send for disjoint-range writes.
 pub(crate) struct SendPtr<T>(pub(crate) *mut T);
 impl<T> Clone for SendPtr<T> {
@@ -314,6 +376,30 @@ mod tests {
         for (i, x) in v.iter().enumerate() {
             assert_eq!(x.0, i);
         }
+    }
+
+    #[test]
+    fn exclusive_scan_matches_serial_for_any_thread_count() {
+        // above the serial fallback threshold, with an uneven tail chunk
+        let n = (1 << 15) + 123;
+        let lens: Vec<u32> = (0..n).map(|i| (i as u32 * 2654435761) % 17).collect();
+        let mut want = Vec::with_capacity(n + 1);
+        let mut acc = 0u32;
+        want.push(0);
+        for &l in &lens {
+            acc += l;
+            want.push(acc);
+        }
+        for threads in [1, 2, 5, 8] {
+            let got = exclusive_scan_u32(&lens, threads);
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn exclusive_scan_tiny_and_empty() {
+        assert_eq!(exclusive_scan_u32(&[], 4), vec![0]);
+        assert_eq!(exclusive_scan_u32(&[3, 0, 2], 4), vec![0, 3, 3, 5]);
     }
 
     #[test]

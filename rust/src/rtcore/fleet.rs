@@ -1,0 +1,153 @@
+//! Heterogeneous device-fleet pricing for the sharded engine
+//! ([`crate::shard`]): each shard binds its own [`HwProfile`], shards step
+//! concurrently, and a step's aggregate cost follows the multi-device
+//! execution model — simulated time is the **max** over devices (the
+//! straggler gates the step barrier), energy is the **sum** (every board
+//! burns its own joules), and the halo/migration exchange is priced on an
+//! interconnect modeled as a fraction of local memory bandwidth.
+
+use super::power::StepEnergy;
+use super::profile::{self, HwProfile};
+use super::timing::PhaseTimes;
+
+/// Bytes shipped per ghost entry during the halo exchange: position (12 B)
+/// + radius (4 B) + global id (4 B).
+pub const GHOST_ENTRY_BYTES: u64 = 20;
+
+/// Bytes shipped per migrated particle: position + velocity (24 B) +
+/// radius + global id (8 B).
+pub const MIGRATION_BYTES: u64 = 32;
+
+/// Effective device-to-device interconnect bandwidth as a fraction of the
+/// receiving device's memory bandwidth (NVLink-class links sustain roughly
+/// a quarter of HBM).
+pub const EXCHANGE_BW_FRACTION: f64 = 0.25;
+
+/// Activity factor of the exchange phase (DMA engines + memory, no SMs).
+const EXCHANGE_ACTIVITY: f64 = 0.20;
+
+/// Simulated seconds to move `bytes` over the interconnect into `hw`.
+pub fn exchange_time(bytes: u64, hw: &HwProfile) -> f64 {
+    if bytes == 0 {
+        return 0.0;
+    }
+    bytes as f64 / (EXCHANGE_BW_FRACTION * hw.mem_bw) + hw.launch_overhead_s
+}
+
+/// Energy of an exchange phase lasting `t` seconds on `hw`.
+pub fn exchange_energy(t: f64, hw: &HwProfile) -> f64 {
+    if t <= 0.0 {
+        return 0.0;
+    }
+    t * (hw.idle_w + EXCHANGE_ACTIVITY * (hw.peak_w - hw.idle_w))
+}
+
+/// Parse a fleet spec: comma-separated profile names (`titanrtx,l40`).
+/// Shards bind to the list round-robin, so a single name is a uniform
+/// fleet and a shorter-than-shard-count list tiles.
+pub fn parse_fleet(spec: &str) -> Option<Vec<&'static HwProfile>> {
+    let mut out = Vec::new();
+    for name in spec.split(',') {
+        let name = name.trim();
+        if name.is_empty() {
+            continue;
+        }
+        out.push(profile::by_name(name)?);
+    }
+    if out.is_empty() {
+        None
+    } else {
+        Some(out)
+    }
+}
+
+/// One shard's priced step on its own device.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardCost {
+    pub times: PhaseTimes,
+    pub energy: StepEnergy,
+    /// Halo + migration exchange, seconds.
+    pub exchange_s: f64,
+    /// Exchange energy, joules.
+    pub exchange_j: f64,
+}
+
+impl ShardCost {
+    /// The shard's full step time on its device, including the exchange.
+    pub fn total_s(&self) -> f64 {
+        self.times.total() + self.exchange_s
+    }
+}
+
+/// A step aggregated across the fleet.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetStep {
+    /// Step time = the slowest device's time (devices run concurrently).
+    pub sim_s: f64,
+    /// Index of the shard that gated the step.
+    pub straggler: usize,
+    /// Total energy = sum over every device.
+    pub energy_j: f64,
+}
+
+/// Aggregate per-shard costs into the fleet step (max time, summed energy).
+pub fn aggregate(costs: &[ShardCost]) -> FleetStep {
+    let mut agg = FleetStep::default();
+    for (s, c) in costs.iter().enumerate() {
+        let t = c.total_s();
+        if t > agg.sim_s {
+            agg.sim_s = t;
+            agg.straggler = s;
+        }
+        agg.energy_j += c.energy.energy_j + c.exchange_j;
+    }
+    agg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtcore::profile::{L40, RTXPRO, TITANRTX};
+
+    fn cost(traverse: f64, energy_j: f64) -> ShardCost {
+        ShardCost {
+            times: PhaseTimes { traverse, ..Default::default() },
+            energy: StepEnergy { avg_power_w: 0.0, energy_j },
+            exchange_s: 0.0,
+            exchange_j: 0.0,
+        }
+    }
+
+    #[test]
+    fn aggregate_is_max_time_sum_energy() {
+        let agg = aggregate(&[cost(1.0, 5.0), cost(3.0, 7.0), cost(2.0, 1.0)]);
+        assert_eq!(agg.straggler, 1);
+        assert!((agg.sim_s - 3.0).abs() < 1e-12);
+        assert!((agg.energy_j - 13.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exchange_priced_on_interconnect() {
+        let t = exchange_time(1_000_000, &RTXPRO);
+        // 1 MB at a quarter of 1.792 TB/s plus launch overhead
+        let want = 1e6 / (0.25 * RTXPRO.mem_bw) + RTXPRO.launch_overhead_s;
+        assert!((t - want).abs() < 1e-15);
+        assert_eq!(exchange_time(0, &RTXPRO), 0.0);
+        // exchange with the straggler: a slower link makes a longer phase
+        assert!(exchange_time(1 << 20, &TITANRTX) > exchange_time(1 << 20, &RTXPRO));
+        let e = exchange_energy(t, &RTXPRO);
+        assert!(e > 0.0 && e < t * RTXPRO.peak_w);
+        assert_eq!(exchange_energy(0.0, &RTXPRO), 0.0);
+    }
+
+    #[test]
+    fn fleet_spec_parses_round_robin_lists() {
+        let f = parse_fleet("titanrtx,l40").unwrap();
+        assert_eq!(f.len(), 2);
+        assert_eq!(f[0].name, TITANRTX.name);
+        assert_eq!(f[1].name, L40.name);
+        assert_eq!(parse_fleet("l40").unwrap().len(), 1);
+        assert!(parse_fleet("h100").is_none());
+        assert!(parse_fleet("").is_none());
+    }
+}

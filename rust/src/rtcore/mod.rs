@@ -7,6 +7,7 @@
 //! [`timing`]), plus an analytic power model ([`power`]). See DESIGN.md
 //! §Hardware-Adaptation for the calibration rationale.
 
+pub mod fleet;
 pub mod power;
 pub mod profile;
 pub mod timing;

@@ -1,0 +1,232 @@
+//! Domain decomposition geometry: the `S³` shard grid, particle ownership,
+//! and the periodic ghost-image halo.
+//!
+//! # Ghost images are the 26-image sweep, generalized to shard faces
+//!
+//! The single-domain periodic machinery (gamma rays, and the 26-image sweep
+//! of the large-radius regime — see [`crate::frnn::rt_common::launch_rays`])
+//! answers one question: *which shifted copies of the scene can interact
+//! with a query point near a box face?* Sharding asks the identical
+//! question per subdomain: which particles — including shifted images of
+//! particles, possibly of particles the shard itself owns — lie within the
+//! halo width of the shard's box? [`gather_ghosts`] enumerates the 27 image
+//! shifts in `{-L, 0, +L}³` and keeps every `(particle, shift)` whose image
+//! position is strictly within `halo` of the shard box. With the images
+//! materialized as local ghost primitives, shard-local traversal needs *no*
+//! gamma rays at all: periodic BC costs nothing beyond the halo itself,
+//! exactly the paper's claim. For `S = 1` the shard box is the whole domain
+//! and the ghost set degenerates to the classic 26 boundary images.
+//!
+//! The halo width is the gamma trigger distance (`r_max`, §3.3): a
+//! neighbor `j` of an owned particle `i` satisfies `|d| < max(r_i, r_j) ≤
+//! r_max`, and `dist(image, box) ≤ |d|`, so every image that can either be
+//! discovered by an owned ray or must itself launch a discovering ray is
+//! inside the halo.
+
+use crate::core::config::{Boundary, ShardSpec};
+use crate::core::vec3::Vec3;
+
+/// Image-shift code `0..27`: each axis shifted by one of `{-L, 0, +L}`.
+/// [`CENTER_SHIFT`] (13) is the identity — the code carried by owned
+/// entries and by unshifted ghosts (wall BC, or a neighbor from an adjacent
+/// shard with no wrap).
+pub const CENTER_SHIFT: u8 = 13;
+
+/// The shift vector of an image code.
+#[inline]
+pub fn shift_vec(code: u8, box_l: f32) -> Vec3 {
+    let c = code as i32;
+    Vec3::new(
+        (c / 9 - 1) as f32 * box_l,
+        ((c / 3) % 3 - 1) as f32 * box_l,
+        (c % 3 - 1) as f32 * box_l,
+    )
+}
+
+/// One local entry of a shard: an owned particle (`shift == CENTER_SHIFT`)
+/// or a ghost image. The pair is the shard's *membership key*: as long as
+/// the full key sequence is unchanged between steps, every local primitive
+/// moves continuously and a BVH refit is meaningful; any churn forces a
+/// rebuild (see [`crate::shard::ShardedEngine`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardMember {
+    pub gid: u32,
+    pub shift: u8,
+}
+
+/// The `S³` grid over the simulation box.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardGrid {
+    pub s: usize,
+    pub box_l: f32,
+    /// Subdomain side length, `box_l / s`.
+    pub width: f32,
+}
+
+impl ShardGrid {
+    pub fn new(spec: ShardSpec, box_l: f32) -> Self {
+        let s = spec.s.max(1);
+        ShardGrid { s, box_l, width: box_l / s as f32 }
+    }
+
+    pub fn count(&self) -> usize {
+        self.s * self.s * self.s
+    }
+
+    /// Owning shard of a position. Coordinates are clamped into the grid,
+    /// so wall-BC positions sitting exactly on `box_l` (legal under
+    /// [`crate::physics::state::SimState::all_in_box`]) land in the last
+    /// cell rather than out of range.
+    #[inline]
+    pub fn owner_of(&self, p: Vec3) -> usize {
+        let cell = |x: f32| -> usize { ((x / self.width) as usize).min(self.s - 1) };
+        cell(p.x) + self.s * (cell(p.y) + self.s * cell(p.z))
+    }
+
+    /// Axis-aligned bounds of shard `idx`.
+    pub fn bounds(&self, idx: usize) -> (Vec3, Vec3) {
+        debug_assert!(idx < self.count());
+        let x = idx % self.s;
+        let y = (idx / self.s) % self.s;
+        let z = idx / (self.s * self.s);
+        let lo = Vec3::new(x as f32, y as f32, z as f32) * self.width;
+        (lo, lo + Vec3::splat(self.width))
+    }
+}
+
+/// Squared distance from a point to the box `[lo, hi]` (0 inside).
+#[inline]
+pub fn dist2_point_box(p: Vec3, lo: Vec3, hi: Vec3) -> f32 {
+    let dx = (lo.x - p.x).max(p.x - hi.x).max(0.0);
+    let dy = (lo.y - p.y).max(p.y - hi.y).max(0.0);
+    let dz = (lo.z - p.z).max(p.z - hi.z).max(0.0);
+    dx * dx + dy * dy + dz * dz
+}
+
+/// Collect the ghost members of shard `idx` into `out` (cleared first):
+/// every `(particle, image shift)` whose shifted position lies strictly
+/// within `halo` of the shard box and is not the shard's own owned entry.
+/// Wall boundaries have no images (only the identity shift); periodic
+/// boundaries sweep all 27 shifts, so an owned particle can reappear as its
+/// own wrapped image — exactly the pairs the single-domain gamma rays
+/// discover. Enumeration order is ascending `(gid, shift)`, so the output
+/// is deterministic and usable as a membership key.
+pub fn gather_ghosts(
+    grid: &ShardGrid,
+    idx: usize,
+    pos: &[Vec3],
+    owner: &[u32],
+    halo: f32,
+    boundary: Boundary,
+    out: &mut Vec<ShardMember>,
+) {
+    out.clear();
+    let (lo, hi) = grid.bounds(idx);
+    let h2 = halo * halo;
+    let codes: std::ops::Range<u8> = match boundary {
+        Boundary::Wall => CENTER_SHIFT..CENTER_SHIFT + 1,
+        Boundary::Periodic => 0..27,
+    };
+    for (i, &p) in pos.iter().enumerate() {
+        for code in codes.clone() {
+            if code == CENTER_SHIFT && owner[i] as usize == idx {
+                continue; // the owned entry, not a ghost
+            }
+            let q = p + shift_vec(code, grid.box_l);
+            if dist2_point_box(q, lo, hi) < h2 {
+                out.push(ShardMember { gid: i as u32, shift: code });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::config::{Boundary, ShardSpec};
+
+    #[test]
+    fn owner_partitions_the_box() {
+        let g = ShardGrid::new(ShardSpec::new(2), 100.0);
+        assert_eq!(g.count(), 8);
+        assert_eq!(g.owner_of(Vec3::new(10.0, 10.0, 10.0)), 0);
+        assert_eq!(g.owner_of(Vec3::new(60.0, 10.0, 10.0)), 1);
+        assert_eq!(g.owner_of(Vec3::new(10.0, 60.0, 10.0)), 2);
+        assert_eq!(g.owner_of(Vec3::new(10.0, 10.0, 60.0)), 4);
+        // the wall-BC corner case: exactly box_l stays in range
+        assert_eq!(g.owner_of(Vec3::splat(100.0)), 7);
+        // bounds round-trip
+        for idx in 0..8 {
+            let (lo, hi) = g.bounds(idx);
+            let center = (lo + hi) * 0.5;
+            assert_eq!(g.owner_of(center), idx, "idx={idx}");
+        }
+    }
+
+    #[test]
+    fn shift_codes_cover_the_27_images() {
+        let mut seen = Vec::new();
+        for code in 0u8..27 {
+            let v = shift_vec(code, 1.0);
+            assert!([-1.0, 0.0, 1.0].contains(&v.x));
+            assert!([-1.0, 0.0, 1.0].contains(&v.y));
+            assert!([-1.0, 0.0, 1.0].contains(&v.z));
+            seen.push((v.x as i32, v.y as i32, v.z as i32));
+        }
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 27);
+        assert_eq!(shift_vec(CENTER_SHIFT, 123.0), Vec3::ZERO);
+    }
+
+    #[test]
+    fn point_box_distance() {
+        let lo = Vec3::ZERO;
+        let hi = Vec3::splat(10.0);
+        assert_eq!(dist2_point_box(Vec3::splat(5.0), lo, hi), 0.0);
+        assert_eq!(dist2_point_box(Vec3::new(12.0, 5.0, 5.0), lo, hi), 4.0);
+        assert_eq!(dist2_point_box(Vec3::new(-3.0, 5.0, 14.0), lo, hi), 25.0);
+    }
+
+    #[test]
+    fn ghosts_cover_neighbor_faces_and_wrap() {
+        // 2x2x2 grid over a 100 box; a particle just left of the x midplane
+        // must be a ghost of the +x shard; one near x=0 must reach the
+        // opposite shard *only* through its +L wrapped image under periodic
+        let g = ShardGrid::new(ShardSpec::new(2), 100.0);
+        let pos = vec![Vec3::new(49.0, 10.0, 10.0), Vec3::new(1.0, 10.0, 10.0)];
+        let owner: Vec<u32> = pos.iter().map(|&p| g.owner_of(p) as u32).collect();
+        assert_eq!(owner, vec![0, 0]);
+        let mut out = Vec::new();
+        // shard 1 = x in [50, 100)
+        gather_ghosts(&g, 1, &pos, &owner, 5.0, Boundary::Wall, &mut out);
+        assert_eq!(out, vec![ShardMember { gid: 0, shift: CENTER_SHIFT }]);
+        gather_ghosts(&g, 1, &pos, &owner, 5.0, Boundary::Periodic, &mut out);
+        // particle 0 via identity; particle 1 via its +L x-image (x=101,
+        // within 5 of the shard's hi face at 100)
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0], ShardMember { gid: 0, shift: CENTER_SHIFT });
+        assert_eq!(out[1].gid, 1);
+        let shift = shift_vec(out[1].shift, 100.0);
+        assert_eq!((shift.x, shift.y, shift.z), (100.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn single_shard_periodic_ghosts_are_boundary_images() {
+        // S=1: the shard is the whole box, so ghosts are exactly the
+        // wrapped boundary images — the classic 26-image sweep
+        let g = ShardGrid::new(ShardSpec::new(1), 10.0);
+        let pos = vec![Vec3::new(0.5, 5.0, 5.0), Vec3::new(5.0, 5.0, 5.0)];
+        let owner = vec![0u32, 0];
+        let mut out = Vec::new();
+        gather_ghosts(&g, 0, &pos, &owner, 1.0, Boundary::Periodic, &mut out);
+        // particle 0 at x=0.5 reappears via the +L x-image at 10.5 (within
+        // halo 1 of the box); the interior particle has no close image
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].gid, 0);
+        assert_eq!(shift_vec(out[0].shift, 10.0).x, 10.0);
+        // wall BC: no images at all
+        gather_ghosts(&g, 0, &pos, &owner, 1.0, Boundary::Wall, &mut out);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,586 @@
+//! The sharded stepping engine: per-shard BVHs and rebuild policies,
+//! halo-exchanged ghost images, per-shard device pricing, and a canonical
+//! global force merge that is bitwise identical to the single-domain run.
+//!
+//! # Execution model
+//!
+//! Each step:
+//!
+//! 1. **Ownership + migration** — every particle belongs to the shard whose
+//!    subdomain contains its (wrapped) position; integration moves
+//!    particles across faces, and the owner change is the migration the
+//!    exchange phase prices.
+//! 2. **Halo exchange** — each shard gathers its ghost images
+//!    ([`decomp::gather_ghosts`]): all 27 periodic images within `r_max` of
+//!    the shard box. Ghosts are *materialized* as local primitives, so
+//!    shard-local traversal needs no gamma machinery.
+//! 3. **Per-shard BVH** — each shard owns a [`BvhManager`] with an
+//!    *independent policy instance*. A refit is only meaningful over an
+//!    unchanged primitive set, so any membership churn (migration or halo
+//!    turnover) forces a rebuild; stable (cold) shards refit on the
+//!    policy's schedule while churning (hot) shards rebuild — the
+//!    heterogeneous dynamics the gradient optimizer adapts to, per shard.
+//! 4. **Discovery** — rays launch from *every* local primitive (owned and
+//!    ghost). Owned rays fill their own lists; ghost rays contribute only
+//!    cross-inserts into owned lists (the redundant-compute-instead-of-
+//!    communicate convention of halo methods). Per-owned lists are then
+//!    sorted ascending by global id and deduplicated — the canonical order.
+//! 5. **Merge + physics** — per-shard lists land in one global CSR (each
+//!    particle has exactly one owner, so the merge is conflict-free), and
+//!    the *same* force/integration kernels as the single-domain engine run
+//!    over it. Identical canonical lists + identical kernels ⇒ identical
+//!    f32 operation sequences ⇒ **bitwise identical** forces and positions
+//!    for any shard grid and any `ORCS_THREADS`.
+//! 6. **Pricing** — per-shard op counts are priced on that shard's own
+//!    [`HwProfile`]; the fleet step is `max` over devices (straggler) for
+//!    time, `sum` for energy ([`crate::rtcore::fleet`]). `check_oom` meters
+//!    the RT-REF fixed-slot list allocation **per shard** against each
+//!    device's VRAM — the per-shard OOM relief that lets log-normal cluster
+//!    scenes too wide for one device complete sharded.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::decomp::{self, ShardGrid, ShardMember, CENTER_SHIFT};
+use crate::core::config::{ShardSpec, SimConfig};
+use crate::core::vec3::Vec3;
+use crate::frnn::rt_common::BvhManager;
+use crate::frnn::{NeighborLists, PhysicsKernels, RustKernels};
+use crate::gradient::BvhAction;
+use crate::physics::state::SimState;
+use crate::rtcore::fleet::{self, ShardCost};
+use crate::rtcore::power::step_energy;
+use crate::rtcore::{timing, HwProfile, OpCounts};
+
+/// Sharded-engine configuration: scenario + decomposition + fleet bindings.
+#[derive(Clone)]
+pub struct ShardedConfig {
+    pub sim: SimConfig,
+    pub spec: ShardSpec,
+    /// Per-shard BVH rebuild policy spec (`gradient`, `avg`, `fixed-K`);
+    /// every shard gets its own policy instance.
+    pub policy: String,
+    /// Device profiles bound round-robin across the `s³` shards: one entry
+    /// is a uniform fleet, several model a heterogeneous one (e.g.
+    /// `TITANRTX` + `L40` in one run).
+    pub fleet: Vec<&'static HwProfile>,
+    pub threads: usize,
+    /// Enforce the per-shard neighbor-list memory limit.
+    pub check_oom: bool,
+}
+
+impl ShardedConfig {
+    pub fn new(sim: SimConfig, spec: ShardSpec) -> Self {
+        ShardedConfig {
+            sim,
+            spec,
+            policy: "gradient".into(),
+            fleet: vec![crate::rtcore::profile::DEFAULT_GPU],
+            threads: crate::parallel::num_threads(),
+            check_oom: true,
+        }
+    }
+}
+
+/// One shard's contribution to a step record.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardStepStat {
+    pub shard: usize,
+    pub owned: usize,
+    pub ghosts: usize,
+    pub action: BvhAction,
+    /// The action was forced by membership churn rather than chosen by the
+    /// policy.
+    pub forced_build: bool,
+    /// Widest per-particle list this step (pre-dedup — the slots a real
+    /// append stream occupies).
+    pub k_max: usize,
+    /// Fixed-slot list allocation on this shard's device.
+    pub list_bytes: u64,
+    /// This shard's full step on its device (incl. exchange), ms.
+    pub sim_ms: f64,
+    pub rt_ms: f64,
+    pub energy_j: f64,
+}
+
+/// Everything measured about one sharded step.
+#[derive(Clone, Debug)]
+pub struct ShardedStepRecord {
+    pub step: u64,
+    /// Aggregate step time: the straggler device, ms.
+    pub sim_ms: f64,
+    pub straggler: usize,
+    /// Total energy across the fleet, J.
+    pub energy_j: f64,
+    pub interactions: u64,
+    /// Particles whose owner shard changed this step.
+    pub migrations: u64,
+    /// Ghost entries exchanged this step (sum over shards).
+    pub ghost_entries: u64,
+    /// `(shard, required bytes)` when a shard's list allocation exceeds its
+    /// device memory.
+    pub oom: Option<(usize, u64)>,
+    pub per_shard: Vec<ShardStepStat>,
+}
+
+/// Per-shard aggregate over a run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardTotals {
+    /// Name of the device profile this shard is bound to.
+    pub hw: &'static str,
+    pub builds: u64,
+    pub updates: u64,
+    pub forced_builds: u64,
+    pub owned_sum: u64,
+    pub ghosts_sum: u64,
+    pub max_k_max: usize,
+    pub max_list_bytes: u64,
+    /// Sum of this shard's per-step device time, ms.
+    pub total_sim_ms: f64,
+}
+
+impl ShardTotals {
+    /// Updates per build — the policy's chosen ratio (hot shards low, cold
+    /// shards high).
+    pub fn update_ratio(&self) -> f64 {
+        self.updates as f64 / (self.builds.max(1)) as f64
+    }
+}
+
+/// Aggregate over a sharded run.
+#[derive(Clone, Debug, Default)]
+pub struct ShardedRunSummary {
+    pub scenario: String,
+    pub grid: String,
+    pub fleet: String,
+    pub steps: u64,
+    pub avg_sim_ms: f64,
+    pub total_sim_ms: f64,
+    pub total_energy_j: f64,
+    pub total_interactions: u64,
+    /// Interactions per joule across the fleet (Eq. 10).
+    pub ee: f64,
+    pub migrations: u64,
+    pub ghost_entries: u64,
+    pub oom: bool,
+    pub oom_shard: usize,
+    pub oom_bytes: u64,
+    pub wall_total_s: f64,
+    pub per_shard: Vec<ShardTotals>,
+    /// Per-step trace (kept when requested).
+    pub records: Vec<ShardedStepRecord>,
+}
+
+/// A live shard: geometry + BVH lifecycle + running allocation width.
+struct Shard {
+    hw: &'static HwProfile,
+    mgr: BvhManager,
+    members_prev: Vec<ShardMember>,
+    k_max_seen: usize,
+}
+
+/// The sharded simulation: global state + one engine-let per subdomain.
+pub struct ShardedEngine {
+    pub cfg: ShardedConfig,
+    pub state: SimState,
+    kernels: Arc<dyn PhysicsKernels>,
+    grid: ShardGrid,
+    shards: Vec<Shard>,
+    owner: Vec<u32>,
+    stepped: bool,
+}
+
+impl ShardedEngine {
+    pub fn new(cfg: ShardedConfig, kernels: Arc<dyn PhysicsKernels>) -> Result<Self> {
+        anyhow::ensure!(!cfg.fleet.is_empty(), "fleet must bind at least one device");
+        let state = SimState::from_config(&cfg.sim);
+        let grid = ShardGrid::new(cfg.spec, state.box_l);
+        let shards = (0..grid.count())
+            .map(|s| -> Result<Shard> {
+                let policy = crate::gradient::policy::parse_policy(&cfg.policy)
+                    .ok_or_else(|| anyhow::anyhow!("unknown BVH policy: {}", cfg.policy))?;
+                Ok(Shard {
+                    hw: cfg.fleet[s % cfg.fleet.len()],
+                    mgr: BvhManager::new(policy),
+                    members_prev: Vec::new(),
+                    k_max_seen: 0,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let owner = vec![0; state.n()];
+        Ok(ShardedEngine { cfg, state, kernels, grid, shards, owner, stepped: false })
+    }
+
+    /// Convenience: engine with the pure-Rust kernels.
+    pub fn new_rust(cfg: ShardedConfig) -> Result<Self> {
+        let threads = cfg.threads;
+        Self::new(cfg, Arc::new(RustKernels { threads }))
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.grid.count()
+    }
+
+    /// Current owner shard of particle `i` (valid after the first step).
+    pub fn owner(&self, i: usize) -> usize {
+        self.owner[i] as usize
+    }
+
+    /// The device profile bound to shard `s`.
+    pub fn shard_hw(&self, s: usize) -> &'static HwProfile {
+        self.shards[s].hw
+    }
+
+    /// Execute one step across all shards and meter it.
+    pub fn step(&mut self) -> Result<ShardedStepRecord> {
+        let n = self.state.n();
+        let threads = self.cfg.threads.max(1);
+        let halo = self.state.r_max;
+        let box_l = self.state.box_l;
+        let boundary = self.state.boundary;
+        let n_shards = self.grid.count();
+
+        // --- Phase 1: ownership + migration ---------------------------
+        let grid = self.grid;
+        let pos_ref = &self.state.pos;
+        let new_owner: Vec<u32> =
+            crate::parallel::parallel_map(n, threads, |i| grid.owner_of(pos_ref[i]) as u32);
+        let mut migrations = 0u64;
+        let mut mig_in = vec![0u64; n_shards];
+        if self.stepped {
+            for (i, &o) in new_owner.iter().enumerate() {
+                if self.owner[i] != o {
+                    migrations += 1;
+                    mig_in[o as usize] += 1;
+                }
+            }
+        }
+        self.owner = new_owner;
+        self.stepped = true;
+
+        // Per-shard outputs for the global merge.
+        struct ShardLists {
+            owned_gids: Vec<u32>,
+            /// Post-dedup lengths, parallel to `owned_gids`.
+            lens: Vec<u32>,
+            /// Compacted sorted+deduped items, segments in owned order.
+            items: Vec<u32>,
+        }
+        let mut shard_lists: Vec<ShardLists> = Vec::with_capacity(n_shards);
+        let mut per_shard: Vec<ShardStepStat> = Vec::with_capacity(n_shards);
+        let mut costs: Vec<ShardCost> = Vec::with_capacity(n_shards);
+        let mut oom: Option<(usize, u64)> = None;
+        let mut total_ghosts = 0u64;
+        let mut ghosts_buf: Vec<ShardMember> = Vec::new();
+
+        // One O(n) bucketing pass replaces a per-shard full-scene filter;
+        // ids stay ascending within each bucket (the canonical owned order).
+        let mut owned_by_shard: Vec<Vec<ShardMember>> = vec![Vec::new(); n_shards];
+        for (i, &o) in self.owner.iter().enumerate() {
+            owned_by_shard[o as usize].push(ShardMember { gid: i as u32, shift: CENTER_SHIFT });
+        }
+
+        for s in 0..n_shards {
+            // --- Phase 2: membership + halo ---------------------------
+            let mut members = std::mem::take(&mut owned_by_shard[s]);
+            let owned_n = members.len();
+            decomp::gather_ghosts(
+                &self.grid,
+                s,
+                &self.state.pos,
+                &self.owner,
+                halo,
+                boundary,
+                &mut ghosts_buf,
+            );
+            members.extend_from_slice(&ghosts_buf);
+            let n_local = members.len();
+            let ghosts = n_local - owned_n;
+            total_ghosts += ghosts as u64;
+
+            let local_pos: Vec<Vec3> = members
+                .iter()
+                .map(|m| self.state.pos[m.gid as usize] + decomp::shift_vec(m.shift, box_l))
+                .collect();
+            let local_radius: Vec<f32> =
+                members.iter().map(|m| self.state.radius[m.gid as usize]).collect();
+            let local_gid: Vec<u32> = members.iter().map(|m| m.gid).collect();
+
+            // --- Phase 3: per-shard BVH under its own policy ----------
+            let shard = &mut self.shards[s];
+            let force_build = shard.members_prev != members;
+            let mut counts = OpCounts::default();
+            let action = shard.mgr.prepare_with(
+                &local_pos,
+                &local_radius,
+                &mut counts,
+                threads,
+                force_build,
+                None,
+            );
+            shard.members_prev = members;
+
+            // --- Phase 4: discovery (owned + ghost rays) --------------
+            struct ChunkOut {
+                /// (owned-local index, neighbor gid) from the ray's own list.
+                direct: Vec<(u32, u32)>,
+                /// (owned-local index, inserted gid) — atomic appends.
+                cross: Vec<(u32, u32)>,
+            }
+            let (chunks, stats) = {
+                let bvh = shard.mgr.bvh();
+                let (local_pos, local_radius, local_gid) = (&local_pos, &local_radius, &local_gid);
+                bvh.query_batch(n_local, threads, || (), |_, scratch, range| {
+                    let mut out = ChunkOut { direct: Vec::new(), cross: Vec::new() };
+                    for a in range {
+                        let ga = local_gid[a];
+                        let ra = local_radius[a];
+                        let pa = local_pos[a];
+                        bvh.query_point(pa, a, local_pos, local_radius, scratch, |b| {
+                            // never pair a particle with its own image
+                            if local_gid[b] == ga {
+                                return;
+                            }
+                            if a < owned_n {
+                                out.direct.push((a as u32, local_gid[b]));
+                            }
+                            // the cross-insert of RT-REF's variable-radius
+                            // rule: ray a found b, but b's ray cannot see a
+                            if b < owned_n {
+                                let d2 = (pa - local_pos[b]).norm2();
+                                if d2 >= ra * ra {
+                                    out.cross.push((b as u32, ga));
+                                }
+                            }
+                        });
+                    }
+                    out
+                })
+            };
+            crate::frnn::rt_common::fold_stats(&mut counts, &stats);
+
+            // Count-then-fill over the owned lists (chunk order is
+            // deterministic; the parallel scan is thread-count invariant).
+            let mut lens_raw = vec![0u32; owned_n];
+            let mut cross_inserts = 0u64;
+            for c in &chunks {
+                for &(a, _) in &c.direct {
+                    lens_raw[a as usize] += 1;
+                }
+                for &(b, _) in &c.cross {
+                    lens_raw[b as usize] += 1;
+                    cross_inserts += 1;
+                }
+            }
+            let offsets_raw = crate::parallel::exclusive_scan_u32(&lens_raw, threads);
+            let raw_total = *offsets_raw.last().unwrap() as usize;
+            let mut items = vec![0u32; raw_total];
+            let mut cursor: Vec<u32> = offsets_raw[..owned_n].to_vec();
+            for c in &chunks {
+                for &(a, g) in &c.direct {
+                    let a = a as usize;
+                    items[cursor[a] as usize] = g;
+                    cursor[a] += 1;
+                }
+            }
+            for c in &chunks {
+                for &(b, g) in &c.cross {
+                    let b = b as usize;
+                    items[cursor[b] as usize] = g;
+                    cursor[b] += 1;
+                }
+            }
+            // Canonicalize each owned list: ascending gid, deduplicated
+            // (multiple images of one neighbor collapse to one entry, as in
+            // the single-domain large-radius path), compacted in place.
+            let mut lens = vec![0u32; owned_n];
+            let mut k_max_raw = 0usize;
+            let mut write = 0usize;
+            let mut seg: Vec<u32> = Vec::new();
+            for a in 0..owned_n {
+                let lo = offsets_raw[a] as usize;
+                let hi = offsets_raw[a + 1] as usize;
+                k_max_raw = k_max_raw.max(hi - lo);
+                seg.clear();
+                seg.extend_from_slice(&items[lo..hi]);
+                seg.sort_unstable();
+                seg.dedup();
+                lens[a] = seg.len() as u32;
+                items[write..write + seg.len()].copy_from_slice(&seg);
+                write += seg.len();
+            }
+            items.truncate(write);
+
+            // --- Phase 5: per-shard metering + OOM --------------------
+            counts.nbr_list_writes += raw_total as u64;
+            counts.atomic_adds += cross_inserts;
+            shard.k_max_seen = shard.k_max_seen.max(k_max_raw);
+            let list_bytes = (owned_n as u64) * (shard.k_max_seen as u64) * 4;
+            counts.nbr_list_bytes_peak = list_bytes;
+            let shard_oom = self.cfg.check_oom && list_bytes > shard.hw.vram_bytes;
+            if shard_oom && oom.is_none() {
+                oom = Some((s, list_bytes));
+            }
+            if !shard_oom {
+                // this shard's slice of the force + integration kernels
+                counts.force_kernel_pairs += (owned_n as u64) * (k_max_raw as u64);
+                counts.integrate_particles += owned_n as u64;
+                counts.kernel_launches += 2;
+            }
+
+            let exchange_bytes = (ghosts as u64) * fleet::GHOST_ENTRY_BYTES
+                + mig_in[s] * fleet::MIGRATION_BYTES;
+            let times = timing::simulate(&counts, shard.hw);
+            let energy = step_energy(&times, &counts, shard.hw);
+            let exchange_s = fleet::exchange_time(exchange_bytes, shard.hw);
+            let cost = ShardCost {
+                times,
+                energy,
+                exchange_s,
+                exchange_j: fleet::exchange_energy(exchange_s, shard.hw),
+            };
+            shard.mgr.observe(action, &counts, shard.hw);
+            per_shard.push(ShardStepStat {
+                shard: s,
+                owned: owned_n,
+                ghosts,
+                action,
+                forced_build: force_build && action == BvhAction::Build,
+                k_max: k_max_raw,
+                list_bytes,
+                sim_ms: cost.total_s() * 1e3,
+                rt_ms: times.rt_cost() * 1e3,
+                energy_j: energy.energy_j + cost.exchange_j,
+            });
+            costs.push(cost);
+            shard_lists.push(ShardLists { owned_gids: local_gid[..owned_n].to_vec(), lens, items });
+        }
+
+        let agg = fleet::aggregate(&costs);
+        if let Some((shard, bytes)) = oom {
+            return Ok(ShardedStepRecord {
+                step: self.state.step_count,
+                sim_ms: agg.sim_s * 1e3,
+                straggler: agg.straggler,
+                energy_j: agg.energy_j,
+                interactions: 0,
+                migrations,
+                ghost_entries: total_ghosts,
+                oom: Some((shard, bytes)),
+                per_shard,
+            });
+        }
+
+        // --- Phase 6: shard-ordered merge into one canonical CSR ------
+        // Each particle has exactly one owner, so the merge is conflict-free
+        // and the result is independent of shard iteration order; lists are
+        // already in canonical ascending-gid order.
+        let mut g_lens = vec![0u32; n];
+        for sl in &shard_lists {
+            for (k, &g) in sl.owned_gids.iter().enumerate() {
+                g_lens[g as usize] = sl.lens[k];
+            }
+        }
+        let offsets = crate::parallel::exclusive_scan_u32(&g_lens, threads);
+        let total = *offsets.last().unwrap() as usize;
+        let mut g_items = vec![0u32; total];
+        for sl in &shard_lists {
+            let mut cur = 0usize;
+            for (k, &g) in sl.owned_gids.iter().enumerate() {
+                let len = sl.lens[k] as usize;
+                let dst = offsets[g as usize] as usize;
+                g_items[dst..dst + len].copy_from_slice(&sl.items[cur..cur + len]);
+                cur += len;
+            }
+        }
+        let nl = NeighborLists { offsets, items: g_items };
+        let interactions = nl.total_entries() as u64 / 2;
+
+        // --- Phase 7: the same global kernels as the single-domain run.
+        // Identical canonical lists + identical kernel code ⇒ identical f32
+        // operation sequences ⇒ bitwise-identical forces and positions.
+        // (Per-device cost was already attributed shard by shard above.)
+        let mut kernel_scratch = OpCounts::default();
+        self.state.force = self.kernels.lj_forces(&self.state, &nl, &mut kernel_scratch)?;
+        self.kernels.integrate(&mut self.state, &mut kernel_scratch)?;
+
+        Ok(ShardedStepRecord {
+            step: self.state.step_count,
+            sim_ms: agg.sim_s * 1e3,
+            straggler: agg.straggler,
+            energy_j: agg.energy_j,
+            interactions,
+            migrations,
+            ghost_entries: total_ghosts,
+            oom: None,
+            per_shard,
+        })
+    }
+
+    /// Run `steps` steps; aborts early when any shard OOMs (the fleet
+    /// cannot complete the step).
+    pub fn run(&mut self, steps: usize, keep_trace: bool) -> Result<ShardedRunSummary> {
+        let wall_start = Instant::now();
+        let mut s = ShardedRunSummary {
+            scenario: self.cfg.sim.tag(),
+            grid: self.cfg.spec.to_string(),
+            fleet: {
+                let mut uniq: Vec<&str> = Vec::new();
+                for sh in &self.shards {
+                    if !uniq.contains(&sh.hw.name) {
+                        uniq.push(sh.hw.name);
+                    }
+                }
+                uniq.join("+")
+            },
+            per_shard: self
+                .shards
+                .iter()
+                .map(|sh| ShardTotals { hw: sh.hw.name, ..Default::default() })
+                .collect(),
+            ..Default::default()
+        };
+        for _ in 0..steps {
+            let rec = self.step()?;
+            s.steps += 1;
+            s.total_sim_ms += rec.sim_ms;
+            s.total_energy_j += rec.energy_j;
+            s.total_interactions += rec.interactions;
+            s.migrations += rec.migrations;
+            s.ghost_entries += rec.ghost_entries;
+            for st in &rec.per_shard {
+                let t = &mut s.per_shard[st.shard];
+                match st.action {
+                    BvhAction::Build => t.builds += 1,
+                    BvhAction::Update => t.updates += 1,
+                }
+                if st.forced_build {
+                    t.forced_builds += 1;
+                }
+                t.owned_sum += st.owned as u64;
+                t.ghosts_sum += st.ghosts as u64;
+                t.max_k_max = t.max_k_max.max(st.k_max);
+                t.max_list_bytes = t.max_list_bytes.max(st.list_bytes);
+                t.total_sim_ms += st.sim_ms;
+            }
+            let rec_oom = rec.oom;
+            if keep_trace {
+                s.records.push(rec);
+            }
+            if let Some((shard, bytes)) = rec_oom {
+                s.oom = true;
+                s.oom_shard = shard;
+                s.oom_bytes = bytes;
+                break;
+            }
+        }
+        if s.steps > 0 {
+            s.avg_sim_ms = s.total_sim_ms / s.steps as f64;
+        }
+        s.ee = crate::rtcore::power::energy_efficiency(s.total_interactions, s.total_energy_j);
+        s.wall_total_s = wall_start.elapsed().as_secs_f64();
+        Ok(s)
+    }
+}

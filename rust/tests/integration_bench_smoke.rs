@@ -76,6 +76,17 @@ fn fig11_fig12_smoke() {
 }
 
 #[test]
+fn sharded_smoke() {
+    let dir = std::env::temp_dir().join("orcs_smoke_sharded");
+    with_results_dir(&dir, |opts| orcs::benchsuite::sharded::run(opts).unwrap());
+    let text = std::fs::read_to_string(dir.join("sharded_scaling.csv")).unwrap();
+    // the S sweep, the OOM-relief device and the heterogeneous fleet rows
+    for needle in ["1x1x1", "2x2x2", "3x3x3", "TITANRTX-4MB", "TITANRTX+L40"] {
+        assert!(text.contains(needle), "missing {needle}");
+    }
+}
+
+#[test]
 fn fig13_smoke() {
     let dir = std::env::temp_dir().join("orcs_smoke_fig13");
     with_results_dir(&dir, |opts| orcs::benchsuite::fig13::run(opts).unwrap());

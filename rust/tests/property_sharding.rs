@@ -1,0 +1,236 @@
+//! Shard-invariance properties: the sharded engine must be a *transparent*
+//! decomposition — for any shard grid and any thread count, forces and
+//! positions are **bitwise identical** to the single-domain RT-REF engine,
+//! under both boundary modes, across migrations and periodic wraps.
+//!
+//! Why bitwise equality is attainable at all: both engines canonicalize
+//! every per-particle neighbor list to ascending global id (deduplicated),
+//! and both evaluate forces/integration through the *same*
+//! `PhysicsKernels` code over that CSR, so the f32 operation sequences
+//! coincide exactly — not approximately.
+
+use std::sync::Arc;
+
+use orcs::coordinator::{Engine, EngineConfig};
+use orcs::core::config::{Boundary, ParticleDist, RadiusDist, ShardSpec, SimConfig};
+use orcs::core::vec3::Vec3;
+use orcs::frnn::{ApproachKind, RustKernels};
+use orcs::shard::{ShardedConfig, ShardedEngine};
+
+fn scenario(n: usize, boundary: Boundary, radius: RadiusDist, box_l: f32, seed: u64) -> SimConfig {
+    SimConfig {
+        n,
+        box_l,
+        particle_dist: ParticleDist::Disordered,
+        radius_dist: radius,
+        boundary,
+        seed,
+        ..SimConfig::default()
+    }
+}
+
+/// Positions + velocities of the single-domain RT-REF engine after `steps`.
+fn single_domain(cfg: &SimConfig, threads: usize, steps: usize) -> (Vec<Vec3>, Vec<Vec3>) {
+    let ec = EngineConfig {
+        policy: "fixed-3".into(),
+        threads,
+        check_oom: false,
+        ..EngineConfig::new(cfg.clone(), ApproachKind::RtRef)
+    };
+    let mut e = Engine::new(ec, Arc::new(RustKernels { threads })).unwrap();
+    e.run(steps, false).unwrap();
+    (e.state.pos, e.state.vel)
+}
+
+fn sharded(cfg: &SimConfig, s: usize, threads: usize, steps: usize) -> ShardedEngine {
+    let sc = ShardedConfig {
+        policy: "fixed-3".into(),
+        threads,
+        check_oom: false,
+        ..ShardedConfig::new(cfg.clone(), ShardSpec::new(s))
+    };
+    let mut e = ShardedEngine::new(sc, Arc::new(RustKernels { threads })).unwrap();
+    e.run(steps, false).unwrap();
+    e
+}
+
+fn assert_bits_equal(got: &[Vec3], want: &[Vec3], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for i in 0..want.len() {
+        // Vec3 PartialEq is exact f32 equality; compare bits so that a
+        // hypothetical -0.0 vs +0.0 discrepancy is also caught.
+        let (a, b) = (got[i], want[i]);
+        assert_eq!(
+            (a.x.to_bits(), a.y.to_bits(), a.z.to_bits()),
+            (b.x.to_bits(), b.y.to_bits(), b.z.to_bits()),
+            "{ctx}: particle {i} diverged: {a:?} vs {b:?}"
+        );
+    }
+}
+
+#[test]
+fn sharded_is_bitwise_identical_to_single_domain() {
+    // the acceptance property: S ∈ {1, 2, 3} grids reproduce the unsharded
+    // trajectory bit for bit, under both boundary modes, with variable
+    // radii (cross-inserts) and multi-step migration
+    let steps = 4;
+    for boundary in Boundary::ALL {
+        for radius in [RadiusDist::Const(8.0), RadiusDist::Uniform(2.0, 14.0)] {
+            let cfg = scenario(220, boundary, radius, 100.0, 99);
+            let (want_pos, want_vel) = single_domain(&cfg, 2, steps);
+            for s in [1usize, 2, 3] {
+                let e = sharded(&cfg, s, 2, steps);
+                let ctx = format!("{boundary:?}/{radius:?}/S={s}");
+                assert_bits_equal(&e.state.pos, &want_pos, &ctx);
+                assert_bits_equal(&e.state.vel, &want_vel, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_is_thread_count_invariant() {
+    // the chunk partitions, scans and merges are thread-count independent,
+    // so any ORCS_THREADS produces the same bits as the 1-thread reference
+    let cfg = scenario(300, Boundary::Periodic, RadiusDist::Uniform(2.0, 12.0), 100.0, 5);
+    let (want_pos, want_vel) = single_domain(&cfg, 1, 5);
+    for threads in [1usize, 3, 8] {
+        let e = sharded(&cfg, 2, threads, 5);
+        let ctx = format!("threads={threads}");
+        assert_bits_equal(&e.state.pos, &want_pos, &ctx);
+        assert_bits_equal(&e.state.vel, &want_vel, &ctx);
+    }
+}
+
+#[test]
+fn sharded_matches_in_large_radius_periodic_regime() {
+    // r_max > box_l / 2: the single-domain path switches to the 26-image
+    // dedup sweep; the sharded halo materializes the same images as ghosts
+    // (an owned particle can neighbor its own shard through a wrap)
+    let cfg = scenario(60, Boundary::Periodic, RadiusDist::Const(25.0), 40.0, 17);
+    let (want_pos, want_vel) = single_domain(&cfg, 2, 3);
+    for s in [1usize, 2] {
+        let e = sharded(&cfg, s, 2, 3);
+        let ctx = format!("large-radius S={s}");
+        assert_bits_equal(&e.state.pos, &want_pos, &ctx);
+        assert_bits_equal(&e.state.vel, &want_vel, &ctx);
+    }
+}
+
+#[test]
+fn migration_across_a_periodic_wrap_stays_exact() {
+    // a particle rides across the box boundary: its owner must wrap from
+    // the last shard back to shard 0 while the trajectory stays bitwise
+    // identical to the unsharded run
+    let mut cfg = scenario(64, Boundary::Periodic, RadiusDist::Const(6.0), 80.0, 23);
+    cfg.particle_dist = ParticleDist::Lattice;
+    let steps = 6;
+    let (want_pos, _) = single_domain(&cfg, 2, steps);
+
+    let sc = ShardedConfig {
+        policy: "fixed-3".into(),
+        threads: 2,
+        check_oom: false,
+        ..ShardedConfig::new(cfg.clone(), ShardSpec::new(2))
+    };
+    let mut e = ShardedEngine::new(sc, Arc::new(RustKernels { threads: 2 })).unwrap();
+    // plant a tracer just inside the +x face, moving outward fast enough to
+    // wrap within a couple of steps (dt = 1e-3)
+    let tracer = 0usize;
+    e.state.pos[tracer] = Vec3::new(79.9995, 40.0, 40.0);
+    e.state.vel[tracer] = Vec3::new(0.5, 0.0, 0.0);
+
+    // mirror the same tampering into a fresh single-domain run
+    let want = {
+        let ec = EngineConfig {
+            policy: "fixed-3".into(),
+            threads: 2,
+            check_oom: false,
+            ..EngineConfig::new(cfg.clone(), ApproachKind::RtRef)
+        };
+        let mut se = Engine::new(ec, Arc::new(RustKernels { threads: 2 })).unwrap();
+        se.state.pos[tracer] = Vec3::new(79.9995, 40.0, 40.0);
+        se.state.vel[tracer] = Vec3::new(0.5, 0.0, 0.0);
+        se.run(steps, false).unwrap();
+        se.state.pos.clone()
+    };
+    assert_ne!(want, want_pos, "tampering must change the trajectory");
+
+    let mut owners = Vec::new();
+    let mut migrations = 0u64;
+    for _ in 0..steps {
+        let rec = e.step().unwrap();
+        migrations += rec.migrations;
+        owners.push(e.owner(tracer));
+    }
+    assert_bits_equal(&e.state.pos, &want, "periodic-wrap migration");
+    // the tracer started in an x-high shard (odd index) and wrapped into an
+    // x-low shard (even index)
+    assert_eq!(owners[0] % 2, 1, "tracer should start x-high: {owners:?}");
+    assert_eq!(owners.last().unwrap() % 2, 0, "tracer should wrap to x-low: {owners:?}");
+    assert!(migrations > 0, "the wrap must be metered as a migration");
+}
+
+#[test]
+fn prop_random_scenes_shard_transparently() {
+    // randomized sweep over distributions, radii, boundaries and shard
+    // grids: the decomposition must stay bitwise transparent everywhere
+    orcs::testutil::prop_check("sharding_transparent", 8, |rng| {
+        let cfg = orcs::testutil::gen::small_config(rng, 40, 120);
+        let s = 1 + rng.below(3); // S in {1, 2, 3}
+        let steps = 2;
+        let (want_pos, want_vel) = single_domain(&cfg, 2, steps);
+        let e = sharded(&cfg, s, 2, steps);
+        for i in 0..want_pos.len() {
+            if e.state.pos[i] != want_pos[i] || e.state.vel[i] != want_vel[i] {
+                return Err(format!(
+                    "S={s} diverged at particle {i} ({:?} vs {:?}) on {}",
+                    e.state.pos[i],
+                    want_pos[i],
+                    cfg.tag()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn per_shard_oom_relief_on_lognormal_cluster() {
+    // the ISSUE acceptance criterion: a log-normal cluster that OOMs the
+    // single-domain RT-REF list completes once sharded with S >= 2
+    use orcs::rtcore::HwProfile;
+    static TINY: HwProfile = {
+        let mut p = orcs::rtcore::profile::TITANRTX;
+        p.vram_bytes = 700 * 1024; // 700 KB
+        p
+    };
+    let cfg = SimConfig {
+        n: 600,
+        box_l: 1000.0,
+        particle_dist: ParticleDist::Cluster,
+        radius_dist: RadiusDist::LogNormal { mu: 1.0, sigma: 2.0, lo: 1.0, hi: 330.0 },
+        boundary: Boundary::Periodic,
+        seed: 31415,
+        ..SimConfig::default()
+    };
+    let run = |s: usize| {
+        let sc = ShardedConfig {
+            policy: "gradient".into(),
+            threads: 2,
+            check_oom: true,
+            fleet: vec![&TINY],
+            ..ShardedConfig::new(cfg.clone(), ShardSpec::new(s))
+        };
+        let mut e = ShardedEngine::new(sc, Arc::new(RustKernels { threads: 2 })).unwrap();
+        orcs::benchsuite::sharded::center_positions(&mut e.state);
+        e.run(3, false).unwrap()
+    };
+    let single = run(1);
+    assert!(single.oom, "single-domain must OOM: {} bytes", single.oom_bytes);
+    assert!(single.oom_bytes > TINY.vram_bytes);
+    let split = run(2);
+    assert!(!split.oom, "S=2 must complete (max shard {} bytes)",
+        split.per_shard.iter().map(|t| t.max_list_bytes).max().unwrap_or(0));
+    assert_eq!(split.steps, 3);
+}
