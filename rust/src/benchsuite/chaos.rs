@@ -1,0 +1,163 @@
+//! Chaos bench (`orcs bench-chaos`): recovery overhead vs injected fault
+//! rate on a sharded heterogeneous fleet.
+//!
+//! For each fault rate a seeded [`FaultPlan`] (transients, stragglers, up
+//! to two device losses) is injected into an otherwise identical S = 2 run
+//! with checkpoints every 4 steps. Because recovery replays from step
+//! boundaries and degradation never changes the canonical neighbor lists,
+//! every faulted run must end **bitwise identical** to the fault-free
+//! baseline — the bench asserts it per row. What faults *do* cost is
+//! priced time: wasted attempts, switch re-staging, straggler-gated steps
+//! and checkpoint replay, reported as overhead over the baseline.
+
+use anyhow::Result;
+
+use super::common::BenchOpts;
+use crate::coordinator::metrics::fmt_ms;
+use crate::coordinator::report::{results_dir, CsvWriter, TextTable};
+use crate::core::config::{Boundary, ParticleDist, RadiusDist, ShardSpec, SimConfig};
+use crate::resilience::{FaultPlan, OomPolicy, ResilienceConfig, WatchdogCfg};
+use crate::rtcore::profile::{A40, L40, RTXPRO, TITANRTX};
+use crate::shard::{ShardedConfig, ShardedEngine, ShardedRunSummary};
+
+const N_DEFAULT: usize = 2_000;
+const STEPS_DEFAULT: usize = 16;
+
+/// Fault rates swept (probability a step draws a fault).
+const RATES: [f64; 4] = [0.0, 0.05, 0.1, 0.2];
+
+/// One chaos run: uniform-radius disordered gas, S = 2 over a four-device
+/// fleet, full resilience stack, faults drawn at `rate`.
+fn chaos_run(
+    opts: &BenchOpts,
+    n: usize,
+    steps: usize,
+    rate: f64,
+) -> Result<(ShardedRunSummary, Vec<crate::core::vec3::Vec3>)> {
+    let sim = SimConfig {
+        n,
+        particle_dist: ParticleDist::Disordered,
+        radius_dist: RadiusDist::Const(6.0),
+        boundary: Boundary::Periodic,
+        seed: opts.seed,
+        ..SimConfig::default()
+    };
+    let spec = ShardSpec::new(2);
+    let resilience = ResilienceConfig {
+        on_oom: OomPolicy::Fallback,
+        watchdog: WatchdogCfg { enabled: true, ..WatchdogCfg::default() },
+        checkpoint_every: 4,
+        faults: FaultPlan::seeded(opts.seed, steps as u64, rate, spec.count(), 2),
+    };
+    let cfg = ShardedConfig {
+        policy: "gradient".into(),
+        fleet: vec![&TITANRTX, &A40, &L40, &RTXPRO],
+        threads: opts.threads,
+        check_oom: true,
+        resilience,
+        ..ShardedConfig::new(sim, spec)
+    };
+    let mut engine = ShardedEngine::new(cfg, opts.kernels.clone())?;
+    let summary = engine.run(steps, false)?;
+    Ok((summary, engine.state.pos.clone()))
+}
+
+fn bitwise_equal(a: &[crate::core::vec3::Vec3], b: &[crate::core::vec3::Vec3]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(p, q)| {
+            p.x.to_bits() == q.x.to_bits()
+                && p.y.to_bits() == q.y.to_bits()
+                && p.z.to_bits() == q.z.to_bits()
+        })
+}
+
+pub fn run(opts: &BenchOpts) -> Result<()> {
+    let (n, steps) = opts.size(N_DEFAULT, STEPS_DEFAULT);
+    println!("== Chaos: recovery overhead vs fault rate (n={n}, {steps} steps, S=2) ==\n");
+
+    let mut csv = CsvWriter::create(
+        &results_dir().join("chaos.csv"),
+        &["rate", "steps", "replayed", "events", "total_sim_ms", "overhead_pct", "bitwise_match"],
+    )?;
+    let mut table = TextTable::new(&[
+        "rate", "steps", "replayed", "events", "total ms", "overhead", "bitwise",
+    ]);
+
+    let mut baseline: Option<(f64, Vec<crate::core::vec3::Vec3>)> = None;
+    for rate in RATES {
+        let (summary, pos) = chaos_run(opts, n, steps, rate)?;
+        anyhow::ensure!(!summary.oom, "chaos run at rate {rate} aborted on OOM");
+        let (base_ms, base_pos) = match &baseline {
+            Some(b) => (b.0, b.1.as_slice()),
+            None => {
+                baseline = Some((summary.total_sim_ms, pos.clone()));
+                (summary.total_sim_ms, pos.as_slice())
+            }
+        };
+        let overhead = if base_ms > 0.0 {
+            (summary.total_sim_ms - base_ms) / base_ms * 100.0
+        } else {
+            0.0
+        };
+        let bitwise = bitwise_equal(&pos, base_pos);
+        anyhow::ensure!(
+            bitwise,
+            "rate {rate}: faulted-and-recovered trajectory diverged from the baseline"
+        );
+        table.row(vec![
+            format!("{rate:.2}"),
+            summary.steps.to_string(),
+            summary.replayed_steps.to_string(),
+            summary.events.len().to_string(),
+            fmt_ms(summary.total_sim_ms),
+            format!("{overhead:+.1}%"),
+            bitwise.to_string(),
+        ]);
+        csv.row(&[
+            format!("{rate:.2}"),
+            summary.steps.to_string(),
+            summary.replayed_steps.to_string(),
+            summary.events.len().to_string(),
+            format!("{:.4}", summary.total_sim_ms),
+            format!("{overhead:.2}"),
+            bitwise.to_string(),
+        ])?;
+    }
+    println!("{}", table.render());
+    println!("CSV: {}", results_dir().join("chaos.csv").display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frnn::RustKernels;
+    use std::sync::Arc;
+
+    fn opts() -> BenchOpts {
+        BenchOpts {
+            threads: 2,
+            hw: crate::rtcore::profile::DEFAULT_GPU,
+            kernels: Arc::new(RustKernels { threads: 2 }),
+            quick: true,
+            steps_override: None,
+            n_override: None,
+            seed: 0xC0FFEE,
+        }
+    }
+
+    #[test]
+    fn faulted_run_matches_baseline_bitwise() {
+        let o = opts();
+        let (clean, clean_pos) = chaos_run(&o, 400, 10, 0.0).unwrap();
+        assert!(!clean.oom);
+        assert_eq!(clean.steps, 10);
+        assert_eq!(clean.replayed_steps, 0);
+        // a rate high enough that the seeded plan is guaranteed non-empty
+        let (chaotic, chaotic_pos) = chaos_run(&o, 400, 10, 0.5).unwrap();
+        assert!(!chaotic.oom);
+        assert!(!chaotic.events.is_empty(), "0.5 rate over 10 steps must fire");
+        assert!(bitwise_equal(&clean_pos, &chaotic_pos), "recovery must replay bitwise");
+        assert!(chaotic.total_sim_ms >= clean.total_sim_ms, "faults cannot be free");
+    }
+}

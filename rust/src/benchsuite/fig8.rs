@@ -49,7 +49,9 @@ pub fn run(opts: &BenchOpts) -> Result<()> {
                         sim.dt = 0.02;
                         sim.vel_scale = 2.0;
                     })?
-                .expect("RT-REF supports all scenarios");
+                .ok_or_else(|| {
+                    anyhow::anyhow!("RT-REF rejected {} with policy {policy}", case.tag())
+                })?;
             let mut cum = 0.0;
             let mut n_rebuilds = 0u64;
             for rec in &summary.records {

@@ -46,7 +46,7 @@ pub fn run(opts: &BenchOpts, boundary: Boundary) -> Result<()> {
         for &n in &sweep {
             let cpu = opts
                 .run(&case, n, boundary, ApproachKind::CpuCell, "gradient", steps, false)?
-                .expect("cpu-cell always supported");
+                .ok_or_else(|| anyhow::anyhow!("CPU-CELL rejected {} at n={n}", case.tag()))?;
             let mut fields = vec![n.to_string()];
             for approach in GPU_APPROACHES {
                 let cell = match opts.run(&case, n, boundary, approach, "gradient", steps, false)? {

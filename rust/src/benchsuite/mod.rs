@@ -3,6 +3,7 @@
 //! from the rtcore model + real wall-clock), prints them, and writes CSVs
 //! into `results/`.
 
+pub mod chaos;
 pub mod common;
 pub mod fig11_12;
 pub mod fig13;

@@ -8,6 +8,7 @@ use anyhow::{bail, Result};
 
 use crate::core::config::{Boundary, ForcePath, ParticleDist, RadiusDist, ShardSpec, SimConfig};
 use crate::frnn::ApproachKind;
+use crate::resilience::{FaultPlan, OomPolicy, ResilienceConfig, WatchdogCfg};
 use crate::rtcore::profile;
 use crate::rtcore::HwProfile;
 
@@ -32,8 +33,8 @@ impl Args {
             // --key=value or --key value or --switch
             if let Some((k, v)) = name.split_once('=') {
                 out.flags.insert(k.to_string(), v.to_string());
-            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                out.flags.insert(name.to_string(), it.next().unwrap());
+            } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
+                out.flags.insert(name.to_string(), v);
             } else {
                 out.switches.push(name.to_string());
             }
@@ -136,6 +137,43 @@ impl Args {
                 .ok_or_else(|| anyhow::anyhow!("bad --fleet {v} (titanrtx|a40|l40|rtxpro)")),
         }
     }
+
+    /// Resilience knobs: `--faults SPEC`, `--checkpoint-every N`,
+    /// `--on-oom abort|fallback`, `--watchdog`, `--max-retries N`.
+    ///
+    /// A `--faults` schedule implies the handlers that keep it survivable:
+    /// the watchdog turns on, checkpoints default to every 4 steps, and the
+    /// OOM policy defaults to `fallback` (all still overridable).
+    pub fn resilience(&self, steps: u64, shards: usize) -> Result<ResilienceConfig> {
+        let watchdog = WatchdogCfg {
+            enabled: self.has("watchdog"),
+            max_retries: self.get_usize("max-retries", 4)? as u32,
+            ..WatchdogCfg::default()
+        };
+        let mut cfg = ResilienceConfig {
+            checkpoint_every: self.get_usize("checkpoint-every", 0)? as u64,
+            watchdog,
+            ..ResilienceConfig::default()
+        };
+        if let Some(spec) = self.get("faults") {
+            cfg.faults = FaultPlan::from_spec(spec, steps, shards).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "bad --faults {spec} (rand:SEED:RATE or a list of transient@K, nan@K, \
+                     lost@K:SHARD, squeeze@K:BYTES, slow@K:SHARD:FACTOR)"
+                )
+            })?;
+            cfg.watchdog.enabled = true;
+            cfg.on_oom = OomPolicy::Fallback;
+            if cfg.checkpoint_every == 0 {
+                cfg.checkpoint_every = 4;
+            }
+        }
+        if let Some(p) = self.get("on-oom") {
+            cfg.on_oom = OomPolicy::parse(p)
+                .ok_or_else(|| anyhow::anyhow!("bad --on-oom {p} (abort|fallback)"))?;
+        }
+        Ok(cfg)
+    }
 }
 
 pub const USAGE: &str = "\
@@ -155,6 +193,7 @@ USAGE:
   orcs bench-fig13       regenerate Fig. 13 (GPU-generation scaling)
   orcs bench-sharded     sharded-scaling table (per-shard BVH policies,
                          OOM relief, heterogeneous fleet)
+  orcs bench-chaos       recovery-overhead table vs injected fault rate
   orcs inspect-artifacts print the loaded PJRT artifact set
 
 Scenario flags:
@@ -168,6 +207,17 @@ Scenario flags:
 Sharding flags:
   --shards S           decompose into an SxSxS shard grid (sharded engine)
   --fleet L            comma-separated GPU list bound round-robin to shards
+Resilience flags:
+  --faults SPEC        inject faults: rand:SEED:RATE, or a scripted list of
+                       transient@K, nan@K, lost@K:SHARD, squeeze@K:BYTES,
+                       slow@K:SHARD:FACTOR  (implies --watchdog, fallback
+                       OOM policy, and a 4-step checkpoint cadence)
+  --checkpoint-every N snapshot state every N steps (0 = off)
+  --on-oom P           abort|fallback — walk the degradation ladder
+                       RT-REF -> ORCS-perse -> CPU-CELL instead of aborting
+  --watchdog           per-step finiteness + kinetic-energy-drift check;
+                       diverged steps retry from the snapshot at dt/2
+  --max-retries N      watchdog retry budget per step (default 4)
 Bench flags:
   --scale F            shrink paper sizes by F (default per-bench)
   --steps N            step count override
@@ -219,6 +269,31 @@ mod tests {
         assert_eq!(parse(&["x"]).hw().unwrap().name, "RTXPRO");
         assert_eq!(parse(&["x", "--hw", "l40"]).hw().unwrap().name, "L40");
         assert!(parse(&["x", "--hw", "h100"]).hw().is_err());
+    }
+
+    #[test]
+    fn resilience_flags() {
+        let r = parse(&["x"]).resilience(10, 1).unwrap();
+        assert!(!r.active(), "no flags => inert config");
+        let r = parse(&["x", "--watchdog", "--max-retries", "2", "--checkpoint-every", "5"])
+            .resilience(10, 1)
+            .unwrap();
+        assert!(r.watchdog.enabled && r.watchdog.max_retries == 2);
+        assert_eq!(r.checkpoint_every, 5);
+        assert_eq!(r.on_oom, OomPolicy::Abort);
+        // --faults implies survivable defaults
+        let r = parse(&["x", "--faults", "lost@3:0,nan@5"]).resilience(10, 2).unwrap();
+        assert_eq!(r.faults.faults.len(), 2);
+        assert!(r.watchdog.enabled);
+        assert_eq!(r.on_oom, OomPolicy::Fallback);
+        assert_eq!(r.checkpoint_every, 4);
+        // explicit overrides win
+        let r = parse(&["x", "--faults", "transient@1", "--on-oom", "abort"])
+            .resilience(10, 1)
+            .unwrap();
+        assert_eq!(r.on_oom, OomPolicy::Abort);
+        assert!(parse(&["x", "--faults", "frob@2"]).resilience(10, 1).is_err());
+        assert!(parse(&["x", "--on-oom", "explode"]).resilience(10, 1).is_err());
     }
 
     #[test]

@@ -7,12 +7,18 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::core::config::{ForcePath, SimConfig};
+use crate::core::vec3::Vec3;
 use crate::frnn::{ApproachKind, Backend, PhysicsKernels, RustKernels, StepCtx, WallPhases};
 use crate::gradient::BvhAction;
 use crate::physics::state::SimState;
+use crate::resilience::checkpoint::EngineCheckpoint;
+use crate::resilience::{
+    EventKind, FaultInjector, FaultKind, OomPolicy, ResilienceConfig, ResilienceEvent, SimError,
+    SimResult, Watchdog,
+};
 use crate::rtcore::power::{step_energy, StepEnergy};
 use crate::rtcore::profile::{DeviceKind, EPYC64};
-use crate::rtcore::{timing, HwProfile, OpCounts, PhaseTimes};
+use crate::rtcore::{fleet, timing, HwProfile, OpCounts, PhaseTimes};
 
 /// Engine configuration: scenario + execution bindings.
 #[derive(Clone)]
@@ -28,6 +34,9 @@ pub struct EngineConfig {
     pub threads: usize,
     /// Enforce device-memory limits (RT-REF neighbor list OOM, §4.2).
     pub check_oom: bool,
+    /// Resilience knobs (faults, watchdog, checkpoints, OOM fallback).
+    /// Default is inert — identical behavior to a pre-resilience engine.
+    pub resilience: ResilienceConfig,
 }
 
 impl EngineConfig {
@@ -39,6 +48,7 @@ impl EngineConfig {
             hw: crate::rtcore::profile::DEFAULT_GPU,
             threads: crate::parallel::num_threads(),
             check_oom: true,
+            resilience: ResilienceConfig::default(),
         }
     }
 
@@ -89,6 +99,10 @@ pub struct RunSummary {
     pub oom: bool,
     pub oom_bytes: u64,
     pub wall_total_s: f64,
+    /// Resilience log for the run (fallbacks, retries, recoveries).
+    pub events: Vec<ResilienceEvent>,
+    /// Steps re-executed by checkpoint recovery.
+    pub replayed_steps: u64,
     /// Per-step trace (kept when requested).
     pub records: Vec<StepRecord>,
 }
@@ -99,6 +113,17 @@ pub struct Engine {
     pub state: SimState,
     backend: Box<dyn Backend>,
     kernels: Arc<dyn PhysicsKernels>,
+    injector: FaultInjector,
+    watchdog: Watchdog,
+    /// Injected VRAM squeeze, sticky once it fires.
+    vram_budget: Option<u64>,
+    /// Straggler factor for the next step (1.0 = none).
+    slowdown: f64,
+    checkpoint: Option<EngineCheckpoint>,
+    events: Vec<ResilienceEvent>,
+    replayed: u64,
+    /// An injected divergence corrupts the state after the next step.
+    divergence_armed: bool,
 }
 
 impl Engine {
@@ -107,11 +132,41 @@ impl Engine {
     /// (e.g. ORCS-persé with variable radii).
     pub fn new(cfg: EngineConfig, kernels: Arc<dyn PhysicsKernels>) -> Result<Self> {
         let state = SimState::from_config(&cfg.sim);
+        Self::with_state(cfg, kernels, state)
+    }
+
+    /// Build the engine over an existing state (snapshot runs: the
+    /// OOM-fallback equivalence tests start a fresh backend from a
+    /// mid-trajectory `SimState`).
+    pub fn with_state(
+        cfg: EngineConfig,
+        kernels: Arc<dyn PhysicsKernels>,
+        state: SimState,
+    ) -> Result<Self> {
         let backend = cfg.approach.create(&cfg.policy)?;
         backend
             .supports(&state)
             .map_err(|e| anyhow::anyhow!("{} cannot run {}: {e}", backend.name(), cfg.sim.tag()))?;
-        Ok(Engine { cfg, state, backend, kernels })
+        let injector = FaultInjector::new(&cfg.resilience.faults);
+        // a step-0 checkpoint makes an early device loss recoverable
+        let checkpoint = cfg
+            .resilience
+            .active()
+            .then(|| EngineCheckpoint { step: state.step_count, state: state.clone() });
+        Ok(Engine {
+            cfg,
+            state,
+            backend,
+            kernels,
+            injector,
+            watchdog: Watchdog::default(),
+            vram_budget: None,
+            slowdown: 1.0,
+            checkpoint,
+            events: Vec::new(),
+            replayed: 0,
+            divergence_armed: false,
+        })
     }
 
     /// Convenience: engine with the pure-Rust kernels.
@@ -128,14 +183,16 @@ impl Engine {
         })
     }
 
-    /// Execute one step and meter it.
-    pub fn step(&mut self) -> Result<StepRecord> {
+    /// Execute one raw step and meter it (no fault handling — the
+    /// resilient path wraps this).
+    pub fn step(&mut self) -> SimResult<StepRecord> {
         let hw = self.cfg.pricing_profile();
         let mut ctx = StepCtx {
             threads: self.cfg.threads,
             kernels: self.kernels.as_ref(),
             hw,
             check_oom: self.cfg.check_oom,
+            vram_budget: self.vram_budget,
         };
         let r = self.backend.step(&mut self.state, &mut ctx)?;
         let sim_times = timing::simulate(&r.counts, hw);
@@ -154,7 +211,184 @@ impl Engine {
         })
     }
 
-    /// Run `steps` steps; aborts early on OOM (like the paper's runs).
+    /// One step under the resilience policy: consume injected faults, walk
+    /// the OOM degradation ladder, and retry watchdog-rejected steps from
+    /// the pre-step snapshot with halved `dt` and a forced BVH rebuild.
+    pub fn step_resilient(&mut self) -> SimResult<StepRecord> {
+        let res = self.cfg.resilience.clone();
+        let step = self.state.step_count;
+        let mut transient = false;
+        for f in self.injector.take(step) {
+            match f {
+                FaultKind::VramSqueeze { budget_bytes } => {
+                    self.vram_budget = Some(budget_bytes);
+                    let kind = EventKind::VramSqueeze { budget_bytes };
+                    self.events.push(ResilienceEvent { step, kind });
+                }
+                FaultKind::Straggler { shard, slowdown } => {
+                    self.slowdown = slowdown;
+                    let kind = EventKind::Straggler { shard, slowdown };
+                    self.events.push(ResilienceEvent { step, kind });
+                }
+                FaultKind::Transient => transient = true,
+                FaultKind::Divergence => self.divergence_armed = true,
+                FaultKind::DeviceLost { shard } => self.recover_from_device_loss(shard)?,
+            }
+        }
+
+        let mut wasted_ms = 0.0;
+        let mut wasted_j = 0.0;
+        let mut attempt = 0u32;
+        loop {
+            let snapshot = res.watchdog.enabled.then(|| self.state.clone());
+            let mut rec = self.step()?;
+
+            // OOM degradation ladder: the failed attempt did not mutate the
+            // state (RT-REF reports OOM before force/integrate), so the
+            // step re-runs cleanly on the next rung.
+            if let Some(required) = rec.oom_bytes {
+                if res.on_oom == OomPolicy::Fallback {
+                    if let Some(switch_ms) = self.fall_back(required)? {
+                        wasted_ms += rec.sim_ms;
+                        wasted_j += rec.energy.energy_j;
+                        rec = self.step()?;
+                        rec.sim_ms += switch_ms;
+                    }
+                }
+            }
+
+            if self.divergence_armed && rec.oom_bytes.is_none() && !self.state.vel.is_empty() {
+                // injected divergence: blow up one velocity (finite, so only
+                // the kinetic-energy bound can catch it)
+                self.divergence_armed = false;
+                self.state.vel[0] = self.state.vel[0] * 1e15 + Vec3::splat(1e15);
+            }
+
+            if res.watchdog.enabled && rec.oom_bytes.is_none() {
+                if let Err(detail) = self.watchdog.check(&res.watchdog, &self.state) {
+                    if attempt >= res.watchdog.max_retries {
+                        return Err(SimError::NumericalDivergence { detail });
+                    }
+                    attempt += 1;
+                    self.state = snapshot.expect("watchdog snapshot taken when enabled");
+                    self.state.dt *= 0.5;
+                    self.backend.invalidate_bvh();
+                    wasted_ms += rec.sim_ms;
+                    wasted_j += rec.energy.energy_j;
+                    self.events.push(ResilienceEvent {
+                        step,
+                        kind: EventKind::WatchdogRetry { attempt, dt: self.state.dt, detail },
+                    });
+                    continue;
+                }
+            }
+
+            if transient {
+                // the attempt failed spuriously mid-flight and re-ran: the
+                // physics is the re-run's, the price includes the discard
+                wasted_ms += rec.sim_ms;
+                wasted_j += rec.energy.energy_j;
+                self.events
+                    .push(ResilienceEvent { step, kind: EventKind::TransientRetry { attempt: 1 } });
+            }
+
+            rec.sim_ms += wasted_ms;
+            rec.energy.energy_j += wasted_j;
+            if self.slowdown != 1.0 {
+                rec.sim_ms *= self.slowdown;
+                rec.energy.energy_j *= self.slowdown;
+                self.slowdown = 1.0;
+            }
+            if res.checkpoint_every > 0
+                && rec.oom_bytes.is_none()
+                && self.state.step_count % res.checkpoint_every == 0
+            {
+                self.checkpoint = Some(EngineCheckpoint {
+                    step: self.state.step_count,
+                    state: self.state.clone(),
+                });
+            }
+            return Ok(rec);
+        }
+    }
+
+    /// Step down the degradation ladder (RT-REF → ORCS-persé → CPU-CELL) to
+    /// the first rung that supports the scene. Returns the priced switch
+    /// time in ms, or `None` when no rung is left (the OOM stands).
+    fn fall_back(&mut self, required_bytes: u64) -> SimResult<Option<f64>> {
+        const LADDER: [ApproachKind; 3] =
+            [ApproachKind::RtRef, ApproachKind::OrcsPerse, ApproachKind::CpuCell];
+        let step = self.state.step_count;
+        let old_hw = self.cfg.pricing_profile();
+        let budget_bytes = self.vram_budget.map_or(old_hw.vram_bytes, |b| b.min(old_hw.vram_bytes));
+        let pos = LADDER.iter().position(|a| *a == self.cfg.approach);
+        let start = pos.map_or(LADDER.len(), |i| i + 1);
+        for &next in LADDER.iter().skip(start) {
+            let backend = next.create(&self.cfg.policy).map_err(SimError::fatal)?;
+            if backend.supports(&self.state).is_err() {
+                continue;
+            }
+            let from = self.cfg.approach.label();
+            self.cfg.approach = next;
+            self.backend = backend;
+            let new_hw = self.cfg.pricing_profile();
+            let switch_ms = fleet::switch_time(self.state.n() as u64, new_hw) * 1e3;
+            self.events.push(ResilienceEvent {
+                step,
+                kind: EventKind::OomFallback {
+                    from,
+                    to: next.label(),
+                    shard: None,
+                    required_bytes,
+                    budget_bytes,
+                    switch_ms,
+                },
+            });
+            return Ok(Some(switch_ms));
+        }
+        let kind = EventKind::FallbackUnavailable { required_bytes };
+        self.events.push(ResilienceEvent { step, kind });
+        Ok(None)
+    }
+
+    /// Handle an injected device loss: a replacement device re-stages from
+    /// the last checkpoint with a fresh backend (empty BVH, fresh policy)
+    /// and the trajectory replays from the step boundary.
+    fn recover_from_device_loss(&mut self, shard: usize) -> SimResult<()> {
+        let device = self.cfg.pricing_profile().name.to_string();
+        let Some(cp) = self.checkpoint.as_ref() else {
+            return Err(SimError::DeviceLost { shard, device });
+        };
+        let from_step = cp.step;
+        let replayed = self.state.step_count.saturating_sub(from_step);
+        let at = self.state.step_count;
+        self.state = cp.state.clone();
+        self.backend = self.cfg.approach.create(&self.cfg.policy).map_err(SimError::fatal)?;
+        self.watchdog.reset();
+        self.replayed += replayed;
+        self.events.push(ResilienceEvent {
+            step: at,
+            kind: EventKind::DeviceLost { shard, device, survivors: 1 },
+        });
+        self.events
+            .push(ResilienceEvent { step: at, kind: EventKind::Recovery { from_step, replayed } });
+        Ok(())
+    }
+
+    /// Drain the resilience log (events accumulate across steps).
+    pub fn take_events(&mut self) -> Vec<ResilienceEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Steps re-executed by checkpoint recovery so far.
+    pub fn replayed_steps(&self) -> u64 {
+        self.replayed
+    }
+
+    /// Run `steps` steps; aborts early on an unhandled OOM (like the
+    /// paper's runs). With an active [`ResilienceConfig`] every step goes
+    /// through the resilient path; a failed step surfaces its index,
+    /// backend and device in the error context.
     pub fn run(&mut self, steps: usize, keep_trace: bool) -> Result<RunSummary> {
         let wall_start = Instant::now();
         let mut s = RunSummary {
@@ -163,9 +397,17 @@ impl Engine {
             hw: self.cfg.pricing_profile().name.to_string(),
             ..Default::default()
         };
+        let resilient = self.cfg.resilience.active();
+        let target = self.state.step_count + steps as u64;
         let mut energy_time = 0.0;
-        for _ in 0..steps {
-            let rec = self.step()?;
+        while self.state.step_count < target {
+            let i = self.state.step_count;
+            let backend_name = self.backend.name();
+            let hw_name = self.cfg.pricing_profile().name;
+            let r = if resilient { self.step_resilient() } else { self.step() };
+            let rec = r.map_err(|e| {
+                anyhow::anyhow!("step {i} failed [{backend_name} on {hw_name}]: {e}")
+            })?;
             s.steps += 1;
             s.total_sim_ms += rec.sim_ms;
             s.total_rt_ms += rec.rt_ms;
@@ -189,6 +431,8 @@ impl Engine {
         }
         s.ee = crate::rtcore::power::energy_efficiency(s.total_interactions, s.total_energy_j);
         s.wall_total_s = wall_start.elapsed().as_secs_f64();
+        s.events = self.events.clone();
+        s.replayed_steps = self.replayed;
         debug_assert!(
             self.cfg.pricing_profile().kind == DeviceKind::Cpu
                 || self.cfg.approach != ApproachKind::CpuCell

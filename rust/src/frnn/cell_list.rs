@@ -11,6 +11,7 @@ use crate::core::vec3::Vec3;
 use crate::frnn::{Backend, StepCtx, StepResult, WallPhases};
 use crate::parallel;
 use crate::physics::state::SimState;
+use crate::resilience::SimResult;
 use crate::rtcore::OpCounts;
 
 /// Uniform grid over the box with counting-sort cell buckets.
@@ -355,7 +356,7 @@ impl Backend for CpuCell {
         "CPU-CELL@64c"
     }
 
-    fn step(&mut self, state: &mut SimState, ctx: &mut StepCtx) -> anyhow::Result<StepResult> {
+    fn step(&mut self, state: &mut SimState, ctx: &mut StepCtx) -> SimResult<StepResult> {
         let mut counts = OpCounts::default();
         let mut wall = WallPhases::default();
 
@@ -521,7 +522,13 @@ mod tests {
     fn backend_step_runs_and_counts() {
         let mut state = mk_state(200, Boundary::Periodic, RadiusDist::Const(8.0), 100.0);
         let kernels = RustKernels { threads: 2 };
-        let mut ctx = StepCtx { threads: 2, kernels: &kernels, hw: &EPYC64, check_oom: false };
+        let mut ctx = StepCtx {
+            threads: 2,
+            kernels: &kernels,
+            hw: &EPYC64,
+            check_oom: false,
+            vram_budget: None,
+        };
         let mut backend = CpuCell::new();
         let r = backend.step(&mut state, &mut ctx).unwrap();
         assert!(r.counts.cell_pair_tests > 0);

@@ -12,6 +12,7 @@ use crate::core::vec3::Vec3;
 use crate::frnn::cell_list::{cell_forces, Grid};
 use crate::frnn::{Backend, StepCtx, StepResult, WallPhases};
 use crate::physics::state::SimState;
+use crate::resilience::SimResult;
 use crate::rtcore::OpCounts;
 
 /// Interleave the low 10 bits of x into every 3rd bit position.
@@ -157,7 +158,7 @@ impl Backend for GpuCell {
         "GPU-CELL"
     }
 
-    fn step(&mut self, state: &mut SimState, ctx: &mut StepCtx) -> anyhow::Result<StepResult> {
+    fn step(&mut self, state: &mut SimState, ctx: &mut StepCtx) -> SimResult<StepResult> {
         let mut counts = OpCounts::default();
         let mut wall = WallPhases::default();
         let n = state.n();
@@ -271,8 +272,13 @@ mod tests {
                 s2
             };
             let kernels = RustKernels { threads: 2 };
-            let mut ctx =
-                StepCtx { threads: 2, kernels: &kernels, hw: &RTXPRO, check_oom: false };
+            let mut ctx = StepCtx {
+                threads: 2,
+                kernels: &kernels,
+                hw: &RTXPRO,
+                check_oom: false,
+                vram_budget: None,
+            };
             let mut backend = GpuCell::new();
             let r = backend.step(&mut state, &mut ctx).unwrap();
             assert!(r.counts.sort_elems == 250);

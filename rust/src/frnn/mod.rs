@@ -27,6 +27,7 @@ pub mod zorder;
 use crate::core::vec3::Vec3;
 use crate::gradient::BvhAction;
 use crate::physics::state::SimState;
+use crate::resilience::SimResult;
 use crate::rtcore::{HwProfile, OpCounts};
 
 /// Compressed sparse-row neighbor lists: neighbors of particle `i` are
@@ -199,6 +200,16 @@ pub struct StepCtx<'a> {
     pub hw: &'static HwProfile,
     /// Enforce the device-memory limit (RT-REF neighbor list, §4.2).
     pub check_oom: bool,
+    /// Injected VRAM-budget squeeze (resilience harness): when set, the
+    /// usable device memory is `min(hw.vram_bytes, budget)`.
+    pub vram_budget: Option<u64>,
+}
+
+impl StepCtx<'_> {
+    /// Usable device memory after any injected squeeze.
+    pub fn effective_vram(&self) -> u64 {
+        self.vram_budget.map_or(self.hw.vram_bytes, |b| b.min(self.hw.vram_bytes))
+    }
 }
 
 /// A full FRNN simulation backend.
@@ -213,8 +224,14 @@ pub trait Backend: Send {
     }
 
     /// Execute one simulation step: find neighbors, compute forces,
-    /// advance particles; fill counters and wall times.
-    fn step(&mut self, state: &mut SimState, ctx: &mut StepCtx) -> anyhow::Result<StepResult>;
+    /// advance particles; fill counters and wall times. Failures are
+    /// classified through the [`crate::resilience::SimError`] taxonomy so
+    /// the resilient engines can degrade, retry or recover.
+    fn step(&mut self, state: &mut SimState, ctx: &mut StepCtx) -> SimResult<StepResult>;
+
+    /// Drop any cached acceleration structure so the next step rebuilds
+    /// from scratch (watchdog recovery). No-op for cell backends.
+    fn invalidate_bvh(&mut self) {}
 }
 
 /// Backend identifiers (CLI + bench matrix).

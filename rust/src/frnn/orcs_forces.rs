@@ -23,6 +23,7 @@ use crate::frnn::zorder::ZOrderCache;
 use crate::frnn::{Backend, StepCtx, StepResult, WallPhases};
 use crate::gradient::RebuildPolicy;
 use crate::physics::state::SimState;
+use crate::resilience::{SimError, SimResult};
 use crate::rtcore::OpCounts;
 
 pub struct OrcsForces {
@@ -52,7 +53,7 @@ impl Backend for OrcsForces {
         "ORCS-forces"
     }
 
-    fn step(&mut self, state: &mut SimState, ctx: &mut StepCtx) -> anyhow::Result<StepResult> {
+    fn step(&mut self, state: &mut SimState, ctx: &mut StepCtx) -> SimResult<StepResult> {
         let mut counts = OpCounts::default();
         let mut wall = WallPhases::default();
         let n = state.n();
@@ -183,11 +184,15 @@ impl Backend for OrcsForces {
 
         // Phase 3: the one extra compute kernel — integration.
         let t2 = Instant::now();
-        ctx.kernels.integrate(state, &mut counts)?;
+        ctx.kernels.integrate(state, &mut counts).map_err(SimError::fatal)?;
         wall.integrate = t2.elapsed().as_secs_f64();
 
         self.mgr.observe(action, &counts, ctx.hw);
         Ok(StepResult { counts, bvh_action: Some(action), oom_bytes: None, wall })
+    }
+
+    fn invalidate_bvh(&mut self) {
+        self.mgr.invalidate();
     }
 }
 
@@ -227,7 +232,13 @@ mod tests {
             s2
         };
         let kernels = RustKernels { threads: 3 };
-        let mut ctx = StepCtx { threads: 3, kernels: &kernels, hw: &RTXPRO, check_oom: false };
+        let mut ctx = StepCtx {
+            threads: 3,
+            kernels: &kernels,
+            hw: &RTXPRO,
+            check_oom: false,
+            vram_budget: None,
+        };
         let mut backend = OrcsForces::new(Box::new(FixedKPolicy::new(4)));
         let r = backend.step(&mut state, &mut ctx).unwrap();
         assert!(r.counts.atomic_adds == 2 * r.counts.interactions);
@@ -262,7 +273,13 @@ mod tests {
         let want =
             brute::count_interactions(&state.pos, &state.radius, state.boundary, state.box_l);
         let kernels = RustKernels { threads: 2 };
-        let mut ctx = StepCtx { threads: 2, kernels: &kernels, hw: &RTXPRO, check_oom: false };
+        let mut ctx = StepCtx {
+            threads: 2,
+            kernels: &kernels,
+            hw: &RTXPRO,
+            check_oom: false,
+            vram_budget: None,
+        };
         let mut backend = OrcsForces::new(Box::new(FixedKPolicy::new(4)));
         let r = backend.step(&mut state, &mut ctx).unwrap();
         // pairs outside the LJ force cutoff but inside the search radius

@@ -19,6 +19,7 @@ use crate::frnn::zorder::ZOrderCache;
 use crate::frnn::{Backend, StepCtx, StepResult, WallPhases};
 use crate::gradient::RebuildPolicy;
 use crate::physics::{boundary, state::SimState};
+use crate::resilience::{SimError, SimResult};
 use crate::rtcore::OpCounts;
 
 pub struct OrcsPerse {
@@ -46,8 +47,8 @@ impl Backend for OrcsPerse {
         Ok(())
     }
 
-    fn step(&mut self, state: &mut SimState, ctx: &mut StepCtx) -> anyhow::Result<StepResult> {
-        self.supports(state).map_err(|e| anyhow::anyhow!(e))?;
+    fn step(&mut self, state: &mut SimState, ctx: &mut StepCtx) -> SimResult<StepResult> {
+        self.supports(state).map_err(SimError::fatal)?;
         let mut counts = OpCounts::default();
         let mut wall = WallPhases::default();
 
@@ -161,6 +162,10 @@ impl Backend for OrcsPerse {
         self.mgr.observe(action, &counts, ctx.hw);
         Ok(StepResult { counts, bvh_action: Some(action), oom_bytes: None, wall })
     }
+
+    fn invalidate_bvh(&mut self) {
+        self.mgr.invalidate();
+    }
 }
 
 #[cfg(test)]
@@ -180,7 +185,13 @@ mod tests {
         };
         let mut state = SimState::from_config(&cfg);
         let kernels = RustKernels { threads: 1 };
-        let mut ctx = StepCtx { threads: 1, kernels: &kernels, hw: &RTXPRO, check_oom: false };
+        let mut ctx = StepCtx {
+            threads: 1,
+            kernels: &kernels,
+            hw: &RTXPRO,
+            check_oom: false,
+            vram_budget: None,
+        };
         let mut backend = OrcsPerse::new(Box::new(FixedKPolicy::new(4)));
         assert!(backend.supports(&state).is_err());
         assert!(backend.step(&mut state, &mut ctx).is_err());
@@ -204,8 +215,13 @@ mod tests {
                 s2
             };
             let kernels = RustKernels { threads: 3 };
-            let mut ctx =
-                StepCtx { threads: 3, kernels: &kernels, hw: &RTXPRO, check_oom: false };
+            let mut ctx = StepCtx {
+                threads: 3,
+                kernels: &kernels,
+                hw: &RTXPRO,
+                check_oom: false,
+                vram_budget: None,
+            };
             let mut backend = OrcsPerse::new(Box::new(FixedKPolicy::new(4)));
             let r = backend.step(&mut state, &mut ctx).unwrap();
             // no list, no atomics, no separate kernels
@@ -233,7 +249,13 @@ mod tests {
         };
         let mut state = SimState::from_config(&cfg);
         let kernels = RustKernels { threads: 2 };
-        let mut ctx = StepCtx { threads: 2, kernels: &kernels, hw: &RTXPRO, check_oom: false };
+        let mut ctx = StepCtx {
+            threads: 2,
+            kernels: &kernels,
+            hw: &RTXPRO,
+            check_oom: false,
+            vram_budget: None,
+        };
         let mut backend = OrcsPerse::new(Box::new(FixedKPolicy::new(8)));
         for _ in 0..20 {
             backend.step(&mut state, &mut ctx).unwrap();

@@ -106,6 +106,18 @@ impl BvhManager {
     pub fn bvh(&self) -> &Bvh {
         self.bvh.as_ref().expect("BVH not built yet")
     }
+
+    /// Drop the cached BVH so the next [`BvhManager::prepare_with`] builds
+    /// from scratch regardless of the policy's decision (watchdog recovery
+    /// forces a clean tree after restoring a snapshot).
+    pub fn invalidate(&mut self) {
+        self.bvh = None;
+    }
+
+    /// Snapshot the policy with its full internal state (checkpointing).
+    pub fn clone_policy(&self) -> Box<dyn RebuildPolicy> {
+        self.policy.clone_box()
+    }
 }
 
 /// One particle's ray set: primary origin plus gamma origins (periodic BC).

@@ -19,6 +19,7 @@ use crate::frnn::zorder::ZOrderCache;
 use crate::frnn::{Backend, NeighborLists, StepCtx, StepResult, WallPhases};
 use crate::gradient::RebuildPolicy;
 use crate::physics::state::SimState;
+use crate::resilience::{SimError, SimResult};
 use crate::rtcore::OpCounts;
 
 pub struct RtRef {
@@ -46,7 +47,7 @@ impl Backend for RtRef {
         "RT-REF"
     }
 
-    fn step(&mut self, state: &mut SimState, ctx: &mut StepCtx) -> anyhow::Result<StepResult> {
+    fn step(&mut self, state: &mut SimState, ctx: &mut StepCtx) -> SimResult<StepResult> {
         let mut counts = OpCounts::default();
         let mut wall = WallPhases::default();
         let n = state.n();
@@ -195,7 +196,7 @@ impl Backend for RtRef {
         counts.interactions += nl.total_entries() as u64 / 2;
         wall.search = sort_wall + t1.elapsed().as_secs_f64();
 
-        if ctx.check_oom && list_bytes > ctx.hw.vram_bytes {
+        if ctx.check_oom && list_bytes > ctx.effective_vram() {
             self.mgr.observe(action, &counts, ctx.hw);
             return Ok(StepResult {
                 counts,
@@ -212,17 +213,21 @@ impl Backend for RtRef {
         // count. This is what makes RT-REF lose to ORCS-forces on skewed
         // (log-normal) neighbor distributions (Table 2, Figs 9-10).
         let t2 = Instant::now();
-        state.force = ctx.kernels.lj_forces(state, &nl, &mut counts)?;
+        state.force = ctx.kernels.lj_forces(state, &nl, &mut counts).map_err(SimError::fatal)?;
         counts.force_kernel_pairs += (n as u64) * (nl.k_max() as u64);
         wall.force = t2.elapsed().as_secs_f64();
 
         // Phase 4: integration kernel.
         let t3 = Instant::now();
-        ctx.kernels.integrate(state, &mut counts)?;
+        ctx.kernels.integrate(state, &mut counts).map_err(SimError::fatal)?;
         wall.integrate = t3.elapsed().as_secs_f64();
 
         self.mgr.observe(action, &counts, ctx.hw);
         Ok(StepResult { counts, bvh_action: Some(action), oom_bytes: None, wall })
+    }
+
+    fn invalidate_bvh(&mut self) {
+        self.mgr.invalidate();
     }
 }
 
@@ -254,7 +259,13 @@ mod tests {
             s2
         };
         let kernels = RustKernels { threads: 2 };
-        let mut ctx = StepCtx { threads: 2, kernels: &kernels, hw: &RTXPRO, check_oom: false };
+        let mut ctx = StepCtx {
+            threads: 2,
+            kernels: &kernels,
+            hw: &RTXPRO,
+            check_oom: false,
+            vram_budget: None,
+        };
         let mut backend = RtRef::new(Box::new(FixedKPolicy::new(4)));
         let r = backend.step(&mut state, &mut ctx).unwrap();
         (state, want, r)
@@ -311,7 +322,13 @@ mod tests {
             p
         };
         let kernels = RustKernels { threads: 1 };
-        let mut ctx = StepCtx { threads: 1, kernels: &kernels, hw: &TINY, check_oom: true };
+        let mut ctx = StepCtx {
+            threads: 1,
+            kernels: &kernels,
+            hw: &TINY,
+            check_oom: true,
+            vram_budget: None,
+        };
         let mut backend = RtRef::new(Box::new(FixedKPolicy::new(4)));
         let r = backend.step(&mut state, &mut ctx).unwrap();
         assert!(r.oom_bytes.is_some(), "expected OOM, got {:?}", r.counts.nbr_list_bytes_peak);
@@ -332,8 +349,13 @@ mod tests {
             };
             let mut state = SimState::from_config(&cfg);
             let kernels = RustKernels { threads: 2 };
-            let mut ctx =
-                StepCtx { threads: 2, kernels: &kernels, hw: &RTXPRO, check_oom: false };
+            let mut ctx = StepCtx {
+                threads: 2,
+                kernels: &kernels,
+                hw: &RTXPRO,
+                check_oom: false,
+                vram_budget: None,
+            };
             let mut backend = RtRef::new(Box::new(FixedKPolicy::new(4)));
             for _ in 0..3 {
                 let r = backend.step(&mut state, &mut ctx).unwrap();
@@ -361,7 +383,13 @@ mod tests {
         };
         let mut state = SimState::from_config(&cfg);
         let kernels = RustKernels { threads: 2 };
-        let mut ctx = StepCtx { threads: 2, kernels: &kernels, hw: &RTXPRO, check_oom: false };
+        let mut ctx = StepCtx {
+            threads: 2,
+            kernels: &kernels,
+            hw: &RTXPRO,
+            check_oom: false,
+            vram_budget: None,
+        };
         let mut backend = RtRef::new(Box::new(FixedKPolicy::new(4)));
         let r = backend.step(&mut state, &mut ctx).unwrap();
         assert_eq!(r.counts.nbr_list_writes, 0);

@@ -47,6 +47,9 @@ pub trait RebuildPolicy: Send {
     fn current_k(&self) -> f64 {
         f64::NAN
     }
+    /// Clone the policy with its full internal state (checkpoint support —
+    /// restoring a shard must resume the optimizer where it left off).
+    fn clone_box(&self) -> Box<dyn RebuildPolicy>;
 }
 
 // ---------------------------------------------------------------- fixed-k
@@ -91,6 +94,10 @@ impl RebuildPolicy for FixedKPolicy {
 
     fn current_k(&self) -> f64 {
         self.k as f64
+    }
+
+    fn clone_box(&self) -> Box<dyn RebuildPolicy> {
+        Box::new(self.clone())
     }
 }
 
@@ -153,6 +160,10 @@ impl RebuildPolicy for AvgPolicy {
 
     fn name(&self) -> String {
         "avg".into()
+    }
+
+    fn clone_box(&self) -> Box<dyn RebuildPolicy> {
+        Box::new(self.clone())
     }
 }
 
@@ -272,6 +283,10 @@ impl RebuildPolicy for GradientPolicy {
     fn current_k(&self) -> f64 {
         self.k_opt
     }
+
+    fn clone_box(&self) -> Box<dyn RebuildPolicy> {
+        Box::new(self.clone())
+    }
 }
 
 // ---------------------------------------------------------------- gradient-ee
@@ -314,6 +329,10 @@ impl RebuildPolicy for GradientEePolicy {
 
     fn current_k(&self) -> f64 {
         self.inner.current_k()
+    }
+
+    fn clone_box(&self) -> Box<dyn RebuildPolicy> {
+        Box::new(self.clone())
     }
 }
 

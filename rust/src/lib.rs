@@ -18,6 +18,9 @@
 //! * the **sharded domain decomposition**: per-shard BVHs and rebuild
 //!   policies over an `S³` grid with periodic halo exchange, per-shard OOM
 //!   metering and heterogeneous multi-device stepping ([`shard`]);
+//! * the **resilience runtime**: typed error taxonomy, seeded fault
+//!   injection, OOM degradation ladder, numerical watchdog and
+//!   checkpointed shard recovery ([`resilience`]);
 //! * the **benchmark suite** regenerating every table and figure of the
 //!   paper's evaluation, plus the sharded-scaling study ([`benchsuite`]).
 //!
@@ -33,6 +36,7 @@ pub mod gradient;
 pub mod rtcore;
 pub mod runtime;
 pub mod coordinator;
+pub mod resilience;
 pub mod shard;
 pub mod benchsuite;
 pub mod cli;

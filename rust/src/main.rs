@@ -3,7 +3,7 @@
 
 use anyhow::Result;
 
-use orcs::benchsuite::{common::BenchOpts, fig11_12, fig13, fig8, fig9_10, sharded, table2};
+use orcs::benchsuite::{chaos, common::BenchOpts, fig11_12, fig13, fig8, fig9_10, sharded, table2};
 use orcs::cli::{Args, USAGE};
 use orcs::coordinator::report::{results_dir, CsvWriter, TextTable};
 use orcs::coordinator::{Engine, EngineConfig};
@@ -29,6 +29,7 @@ fn run() -> Result<()> {
         "bench-fig11" | "bench-fig12" => fig11_12::run(&BenchOpts::from_args(&args)?),
         "bench-fig13" => fig13::run(&BenchOpts::from_args(&args)?),
         "bench-sharded" => sharded::run(&BenchOpts::from_args(&args)?),
+        "bench-chaos" => chaos::run(&BenchOpts::from_args(&args)?),
         "inspect-artifacts" => inspect_artifacts(),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -55,6 +56,7 @@ fn simulate(args: &Args) -> Result<()> {
         hw: args.hw()?,
         threads: orcs::parallel::num_threads(),
         check_oom: !args.has("no-oom-check"),
+        resilience: args.resilience(steps as u64, 1)?,
         ..EngineConfig::new(sim.clone(), approach)
     };
     let kernels = Engine::kernels_for(sim.force_path, cfg.threads)?;
@@ -68,13 +70,17 @@ fn simulate(args: &Args) -> Result<()> {
         steps
     );
     let mut engine = Engine::new(cfg, kernels)?;
+    let resilient = engine.cfg.resilience.active();
     let trace_path = args.get("trace").map(std::path::PathBuf::from);
     let keep_trace = trace_path.is_some();
     let report_every = (steps / 10).max(1);
 
     let mut records = Vec::new();
     for s in 0..steps {
-        let rec = engine.step()?;
+        let rec = if resilient { engine.step_resilient()? } else { engine.step()? };
+        for ev in engine.take_events() {
+            println!("  {ev}");
+        }
         if s % report_every == 0 || s + 1 == steps {
             println!(
                 "  step {:>6}  sim {:>9.4} ms  rt {:>9.4} ms  {:>7.0} W  {:>10} int  {}",
@@ -157,6 +163,7 @@ fn simulate_sharded(args: &Args, spec: ShardSpec) -> Result<()> {
         fleet,
         threads: orcs::parallel::num_threads(),
         check_oom: !args.has("no-oom-check"),
+        resilience: args.resilience(steps as u64, spec.count())?,
         ..ShardedConfig::new(sim.clone(), spec)
     };
     let kernels = Engine::kernels_for(sim.force_path, cfg.threads)?;
@@ -170,6 +177,9 @@ fn simulate_sharded(args: &Args, spec: ShardSpec) -> Result<()> {
     );
     let mut engine = ShardedEngine::new(cfg, kernels)?;
     let summary = engine.run(steps, true)?;
+    for ev in &summary.events {
+        println!("  {ev}");
+    }
     let report_every = (steps / 10).max(1);
     for (k, rec) in summary.records.iter().enumerate() {
         if k % report_every == 0 || k + 1 == summary.records.len() {
@@ -188,6 +198,7 @@ fn simulate_sharded(args: &Args, spec: ShardSpec) -> Result<()> {
     }
     let mut t = TextTable::new(&[
         "shard", "hw", "owned", "ghosts", "builds", "updates", "forced", "upd/build", "k_max",
+        "listless",
     ]);
     for (k, tot) in summary.per_shard.iter().enumerate() {
         let st = summary.steps.max(1);
@@ -201,12 +212,15 @@ fn simulate_sharded(args: &Args, spec: ShardSpec) -> Result<()> {
             tot.forced_builds.to_string(),
             format!("{:.2}", tot.update_ratio()),
             tot.max_k_max.to_string(),
+            tot.listless_steps.to_string(),
         ]);
     }
     println!("{}", t.render());
     println!(
-        "done: {} steps | fleet {} | avg step {:.4} ms | {:.3} J | EE {:.1} int/J | finite={}",
+        "done: {} steps ({} replayed) | fleet {} | avg step {:.4} ms | {:.3} J | EE {:.1} int/J \
+         | finite={}",
         summary.steps,
+        summary.replayed_steps,
         summary.fleet,
         summary.avg_sim_ms,
         summary.total_energy_j,

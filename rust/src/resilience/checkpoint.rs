@@ -1,0 +1,62 @@
+//! Checkpoint containers for the resilient engines.
+//!
+//! A checkpoint is an in-memory snapshot taken at a step boundary. Physics
+//! is deliberately independent of BVH topology, rebuild-policy history and
+//! fleet binding (the canonical-list invariant), so restoring `SimState` +
+//! ownership and rebuilding fresh BVHs replays the trajectory **bitwise** —
+//! the property `tests/property_resilience.rs` pins. Policy state and list
+//! widths are snapshotted too, so metering resumes without a cold-start
+//! artifact.
+
+use crate::gradient::policy::RebuildPolicy;
+use crate::physics::state::SimState;
+
+/// Snapshot of a single-domain [`crate::coordinator::Engine`].
+#[derive(Clone, Debug)]
+pub struct EngineCheckpoint {
+    /// `step_count` at the boundary the snapshot was taken.
+    pub step: u64,
+    pub state: SimState,
+}
+
+/// Per-shard slice of a fleet checkpoint.
+pub struct ShardCheckpoint {
+    /// The shard's rebuild-policy state (gradient optimizer history etc.).
+    pub policy: Box<dyn RebuildPolicy>,
+    /// Widest pre-dedup list seen (the fixed-slot allocation width).
+    pub k_max_seen: usize,
+    /// Whether the shard had already degraded to the listless pipeline.
+    pub listless: bool,
+}
+
+impl Clone for ShardCheckpoint {
+    fn clone(&self) -> Self {
+        ShardCheckpoint {
+            policy: self.policy.clone_box(),
+            k_max_seen: self.k_max_seen,
+            listless: self.listless,
+        }
+    }
+}
+
+impl std::fmt::Debug for ShardCheckpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardCheckpoint")
+            .field("policy", &self.policy.name())
+            .field("k_max_seen", &self.k_max_seen)
+            .field("listless", &self.listless)
+            .finish()
+    }
+}
+
+/// Snapshot of a [`crate::shard::ShardedEngine`] at a step boundary.
+#[derive(Clone, Debug)]
+pub struct FleetCheckpoint {
+    pub step: u64,
+    pub state: SimState,
+    /// Owner shard per particle.
+    pub owner: Vec<u32>,
+    /// Whether the engine had stepped at least once (migration baseline).
+    pub stepped: bool,
+    pub shards: Vec<ShardCheckpoint>,
+}

@@ -1,0 +1,121 @@
+//! Typed error taxonomy for step failures.
+//!
+//! Every way a simulation step can fail is classified into a [`SimError`]
+//! variant, so the resilient layers (coordinator and sharded engine) can
+//! decide *per class* whether to degrade, retry, recover from a checkpoint,
+//! or abort — instead of bubbling an opaque `anyhow` string to the CLI.
+//!
+//! `SimError` implements `std::error::Error`, so `?` converts it into the
+//! vendored `anyhow::Error` at the API boundary for free (via anyhow's
+//! blanket `From<E: std::error::Error>` impl). Inside the engines the typed
+//! form is preserved end to end.
+
+use std::fmt;
+
+/// A classified step failure.
+#[derive(Clone, Debug)]
+pub enum SimError {
+    /// A fixed-slot allocation exceeded the device's (possibly squeezed)
+    /// memory budget — the §4.2 RT-REF neighbor-list overflow.
+    Oom {
+        backend: &'static str,
+        /// Shard index for sharded runs; `None` single-domain.
+        shard: Option<usize>,
+        required_bytes: u64,
+        budget_bytes: u64,
+    },
+    /// A (simulated) device dropped out of the fleet mid-run.
+    DeviceLost { shard: usize, device: String },
+    /// The numerical watchdog exhausted its retry budget on a diverged
+    /// trajectory (non-finite state or kinetic-energy blow-up).
+    NumericalDivergence { detail: String },
+    /// A spurious, retryable failure (simulated ECC hiccup, launch timeout).
+    Transient { detail: String },
+    /// Anything unclassifiable: configuration or kernel errors. Never
+    /// retried.
+    Fatal { detail: String },
+}
+
+/// `Result` specialized to the typed taxonomy.
+pub type SimResult<T> = Result<T, SimError>;
+
+impl SimError {
+    /// Wrap an unclassifiable error (kernel failure, bad config) as fatal.
+    pub fn fatal(e: impl fmt::Display) -> Self {
+        SimError::Fatal { detail: e.to_string() }
+    }
+
+    /// Stable lowercase tag for reports and event lines.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SimError::Oom { .. } => "oom",
+            SimError::DeviceLost { .. } => "device-lost",
+            SimError::NumericalDivergence { .. } => "divergence",
+            SimError::Transient { .. } => "transient",
+            SimError::Fatal { .. } => "fatal",
+        }
+    }
+
+    /// Whether a resilient engine has a recovery path for this class
+    /// (degradation ladder, checkpoint restore, or retry).
+    pub fn is_recoverable(&self) -> bool {
+        !matches!(self, SimError::Fatal { .. })
+    }
+}
+
+impl fmt::Display for SimError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SimError::Oom { backend, shard, required_bytes, budget_bytes } => {
+                match shard {
+                    Some(s) => write!(f, "{backend} OOM on shard {s}")?,
+                    None => write!(f, "{backend} OOM")?,
+                }
+                write!(f, ": needs {required_bytes} B, budget {budget_bytes} B")
+            }
+            SimError::DeviceLost { shard, device } => {
+                write!(f, "device {device} (shard {shard}) lost")
+            }
+            SimError::NumericalDivergence { detail } => {
+                write!(f, "numerical divergence: {detail}")
+            }
+            SimError::Transient { detail } => write!(f, "transient fault: {detail}"),
+            SimError::Fatal { detail } => write!(f, "fatal: {detail}"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_and_recoverability() {
+        let oom = SimError::Oom {
+            backend: "RT-REF",
+            shard: Some(3),
+            required_bytes: 2048,
+            budget_bytes: 1024,
+        };
+        assert_eq!(oom.kind(), "oom");
+        assert!(oom.is_recoverable());
+        assert!(oom.to_string().contains("shard 3"));
+        assert!(oom.to_string().contains("2048"));
+
+        let fatal = SimError::fatal("kernel exploded");
+        assert_eq!(fatal.kind(), "fatal");
+        assert!(!fatal.is_recoverable());
+    }
+
+    #[test]
+    fn converts_into_anyhow_via_question_mark() {
+        fn f() -> anyhow::Result<()> {
+            Err::<(), _>(SimError::Transient { detail: "ecc".into() })?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert!(e.to_string().contains("transient fault"));
+    }
+}

@@ -1,0 +1,232 @@
+//! Deterministic, seeded fault injection.
+//!
+//! A [`FaultPlan`] is a schedule of faults pinned to step indices. Plans
+//! come from a scripted spec (`lost@6:1,squeeze@9:4096,nan@12`) or from a
+//! seeded random draw (`rand:SEED:RATE`) driven by [`crate::core::rng::Rng`]
+//! — the same splittable generator the scene builder uses, so a chaos run
+//! is reproducible bit for bit from its seed.
+//!
+//! The injector is *consumed* as the run advances: each fault fires exactly
+//! once at its step, which keeps checkpoint-recovery replays fault-free (a
+//! replayed step boundary does not re-trigger the fault that caused the
+//! recovery).
+
+use crate::core::rng::Rng;
+
+/// RNG fork tag for fault schedules (disjoint from scene-builder tags).
+const FAULT_STREAM_TAG: u64 = 0xFA171;
+
+/// What goes wrong.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultKind {
+    /// A fleet device dies; its shards must re-bind and recover from the
+    /// last checkpoint.
+    DeviceLost { shard: usize },
+    /// A spurious step failure: the attempt is discarded and re-run, and
+    /// the wasted attempt is priced.
+    Transient,
+    /// The usable VRAM budget drops (e.g. a co-tenant allocates); sticky
+    /// until the run ends.
+    VramSqueeze { budget_bytes: u64 },
+    /// One device runs slow for one step (thermal throttle); the fleet
+    /// aggregate pays the straggler.
+    Straggler { shard: usize, slowdown: f64 },
+    /// The next integration blows up (injected divergence); exercises the
+    /// numerical watchdog.
+    Divergence,
+}
+
+/// One scheduled fault.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fault {
+    /// Step index (value of `step_count` entering the step) at which the
+    /// fault fires.
+    pub step: u64,
+    pub kind: FaultKind,
+}
+
+/// A full schedule of faults for a run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// The empty (fault-free) plan.
+    pub fn empty() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Parse a scripted spec: comma-separated entries of
+    /// `transient@K`, `nan@K`, `lost@K:SHARD`, `squeeze@K:BYTES`,
+    /// `slow@K:SHARD:FACTOR`. Returns `None` on any malformed entry.
+    pub fn parse(spec: &str) -> Option<FaultPlan> {
+        let mut faults = Vec::new();
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (name, rest) = entry.split_once('@')?;
+            let mut parts = rest.split(':');
+            let step: u64 = parts.next()?.parse().ok()?;
+            let kind = match name {
+                "transient" => FaultKind::Transient,
+                "nan" => FaultKind::Divergence,
+                "lost" => FaultKind::DeviceLost { shard: parts.next()?.parse().ok()? },
+                "squeeze" => FaultKind::VramSqueeze { budget_bytes: parts.next()?.parse().ok()? },
+                "slow" => FaultKind::Straggler {
+                    shard: parts.next()?.parse().ok()?,
+                    slowdown: parts.next()?.parse().ok()?,
+                },
+                _ => return None,
+            };
+            if parts.next().is_some() {
+                return None; // trailing garbage
+            }
+            faults.push(Fault { step, kind });
+        }
+        faults.sort_by_key(|f| f.step);
+        Some(FaultPlan { faults })
+    }
+
+    /// Parse either form: `rand:SEED:RATE` draws a seeded schedule over
+    /// `steps` steps and `shards` shards; anything else is a scripted spec.
+    pub fn from_spec(spec: &str, steps: u64, shards: usize) -> Option<FaultPlan> {
+        if let Some(rest) = spec.strip_prefix("rand:") {
+            let (seed, rate) = rest.split_once(':')?;
+            let seed: u64 = seed.parse().ok()?;
+            let rate: f64 = rate.parse().ok()?;
+            return Some(FaultPlan::seeded(seed, steps, rate, shards, 2));
+        }
+        FaultPlan::parse(spec)
+    }
+
+    /// Draw a random schedule: each step faults with probability `rate`,
+    /// the kind drawn uniformly from {transient, straggler, device-loss}
+    /// with device losses capped at `max_losses` (a fleet can only shrink
+    /// so far). Deterministic in `seed`.
+    pub fn seeded(seed: u64, steps: u64, rate: f64, shards: usize, max_losses: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed).fork(FAULT_STREAM_TAG);
+        let mut faults = Vec::new();
+        let mut losses = 0usize;
+        for step in 0..steps {
+            if rng.f64() >= rate {
+                continue;
+            }
+            let shard = rng.below(shards.max(1));
+            let kind = match rng.below(3) {
+                0 => FaultKind::Transient,
+                1 => FaultKind::Straggler { shard, slowdown: 1.5 + 3.0 * rng.f64() },
+                _ if losses < max_losses => {
+                    losses += 1;
+                    FaultKind::DeviceLost { shard }
+                }
+                _ => FaultKind::Transient,
+            };
+            faults.push(Fault { step, kind });
+        }
+        FaultPlan { faults }
+    }
+}
+
+/// Consumes a [`FaultPlan`] step by step.
+#[derive(Clone, Debug, Default)]
+pub struct FaultInjector {
+    /// Remaining faults, ascending by step.
+    pending: Vec<Fault>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: &FaultPlan) -> Self {
+        let mut pending = plan.faults.clone();
+        pending.sort_by_key(|f| f.step);
+        FaultInjector { pending }
+    }
+
+    /// Remove and return every fault scheduled at (or overdue by) `step`.
+    /// Each fault fires exactly once.
+    pub fn take(&mut self, step: u64) -> Vec<FaultKind> {
+        let mut fired = Vec::new();
+        self.pending.retain(|f| {
+            if f.step <= step {
+                fired.push(f.kind.clone());
+                false
+            } else {
+                true
+            }
+        });
+        fired
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.pending.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scripted_grammar() {
+        let p = FaultPlan::parse("transient@2, lost@6:1,squeeze@9:4096,slow@3:0:4.0,nan@12")
+            .expect("valid spec");
+        assert_eq!(p.faults.len(), 5);
+        // sorted by step
+        assert_eq!(p.faults[0], Fault { step: 2, kind: FaultKind::Transient });
+        assert_eq!(
+            p.faults[1],
+            Fault { step: 3, kind: FaultKind::Straggler { shard: 0, slowdown: 4.0 } }
+        );
+        assert_eq!(p.faults[2], Fault { step: 6, kind: FaultKind::DeviceLost { shard: 1 } });
+        assert_eq!(
+            p.faults[3],
+            Fault { step: 9, kind: FaultKind::VramSqueeze { budget_bytes: 4096 } }
+        );
+        assert_eq!(p.faults[4], Fault { step: 12, kind: FaultKind::Divergence });
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in ["frob@2", "lost@6", "slow@3:0", "transient@x", "lost@6:1:9"] {
+            assert!(FaultPlan::parse(bad).is_none(), "{bad} should not parse");
+        }
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::empty());
+    }
+
+    #[test]
+    fn seeded_schedule_is_deterministic_and_capped() {
+        let a = FaultPlan::seeded(42, 200, 0.3, 8, 2);
+        let b = FaultPlan::seeded(42, 200, 0.3, 8, 2);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "30% rate over 200 steps must fire");
+        let losses =
+            a.faults.iter().filter(|f| matches!(f.kind, FaultKind::DeviceLost { .. })).count();
+        assert!(losses <= 2, "losses capped: {losses}");
+        let c = FaultPlan::seeded(43, 200, 0.3, 8, 2);
+        assert_ne!(a, c, "different seed, different schedule");
+    }
+
+    #[test]
+    fn from_spec_routes_rand_and_scripted() {
+        let r = FaultPlan::from_spec("rand:7:0.5", 50, 4).unwrap();
+        assert_eq!(r, FaultPlan::seeded(7, 50, 0.5, 4, 2));
+        let s = FaultPlan::from_spec("transient@1", 50, 4).unwrap();
+        assert_eq!(s.faults.len(), 1);
+        assert!(FaultPlan::from_spec("rand:x:0.5", 50, 4).is_none());
+    }
+
+    #[test]
+    fn injector_fires_each_fault_once() {
+        let p = FaultPlan::parse("transient@2,nan@2,lost@5:0").unwrap();
+        let mut inj = FaultInjector::new(&p);
+        assert!(inj.take(0).is_empty());
+        assert!(inj.take(1).is_empty());
+        let at2 = inj.take(2);
+        assert_eq!(at2.len(), 2);
+        assert!(inj.take(2).is_empty(), "consumed");
+        assert_eq!(inj.take(7), vec![FaultKind::DeviceLost { shard: 0 }], "overdue fires");
+        assert!(inj.is_done());
+    }
+}

@@ -1,0 +1,197 @@
+//! Resilience runtime: typed failures, fault injection, graceful
+//! degradation and checkpointed recovery.
+//!
+//! The paper's §4.2 OOM analysis tells us *when* an RT-REF run dies; this
+//! module is what keeps the simulation alive when it does. Four pieces:
+//!
+//! - [`error`] — the [`SimError`] taxonomy every step failure is
+//!   classified into.
+//! - [`inject`] — deterministic seeded fault schedules (device loss,
+//!   transient faults, VRAM squeezes, stragglers, divergence) consumed by
+//!   the engines.
+//! - [`watchdog`] — the per-step numerical divergence detector.
+//! - [`checkpoint`] — step-boundary snapshots that make `DeviceLost`
+//!   recoverable with a bitwise-identical replay.
+//!
+//! The degradation ladder on OOM is RT-REF → ORCS-persé (listless, uniform
+//! radius only) → CPU-CELL; each rung is metered as a priced backend
+//! switch and reported as a one-line [`ResilienceEvent`].
+//!
+//! The default [`ResilienceConfig`] is inert: no faults, no checkpoints,
+//! watchdog off, `on_oom = Abort`. Every pre-existing run is byte-for-byte
+//! unaffected unless a knob is turned.
+
+pub mod checkpoint;
+pub mod error;
+pub mod inject;
+pub mod watchdog;
+
+pub use error::{SimError, SimResult};
+pub use inject::{Fault, FaultInjector, FaultKind, FaultPlan};
+pub use watchdog::{Watchdog, WatchdogCfg};
+
+use std::fmt;
+
+/// What to do when `check_oom` trips.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OomPolicy {
+    /// Surface the OOM and stop the run (the paper's behavior).
+    #[default]
+    Abort,
+    /// Step down the degradation ladder (RT-REF → ORCS-persé → CPU-CELL)
+    /// and keep going, pricing the switch.
+    Fallback,
+}
+
+impl OomPolicy {
+    pub fn parse(s: &str) -> Option<OomPolicy> {
+        match s {
+            "abort" => Some(OomPolicy::Abort),
+            "fallback" => Some(OomPolicy::Fallback),
+            _ => None,
+        }
+    }
+}
+
+/// Resilience knobs shared by the coordinator and sharded engines.
+#[derive(Clone, Debug, Default)]
+pub struct ResilienceConfig {
+    pub on_oom: OomPolicy,
+    pub watchdog: WatchdogCfg,
+    /// Snapshot the run every N steps (0 = no checkpoints).
+    pub checkpoint_every: u64,
+    /// Injected fault schedule (empty = none).
+    pub faults: FaultPlan,
+}
+
+impl ResilienceConfig {
+    /// Whether any knob is turned — the engines take the zero-overhead raw
+    /// path when this is false.
+    pub fn active(&self) -> bool {
+        self.on_oom == OomPolicy::Fallback
+            || self.watchdog.enabled
+            || self.checkpoint_every > 0
+            || !self.faults.is_empty()
+    }
+}
+
+/// One line in the resilience log: something happened at `step`.
+#[derive(Clone, Debug)]
+pub struct ResilienceEvent {
+    pub step: u64,
+    pub kind: EventKind,
+}
+
+/// What happened.
+#[derive(Clone, Debug)]
+pub enum EventKind {
+    /// A backend (or one shard) stepped down the degradation ladder.
+    OomFallback {
+        from: &'static str,
+        to: &'static str,
+        /// Affected shard for sharded runs; `None` single-domain.
+        shard: Option<usize>,
+        required_bytes: u64,
+        budget_bytes: u64,
+        /// Priced state re-upload for the switch, ms.
+        switch_ms: f64,
+    },
+    /// OOM under `Fallback` but no ladder rung supports the scene.
+    FallbackUnavailable { required_bytes: u64 },
+    /// The watchdog rejected a step; retrying with halved `dt`.
+    WatchdogRetry { attempt: u32, dt: f32, detail: String },
+    /// A transient fault discarded one attempt; the re-run succeeded.
+    TransientRetry { attempt: u32 },
+    /// Injected VRAM squeeze now in effect.
+    VramSqueeze { budget_bytes: u64 },
+    /// Injected straggler slowdown for this step.
+    Straggler { shard: usize, slowdown: f64 },
+    /// A device died; `survivors` remain in the fleet.
+    DeviceLost { shard: usize, device: String, survivors: usize },
+    /// Recovery restored the last checkpoint and is replaying.
+    Recovery { from_step: u64, replayed: u64 },
+}
+
+impl fmt::Display for ResilienceEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[step {:>4}] ", self.step)?;
+        match &self.kind {
+            EventKind::OomFallback { from, to, shard, required_bytes, budget_bytes, switch_ms } => {
+                if let Some(s) = shard {
+                    write!(f, "shard {s}: ")?;
+                }
+                write!(
+                    f,
+                    "OOM ({required_bytes} B > {budget_bytes} B): \
+                     fell back {from} -> {to} (+{switch_ms:.3} ms switch)"
+                )
+            }
+            EventKind::FallbackUnavailable { required_bytes } => {
+                write!(f, "OOM ({required_bytes} B) but no fallback rung supports this scene")
+            }
+            EventKind::WatchdogRetry { attempt, dt, detail } => {
+                write!(f, "watchdog: {detail}; retry {attempt} with dt={dt:.3e} + BVH rebuild")
+            }
+            EventKind::TransientRetry { attempt } => {
+                write!(f, "transient fault: attempt {attempt} discarded, re-run ok")
+            }
+            EventKind::VramSqueeze { budget_bytes } => {
+                write!(f, "VRAM budget squeezed to {budget_bytes} B")
+            }
+            EventKind::Straggler { shard, slowdown } => {
+                write!(f, "shard {shard} straggling {slowdown:.2}x this step")
+            }
+            EventKind::DeviceLost { shard, device, survivors } => {
+                write!(f, "device {device} (shard {shard}) lost; {survivors} survivors")
+            }
+            EventKind::Recovery { from_step, replayed } => {
+                write!(f, "recovered from checkpoint at step {from_step} (replaying {replayed})")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_inert() {
+        let cfg = ResilienceConfig::default();
+        assert_eq!(cfg.on_oom, OomPolicy::Abort);
+        assert!(!cfg.watchdog.enabled);
+        assert_eq!(cfg.checkpoint_every, 0);
+        assert!(cfg.faults.is_empty());
+        assert!(!cfg.active());
+    }
+
+    #[test]
+    fn any_knob_activates() {
+        let mut cfg = ResilienceConfig { on_oom: OomPolicy::Fallback, ..Default::default() };
+        assert!(cfg.active());
+        cfg = ResilienceConfig { checkpoint_every: 5, ..Default::default() };
+        assert!(cfg.active());
+        cfg.checkpoint_every = 0;
+        cfg.watchdog.enabled = true;
+        assert!(cfg.active());
+    }
+
+    #[test]
+    fn oom_policy_parses() {
+        assert_eq!(OomPolicy::parse("abort"), Some(OomPolicy::Abort));
+        assert_eq!(OomPolicy::parse("fallback"), Some(OomPolicy::Fallback));
+        assert_eq!(OomPolicy::parse("panic"), None);
+    }
+
+    #[test]
+    fn events_render_one_line() {
+        let e = ResilienceEvent {
+            step: 6,
+            kind: EventKind::DeviceLost { shard: 1, device: "L40".into(), survivors: 3 },
+        };
+        let line = e.to_string();
+        assert!(line.contains("step"), "{line}");
+        assert!(line.contains("L40"), "{line}");
+        assert!(!line.contains('\n'));
+    }
+}

@@ -1,0 +1,110 @@
+//! Numerical watchdog: per-step divergence detection.
+//!
+//! Two checks after every integrated step: [`SimState::is_finite`] (NaN /
+//! Inf anywhere in positions or velocities) and a kinetic-energy drift
+//! bound (KE may not jump by more than `ke_growth`× between consecutive
+//! accepted steps — a symplectic integrator on a bounded-force system
+//! cannot do that legitimately, but an exploding `dt` or a corrupted
+//! velocity can). On failure the owning engine restores its pre-step
+//! snapshot, halves `dt`, forces a BVH rebuild and retries under a bounded
+//! backoff.
+
+use crate::physics::state::SimState;
+
+/// Watchdog knobs. Default is **disabled** — the watchdog clones the state
+/// every step when armed, so it is strictly opt-in.
+#[derive(Clone, Debug)]
+pub struct WatchdogCfg {
+    pub enabled: bool,
+    /// Allowed kinetic-energy growth factor between accepted steps.
+    pub ke_growth: f64,
+    /// Retry budget per step before giving up with
+    /// [`crate::resilience::SimError::NumericalDivergence`].
+    pub max_retries: u32,
+}
+
+impl Default for WatchdogCfg {
+    fn default() -> Self {
+        WatchdogCfg { enabled: false, ke_growth: 64.0, max_retries: 4 }
+    }
+}
+
+/// Tracks the kinetic-energy anchor across accepted steps.
+#[derive(Clone, Debug, Default)]
+pub struct Watchdog {
+    /// KE of the last *accepted* step (committed only on success).
+    last_ke: Option<f64>,
+}
+
+impl Watchdog {
+    /// Validate the post-step state. On `Ok` the KE anchor advances; on
+    /// `Err` it stays at the last accepted step so a retry is judged
+    /// against the same baseline.
+    pub fn check(&mut self, cfg: &WatchdogCfg, state: &SimState) -> Result<(), String> {
+        if !state.is_finite() {
+            return Err("non-finite position or velocity".into());
+        }
+        let ke = state.kinetic_energy();
+        if let Some(prev) = self.last_ke {
+            // the floor keeps near-zero-KE scenes (cold lattices) from
+            // tripping on absolute noise
+            let floor = 1e-9 * state.n().max(1) as f64;
+            if ke > cfg.ke_growth * (prev + floor) {
+                return Err(format!("kinetic energy jumped {prev:.3e} -> {ke:.3e}"));
+            }
+        }
+        self.last_ke = Some(ke);
+        Ok(())
+    }
+
+    /// Forget the KE anchor (after a checkpoint restore the next accepted
+    /// step re-anchors).
+    pub fn reset(&mut self) {
+        self.last_ke = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::config::SimConfig;
+    use crate::core::vec3::Vec3;
+
+    fn small_state() -> SimState {
+        SimState::from_config(&SimConfig { n: 32, ..SimConfig::default() })
+    }
+
+    #[test]
+    fn accepts_healthy_steps_and_anchors_ke() {
+        let cfg = WatchdogCfg { enabled: true, ..WatchdogCfg::default() };
+        let mut wd = Watchdog::default();
+        let state = small_state();
+        assert!(wd.check(&cfg, &state).is_ok());
+        assert!(wd.check(&cfg, &state).is_ok(), "same KE passes again");
+    }
+
+    #[test]
+    fn trips_on_non_finite() {
+        let cfg = WatchdogCfg::default();
+        let mut wd = Watchdog::default();
+        let mut state = small_state();
+        state.vel[0] = Vec3::new(f32::NAN, 0.0, 0.0);
+        let err = wd.check(&cfg, &state).unwrap_err();
+        assert!(err.contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn trips_on_ke_blowup_without_moving_anchor() {
+        let cfg = WatchdogCfg::default();
+        let mut wd = Watchdog::default();
+        let mut state = small_state();
+        wd.check(&cfg, &state).unwrap();
+        let saved = state.vel[0];
+        state.vel[0] = state.vel[0] * 1e15 + Vec3::splat(1e15);
+        let err = wd.check(&cfg, &state).unwrap_err();
+        assert!(err.contains("kinetic energy"), "{err}");
+        // the anchor did not move: restoring the snapshot passes again
+        state.vel[0] = saved;
+        assert!(wd.check(&cfg, &state).is_ok());
+    }
+}

@@ -23,6 +23,17 @@ pub const MIGRATION_BYTES: u64 = 32;
 /// a quarter of HBM).
 pub const EXCHANGE_BW_FRACTION: f64 = 0.25;
 
+/// Bytes re-staged per particle when a backend switch (degradation ladder)
+/// re-uploads the simulation state: position + velocity (24 B) + radius +
+/// global id (8 B) — same layout as a migration.
+pub const STATE_ENTRY_BYTES: u64 = 32;
+
+/// Simulated seconds to re-stage `n` particles for a fallback backend
+/// switch on `hw` (priced like an exchange over the interconnect).
+pub fn switch_time(n: u64, hw: &HwProfile) -> f64 {
+    exchange_time(n * STATE_ENTRY_BYTES, hw)
+}
+
 /// Activity factor of the exchange phase (DMA engines + memory, no SMs).
 const EXCHANGE_ACTIVITY: f64 = 0.20;
 
@@ -76,6 +87,21 @@ impl ShardCost {
     /// The shard's full step time on its device, including the exchange.
     pub fn total_s(&self) -> f64 {
         self.times.total() + self.exchange_s
+    }
+
+    /// Every component scaled by `f` — prices an injected straggler
+    /// slowdown (time stretches; energy grows with the longer active
+    /// window).
+    pub fn scaled(&self, f: f64) -> ShardCost {
+        ShardCost {
+            times: self.times.scaled(f),
+            energy: StepEnergy {
+                avg_power_w: self.energy.avg_power_w,
+                energy_j: self.energy.energy_j * f,
+            },
+            exchange_s: self.exchange_s * f,
+            exchange_j: self.exchange_j * f,
+        }
     }
 }
 
@@ -138,6 +164,17 @@ mod tests {
         let e = exchange_energy(t, &RTXPRO);
         assert!(e > 0.0 && e < t * RTXPRO.peak_w);
         assert_eq!(exchange_energy(0.0, &RTXPRO), 0.0);
+    }
+
+    #[test]
+    fn switch_and_slowdown_pricing() {
+        // a backend switch re-stages 32 B per particle over the interconnect
+        let t = switch_time(1000, &RTXPRO);
+        assert!((t - exchange_time(32_000, &RTXPRO)).abs() < 1e-15);
+        let c = cost(2.0, 6.0);
+        let s = c.scaled(1.5);
+        assert!((s.total_s() - 3.0).abs() < 1e-12);
+        assert!((s.energy.energy_j - 9.0).abs() < 1e-12);
     }
 
     #[test]

@@ -75,6 +75,20 @@ impl PhaseTimes {
         self.grid += o.grid;
         self.cell += o.cell;
     }
+
+    /// All phases multiplied by `f` (straggler-slowdown pricing: a
+    /// throttled device runs every phase proportionally slower).
+    pub fn scaled(&self, f: f64) -> PhaseTimes {
+        PhaseTimes {
+            build: self.build * f,
+            refit: self.refit * f,
+            traverse: self.traverse * f,
+            force_kernel: self.force_kernel * f,
+            integrate: self.integrate * f,
+            grid: self.grid * f,
+            cell: self.cell * f,
+        }
+    }
 }
 
 /// Price one step's operation counts on a hardware profile.

@@ -50,6 +50,11 @@ use crate::frnn::rt_common::BvhManager;
 use crate::frnn::{NeighborLists, PhysicsKernels, RustKernels};
 use crate::gradient::BvhAction;
 use crate::physics::state::SimState;
+use crate::resilience::checkpoint::{FleetCheckpoint, ShardCheckpoint};
+use crate::resilience::{
+    EventKind, FaultInjector, FaultKind, OomPolicy, ResilienceConfig, ResilienceEvent, SimError,
+    SimResult, Watchdog,
+};
 use crate::rtcore::fleet::{self, ShardCost};
 use crate::rtcore::power::step_energy;
 use crate::rtcore::{timing, HwProfile, OpCounts};
@@ -69,6 +74,9 @@ pub struct ShardedConfig {
     pub threads: usize,
     /// Enforce the per-shard neighbor-list memory limit.
     pub check_oom: bool,
+    /// Resilience knobs (faults, watchdog, checkpoints, OOM fallback).
+    /// Default is inert — identical behavior to a pre-resilience engine.
+    pub resilience: ResilienceConfig,
 }
 
 impl ShardedConfig {
@@ -80,6 +88,7 @@ impl ShardedConfig {
             fleet: vec![crate::rtcore::profile::DEFAULT_GPU],
             threads: crate::parallel::num_threads(),
             check_oom: true,
+            resilience: ResilienceConfig::default(),
         }
     }
 }
@@ -97,8 +106,11 @@ pub struct ShardStepStat {
     /// Widest per-particle list this step (pre-dedup — the slots a real
     /// append stream occupies).
     pub k_max: usize,
-    /// Fixed-slot list allocation on this shard's device.
+    /// Fixed-slot list allocation on this shard's device (0 once listless).
     pub list_bytes: u64,
+    /// The shard has degraded to the listless ORCS-persé path (no neighbor
+    /// list is materialized; forces accumulate in-shader).
+    pub listless: bool,
     /// This shard's full step on its device (incl. exchange), ms.
     pub sim_ms: f64,
     pub rt_ms: f64,
@@ -137,6 +149,8 @@ pub struct ShardTotals {
     pub ghosts_sum: u64,
     pub max_k_max: usize,
     pub max_list_bytes: u64,
+    /// Steps this shard ran on the degraded listless path.
+    pub listless_steps: u64,
     /// Sum of this shard's per-step device time, ms.
     pub total_sim_ms: f64,
 }
@@ -168,6 +182,10 @@ pub struct ShardedRunSummary {
     pub oom_shard: usize,
     pub oom_bytes: u64,
     pub wall_total_s: f64,
+    /// Resilience log for the run (fallbacks, retries, recoveries).
+    pub events: Vec<ResilienceEvent>,
+    /// Steps re-executed by checkpoint recovery.
+    pub replayed_steps: u64,
     pub per_shard: Vec<ShardTotals>,
     /// Per-step trace (kept when requested).
     pub records: Vec<ShardedStepRecord>,
@@ -190,6 +208,25 @@ pub struct ShardedEngine {
     shards: Vec<Shard>,
     owner: Vec<u32>,
     stepped: bool,
+    /// Surviving fleet (device losses remove entries; shards rebind
+    /// round-robin over what is left).
+    devices: Vec<&'static HwProfile>,
+    /// Per-shard degraded-to-listless flag (sticky once an OOM fallback
+    /// fires; survives until a checkpoint restore resets it).
+    listless: Vec<bool>,
+    /// Per-shard straggler factor for the next step (1.0 = none).
+    slowdowns: Vec<f64>,
+    /// Injected VRAM squeeze, sticky once it fires (caps every device).
+    vram_budget: Option<u64>,
+    injector: FaultInjector,
+    watchdog: Watchdog,
+    checkpoint: Option<FleetCheckpoint>,
+    events: Vec<ResilienceEvent>,
+    replayed: u64,
+    /// An injected divergence corrupts the state after the next step.
+    divergence_armed: bool,
+    /// The listless fallback requires a uniform radius (ORCS-persé rule).
+    uniform_radius: bool,
 }
 
 impl ShardedEngine {
@@ -210,7 +247,36 @@ impl ShardedEngine {
             })
             .collect::<Result<Vec<_>>>()?;
         let owner = vec![0; state.n()];
-        Ok(ShardedEngine { cfg, state, kernels, grid, shards, owner, stepped: false })
+        let n_shards = grid.count();
+        let uniform_radius = state.radius.windows(2).all(|w| w[0] == w[1]);
+        let injector = FaultInjector::new(&cfg.resilience.faults);
+        let devices = cfg.fleet.clone();
+        let active = cfg.resilience.active();
+        let mut e = ShardedEngine {
+            cfg,
+            state,
+            kernels,
+            grid,
+            shards,
+            owner,
+            stepped: false,
+            devices,
+            listless: vec![false; n_shards],
+            slowdowns: vec![1.0; n_shards],
+            vram_budget: None,
+            injector,
+            watchdog: Watchdog::default(),
+            checkpoint: None,
+            events: Vec::new(),
+            replayed: 0,
+            divergence_armed: false,
+            uniform_radius,
+        };
+        // a step-0 checkpoint makes an early device loss recoverable
+        if active {
+            e.checkpoint = Some(e.take_checkpoint());
+        }
+        Ok(e)
     }
 
     /// Convenience: engine with the pure-Rust kernels.
@@ -233,8 +299,18 @@ impl ShardedEngine {
         self.shards[s].hw
     }
 
-    /// Execute one step across all shards and meter it.
-    pub fn step(&mut self) -> Result<ShardedStepRecord> {
+    /// Execute one step across all shards and meter it. Dispatches through
+    /// the resilient path when any resilience knob is active.
+    pub fn step(&mut self) -> SimResult<ShardedStepRecord> {
+        if self.cfg.resilience.active() {
+            self.step_resilient()
+        } else {
+            self.step_raw()
+        }
+    }
+
+    /// One raw sharded step (no fault handling).
+    fn step_raw(&mut self) -> SimResult<ShardedStepRecord> {
         let n = self.state.n();
         let threads = self.cfg.threads.max(1);
         let halo = self.state.r_max;
@@ -375,7 +451,7 @@ impl ShardedEngine {
                 }
             }
             let offsets_raw = crate::parallel::exclusive_scan_u32(&lens_raw, threads);
-            let raw_total = *offsets_raw.last().unwrap() as usize;
+            let raw_total = offsets_raw.last().copied().unwrap_or(0) as usize;
             let mut items = vec![0u32; raw_total];
             let mut cursor: Vec<u32> = offsets_raw[..owned_n].to_vec();
             for c in &chunks {
@@ -414,33 +490,78 @@ impl ShardedEngine {
             items.truncate(write);
 
             // --- Phase 5: per-shard metering + OOM --------------------
-            counts.nbr_list_writes += raw_total as u64;
             counts.atomic_adds += cross_inserts;
-            shard.k_max_seen = shard.k_max_seen.max(k_max_raw);
-            let list_bytes = (owned_n as u64) * (shard.k_max_seen as u64) * 4;
-            counts.nbr_list_bytes_peak = list_bytes;
-            let shard_oom = self.cfg.check_oom && list_bytes > shard.hw.vram_bytes;
-            if shard_oom && oom.is_none() {
-                oom = Some((s, list_bytes));
+            let budget = self.vram_budget.map_or(shard.hw.vram_bytes, |b| {
+                b.min(shard.hw.vram_bytes)
+            });
+            let mut switch_s = 0.0;
+            if !self.listless[s] {
+                // would the fixed-slot list allocation fit? If not and the
+                // policy allows it, degrade this shard to the listless
+                // ORCS-persé path *before* committing the allocation — the
+                // physics is unchanged (same canonical lists feed the global
+                // merge), only the metering and memory footprint switch.
+                let need = (owned_n as u64) * (shard.k_max_seen.max(k_max_raw) as u64) * 4;
+                let fallback = self.cfg.resilience.on_oom == OomPolicy::Fallback;
+                if self.cfg.check_oom && need > budget && fallback && self.uniform_radius {
+                    self.listless[s] = true;
+                    switch_s = fleet::switch_time(n_local as u64, shard.hw);
+                    self.events.push(ResilienceEvent {
+                        step: self.state.step_count,
+                        kind: EventKind::OomFallback {
+                            from: "RT-REF",
+                            to: "ORCS-perse",
+                            shard: Some(s),
+                            required_bytes: need,
+                            budget_bytes: budget,
+                            switch_ms: switch_s * 1e3,
+                        },
+                    });
+                }
             }
-            if !shard_oom {
-                // this shard's slice of the force + integration kernels
-                counts.force_kernel_pairs += (owned_n as u64) * (k_max_raw as u64);
-                counts.integrate_particles += owned_n as u64;
-                counts.kernel_launches += 2;
+            let listless = self.listless[s];
+            let mut shard_oom = false;
+            let list_bytes;
+            if listless {
+                // in-shader accumulation + integration: no list, no
+                // separate kernels, k_max_seen frozen
+                counts.isect_force_evals += raw_total as u64;
+                counts.payload_accums += raw_total as u64;
+                list_bytes = 0;
+            } else {
+                counts.nbr_list_writes += raw_total as u64;
+                shard.k_max_seen = shard.k_max_seen.max(k_max_raw);
+                list_bytes = (owned_n as u64) * (shard.k_max_seen as u64) * 4;
+                counts.nbr_list_bytes_peak = list_bytes;
+                shard_oom = self.cfg.check_oom && list_bytes > budget;
+                if shard_oom && oom.is_none() {
+                    oom = Some((s, list_bytes));
+                }
+                if !shard_oom {
+                    // this shard's slice of the force + integration kernels
+                    counts.force_kernel_pairs += (owned_n as u64) * (k_max_raw as u64);
+                    counts.integrate_particles += owned_n as u64;
+                    counts.kernel_launches += 2;
+                }
             }
 
             let exchange_bytes = (ghosts as u64) * fleet::GHOST_ENTRY_BYTES
                 + mig_in[s] * fleet::MIGRATION_BYTES;
             let times = timing::simulate(&counts, shard.hw);
             let energy = step_energy(&times, &counts, shard.hw);
-            let exchange_s = fleet::exchange_time(exchange_bytes, shard.hw);
-            let cost = ShardCost {
+            // a fallback switch re-stages the shard's primitives, priced
+            // like an exchange over the interconnect
+            let exchange_s = fleet::exchange_time(exchange_bytes, shard.hw) + switch_s;
+            let mut cost = ShardCost {
                 times,
                 energy,
                 exchange_s,
                 exchange_j: fleet::exchange_energy(exchange_s, shard.hw),
             };
+            let slow = self.slowdowns[s];
+            if slow != 1.0 {
+                cost = cost.scaled(slow);
+            }
             shard.mgr.observe(action, &counts, shard.hw);
             per_shard.push(ShardStepStat {
                 shard: s,
@@ -450,9 +571,10 @@ impl ShardedEngine {
                 forced_build: force_build && action == BvhAction::Build,
                 k_max: k_max_raw,
                 list_bytes,
+                listless,
                 sim_ms: cost.total_s() * 1e3,
-                rt_ms: times.rt_cost() * 1e3,
-                energy_j: energy.energy_j + cost.exchange_j,
+                rt_ms: cost.times.rt_cost() * 1e3,
+                energy_j: cost.energy.energy_j + cost.exchange_j,
             });
             costs.push(cost);
             shard_lists.push(ShardLists { owned_gids: local_gid[..owned_n].to_vec(), lens, items });
@@ -484,7 +606,7 @@ impl ShardedEngine {
             }
         }
         let offsets = crate::parallel::exclusive_scan_u32(&g_lens, threads);
-        let total = *offsets.last().unwrap() as usize;
+        let total = offsets.last().copied().unwrap_or(0) as usize;
         let mut g_items = vec![0u32; total];
         for sl in &shard_lists {
             let mut cur = 0usize;
@@ -503,8 +625,11 @@ impl ShardedEngine {
         // operation sequences ⇒ bitwise-identical forces and positions.
         // (Per-device cost was already attributed shard by shard above.)
         let mut kernel_scratch = OpCounts::default();
-        self.state.force = self.kernels.lj_forces(&self.state, &nl, &mut kernel_scratch)?;
-        self.kernels.integrate(&mut self.state, &mut kernel_scratch)?;
+        self.state.force = self
+            .kernels
+            .lj_forces(&self.state, &nl, &mut kernel_scratch)
+            .map_err(SimError::fatal)?;
+        self.kernels.integrate(&mut self.state, &mut kernel_scratch).map_err(SimError::fatal)?;
 
         Ok(ShardedStepRecord {
             step: self.state.step_count,
@@ -517,6 +642,177 @@ impl ShardedEngine {
             oom: None,
             per_shard,
         })
+    }
+
+    /// One sharded step under the resilience policy: consume injected
+    /// faults (device losses recover from the last checkpoint), retry
+    /// watchdog-rejected steps from the pre-step snapshot with halved `dt`
+    /// and forced per-shard BVH rebuilds.
+    fn step_resilient(&mut self) -> SimResult<ShardedStepRecord> {
+        let res = self.cfg.resilience.clone();
+        let step = self.state.step_count;
+        let mut transient = false;
+        for f in self.injector.take(step) {
+            match f {
+                FaultKind::VramSqueeze { budget_bytes } => {
+                    self.vram_budget = Some(budget_bytes);
+                    let kind = EventKind::VramSqueeze { budget_bytes };
+                    self.events.push(ResilienceEvent { step, kind });
+                }
+                FaultKind::Straggler { shard, slowdown } => {
+                    let s = shard % self.slowdowns.len();
+                    self.slowdowns[s] = slowdown;
+                    let kind = EventKind::Straggler { shard: s, slowdown };
+                    self.events.push(ResilienceEvent { step, kind });
+                }
+                FaultKind::Transient => transient = true,
+                FaultKind::Divergence => self.divergence_armed = true,
+                FaultKind::DeviceLost { shard } => self.lose_device(shard)?,
+            }
+        }
+
+        let mut wasted_ms = 0.0;
+        let mut wasted_j = 0.0;
+        let mut attempt = 0u32;
+        loop {
+            let snapshot = res
+                .watchdog
+                .enabled
+                .then(|| (self.state.clone(), self.owner.clone()));
+            let mut rec = self.step_raw()?;
+
+            if self.divergence_armed && rec.oom.is_none() && !self.state.vel.is_empty() {
+                // injected divergence: blow up one velocity (finite, so only
+                // the kinetic-energy bound can catch it)
+                self.divergence_armed = false;
+                self.state.vel[0] = self.state.vel[0] * 1e15 + Vec3::splat(1e15);
+            }
+
+            if res.watchdog.enabled && rec.oom.is_none() {
+                if let Err(detail) = self.watchdog.check(&res.watchdog, &self.state) {
+                    if attempt >= res.watchdog.max_retries {
+                        return Err(SimError::NumericalDivergence { detail });
+                    }
+                    attempt += 1;
+                    let (state, owner) = snapshot.expect("watchdog snapshot taken when enabled");
+                    self.state = state;
+                    self.owner = owner;
+                    self.state.dt *= 0.5;
+                    for sh in &mut self.shards {
+                        sh.mgr.invalidate();
+                    }
+                    wasted_ms += rec.sim_ms;
+                    wasted_j += rec.energy_j;
+                    self.events.push(ResilienceEvent {
+                        step,
+                        kind: EventKind::WatchdogRetry { attempt, dt: self.state.dt, detail },
+                    });
+                    continue;
+                }
+            }
+
+            if transient {
+                // the attempt failed spuriously mid-flight and re-ran: the
+                // physics is the re-run's, the price includes the discard
+                wasted_ms += rec.sim_ms;
+                wasted_j += rec.energy_j;
+                self.events
+                    .push(ResilienceEvent { step, kind: EventKind::TransientRetry { attempt: 1 } });
+            }
+
+            rec.sim_ms += wasted_ms;
+            rec.energy_j += wasted_j;
+            for s in &mut self.slowdowns {
+                *s = 1.0;
+            }
+            if res.checkpoint_every > 0
+                && rec.oom.is_none()
+                && self.state.step_count % res.checkpoint_every == 0
+            {
+                self.checkpoint = Some(self.take_checkpoint());
+            }
+            return Ok(rec);
+        }
+    }
+
+    /// Snapshot everything a replacement fleet needs to resume: global
+    /// state + ownership, plus each shard's policy instance and metering
+    /// high-water marks.
+    fn take_checkpoint(&self) -> FleetCheckpoint {
+        FleetCheckpoint {
+            step: self.state.step_count,
+            state: self.state.clone(),
+            owner: self.owner.clone(),
+            stepped: self.stepped,
+            shards: self
+                .shards
+                .iter()
+                .enumerate()
+                .map(|(i, sh)| ShardCheckpoint {
+                    policy: sh.mgr.clone_policy(),
+                    k_max_seen: sh.k_max_seen,
+                    listless: self.listless[i],
+                })
+                .collect(),
+        }
+    }
+
+    /// Restore from the retained checkpoint; every shard gets a fresh
+    /// [`BvhManager`] (empty BVH ⇒ forced rebuild) seeded with the
+    /// checkpointed policy state. Returns the number of steps to replay.
+    fn restore_checkpoint(&mut self) -> u64 {
+        let cp = self.checkpoint.as_ref().expect("restore without a checkpoint");
+        let replayed = self.state.step_count.saturating_sub(cp.step);
+        self.state = cp.state.clone();
+        self.owner = cp.owner.clone();
+        self.stepped = cp.stepped;
+        for i in 0..self.shards.len() {
+            let scp = &cp.shards[i];
+            self.shards[i].mgr = BvhManager::new(scp.policy.clone_box());
+            self.shards[i].members_prev = Vec::new();
+            self.shards[i].k_max_seen = scp.k_max_seen;
+            self.listless[i] = scp.listless;
+        }
+        self.watchdog.reset();
+        replayed
+    }
+
+    /// Handle an injected device loss: drop the device from the fleet,
+    /// rebind every shard round-robin over the survivors, and resume the
+    /// whole fleet from the last checkpoint (the re-decomposition replays
+    /// the trajectory from a step boundary, so physics stays bitwise
+    /// identical to a fault-free run).
+    fn lose_device(&mut self, shard: usize) -> SimResult<()> {
+        let idx = shard % self.devices.len();
+        let device = self.devices[idx].name.to_string();
+        if self.devices.len() == 1 || self.checkpoint.is_none() {
+            return Err(SimError::DeviceLost { shard, device });
+        }
+        self.devices.remove(idx);
+        let at = self.state.step_count;
+        self.events.push(ResilienceEvent {
+            step: at,
+            kind: EventKind::DeviceLost { shard, device, survivors: self.devices.len() },
+        });
+        for (s, sh) in self.shards.iter_mut().enumerate() {
+            sh.hw = self.devices[s % self.devices.len()];
+        }
+        let replayed = self.restore_checkpoint();
+        self.replayed += replayed;
+        let from_step = self.state.step_count;
+        self.events
+            .push(ResilienceEvent { step: at, kind: EventKind::Recovery { from_step, replayed } });
+        Ok(())
+    }
+
+    /// Drain the resilience log (events accumulate across steps).
+    pub fn take_events(&mut self) -> Vec<ResilienceEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Steps re-executed by checkpoint recovery so far.
+    pub fn replayed_steps(&self) -> u64 {
+        self.replayed
     }
 
     /// Run `steps` steps; aborts early when any shard OOMs (the fleet
@@ -542,8 +838,12 @@ impl ShardedEngine {
                 .collect(),
             ..Default::default()
         };
-        for _ in 0..steps {
-            let rec = self.step()?;
+        let target = self.state.step_count + steps as u64;
+        while self.state.step_count < target {
+            let i = self.state.step_count;
+            let rec = self.step().map_err(|e| {
+                anyhow::anyhow!("sharded step {i} failed [grid {}, fleet {}]: {e}", s.grid, s.fleet)
+            })?;
             s.steps += 1;
             s.total_sim_ms += rec.sim_ms;
             s.total_energy_j += rec.energy_j;
@@ -558,6 +858,9 @@ impl ShardedEngine {
                 }
                 if st.forced_build {
                     t.forced_builds += 1;
+                }
+                if st.listless {
+                    t.listless_steps += 1;
                 }
                 t.owned_sum += st.owned as u64;
                 t.ghosts_sum += st.ghosts as u64;
@@ -581,6 +884,8 @@ impl ShardedEngine {
         }
         s.ee = crate::rtcore::power::energy_efficiency(s.total_interactions, s.total_energy_j);
         s.wall_total_s = wall_start.elapsed().as_secs_f64();
+        s.events = self.events.clone();
+        s.replayed_steps = self.replayed;
         Ok(s)
     }
 }

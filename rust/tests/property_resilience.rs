@@ -1,0 +1,281 @@
+//! Resilience-runtime acceptance properties (ISSUE):
+//!
+//!  (a) a faulted-and-recovered run is **bitwise identical** to a fault-free
+//!      run at every step boundary — device loss replays from the last
+//!      checkpoint through the same deterministic kernels;
+//!  (b) an RT-REF run that trips `check_oom` and falls back mid-run produces
+//!      forces bitwise identical to a pure ORCS-persé run started from the
+//!      same snapshot — the degradation ladder changes pricing, not physics;
+//!  (c) the numerical watchdog converges on an injected divergence: restore
+//!      the pre-step snapshot, halve `dt`, force a BVH rebuild, finish
+//!      finite.
+//!
+//! All properties are exercised for thread counts {1, 8} and, where the
+//! sharded engine is involved, shard grids S ∈ {1, 2}.
+
+use std::sync::Arc;
+
+use orcs::coordinator::{Engine, EngineConfig};
+use orcs::core::config::{Boundary, ParticleDist, RadiusDist, ShardSpec, SimConfig};
+use orcs::core::vec3::Vec3;
+use orcs::frnn::{ApproachKind, RustKernels};
+use orcs::resilience::{EventKind, FaultPlan, OomPolicy, ResilienceConfig, WatchdogCfg};
+use orcs::shard::{ShardedConfig, ShardedEngine};
+
+fn scenario(n: usize, seed: u64) -> SimConfig {
+    SimConfig {
+        n,
+        box_l: 100.0,
+        particle_dist: ParticleDist::Disordered,
+        // uniform radius: every rung of the degradation ladder is open
+        radius_dist: RadiusDist::Const(8.0),
+        boundary: Boundary::Periodic,
+        seed,
+        ..SimConfig::default()
+    }
+}
+
+fn assert_bits_equal(got: &[Vec3], want: &[Vec3], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for i in 0..want.len() {
+        let (a, b) = (got[i], want[i]);
+        assert_eq!(
+            (a.x.to_bits(), a.y.to_bits(), a.z.to_bits()),
+            (b.x.to_bits(), b.y.to_bits(), b.z.to_bits()),
+            "{ctx}: particle {i} diverged: {a:?} vs {b:?}"
+        );
+    }
+}
+
+fn engine(cfg: &SimConfig, threads: usize, res: ResilienceConfig) -> Engine {
+    let ec = EngineConfig {
+        policy: "fixed-3".into(),
+        threads,
+        resilience: res,
+        ..EngineConfig::new(cfg.clone(), ApproachKind::RtRef)
+    };
+    Engine::new(ec, Arc::new(RustKernels { threads })).unwrap()
+}
+
+fn sharded(cfg: &SimConfig, s: usize, threads: usize, res: ResilienceConfig) -> ShardedEngine {
+    let sc = ShardedConfig {
+        policy: "fixed-3".into(),
+        threads,
+        fleet: vec![&orcs::rtcore::profile::TITANRTX, &orcs::rtcore::profile::L40],
+        resilience: res,
+        ..ShardedConfig::new(cfg.clone(), ShardSpec::new(s))
+    };
+    ShardedEngine::new(sc, Arc::new(RustKernels { threads })).unwrap()
+}
+
+fn plan(spec: &str) -> FaultPlan {
+    FaultPlan::parse(spec).unwrap_or_else(|| panic!("bad fault spec {spec}"))
+}
+
+// ---- property (a): checkpointed recovery is bitwise transparent ---------
+
+#[test]
+fn resilience_engine_device_loss_recovery_is_bitwise_identical() {
+    let cfg = scenario(300, 7);
+    let steps = 8;
+    for threads in [1usize, 8] {
+        let ctx = format!("engine recovery threads={threads}");
+        let mut clean = engine(&cfg, threads, ResilienceConfig::default());
+        clean.run(steps, false).unwrap();
+
+        // loss entering step 5, checkpoints at 0/2/4/... -> replay 1 step
+        let res = ResilienceConfig {
+            checkpoint_every: 2,
+            faults: plan("lost@5:0"),
+            ..ResilienceConfig::default()
+        };
+        let mut faulted = engine(&cfg, threads, res);
+        let s = faulted.run(steps, false).unwrap();
+        assert_eq!(s.replayed_steps, 1, "{ctx}: replay from the checkpoint at 4");
+        assert_eq!(s.steps, steps as u64 + s.replayed_steps, "{ctx}: replayed steps re-priced");
+        assert!(
+            s.events.iter().any(|e| matches!(e.kind, EventKind::DeviceLost { .. })),
+            "{ctx}: no DeviceLost event: {:?}",
+            s.events
+        );
+        assert!(
+            s.events.iter().any(|e| matches!(e.kind, EventKind::Recovery { replayed: 1, .. })),
+            "{ctx}: no Recovery event: {:?}",
+            s.events
+        );
+        assert_eq!(faulted.state.step_count, steps as u64, "{ctx}");
+        assert_bits_equal(&faulted.state.pos, &clean.state.pos, &ctx);
+        assert_bits_equal(&faulted.state.vel, &clean.state.vel, &ctx);
+        assert_bits_equal(&faulted.state.force, &clean.state.force, &ctx);
+    }
+}
+
+#[test]
+fn resilience_sharded_device_loss_recovery_is_bitwise_identical() {
+    let cfg = scenario(220, 99);
+    let steps = 10;
+    for s in [1usize, 2] {
+        for threads in [1usize, 8] {
+            let ctx = format!("sharded recovery S={s} threads={threads}");
+            let mut clean = sharded(&cfg, s, threads, ResilienceConfig::default());
+            clean.run(steps, false).unwrap();
+
+            // device 0 dies entering step 7; checkpoints at 0/3/6 -> the
+            // surviving device absorbs every shard and replays one step
+            let res = ResilienceConfig {
+                checkpoint_every: 3,
+                faults: plan("lost@7:0"),
+                ..ResilienceConfig::default()
+            };
+            let mut faulted = sharded(&cfg, s, threads, res);
+            let sum = faulted.run(steps, false).unwrap();
+            assert!(!sum.oom, "{ctx}");
+            assert_eq!(sum.replayed_steps, 1, "{ctx}: replay from the checkpoint at 6");
+            assert!(
+                sum.events
+                    .iter()
+                    .any(|e| matches!(e.kind, EventKind::DeviceLost { survivors: 1, .. })),
+                "{ctx}: no DeviceLost event: {:?}",
+                sum.events
+            );
+            assert!(
+                sum.events.iter().any(|e| matches!(e.kind, EventKind::Recovery { .. })),
+                "{ctx}: no Recovery event: {:?}",
+                sum.events
+            );
+            assert_eq!(faulted.state.step_count, steps as u64, "{ctx}");
+            assert_bits_equal(&faulted.state.pos, &clean.state.pos, &ctx);
+            assert_bits_equal(&faulted.state.vel, &clean.state.vel, &ctx);
+            assert_bits_equal(&faulted.state.force, &clean.state.force, &ctx);
+        }
+    }
+}
+
+// ---- property (b): OOM fallback == native ORCS-persé from the snapshot --
+
+#[test]
+fn resilience_oom_fallback_matches_native_perse_from_snapshot() {
+    let cfg = scenario(300, 7);
+    for threads in [1usize, 8] {
+        let ctx = format!("oom fallback threads={threads}");
+        // phase 1: a clean RT-REF prefix; its state is the shared snapshot
+        let mut pre = engine(&cfg, threads, ResilienceConfig::default());
+        pre.run(3, false).unwrap();
+        let snapshot = pre.state.clone();
+
+        // reference: a pure ORCS-persé engine started from that snapshot
+        let pc = EngineConfig {
+            policy: "fixed-3".into(),
+            threads,
+            ..EngineConfig::new(cfg.clone(), ApproachKind::OrcsPerse)
+        };
+        let mut native =
+            Engine::with_state(pc, Arc::new(RustKernels { threads }), snapshot.clone()).unwrap();
+        native.run(3, false).unwrap();
+
+        // the faulted run: a VRAM squeeze entering step 3 makes the RT-REF
+        // fixed-slot list unpayable, so the ladder switches to ORCS-persé
+        // mid-run and the remaining steps execute listless
+        let res = ResilienceConfig {
+            on_oom: OomPolicy::Fallback,
+            faults: plan("squeeze@3:16"),
+            ..ResilienceConfig::default()
+        };
+        let mut fb = engine(&cfg, threads, res);
+        let sum = fb.run(6, false).unwrap();
+        assert!(!sum.oom, "{ctx}: the fallback must absorb the OOM");
+        assert_eq!(fb.cfg.approach, ApproachKind::OrcsPerse, "{ctx}: ladder landed on persé");
+        assert!(
+            sum.events.iter().any(|e| matches!(
+                e.kind,
+                EventKind::OomFallback { from: "RT-REF", to: "ORCS-perse", .. }
+            )),
+            "{ctx}: no RT-REF -> ORCS-perse fallback event: {:?}",
+            sum.events
+        );
+        assert_eq!(fb.state.step_count, 6, "{ctx}");
+        assert_bits_equal(&fb.state.pos, &native.state.pos, &ctx);
+        assert_bits_equal(&fb.state.vel, &native.state.vel, &ctx);
+        assert_bits_equal(&fb.state.force, &native.state.force, &ctx);
+    }
+}
+
+// ---- property (c): the watchdog converges on injected divergence --------
+
+#[test]
+fn resilience_engine_watchdog_converges_on_injected_divergence() {
+    let cfg = scenario(300, 11);
+    let dt0 = cfg.dt;
+    for threads in [1usize, 8] {
+        let ctx = format!("engine watchdog threads={threads}");
+        let res = ResilienceConfig {
+            watchdog: WatchdogCfg { enabled: true, ..WatchdogCfg::default() },
+            faults: plan("nan@3"),
+            ..ResilienceConfig::default()
+        };
+        let mut e = engine(&cfg, threads, res);
+        let s = e.run(6, false).unwrap();
+        assert_eq!(s.steps, 6, "{ctx}");
+        assert!(e.state.is_finite(), "{ctx}: divergence survived");
+        assert!(e.state.dt < dt0, "{ctx}: dt must be halved ({} vs {dt0})", e.state.dt);
+        assert!(
+            s.events.iter().any(|e| matches!(e.kind, EventKind::WatchdogRetry { .. })),
+            "{ctx}: no WatchdogRetry event: {:?}",
+            s.events
+        );
+    }
+}
+
+#[test]
+fn resilience_sharded_watchdog_converges_on_injected_divergence() {
+    let cfg = scenario(220, 13);
+    let dt0 = cfg.dt;
+    for s in [1usize, 2] {
+        let ctx = format!("sharded watchdog S={s}");
+        let res = ResilienceConfig {
+            watchdog: WatchdogCfg { enabled: true, ..WatchdogCfg::default() },
+            faults: plan("nan@3"),
+            ..ResilienceConfig::default()
+        };
+        let mut e = sharded(&cfg, s, 2, res);
+        let sum = e.run(6, false).unwrap();
+        assert!(!sum.oom, "{ctx}");
+        assert!(e.state.is_finite(), "{ctx}: divergence survived");
+        assert!(e.state.dt < dt0, "{ctx}: dt must be halved ({} vs {dt0})", e.state.dt);
+        assert!(
+            sum.events.iter().any(|e| matches!(e.kind, EventKind::WatchdogRetry { .. })),
+            "{ctx}: no WatchdogRetry event: {:?}",
+            sum.events
+        );
+        assert_eq!(e.state.step_count, 6, "{ctx}: the run must still finish");
+    }
+}
+
+// ---- seeded chaos schedules terminate and stay comparable ---------------
+
+#[test]
+fn resilience_seeded_fault_schedule_completes_without_abort() {
+    // the ISSUE smoke criterion: `FaultPlan::seeded` schedules (transients,
+    // stragglers, bounded device losses — never divergence) complete, and
+    // stay bitwise identical to the fault-free trajectory
+    let cfg = scenario(220, 21);
+    let steps = 12;
+    let mut clean = sharded(&cfg, 2, 2, ResilienceConfig::default());
+    clean.run(steps, false).unwrap();
+    for seed in [1u64, 2, 3] {
+        let ctx = format!("seeded chaos seed={seed}");
+        let res = ResilienceConfig {
+            on_oom: OomPolicy::Fallback,
+            checkpoint_every: 4,
+            faults: FaultPlan::seeded(seed, steps as u64, 0.4, 8, 1),
+            ..ResilienceConfig::default()
+        };
+        let mut e = sharded(&cfg, 2, 2, res);
+        let sum = e.run(steps, false).unwrap();
+        assert!(!sum.oom, "{ctx}");
+        assert_eq!(e.state.step_count, steps as u64, "{ctx}");
+        assert!(e.state.is_finite(), "{ctx}");
+        assert_bits_equal(&e.state.pos, &clean.state.pos, &ctx);
+        assert_bits_equal(&e.state.vel, &clean.state.vel, &ctx);
+    }
+}

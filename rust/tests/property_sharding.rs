@@ -196,6 +196,67 @@ fn prop_random_scenes_shard_transparently() {
 }
 
 #[test]
+fn sharded_oom_fallback_is_bitwise_transparent() {
+    // ISSUE satellite: a shard tripping `check_oom` under the fallback
+    // policy degrades to the listless ORCS-persé path, and the run must be
+    // bitwise identical to an uncapped run of the same decomposition — the
+    // switch changes metering and memory, never the canonical lists
+    use orcs::resilience::{EventKind, OomPolicy, ResilienceConfig};
+    use orcs::rtcore::HwProfile;
+    // 16 B: any shard that finds a single neighbor overflows immediately
+    static TINY_LIST: HwProfile = {
+        let mut p = orcs::rtcore::profile::TITANRTX;
+        p.vram_bytes = 16;
+        p
+    };
+    let cfg = scenario(220, Boundary::Periodic, RadiusDist::Const(8.0), 100.0, 99);
+    let steps = 4;
+    for s in [1usize, 2] {
+        for threads in [1usize, 8] {
+            let ctx = format!("fallback S={s} threads={threads}");
+            // reference: same decomposition, no memory limit
+            let free = {
+                let sc = ShardedConfig {
+                    policy: "fixed-3".into(),
+                    threads,
+                    check_oom: false,
+                    fleet: vec![&TINY_LIST],
+                    ..ShardedConfig::new(cfg.clone(), ShardSpec::new(s))
+                };
+                let mut e = ShardedEngine::new(sc, Arc::new(RustKernels { threads })).unwrap();
+                e.run(steps, false).unwrap();
+                e
+            };
+            let sc = ShardedConfig {
+                policy: "fixed-3".into(),
+                threads,
+                check_oom: true,
+                fleet: vec![&TINY_LIST],
+                resilience: ResilienceConfig {
+                    on_oom: OomPolicy::Fallback,
+                    ..ResilienceConfig::default()
+                },
+                ..ShardedConfig::new(cfg.clone(), ShardSpec::new(s))
+            };
+            let mut e = ShardedEngine::new(sc, Arc::new(RustKernels { threads })).unwrap();
+            let summary = e.run(steps, false).unwrap();
+            assert!(!summary.oom, "{ctx}: fallback must absorb the OOM");
+            assert_eq!(summary.steps, steps as u64, "{ctx}");
+            assert!(
+                summary.events.iter().any(|ev| matches!(ev.kind, EventKind::OomFallback { .. })),
+                "{ctx}: no OomFallback event: {:?}",
+                summary.events
+            );
+            let listless: u64 = summary.per_shard.iter().map(|t| t.listless_steps).sum();
+            assert!(listless > 0, "{ctx}: no shard went listless");
+            assert_bits_equal(&e.state.pos, &free.state.pos, &ctx);
+            assert_bits_equal(&e.state.vel, &free.state.vel, &ctx);
+            assert_bits_equal(&e.state.force, &free.state.force, &ctx);
+        }
+    }
+}
+
+#[test]
 fn per_shard_oom_relief_on_lognormal_cluster() {
     // the ISSUE acceptance criterion: a log-normal cluster that OOMs the
     // single-domain RT-REF list completes once sharded with S >= 2
