@@ -1,0 +1,264 @@
+//! Lint configuration: path scopes + the checked-in allowlist.
+//!
+//! Loaded from `lint.toml` at the repo root via a tiny TOML-subset parser
+//! (the offline vendor set has no `toml` crate — same spirit as the
+//! hand-rolled CLI). Supported subset: `#` comments, `[section]`,
+//! `[[array-of-tables]]`, `key = "string"`, and `key = ["a", "b"]`
+//! single-line string arrays. That is exactly what `lint.toml` uses;
+//! anything else is a hard parse error so drift is caught in CI.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::rules;
+
+/// One `[[allow]]` entry: suppress `rule` findings under `path`.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    /// Rule id (`P-PANIC`, ...) or `*` for all rules.
+    pub rule: String,
+    /// Path prefix relative to the lint root (`frnn/cell_list.rs`, `bvh`).
+    pub path: String,
+    /// Mandatory human rationale — empty reasons are a parse error.
+    pub reason: String,
+}
+
+/// Parsed lint configuration.
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    /// Panic-safety scope: code reachable from `Backend::step` and the
+    /// engines' `run()` (the PR 4 `SimError` contract).
+    pub step_path: Vec<String>,
+    /// Determinism scope: code that must be bitwise reproducible across
+    /// `ORCS_THREADS` and shard counts.
+    pub det_path: Vec<String>,
+    /// CSR offset/merge scope for the narrowing-cast rule.
+    pub csr_path: Vec<String>,
+    /// Checked-in suppressions.
+    pub allow: Vec<AllowEntry>,
+}
+
+impl Default for LintConfig {
+    /// Scope defaults mirroring the checked-in `lint.toml`, so `orcs lint`
+    /// still enforces the repo contract when run without a config file.
+    fn default() -> Self {
+        let v = |xs: &[&str]| xs.iter().map(|s| s.to_string()).collect();
+        LintConfig {
+            step_path: v(&[
+                "bvh",
+                "coordinator/engine.rs",
+                "frnn",
+                "gradient",
+                "parallel.rs",
+                "physics",
+                "resilience",
+                "runtime/kernels.rs",
+                "shard",
+            ]),
+            det_path: v(&["bvh", "frnn", "gradient", "physics", "shard"]),
+            csr_path: v(&[
+                "frnn/cell_list.rs",
+                "frnn/rt_ref.rs",
+                "parallel.rs",
+                "shard/engine.rs",
+            ]),
+            allow: Vec::new(),
+        }
+    }
+}
+
+impl LintConfig {
+    /// Does `rel` fall under any prefix in `scope`? A prefix of `"."`
+    /// matches everything; a `.rs` prefix must match the file exactly;
+    /// otherwise it matches the directory subtree.
+    pub fn in_scope(rel: &str, scope: &[String]) -> bool {
+        scope.iter().any(|p| path_matches(rel, p))
+    }
+
+    /// Is the finding `(rule, rel)` suppressed by a config allow entry?
+    pub fn allowed(&self, rule: &str, rel: &str) -> bool {
+        self.allow
+            .iter()
+            .any(|a| (a.rule == "*" || a.rule == rule) && path_matches(rel, &a.path))
+    }
+
+    /// Load from a `lint.toml` file.
+    pub fn load(path: &Path) -> Result<LintConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading lint config {}", path.display()))?;
+        parse_toml(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+}
+
+/// Prefix match for scope/allow paths (see [`LintConfig::in_scope`]).
+pub fn path_matches(rel: &str, prefix: &str) -> bool {
+    prefix == "."
+        || rel == prefix
+        || rel.strip_prefix(prefix).is_some_and(|rest| rest.starts_with('/'))
+}
+
+/// Parse the TOML subset described in the module docs.
+pub fn parse_toml(text: &str) -> Result<LintConfig> {
+    #[derive(PartialEq)]
+    enum Section {
+        None,
+        Paths,
+        Allow,
+    }
+    let mut cfg = LintConfig::default();
+    let mut paths_seen = false;
+    let mut section = Section::None;
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_toml_comment(raw).trim().to_string();
+        let at = |msg: &str| anyhow::anyhow!("lint.toml line {}: {msg}", ln + 1);
+        if line.is_empty() {
+            continue;
+        }
+        if line == "[[allow]]" {
+            cfg.allow.push(AllowEntry {
+                rule: String::new(),
+                path: String::new(),
+                reason: String::new(),
+            });
+            section = Section::Allow;
+            continue;
+        }
+        if line == "[paths]" {
+            // an explicit [paths] section replaces the baked-in defaults
+            if !paths_seen {
+                cfg.step_path.clear();
+                cfg.det_path.clear();
+                cfg.csr_path.clear();
+                paths_seen = true;
+            }
+            section = Section::Paths;
+            continue;
+        }
+        if line.starts_with('[') {
+            bail!(at(&format!("unknown section {line}")));
+        }
+        let (key, value) = line.split_once('=').ok_or_else(|| at("expected key = value"))?;
+        let (key, value) = (key.trim(), value.trim());
+        match section {
+            Section::None => bail!(at("key outside a section")),
+            Section::Paths => {
+                let items = parse_str_array(value).ok_or_else(|| at("expected a string array"))?;
+                match key {
+                    "step" => cfg.step_path = items,
+                    "det" => cfg.det_path = items,
+                    "csr" => cfg.csr_path = items,
+                    other => bail!(at(&format!("unknown [paths] key {other}"))),
+                }
+            }
+            Section::Allow => {
+                let s = parse_str(value).ok_or_else(|| at("expected a quoted string"))?;
+                let entry = cfg.allow.last_mut().ok_or_else(|| at("no open [[allow]]"))?;
+                match key {
+                    "rule" => entry.rule = s,
+                    "path" => entry.path = s,
+                    "reason" => entry.reason = s,
+                    other => bail!(at(&format!("unknown [[allow]] key {other}"))),
+                }
+            }
+        }
+    }
+    for (k, a) in cfg.allow.iter().enumerate() {
+        if a.rule.is_empty() || a.path.is_empty() {
+            bail!("lint.toml: [[allow]] #{} needs both rule and path", k + 1);
+        }
+        if a.reason.trim().is_empty() {
+            bail!("lint.toml: [[allow]] {} on {} has no reason", a.rule, a.path);
+        }
+        if a.rule != "*" && !rules::is_known_rule(&a.rule) {
+            bail!(
+                "lint.toml: [[allow]] #{} names unknown rule {} (known: {})",
+                k + 1,
+                a.rule,
+                rules::rule_ids().join(", ")
+            );
+        }
+    }
+    Ok(cfg)
+}
+
+/// Strip a `#` comment, ignoring `#` inside double quotes.
+fn strip_toml_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut prev_backslash = false;
+    for (k, c) in line.char_indices() {
+        match c {
+            '"' if !prev_backslash => in_str = !in_str,
+            '#' if !in_str => return &line[..k],
+            _ => {}
+        }
+        prev_backslash = c == '\\' && !prev_backslash;
+    }
+    line
+}
+
+/// `"value"` → `value` (basic escapes only).
+fn parse_str(v: &str) -> Option<String> {
+    let inner = v.strip_prefix('"')?.strip_suffix('"')?;
+    Some(inner.replace("\\\"", "\"").replace("\\\\", "\\"))
+}
+
+/// `["a", "b"]` → `vec!["a", "b"]` (single line, string elements).
+fn parse_str_array(v: &str) -> Option<Vec<String>> {
+    let inner = v.strip_prefix('[')?.strip_suffix(']')?.trim();
+    if inner.is_empty() {
+        return Some(Vec::new());
+    }
+    inner.split(',').map(|item| parse_str(item.trim())).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_paths_and_allows() {
+        let cfg = parse_toml(
+            "# comment\n[paths]\nstep = [\"bvh\", \"shard/engine.rs\"]\ndet = []\ncsr = []\n\n\
+             [[allow]]\nrule = \"D-WALL-CLOCK\"\npath = \"frnn/mod.rs\"\nreason = \"metering\"\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.step_path, vec!["bvh", "shard/engine.rs"]);
+        assert!(cfg.det_path.is_empty());
+        assert_eq!(cfg.allow.len(), 1);
+        assert!(cfg.allowed("D-WALL-CLOCK", "frnn/mod.rs"));
+        assert!(!cfg.allowed("D-WALL-CLOCK", "frnn/mod_b.rs"));
+        assert!(!cfg.allowed("P-PANIC", "frnn/mod.rs"));
+    }
+
+    #[test]
+    fn prefix_matching() {
+        assert!(path_matches("bvh/builder.rs", "bvh"));
+        assert!(path_matches("bvh/builder.rs", "bvh/builder.rs"));
+        assert!(path_matches("anything.rs", "."));
+        assert!(!path_matches("bvh2/builder.rs", "bvh"));
+        assert!(!path_matches("bvh/builder.rs", "bvh/build"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_toml("[paths]\nstep = nope\n").is_err());
+        assert!(parse_toml("step = [\"x\"]\n").is_err(), "key outside section");
+        assert!(parse_toml("[[allow]]\nrule = \"P-PANIC\"\n").is_err(), "missing path");
+        assert!(
+            parse_toml("[[allow]]\nrule = \"P-PANIC\"\npath = \"x.rs\"\nreason = \"\"\n").is_err(),
+            "empty reason"
+        );
+        assert!(
+            parse_toml("[[allow]]\nrule = \"NOT-A-RULE\"\npath = \"x\"\nreason = \"r\"\n").is_err(),
+            "unknown rule"
+        );
+    }
+
+    #[test]
+    fn defaults_apply_without_paths_section() {
+        let cfg = parse_toml("[[allow]]\nrule = \"*\"\npath = \".\"\nreason = \"r\"\n").unwrap();
+        assert!(!cfg.step_path.is_empty(), "defaults kept when [paths] absent");
+        assert!(cfg.allowed("P-PANIC", "whatever/file.rs"));
+    }
+}

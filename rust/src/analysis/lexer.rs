@@ -1,0 +1,360 @@
+//! A hand-rolled Rust tokenizer — just enough lexical structure for the
+//! lint rules in [`crate::analysis::rules`].
+//!
+//! The goal is *not* a conforming Rust lexer; it is a dependency-free
+//! scanner that never confuses the four contexts the rules care about:
+//! code, `//`/`/* */` comments, string/char literals, and lifetimes.
+//! Everything the rules match (identifiers, punctuation, literal kinds)
+//! is classified conservatively; anything unrecognized degrades to a
+//! one-byte `Punct` token rather than an error, so a novel construct can
+//! never abort the lint pass.
+
+/// Lexical class of a [`Token`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`fn`, `unsafe`, `HashMap`, `as`, ...).
+    Ident,
+    /// Numeric literal, suffix included (`0x1F`, `1e-5`, `3.0f32`, `10usize`).
+    Num,
+    /// String literal: `"..."`, `r"..."`, `r#"..."#`, `b"..."` — quotes kept.
+    Str,
+    /// Char or byte-char literal (`'x'`, `'\n'`, `b'\0'`).
+    Char,
+    /// Lifetime (`'a`, `'static`, `'_`).
+    Lifetime,
+    /// Operator / delimiter, multi-byte ops pre-joined (`::`, `+=`, `..=`).
+    Punct,
+    /// Line or block comment, delimiters kept.
+    Comment,
+}
+
+/// One token with its source position (1-based line, 1-based byte column).
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+    pub col: u32,
+}
+
+/// Multi-byte operators, longest first so maximal munch works.
+const MULTI_OPS: &[&str] = &[
+    "<<=", ">>=", "..=", "...", "::", "->", "=>", "==", "!=", "<=", ">=", "&&", "||", "+=", "-=",
+    "*=", "/=", "%=", "^=", "&=", "|=", "<<", ">>", "..",
+];
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_' || b >= 0x80
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_' || b >= 0x80
+}
+
+/// Tokenize `src` into a flat stream, comments included.
+pub fn tokenize(src: &str) -> Vec<Token> {
+    Lexer { src: src.as_bytes(), i: 0, line: 1, line_start: 0, out: Vec::new() }.run(src)
+}
+
+struct Lexer<'a> {
+    src: &'a [u8],
+    i: usize,
+    line: u32,
+    line_start: usize,
+    out: Vec<Token>,
+}
+
+impl<'a> Lexer<'a> {
+    fn at(&self, k: usize) -> u8 {
+        self.src.get(k).copied().unwrap_or(0)
+    }
+
+    fn push(&mut self, kind: TokKind, start_line: u32, start_col: u32, text: &str) {
+        self.out.push(Token { kind, text: text.to_string(), line: start_line, col: start_col });
+    }
+
+    fn col(&self, at: usize) -> u32 {
+        (at - self.line_start + 1) as u32
+    }
+
+    fn newline(&mut self, at: usize) {
+        self.line += 1;
+        self.line_start = at + 1;
+    }
+
+    /// Advance past a `"..."` body starting *after* the opening quote,
+    /// honoring `\` escapes and tracking newlines. Leaves `self.i` after
+    /// the closing quote (or at EOF).
+    fn skip_str_body(&mut self) {
+        while self.i < self.src.len() {
+            match self.src[self.i] {
+                b'\\' => {
+                    if self.at(self.i + 1) == b'\n' {
+                        self.newline(self.i + 1); // escaped line continuation
+                    }
+                    self.i = (self.i + 2).min(self.src.len());
+                }
+                b'"' => {
+                    self.i += 1;
+                    return;
+                }
+                b'\n' => {
+                    self.newline(self.i);
+                    self.i += 1;
+                }
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    /// Raw string starting at `r` / `rb` / `br`: `r#*"..."#*`. Returns
+    /// false if this is not actually a raw-string head (an `r` must be in
+    /// the prefix; plain `b"..."` keeps its escape handling elsewhere).
+    fn try_raw_str(&mut self, full: &str, start: usize) -> bool {
+        let mut k = self.i;
+        let mut saw_r = false;
+        while self.at(k) == b'r' || self.at(k) == b'b' {
+            saw_r |= self.at(k) == b'r';
+            k += 1;
+        }
+        if !saw_r {
+            return false;
+        }
+        let mut hashes = 0usize;
+        while self.at(k) == b'#' {
+            hashes += 1;
+            k += 1;
+        }
+        if self.at(k) != b'"' {
+            return false;
+        }
+        k += 1;
+        let start_line = self.line;
+        let start_col = self.col(start);
+        loop {
+            match self.at(k) {
+                0 => break,
+                b'\n' => {
+                    self.newline(k);
+                    k += 1;
+                }
+                b'"' => {
+                    let mut h = 0usize;
+                    while h < hashes && self.at(k + 1 + h) == b'#' {
+                        h += 1;
+                    }
+                    k += 1 + h;
+                    if h == hashes {
+                        break;
+                    }
+                }
+                _ => k += 1,
+            }
+        }
+        let text = &full[start..k.min(full.len())];
+        self.push(TokKind::Str, start_line, start_col, text);
+        self.i = k;
+        true
+    }
+
+    fn run(mut self, full: &'a str) -> Vec<Token> {
+        while self.i < self.src.len() {
+            let b = self.src[self.i];
+            let start = self.i;
+            let start_line = self.line;
+            let start_col = self.col(start);
+            match b {
+                b'\n' => {
+                    self.newline(self.i);
+                    self.i += 1;
+                }
+                _ if b.is_ascii_whitespace() => self.i += 1,
+                b'/' if self.at(self.i + 1) == b'/' => {
+                    while self.i < self.src.len() && self.src[self.i] != b'\n' {
+                        self.i += 1;
+                    }
+                    self.push(TokKind::Comment, start_line, start_col, &full[start..self.i]);
+                }
+                b'/' if self.at(self.i + 1) == b'*' => {
+                    self.i += 2;
+                    let mut depth = 1usize;
+                    while self.i < self.src.len() && depth > 0 {
+                        match (self.src[self.i], self.at(self.i + 1)) {
+                            (b'/', b'*') => {
+                                depth += 1;
+                                self.i += 2;
+                            }
+                            (b'*', b'/') => {
+                                depth -= 1;
+                                self.i += 2;
+                            }
+                            (b'\n', _) => {
+                                self.newline(self.i);
+                                self.i += 1;
+                            }
+                            _ => self.i += 1,
+                        }
+                    }
+                    self.push(TokKind::Comment, start_line, start_col, &full[start..self.i]);
+                }
+                b'"' => {
+                    self.i += 1;
+                    self.skip_str_body();
+                    self.push(TokKind::Str, start_line, start_col, &full[start..self.i]);
+                }
+                b'\'' => {
+                    self.lex_quote(full, start, start_line, start_col);
+                }
+                _ if b.is_ascii_digit() => {
+                    self.lex_number();
+                    self.push(TokKind::Num, start_line, start_col, &full[start..self.i]);
+                }
+                _ if is_ident_start(b) => {
+                    if (b == b'r' || b == b'b') && self.try_raw_str(full, start) {
+                        continue;
+                    }
+                    while self.i < self.src.len() && is_ident_byte(self.src[self.i]) {
+                        self.i += 1;
+                    }
+                    // byte-string head: fold `b` into the following literal
+                    if &full[start..self.i] == "b" && self.at(self.i) == b'"' {
+                        self.i += 1;
+                        self.skip_str_body();
+                        self.push(TokKind::Str, start_line, start_col, &full[start..self.i]);
+                    } else if &full[start..self.i] == "b" && self.at(self.i) == b'\'' {
+                        // byte-char head: `lex_quote` slices from `start`,
+                        // so the token text keeps the `b` prefix
+                        self.lex_quote(full, start, start_line, start_col);
+                    } else {
+                        let text = &full[start..self.i];
+                        self.push(TokKind::Ident, start_line, start_col, text);
+                    }
+                }
+                _ => {
+                    let rest = &full[self.i..];
+                    let op = MULTI_OPS.iter().find(|op| rest.starts_with(**op));
+                    if let Some(op) = op {
+                        self.i += op.len();
+                        self.push(TokKind::Punct, start_line, start_col, op);
+                    } else {
+                        self.i += 1;
+                        self.push(TokKind::Punct, start_line, start_col, &full[start..self.i]);
+                    }
+                }
+            }
+        }
+        self.out
+    }
+
+    /// Disambiguate `'` between char literals and lifetimes.
+    fn lex_quote(&mut self, full: &str, start: usize, start_line: u32, start_col: u32) {
+        let next = self.at(self.i + 1);
+        if next == b'\\' {
+            // escaped char literal: scan to the closing quote
+            self.i += 2; // ' and backslash
+            self.i += 1; // the escaped byte (covers \', \\, \n, and heads \x, \u)
+            while self.i < self.src.len() && self.src[self.i] != b'\'' {
+                self.i += 1;
+            }
+            self.i = (self.i + 1).min(self.src.len());
+            self.push(TokKind::Char, start_line, start_col, &full[start..self.i]);
+        } else if is_ident_byte(next) {
+            // 'x' is a char literal; 'ident (no closing quote) is a lifetime
+            let mut k = self.i + 1;
+            while k < self.src.len() && is_ident_byte(self.src[k]) {
+                k += 1;
+            }
+            if self.at(k) == b'\'' {
+                self.i = k + 1;
+                self.push(TokKind::Char, start_line, start_col, &full[start..self.i]);
+            } else {
+                self.i = k;
+                self.push(TokKind::Lifetime, start_line, start_col, &full[start..self.i]);
+            }
+        } else if next != 0 && self.at(self.i + 2) == b'\'' {
+            // one-byte punctuation char literal: ' ' , '%' , '-'
+            self.i += 3;
+            self.push(TokKind::Char, start_line, start_col, &full[start..self.i]);
+        } else {
+            self.i += 1;
+            self.push(TokKind::Punct, start_line, start_col, "'");
+        }
+    }
+
+    /// Numeric literal: digits, `_`, alnum suffixes/exponents, and a `.`
+    /// only when it starts a fraction (so `0..n` stays a range).
+    fn lex_number(&mut self) {
+        while self.i < self.src.len() {
+            let b = self.src[self.i];
+            if is_ident_byte(b) {
+                // exponent sign: 1e-5 / 2.5E+3
+                if (b == b'e' || b == b'E')
+                    && (self.at(self.i + 1) == b'+' || self.at(self.i + 1) == b'-')
+                    && self.at(self.i + 2).is_ascii_digit()
+                {
+                    self.i += 2;
+                }
+                self.i += 1;
+            } else if b == b'.' && self.at(self.i + 1).is_ascii_digit() {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        tokenize(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn idents_numbers_ops() {
+        let toks = kinds("let x = a.len() as u32 + 1e-5;");
+        assert!(toks.contains(&(TokKind::Ident, "as".into())));
+        assert!(toks.contains(&(TokKind::Num, "1e-5".into())));
+        let toks = kinds("for i in 0..n { v += 2.5f32; }");
+        assert!(toks.contains(&(TokKind::Num, "0".into())));
+        assert!(toks.contains(&(TokKind::Punct, "..".into())));
+        assert!(toks.contains(&(TokKind::Punct, "+=".into())));
+        assert!(toks.contains(&(TokKind::Num, "2.5f32".into())));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let toks = kinds("fn f<'a>(x: &'static str) { s.push('x'); s.push('\\n'); t('-') }");
+        let lifetimes: Vec<_> =
+            toks.iter().filter(|t| t.0 == TokKind::Lifetime).map(|t| t.1.clone()).collect();
+        assert_eq!(lifetimes, vec!["'a", "'static"]);
+        assert_eq!(toks.iter().filter(|t| t.0 == TokKind::Char).count(), 3);
+    }
+
+    #[test]
+    fn strings_and_comments() {
+        let toks = kinds("// HashMap in a comment\nlet s = \"HashMap.iter()\"; /* unsafe */");
+        assert_eq!(toks.iter().filter(|t| t.0 == TokKind::Comment).count(), 2);
+        assert!(!toks.iter().any(|t| t.0 == TokKind::Ident && t.1 == "HashMap"));
+        let toks = kinds("let r = r#\"raw \\ \"quoted\" body\"#;");
+        assert_eq!(toks.iter().filter(|t| t.0 == TokKind::Str).count(), 1);
+    }
+
+    #[test]
+    fn line_numbers() {
+        let toks = tokenize("a\nbb\n  ccc");
+        assert_eq!(toks.len(), 3);
+        assert_eq!((toks[0].line, toks[0].col), (1, 1));
+        assert_eq!((toks[1].line, toks[1].col), (2, 1));
+        assert_eq!((toks[2].line, toks[2].col), (3, 3));
+    }
+
+    #[test]
+    fn multiline_string_tracks_lines() {
+        let toks = tokenize("let s = \"a\nb\";\nx");
+        let x = toks.iter().find(|t| t.text == "x").unwrap();
+        assert_eq!(x.line, 3);
+    }
+}

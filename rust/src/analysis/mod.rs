@@ -1,0 +1,444 @@
+//! `orcs lint` — a dependency-free static-analysis pass for the repo's
+//! two load-bearing contracts:
+//!
+//! * **Determinism**: results are bitwise identical across `ORCS_THREADS`
+//!   and shard counts. The D-* rules hunt the usual leaks (hash-order
+//!   iteration, stray thread-count reads, wall clocks in decision paths,
+//!   unordered float accumulation).
+//! * **Panic safety**: no panic escapes `Backend::step` or the engines'
+//!   `run()` (the `SimError` contract). The P-* rules hunt panicking
+//!   constructs and silent truncation; U-SAFETY keeps `unsafe` documented.
+//!
+//! Findings can be suppressed inline (a `lint:allow(RULE-ID): reason`
+//! comment on the same line or the line directly above) or via the
+//! checked-in `lint.toml` allowlist. Rule IDs, rationale, and the known
+//! heuristic limits are documented in `docs/LINTS.md`.
+
+pub mod config;
+pub mod lexer;
+pub mod rules;
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+pub use config::{AllowEntry, LintConfig};
+pub use rules::{Finding, RuleInfo, Severity, RULES};
+
+use rules::FileSrc;
+
+/// How `--deny` remaps severities before the exit-code decision.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DenyMode {
+    /// Per-rule defaults from the rule table.
+    Default,
+    /// Everything denies (the CI gate).
+    All,
+    /// Everything warns (reporting only; the gate always passes).
+    None,
+    /// The listed rules deny; the rest keep their defaults.
+    Rules(Vec<String>),
+}
+
+impl DenyMode {
+    pub fn parse(s: &str) -> Result<DenyMode> {
+        match s {
+            "default" => Ok(DenyMode::Default),
+            "all" => Ok(DenyMode::All),
+            "none" | "warn" => Ok(DenyMode::None),
+            list => {
+                let ids: Vec<String> = list.split(',').map(|x| x.trim().to_string()).collect();
+                for id in &ids {
+                    if !rules::is_known_rule(id) {
+                        bail!(
+                            "--deny: unknown rule {id} (expected all|none|default or ids from: {})",
+                            rules::rule_ids().join(", ")
+                        );
+                    }
+                }
+                Ok(DenyMode::Rules(ids))
+            }
+        }
+    }
+
+    fn apply(&self, rule: &str) -> Severity {
+        match self {
+            DenyMode::Default => rules::default_severity(rule),
+            DenyMode::All => Severity::Deny,
+            DenyMode::None => Severity::Warn,
+            DenyMode::Rules(ids) => {
+                if ids.iter().any(|i| i == rule) {
+                    Severity::Deny
+                } else {
+                    rules::default_severity(rule)
+                }
+            }
+        }
+    }
+}
+
+/// The result of one lint run.
+#[derive(Debug)]
+pub struct LintReport {
+    /// Surviving findings, sorted by (path, line, col, rule).
+    pub findings: Vec<Finding>,
+    /// Findings removed by inline or config suppressions.
+    pub suppressed: usize,
+    /// Number of files scanned.
+    pub files: usize,
+}
+
+impl LintReport {
+    pub fn deny_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Deny).count()
+    }
+
+    pub fn warn_count(&self) -> usize {
+        self.findings.iter().filter(|f| f.severity == Severity::Warn).count()
+    }
+}
+
+/// Lint in-memory sources: `(relative-path, content)` pairs. This is the
+/// pure core — `lint_root` is a thin filesystem shim over it.
+pub fn lint_sources(sources: &[(String, String)], cfg: &LintConfig, deny: &DenyMode) -> LintReport {
+    let files: Vec<FileSrc> =
+        sources.iter().map(|(rel, text)| FileSrc::new(rel.clone(), text)).collect();
+    let raw = rules::scan(&files, cfg);
+
+    // inline suppressions + their own hygiene findings, per file
+    let mut inline: BTreeMap<&str, BTreeMap<u32, BTreeSet<String>>> = BTreeMap::new();
+    let mut findings: Vec<Finding> = Vec::new();
+    for f in &files {
+        let (allows, mut bad) = parse_suppressions(f);
+        inline.insert(f.rel.as_str(), allows);
+        findings.append(&mut bad);
+    }
+
+    let mut suppressed = 0usize;
+    for finding in raw {
+        let by_inline = inline
+            .get(finding.path.as_str())
+            .and_then(|m| m.get(&finding.line))
+            .map(|ids| ids.contains(finding.rule) || ids.contains("*"))
+            .unwrap_or(false);
+        if by_inline || cfg.allowed(finding.rule, &finding.path) {
+            suppressed += 1;
+        } else {
+            findings.push(finding);
+        }
+    }
+
+    for f in &mut findings {
+        f.severity = deny.apply(f.rule);
+    }
+    findings.sort_by(|a, b| (&a.path, a.line, a.col, a.rule).cmp(&(&b.path, b.line, b.col, b.rule)));
+    LintReport { findings, suppressed, files: files.len() }
+}
+
+/// Lint every `.rs` file under `root` (recursively, sorted order).
+pub fn lint_root(root: &Path, cfg: &LintConfig, deny: &DenyMode) -> Result<LintReport> {
+    let mut paths = Vec::new();
+    collect_rs(root, &mut paths)
+        .with_context(|| format!("walking lint root {}", root.display()))?;
+    let mut sources = Vec::new();
+    for p in &paths {
+        let rel = p
+            .strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text =
+            std::fs::read_to_string(p).with_context(|| format!("reading {}", p.display()))?;
+        sources.push((rel, text));
+    }
+    Ok(lint_sources(&sources, cfg, deny))
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries = Vec::new();
+    for e in std::fs::read_dir(dir)? {
+        entries.push(e?.path());
+    }
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Parse `lint:allow(RULE[, RULE]): reason` comments. Returns the
+/// line→rules map (line = the line the allow covers) plus L-ALLOW
+/// findings for malformed or unknown-rule suppressions.
+fn parse_suppressions(f: &FileSrc) -> (BTreeMap<u32, BTreeSet<String>>, Vec<Finding>) {
+    let mut allows: BTreeMap<u32, BTreeSet<String>> = BTreeMap::new();
+    let mut bad = Vec::new();
+    let mut flag = |tok: &lexer::Token, msg: String| {
+        bad.push(Finding {
+            rule: "L-ALLOW",
+            severity: rules::default_severity("L-ALLOW"),
+            path: f.rel.clone(),
+            line: tok.line,
+            col: tok.col,
+            message: msg,
+        });
+    };
+    for c in &f.comments {
+        let body = c.text.trim_start_matches(['/', '!', '*']).trim();
+        let Some(rest) = body.strip_prefix("lint:allow(") else {
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            flag(c, "lint:allow missing closing `)`".to_string());
+            continue;
+        };
+        let after = rest[close + 1..].trim().trim_end_matches("*/").trim();
+        let reason = after.strip_prefix(':').map(str::trim).unwrap_or("");
+        if reason.is_empty() {
+            flag(c, "lint:allow needs a `: reason` after the rule list".to_string());
+            continue;
+        }
+        // a full-line comment covers the next line; a trailing comment
+        // covers its own line
+        let own_line = f
+            .lines
+            .get(c.line as usize - 1)
+            .map(|l| {
+                let t = l.trim_start();
+                t.starts_with("//") || t.starts_with("/*")
+            })
+            .unwrap_or(false);
+        let target = if own_line { c.line + 1 } else { c.line };
+        for id in rest[..close].split(',') {
+            let id = id.trim();
+            if id != "*" && !rules::is_known_rule(id) {
+                flag(c, format!("lint:allow names unknown rule {id}"));
+            } else {
+                allows.entry(target).or_default().insert(id.to_string());
+            }
+        }
+    }
+    (allows, bad)
+}
+
+/// Render a human-readable report.
+pub fn render_human(report: &LintReport) -> String {
+    let mut s = String::new();
+    for f in &report.findings {
+        s.push_str(&format!(
+            "{}:{}:{} [{}] {}: {}\n",
+            f.path,
+            f.line,
+            f.col,
+            f.severity.as_str(),
+            f.rule,
+            f.message
+        ));
+    }
+    if report.findings.is_empty() {
+        s.push_str(&format!(
+            "lint: clean — {} files scanned, {} finding(s) suppressed\n",
+            report.files, report.suppressed
+        ));
+    } else {
+        s.push_str(&format!(
+            "lint: {} finding(s) ({} deny, {} warn), {} suppressed, {} files scanned\n",
+            report.findings.len(),
+            report.deny_count(),
+            report.warn_count(),
+            report.suppressed,
+            report.files
+        ));
+    }
+    s
+}
+
+/// Render the report as JSON (hand-rolled — the vendor set has no serde).
+pub fn render_json(report: &LintReport) -> String {
+    let mut s = String::from("{\n");
+    s.push_str(&format!(
+        "  \"files\": {},\n  \"suppressed\": {},\n  \"deny\": {},\n  \"warn\": {},\n",
+        report.files,
+        report.suppressed,
+        report.deny_count(),
+        report.warn_count()
+    ));
+    s.push_str("  \"findings\": [");
+    for (k, f) in report.findings.iter().enumerate() {
+        if k > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "\n    {{\"rule\": \"{}\", \"severity\": \"{}\", \"path\": \"{}\", \"line\": {}, \
+             \"col\": {}, \"message\": \"{}\"}}",
+            json_escape(f.rule),
+            f.severity.as_str(),
+            json_escape(&f.path),
+            f.line,
+            f.col,
+            json_escape(&f.message)
+        ));
+    }
+    if !report.findings.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push_str("]\n}\n");
+    s
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// `orcs lint [--root DIR] [--config FILE] [--format human|json]
+/// [--deny all|none|default|ID,...] [--rules]` — returns `Err` (exit 1)
+/// when any deny-severity finding survives suppression.
+pub fn run_cli(args: &crate::cli::Args) -> Result<()> {
+    if args.has("rules") {
+        for r in RULES {
+            println!("{:<14} {:<5} {}", r.id, r.default_severity.as_str(), r.summary);
+        }
+        return Ok(());
+    }
+    let root = match args.get("root") {
+        Some(r) => PathBuf::from(r),
+        None => ["rust/src", "src"]
+            .into_iter()
+            .map(PathBuf::from)
+            .find(|p| p.is_dir())
+            .unwrap_or_else(|| PathBuf::from(".")),
+    };
+    let cfg = match args.get("config") {
+        Some(c) => LintConfig::load(Path::new(c))?,
+        None => {
+            let candidates = [PathBuf::from("lint.toml"), root.join("../../lint.toml")];
+            match candidates.iter().find(|p| p.is_file()) {
+                Some(p) => LintConfig::load(p)?,
+                None => LintConfig::default(),
+            }
+        }
+    };
+    let deny = DenyMode::parse(args.get_or("deny", "default"))?;
+    let report = lint_root(&root, &cfg, &deny)?;
+    match args.get_or("format", "human") {
+        "human" => print!("{}", render_human(&report)),
+        "json" => print!("{}", render_json(&report)),
+        other => bail!("bad --format {other} (human|json)"),
+    }
+    if report.deny_count() > 0 {
+        bail!("lint: {} deny finding(s) in {}", report.deny_count(), root.display());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn everywhere() -> LintConfig {
+        let all = vec![".".to_string()];
+        LintConfig { step_path: all.clone(), det_path: all.clone(), csr_path: all, allow: vec![] }
+    }
+
+    fn lint_one(src: &str) -> LintReport {
+        lint_sources(&[("t.rs".to_string(), src.to_string())], &everywhere(), &DenyMode::All)
+    }
+
+    fn rules_of(r: &LintReport) -> Vec<&'static str> {
+        r.findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn trailing_and_preceding_suppressions() {
+        let hit = lint_one("fn f(xs: &[u32]) -> u32 {\n    *xs.first().unwrap()\n}\n");
+        assert_eq!(rules_of(&hit), vec!["P-PANIC"]);
+        let trailing = lint_one(
+            "fn f(xs: &[u32]) -> u32 {\n    *xs.first().unwrap() // lint:allow(P-PANIC): caller \
+             checks\n}\n",
+        );
+        assert!(trailing.findings.is_empty(), "{:?}", trailing.findings);
+        assert_eq!(trailing.suppressed, 1);
+        let above = lint_one(
+            "fn f(xs: &[u32]) -> u32 {\n    // lint:allow(P-PANIC): caller checks\n    \
+             *xs.first().unwrap()\n}\n",
+        );
+        assert!(above.findings.is_empty(), "{:?}", above.findings);
+    }
+
+    #[test]
+    fn malformed_suppressions_are_l_allow() {
+        let unknown = lint_one("// lint:allow(NOT-A-RULE): whatever\nfn f() {}\n");
+        assert_eq!(rules_of(&unknown), vec!["L-ALLOW"]);
+        let no_reason = lint_one("// lint:allow(P-PANIC)\nfn f() {}\n");
+        assert_eq!(rules_of(&no_reason), vec!["L-ALLOW"]);
+        // doc prose mentioning the syntax mid-sentence is not a suppression
+        let prose = lint_one("// suppress with lint:allow(P-PANIC): reason\nfn f() {}\n");
+        assert!(prose.findings.is_empty(), "{:?}", prose.findings);
+    }
+
+    #[test]
+    fn deny_modes() {
+        assert_eq!(DenyMode::parse("all").unwrap(), DenyMode::All);
+        assert_eq!(DenyMode::parse("none").unwrap(), DenyMode::None);
+        assert!(DenyMode::parse("P-PANIC,U-SAFETY").is_ok());
+        assert!(DenyMode::parse("P-TYPO").is_err());
+        // P-INDEX-LIT warns by default, denies under --deny all
+        let src = "fn f(v: &[u32]) -> u32 {\n    v[0]\n}\n";
+        let dflt =
+            lint_sources(&[("t.rs".into(), src.into())], &everywhere(), &DenyMode::Default);
+        assert_eq!(dflt.deny_count(), 0);
+        assert_eq!(dflt.warn_count(), 1);
+        let all = lint_sources(&[("t.rs".into(), src.into())], &everywhere(), &DenyMode::All);
+        assert_eq!(all.deny_count(), 1);
+    }
+
+    #[test]
+    fn test_modules_are_exempt_except_u_safety() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        \
+                   Some(1).unwrap();\n    }\n}\n";
+        let r = lint_one(src);
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+    }
+
+    #[test]
+    fn config_allowlist_suppresses_by_path() {
+        let mut cfg = everywhere();
+        cfg.allow.push(AllowEntry {
+            rule: "P-PANIC".into(),
+            path: "t.rs".into(),
+            reason: "test".into(),
+        });
+        let r = lint_sources(
+            &[("t.rs".into(), "fn f() {\n    None::<u32>.unwrap();\n}\n".into())],
+            &cfg,
+            &DenyMode::All,
+        );
+        assert!(r.findings.is_empty(), "{:?}", r.findings);
+        assert_eq!(r.suppressed, 1);
+    }
+
+    #[test]
+    fn json_output_is_well_formed_enough() {
+        let r = lint_one("fn f() {\n    None::<u32>.unwrap();\n}\n");
+        let js = render_json(&r);
+        assert!(js.contains("\"rule\": \"P-PANIC\""));
+        assert!(js.contains("\"deny\": 1"));
+        let clean = lint_one("fn f() {}\n");
+        assert!(render_json(&clean).contains("\"findings\": []"));
+    }
+}

@@ -1,0 +1,664 @@
+//! The lint rules: determinism (D-*), panic-safety (P-*), unsafe hygiene
+//! (U-*), and suppression hygiene (L-*).
+//!
+//! Every rule is a token-level heuristic, not a semantic analysis — the
+//! engine has no type information. Each rule's detection pattern and its
+//! documented blind spots live in `docs/LINTS.md`; the fixture corpus in
+//! `rust/tests/lint_fixtures/` pins both the positive and the negative
+//! behavior of every pattern below.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::config::LintConfig;
+use super::lexer::{tokenize, TokKind, Token};
+
+/// Finding severity. `Deny` findings fail the CI gate; `Warn` findings
+/// are reported but do not affect the exit code (until `--deny` says so).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warn,
+    Deny,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Warn => "warn",
+            Severity::Deny => "deny",
+        }
+    }
+}
+
+/// One lint finding, pinned to a source span.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub path: String,
+    pub line: u32,
+    pub col: u32,
+    pub message: String,
+}
+
+/// Static rule metadata (drives `--rules`, validation, docs).
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub default_severity: Severity,
+    pub summary: &'static str,
+}
+
+/// The rule table. IDs are stable; `docs/LINTS.md` is the narrative.
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "D-HASH-ITER",
+        default_severity: Severity::Deny,
+        summary: "HashMap/HashSet iteration or drain leaks hash order into results",
+    },
+    RuleInfo {
+        id: "D-ENV-THREADS",
+        default_severity: Severity::Deny,
+        summary: "thread-count env var read outside parallel.rs bypasses the one blessed site",
+    },
+    RuleInfo {
+        id: "D-WALL-CLOCK",
+        default_severity: Severity::Deny,
+        summary: "Instant/SystemTime/thread-id in a determinism path",
+    },
+    RuleInfo {
+        id: "D-FP-PARALLEL",
+        default_severity: Severity::Deny,
+        summary: "float accumulation inside a parallel_* closure without a chunk-ordered merge",
+    },
+    RuleInfo {
+        id: "P-PANIC",
+        default_severity: Severity::Deny,
+        summary: "unwrap/expect/panic! reachable from Backend::step (the SimError contract)",
+    },
+    RuleInfo {
+        id: "P-INDEX-LIT",
+        default_severity: Severity::Warn,
+        summary: "direct literal slice index in a step path can panic on empty input",
+    },
+    RuleInfo {
+        id: "P-CAST-NARROW",
+        default_severity: Severity::Warn,
+        summary: "lossy `as` narrowing in CSR offset/merge code truncates silently",
+    },
+    RuleInfo {
+        id: "U-SAFETY",
+        default_severity: Severity::Deny,
+        summary: "unsafe block/fn without an immediately preceding SAFETY comment",
+    },
+    RuleInfo {
+        id: "L-ALLOW",
+        default_severity: Severity::Deny,
+        summary: "malformed lint:allow suppression (unknown rule or missing reason)",
+    },
+];
+
+pub fn is_known_rule(id: &str) -> bool {
+    RULES.iter().any(|r| r.id == id)
+}
+
+pub fn rule_ids() -> Vec<&'static str> {
+    RULES.iter().map(|r| r.id).collect()
+}
+
+pub fn default_severity(id: &str) -> Severity {
+    RULES
+        .iter()
+        .find(|r| r.id == id)
+        .map(|r| r.default_severity)
+        .unwrap_or(Severity::Deny)
+}
+
+/// One tokenized source file plus the line-oriented views the rules need.
+pub(crate) struct FileSrc {
+    pub rel: String,
+    pub lines: Vec<String>,
+    /// Non-comment tokens, in order.
+    pub code: Vec<Token>,
+    /// Comment tokens only (suppressions, SAFETY detection).
+    pub comments: Vec<Token>,
+    /// Inclusive line spans of `#[cfg(test)]` items.
+    pub test_spans: Vec<(u32, u32)>,
+}
+
+impl FileSrc {
+    pub fn new(rel: String, content: &str) -> FileSrc {
+        let all = tokenize(content);
+        let mut code = Vec::new();
+        let mut comments = Vec::new();
+        for t in all {
+            if t.kind == TokKind::Comment {
+                comments.push(t);
+            } else {
+                code.push(t);
+            }
+        }
+        let lines = content.lines().map(|l| l.to_string()).collect();
+        let test_spans = find_test_spans(&code);
+        FileSrc { rel, lines, code, comments, test_spans }
+    }
+
+    pub fn in_test(&self, line: u32) -> bool {
+        self.test_spans.iter().any(|&(lo, hi)| lo <= line && line <= hi)
+    }
+}
+
+/// Locate `#[cfg(test)]` items and return their inclusive line spans: the
+/// attribute sequence `# [ cfg ( test ) ]`, any further attributes, then
+/// the item's brace-matched body.
+fn find_test_spans(code: &[Token]) -> Vec<(u32, u32)> {
+    let txt = |k: usize| code.get(k).map(|t| t.text.as_str()).unwrap_or("");
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i < code.len() {
+        let hit = txt(i) == "#"
+            && txt(i + 1) == "["
+            && txt(i + 2) == "cfg"
+            && txt(i + 3) == "("
+            && txt(i + 4) == "test"
+            && txt(i + 5) == ")"
+            && txt(i + 6) == "]";
+        if !hit {
+            i += 1;
+            continue;
+        }
+        let start_line = code[i].line;
+        let mut k = i + 7;
+        // skip any further attributes on the same item
+        while txt(k) == "#" && txt(k + 1) == "[" {
+            let mut depth = 0i32;
+            k += 1;
+            while k < code.len() {
+                match txt(k) {
+                    "[" => depth += 1,
+                    "]" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+            k += 1;
+        }
+        // find the item body: first `{` before any item-terminating `;`
+        while k < code.len() && txt(k) != "{" && txt(k) != ";" {
+            k += 1;
+        }
+        if txt(k) == "{" {
+            let mut depth = 0i32;
+            while k < code.len() {
+                match txt(k) {
+                    "{" => depth += 1,
+                    "}" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+                k += 1;
+            }
+            let end_line = code.get(k).map(|t| t.line).unwrap_or(u32::MAX);
+            spans.push((start_line, end_line));
+        } else {
+            spans.push((start_line, code.get(k).map(|t| t.line).unwrap_or(start_line)));
+        }
+        i = k.max(i + 7);
+    }
+    spans
+}
+
+/// Hash-typed binding/field names collected across the whole crate, so
+/// `for k in self.index { ... }` is caught even when the `HashMap` type
+/// annotation lives in another file.
+pub(crate) fn collect_hash_names(files: &[FileSrc]) -> BTreeSet<String> {
+    let mut names = BTreeSet::new();
+    for f in files {
+        let code = &f.code;
+        for (k, t) in code.iter().enumerate() {
+            if t.kind != TokKind::Ident || (t.text != "HashMap" && t.text != "HashSet") {
+                continue;
+            }
+            // pattern a: `name : [& mut path::]* HashMap<...>` (binding,
+            // field, or parameter type annotation)
+            let mut j = k;
+            while j > 0 {
+                let prev = &code[j - 1];
+                let skip = prev.text == "::"
+                    || prev.text == "&"
+                    || prev.text == "mut"
+                    || prev.kind == TokKind::Lifetime
+                    || (prev.kind == TokKind::Ident && j >= 2 && code[j - 2].text == "::");
+                if skip {
+                    j -= 1;
+                } else {
+                    break;
+                }
+            }
+            if j >= 2 && code[j - 1].text == ":" && code[j - 2].kind == TokKind::Ident {
+                names.insert(code[j - 2].text.clone());
+            }
+            // pattern b: `let [mut] name = HashMap::new()` (inferred type)
+            if j >= 2 && code[j - 1].text == "=" && code[j - 2].kind == TokKind::Ident {
+                names.insert(code[j - 2].text.clone());
+            }
+        }
+    }
+    names
+}
+
+/// Float-typed binding names within one file (for D-FP-PARALLEL).
+fn collect_float_names(f: &FileSrc) -> BTreeSet<String> {
+    let code = &f.code;
+    let mut names = BTreeSet::new();
+    for (k, t) in code.iter().enumerate() {
+        if t.kind != TokKind::Ident || (t.text != "f32" && t.text != "f64") {
+            continue;
+        }
+        // `name : [& mut]* f32` — direct scalar annotations only
+        let mut j = k;
+        while j > 0 && (code[j - 1].text == "&" || code[j - 1].text == "mut") {
+            j -= 1;
+        }
+        if j >= 2 && code[j - 1].text == ":" && code[j - 2].kind == TokKind::Ident {
+            names.insert(code[j - 2].text.clone());
+        }
+    }
+    // `let [mut] name = 1.0` / `= 0.5f32` — float-literal initializers
+    for (k, t) in code.iter().enumerate() {
+        if t.kind == TokKind::Num
+            && is_float_literal(&t.text)
+            && k >= 2
+            && code[k - 1].text == "="
+            && code[k - 2].kind == TokKind::Ident
+        {
+            names.insert(code[k - 2].text.clone());
+        }
+    }
+    names
+}
+
+fn is_float_literal(text: &str) -> bool {
+    text.contains('.') || text.ends_with("f32") || text.ends_with("f64")
+}
+
+/// Run every rule over `files` (whole-crate view) and return raw findings
+/// (suppressions not yet applied), sorted by (path, line, col, rule).
+pub(crate) fn scan(files: &[FileSrc], cfg: &LintConfig) -> Vec<Finding> {
+    let hash_names = collect_hash_names(files);
+    let mut out = Vec::new();
+    for f in files {
+        d_hash_iter(f, &hash_names, &mut out);
+        d_env_threads(f, &mut out);
+        d_wall_clock(f, cfg, &mut out);
+        d_fp_parallel(f, &mut out);
+        p_panic(f, cfg, &mut out);
+        p_index_lit(f, cfg, &mut out);
+        p_cast_narrow(f, cfg, &mut out);
+        u_safety(f, &mut out);
+    }
+    dedupe_sort(out)
+}
+
+/// Sort and collapse duplicate (rule, path, line) findings — several
+/// token patterns can hit the same construct (e.g. `for k in m.iter()`).
+fn dedupe_sort(mut findings: Vec<Finding>) -> Vec<Finding> {
+    findings.sort_by(|a, b| {
+        (&a.path, a.line, a.col, a.rule).cmp(&(&b.path, b.line, b.col, b.rule))
+    });
+    findings.dedup_by(|a, b| a.rule == b.rule && a.path == b.path && a.line == b.line);
+    findings
+}
+
+fn finding(rule: &'static str, f: &FileSrc, t: &Token, message: String) -> Finding {
+    Finding {
+        rule,
+        severity: default_severity(rule),
+        path: f.rel.clone(),
+        line: t.line,
+        col: t.col,
+        message,
+    }
+}
+
+const HASH_ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "keys",
+    "values",
+    "values_mut",
+    "drain",
+    "retain",
+    "into_iter",
+    "into_keys",
+    "into_values",
+];
+
+/// D-HASH-ITER: iteration over a `HashMap`/`HashSet` observes hash order.
+fn d_hash_iter(f: &FileSrc, hash_names: &BTreeSet<String>, out: &mut Vec<Finding>) {
+    let code = &f.code;
+    let is_hashy = |t: &Token| {
+        t.kind == TokKind::Ident
+            && (t.text == "HashMap" || t.text == "HashSet" || hash_names.contains(&t.text))
+    };
+    for (k, t) in code.iter().enumerate() {
+        if f.in_test(t.line) {
+            continue;
+        }
+        // `recv.iter()` — receiver ident directly before the dot
+        if t.kind == TokKind::Ident
+            && HASH_ITER_METHODS.contains(&t.text.as_str())
+            && k >= 2
+            && code[k - 1].text == "."
+            && code.get(k + 1).map(|n| n.text == "(").unwrap_or(false)
+            && is_hashy(&code[k - 2])
+        {
+            out.push(finding(
+                "D-HASH-ITER",
+                f,
+                t,
+                format!("`{}.{}()` observes nondeterministic hash order", code[k - 2].text, t.text),
+            ));
+        }
+        // `for pat in <expr with hash binding> {`
+        if t.kind == TokKind::Ident && t.text == "for" {
+            let mut j = k + 1;
+            while j < code.len() && code[j].text != "{" && code[j].text != ";" {
+                if is_hashy(&code[j]) {
+                    out.push(finding(
+                        "D-HASH-ITER",
+                        f,
+                        &code[j],
+                        format!("for-loop over hash collection `{}`", code[j].text),
+                    ));
+                    break;
+                }
+                j += 1;
+            }
+        }
+    }
+}
+
+/// The env-var name D-ENV-THREADS hunts for. Kept in one const so the
+/// rule's own source carries a single suppressed occurrence of it.
+// lint:allow(D-ENV-THREADS): the rule's own needle
+const ENV_NEEDLE: &str = "ORCS_THREADS";
+
+/// D-ENV-THREADS: the thread-count env var has exactly one blessed
+/// reader (`parallel::num_threads`); any other mention in code is a leak.
+fn d_env_threads(f: &FileSrc, out: &mut Vec<Finding>) {
+    if f.rel == "parallel.rs" || f.rel.ends_with("/parallel.rs") {
+        return;
+    }
+    for t in &f.code {
+        if t.kind == TokKind::Str && t.text.contains(ENV_NEEDLE) && !f.in_test(t.line) {
+            out.push(finding(
+                "D-ENV-THREADS",
+                f,
+                t,
+                format!("{ENV_NEEDLE} must only be read by parallel::num_threads()"),
+            ));
+        }
+    }
+}
+
+/// D-WALL-CLOCK: wall-clock and thread-identity sources in det paths.
+fn d_wall_clock(f: &FileSrc, cfg: &LintConfig, out: &mut Vec<Finding>) {
+    if !LintConfig::in_scope(&f.rel, &cfg.det_path) {
+        return;
+    }
+    let code = &f.code;
+    for (k, t) in code.iter().enumerate() {
+        if t.kind != TokKind::Ident || f.in_test(t.line) {
+            continue;
+        }
+        if t.text == "Instant" || t.text == "SystemTime" {
+            out.push(finding(
+                "D-WALL-CLOCK",
+                f,
+                t,
+                format!("`{}` in a determinism path (use the simulated timing model)", t.text),
+            ));
+        }
+        if t.text == "thread"
+            && code.get(k + 1).map(|n| n.text == "::").unwrap_or(false)
+            && code.get(k + 2).map(|n| n.text == "current").unwrap_or(false)
+        {
+            out.push(finding(
+                "D-WALL-CLOCK",
+                f,
+                t,
+                "thread identity in a determinism path".to_string(),
+            ));
+        }
+    }
+}
+
+const PARALLEL_ENTRYPOINTS: &[&str] =
+    &["parallel_for_chunks", "parallel_for_chunks_grained", "parallel_for_dynamic"];
+
+/// D-FP-PARALLEL: `+=`/`-=` on float state inside a closure passed to an
+/// unordered `parallel_*` entry point. Float accumulation must go through
+/// a chunk-ordered merge (`parallel_chunk_map` + ordered fold) instead.
+fn d_fp_parallel(f: &FileSrc, out: &mut Vec<Finding>) {
+    if f.rel == "parallel.rs" || f.rel.ends_with("/parallel.rs") {
+        return; // the library's own internals are the ordered-merge machinery
+    }
+    let float_names = collect_float_names(f);
+    let code = &f.code;
+    for (k, t) in code.iter().enumerate() {
+        if t.kind != TokKind::Ident
+            || !PARALLEL_ENTRYPOINTS.contains(&t.text.as_str())
+            || !code.get(k + 1).map(|n| n.text == "(").unwrap_or(false)
+            || f.in_test(t.line)
+        {
+            continue;
+        }
+        // span of the call's argument list
+        let mut depth = 0i32;
+        let mut end = k + 1;
+        for (j, tj) in code.iter().enumerate().skip(k + 1) {
+            match tj.text.as_str() {
+                "(" => depth += 1,
+                ")" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = j;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        for (j, tj) in code.iter().enumerate().take(end).skip(k + 1) {
+            if tj.text != "+=" && tj.text != "-=" {
+                continue;
+            }
+            // the accumulation statement: previous stmt boundary → next `;`
+            let stmt_start = (0..j)
+                .rev()
+                .find(|&s| matches!(code[s].text.as_str(), ";" | "{" | "}"))
+                .map(|s| s + 1)
+                .unwrap_or(0);
+            let stmt_end = (j..end).find(|&s| code[s].text == ";").unwrap_or(end);
+            let is_float = code[stmt_start..stmt_end].iter().enumerate().any(|(off, s)| {
+                let idx = stmt_start + off;
+                (s.kind == TokKind::Num && is_float_literal(&s.text))
+                    || (s.kind == TokKind::Ident && float_names.contains(&s.text))
+                    || (s.kind == TokKind::Ident
+                        && s.text == "as"
+                        && code
+                            .get(idx + 1)
+                            .map(|n| n.text == "f32" || n.text == "f64")
+                            .unwrap_or(false))
+            });
+            if is_float {
+                out.push(finding(
+                    "D-FP-PARALLEL",
+                    f,
+                    tj,
+                    format!(
+                        "float accumulation inside `{}` closure; route partials through a \
+                         chunk-ordered merge",
+                        t.text
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// P-PANIC: panicking constructs in code reachable from `Backend::step`.
+fn p_panic(f: &FileSrc, cfg: &LintConfig, out: &mut Vec<Finding>) {
+    if !LintConfig::in_scope(&f.rel, &cfg.step_path) {
+        return;
+    }
+    let code = &f.code;
+    for (k, t) in code.iter().enumerate() {
+        if t.kind != TokKind::Ident || f.in_test(t.line) {
+            continue;
+        }
+        let method_call = k >= 1
+            && code[k - 1].text == "."
+            && code.get(k + 1).map(|n| n.text == "(").unwrap_or(false);
+        if (t.text == "unwrap" || t.text == "expect") && method_call {
+            out.push(finding(
+                "P-PANIC",
+                f,
+                t,
+                format!(".{}() in a step path; return SimError instead", t.text),
+            ));
+        }
+        if PANIC_MACROS.contains(&t.text.as_str())
+            && code.get(k + 1).map(|n| n.text == "!").unwrap_or(false)
+        {
+            out.push(finding(
+                "P-PANIC",
+                f,
+                t,
+                format!("{}! in a step path; return SimError instead", t.text),
+            ));
+        }
+    }
+}
+
+/// P-INDEX-LIT: `expr[0]`-style literal indexing in step paths.
+fn p_index_lit(f: &FileSrc, cfg: &LintConfig, out: &mut Vec<Finding>) {
+    if !LintConfig::in_scope(&f.rel, &cfg.step_path) {
+        return;
+    }
+    let code = &f.code;
+    for (k, t) in code.iter().enumerate() {
+        if t.text != "[" || k == 0 || f.in_test(t.line) {
+            continue;
+        }
+        let prev = &code[k - 1];
+        let indexable = (prev.kind == TokKind::Ident && prev.text != "mut")
+            || prev.text == ")"
+            || prev.text == "]";
+        let lit_index = code.get(k + 1).map(|n| n.kind == TokKind::Num).unwrap_or(false)
+            && code.get(k + 2).map(|n| n.text == "]").unwrap_or(false);
+        if indexable && lit_index {
+            out.push(finding(
+                "P-INDEX-LIT",
+                f,
+                t,
+                format!(
+                    "literal index `[{}]` in a step path; prefer get()/first()",
+                    code[k + 1].text
+                ),
+            ));
+        }
+    }
+}
+
+const NARROW_TARGETS: &[&str] = &["u8", "u16", "u32", "i8", "i16", "i32"];
+
+/// P-CAST-NARROW: `(...) as u32`-style narrowing in CSR offset/merge code.
+fn p_cast_narrow(f: &FileSrc, cfg: &LintConfig, out: &mut Vec<Finding>) {
+    if !LintConfig::in_scope(&f.rel, &cfg.csr_path) {
+        return;
+    }
+    let code = &f.code;
+    for (k, t) in code.iter().enumerate() {
+        if t.kind != TokKind::Ident || t.text != "as" || k == 0 || f.in_test(t.line) {
+            continue;
+        }
+        let after_call = code[k - 1].text == ")";
+        let target = code.get(k + 1).map(|n| n.text.clone()).unwrap_or_default();
+        if after_call && NARROW_TARGETS.contains(&target.as_str()) {
+            out.push(finding(
+                "P-CAST-NARROW",
+                f,
+                t,
+                format!("`as {target}` may truncate a CSR offset; justify or use try_from"),
+            ));
+        }
+    }
+}
+
+/// U-SAFETY: every line containing `unsafe` must be covered by a SAFETY
+/// comment — on the same line, or directly above it (walking up through
+/// comment runs, attributes, statement continuations, and earlier lines
+/// of the same unsafe construct). Applies everywhere, tests included.
+fn u_safety(f: &FileSrc, out: &mut Vec<Finding>) {
+    let mut seen = BTreeSet::new();
+    for t in &f.code {
+        if t.kind != TokKind::Ident || t.text != "unsafe" || !seen.insert(t.line) {
+            continue;
+        }
+        if !safety_covered(&f.lines, t.line) {
+            out.push(finding(
+                "U-SAFETY",
+                f,
+                t,
+                "unsafe without an immediately preceding `// SAFETY:` comment".to_string(),
+            ));
+        }
+    }
+}
+
+fn is_safety_text(line: &str) -> bool {
+    line.contains("SAFETY:") || line.contains("# Safety")
+}
+
+fn safety_covered(lines: &[String], unsafe_line: u32) -> bool {
+    let idx = (unsafe_line as usize).saturating_sub(1);
+    if lines.get(idx).map(|l| is_safety_text(l)).unwrap_or(false) {
+        return true;
+    }
+    let mut k = idx;
+    while k > 0 {
+        k -= 1;
+        let t = lines[k].trim();
+        if t.is_empty() {
+            return false;
+        }
+        if t.starts_with("//") || t.starts_with("/*") || t.starts_with('*') {
+            if is_safety_text(t) {
+                return true;
+            }
+            continue; // comment run — keep walking up
+        }
+        if t.starts_with("#[") || t.starts_with("#!") {
+            continue; // attribute between the comment and the item
+        }
+        if t.contains("unsafe") {
+            continue; // an earlier line of the same unsafe construct
+        }
+        if !(t.ends_with(';') || t.ends_with('{') || t.ends_with('}')) {
+            continue; // statement continuation, e.g. `let sub =`
+        }
+        return false; // unrelated complete statement — not covered
+    }
+    false
+}

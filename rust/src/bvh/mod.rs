@@ -264,6 +264,7 @@ impl Bvh {
         // level table sane
         if self.level_starts.first() != Some(&0)
             || self.level_starts.last().copied() != Some(self.nodes.len() as u32)
+            // lint:allow(P-INDEX-LIT): windows(2) yields exactly-2 slices
             || self.level_starts.windows(2).any(|w| w[0] >= w[1])
         {
             return Err(format!("bad level_starts {:?}", self.level_starts));

@@ -199,9 +199,13 @@ impl Bvh {
                 if cnt > 0 {
                     let first = node.child[lane] as usize;
                     for k in first..first + cnt as usize {
+                        // SAFETY: leaf ranges index into prim_order, whose
+                        // length the collapse invariants guarantee.
                         let j = unsafe { *self.prim_order.get_unchecked(k) } as usize;
                         stats.sphere_tests += 1;
                         if j != exclude {
+                            // SAFETY: `j` comes from the 0..n_prims
+                            // permutation; pos/radius have n_prims entries.
                             let d2 = (p - *unsafe { pos.get_unchecked(j) }).norm2();
                             let r = unsafe { *radius.get_unchecked(j) };
                             if d2 < r * r {

@@ -2,7 +2,7 @@
 //!
 //! Grammar: `orcs <subcommand> [--flag value]... [--switch]...`
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
@@ -16,7 +16,9 @@ use crate::rtcore::HwProfile;
 #[derive(Debug, Default)]
 pub struct Args {
     pub subcommand: String,
-    flags: HashMap<String, String>,
+    // BTreeMap so any future iteration over the flags is in sorted order
+    // (D-HASH-ITER keeps hash order out of user-visible output)
+    flags: BTreeMap<String, String>,
     switches: Vec<String>,
 }
 
@@ -194,6 +196,8 @@ USAGE:
   orcs bench-sharded     sharded-scaling table (per-shard BVH policies,
                          OOM relief, heterogeneous fleet)
   orcs bench-chaos       recovery-overhead table vs injected fault rate
+  orcs lint              determinism / panic-safety static analysis over
+                         rust/src (see docs/LINTS.md)
   orcs inspect-artifacts print the loaded PJRT artifact set
 
 Scenario flags:
@@ -222,6 +226,12 @@ Bench flags:
   --scale F            shrink paper sizes by F (default per-bench)
   --steps N            step count override
   --quick              tiny sizes for smoke runs
+Lint flags:
+  --root DIR           lint root (default rust/src, then src, then .)
+  --config FILE        lint.toml path (default: repo-root lint.toml)
+  --format F           human|json             (default human)
+  --deny D             all|none|default|RULE[,RULE...]  exit 1 on deny
+  --rules              print the rule table and exit
 ";
 
 #[cfg(test)]

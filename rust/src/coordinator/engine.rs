@@ -261,6 +261,7 @@ impl Engine {
                 // injected divergence: blow up one velocity (finite, so only
                 // the kinetic-energy bound can catch it)
                 self.divergence_armed = false;
+                // lint:allow(P-INDEX-LIT): guarded by !vel.is_empty() above
                 self.state.vel[0] = self.state.vel[0] * 1e15 + Vec3::splat(1e15);
             }
 
@@ -270,7 +271,10 @@ impl Engine {
                         return Err(SimError::NumericalDivergence { detail });
                     }
                     attempt += 1;
-                    self.state = snapshot.expect("watchdog snapshot taken when enabled");
+                    let Some(snap) = snapshot else {
+                        return Err(SimError::fatal("watchdog retry without a pre-step snapshot"));
+                    };
+                    self.state = snap;
                     self.state.dt *= 0.5;
                     self.backend.invalidate_bvh();
                     wasted_ms += rec.sim_ms;

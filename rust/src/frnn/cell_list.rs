@@ -25,67 +25,33 @@ pub struct CellGrid {
 }
 
 /// Above this per-axis resolution a dense cell array is wasteful; the
-/// hashed [`SparseGrid`] takes over (compact-hashing cell lists, as in
-/// Ihmsen et al. [13]).
+/// keyed [`SparseGrid`] takes over (compact cell lists, as in Ihmsen
+/// et al. [13]).
 pub const DENSE_DIMS_CAP: usize = 64;
 
-/// Multiplicative hasher for cell keys — the default SipHash dominates the
-/// sweep profile (EXPERIMENTS.md §Perf #7); cell keys are already
-/// well-distributed integers, so one 64-bit multiply suffices.
-#[derive(Clone, Copy, Default)]
-pub struct CellKeyHasher(u64);
-
-impl std::fmt::Debug for CellKeyHash {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "CellKeyHash")
-    }
-}
-
-impl std::hash::Hasher for CellKeyHasher {
-    #[inline(always)]
-    fn finish(&self) -> u64 {
-        self.0
-    }
-
-    fn write(&mut self, bytes: &[u8]) {
-        for &b in bytes {
-            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100000001b3);
-        }
-    }
-
-    #[inline(always)]
-    fn write_i64(&mut self, i: i64) {
-        self.0 = (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
-    }
-}
-
-/// BuildHasher for [`CellKeyHasher`].
-#[derive(Clone, Copy, Default)]
-pub struct CellKeyHash;
-
-impl std::hash::BuildHasher for CellKeyHash {
-    type Hasher = CellKeyHasher;
-    fn build_hasher(&self) -> CellKeyHasher {
-        CellKeyHasher::default()
-    }
-}
-
-/// Radius-sized cells, hash-backed: the small-radius regime (r=1 in a
-/// 1000³ box needs 10⁹ virtual cells) where a dense array cannot exist but
-/// fine cells are exactly what makes the paper's CPU-CELL fast.
+/// Radius-sized cells behind an ordered map: the small-radius regime (r=1
+/// in a 1000³ box needs 10⁹ virtual cells) where a dense array cannot
+/// exist but fine cells are exactly what makes the paper's CPU-CELL fast.
+///
+/// The cell map is a `BTreeMap`, not a `HashMap`: any iteration over it
+/// is in key order by construction, so hash order can never leak into
+/// results (lint rule D-HASH-ITER). The sweep path only issues point
+/// `get`s — ~27 probes per particle — where the tree's `O(log c)` probe
+/// replaces the multiplicative cell-key hasher this struct used to carry
+/// (EXPERIMENTS.md §Perf #7 replaced SipHash for the same reason).
 #[derive(Clone, Debug)]
 pub struct SparseGrid {
     pub dims: i64,
     pub cell: f32,
-    map: std::collections::HashMap<i64, Vec<u32>, CellKeyHash>,
+    map: std::collections::BTreeMap<i64, Vec<u32>>,
 }
 
 impl SparseGrid {
     pub fn build(pos: &[Vec3], box_l: f32, dims: usize) -> SparseGrid {
         let dims_i = dims as i64;
         let cell = box_l / dims as f32;
-        let mut map: std::collections::HashMap<i64, Vec<u32>, CellKeyHash> =
-            std::collections::HashMap::with_capacity_and_hasher(pos.len(), CellKeyHash);
+        let mut map: std::collections::BTreeMap<i64, Vec<u32>> =
+            std::collections::BTreeMap::new();
         for (i, &p) in pos.iter().enumerate() {
             let cx = ((p.x / cell) as i64).min(dims_i - 1);
             let cy = ((p.y / cell) as i64).min(dims_i - 1);
@@ -323,7 +289,9 @@ pub fn cell_forces(
 
     // merge per-thread force buffers (first buffer reused as accumulator)
     let mut iter = results.into_iter();
-    let (mut forces, mut tests, mut evals) = iter.next().unwrap();
+    let Some((mut forces, mut tests, mut evals)) = iter.next() else {
+        return (vec![Vec3::ZERO; n], 0, 0, visits_per_sweep * n as u64);
+    };
     for (f2, t2, e2) in iter {
         for (a, b) in forces.iter_mut().zip(f2) {
             *a += b;

@@ -57,27 +57,19 @@ impl BvhManager {
         // internal counters live), then override when forced.
         let decided = self.policy.decide();
         let mut action = if force_build { BvhAction::Build } else { decided };
-        if self.bvh.is_none() {
-            action = BvhAction::Build; // nothing to refit yet
-        }
-        match action {
-            BvhAction::Build => {
-                self.bvh = Some(Bvh::build_with_threads_ordered(
-                    pos,
-                    radius,
-                    self.build_kind,
-                    threads,
-                    zorder,
-                ));
-                counts.bvh_built_prims += pos.len() as u64;
-            }
-            BvhAction::Update => {
-                self.bvh
-                    .as_mut()
-                    .expect("update before first build")
-                    .refit_with_threads(pos, radius, threads);
-                counts.bvh_refit_prims += pos.len() as u64;
-            }
+        if action == BvhAction::Build || self.bvh.is_none() {
+            action = BvhAction::Build; // nothing to refit before the first build
+            self.bvh = Some(Bvh::build_with_threads_ordered(
+                pos,
+                radius,
+                self.build_kind,
+                threads,
+                zorder,
+            ));
+            counts.bvh_built_prims += pos.len() as u64;
+        } else if let Some(bvh) = self.bvh.as_mut() {
+            bvh.refit_with_threads(pos, radius, threads);
+            counts.bvh_refit_prims += pos.len() as u64;
         }
         action
     }
@@ -104,6 +96,7 @@ impl BvhManager {
     }
 
     pub fn bvh(&self) -> &Bvh {
+        // lint:allow(P-PANIC): accessor contract — callers invoke prepare() first
         self.bvh.as_ref().expect("BVH not built yet")
     }
 

@@ -125,6 +125,7 @@ impl Backend for RtRef {
                             }
                         },
                     );
+                    // lint:allow(P-CAST-NARROW): per-particle degree < 2^32 by the OOM check
                     out.lens.push((out.items.len() - before) as u32);
                 }
                 out
@@ -156,7 +157,7 @@ impl Backend for RtRef {
         // counting loops above touch only the sparse cross lists; this scan
         // walks the full n-length array).
         let offsets = crate::parallel::exclusive_scan_u32(&lens, ctx.threads);
-        let total = *offsets.last().unwrap();
+        let total = offsets.last().copied().unwrap_or(0);
         // Pass 2: scatter items into place. Chunks come back in chunk order
         // and the Morton permutation is thread-count independent, so the
         // fill (and thus the physics downstream) is deterministic no matter

@@ -22,7 +22,10 @@
 //!   injection, OOM degradation ladder, numerical watchdog and
 //!   checkpointed shard recovery ([`resilience`]);
 //! * the **benchmark suite** regenerating every table and figure of the
-//!   paper's evaluation, plus the sharded-scaling study ([`benchsuite`]).
+//!   paper's evaluation, plus the sharded-scaling study ([`benchsuite`]);
+//! * `orcs lint` — a dependency-free **static-analysis pass** enforcing the
+//!   determinism and panic-safety contracts above as machine-checked rules
+//!   ([`analysis`], `docs/LINTS.md`).
 //!
 //! See `DESIGN.md` for the system inventory and the hardware-substitution
 //! rationale, and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -38,6 +41,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod resilience;
 pub mod shard;
+pub mod analysis;
 pub mod benchsuite;
 pub mod cli;
 pub mod testutil;

@@ -30,6 +30,7 @@ fn run() -> Result<()> {
         "bench-fig13" => fig13::run(&BenchOpts::from_args(&args)?),
         "bench-sharded" => sharded::run(&BenchOpts::from_args(&args)?),
         "bench-chaos" => chaos::run(&BenchOpts::from_args(&args)?),
+        "lint" => orcs::analysis::run_cli(&args),
         "inspect-artifacts" => inspect_artifacts(),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
@@ -235,10 +236,8 @@ fn inspect_artifacts() -> Result<()> {
     let dir = orcs::runtime::XlaRuntime::default_dir();
     println!("artifact dir: {}", dir.display());
     let rt = orcs::runtime::XlaRuntime::load(&dir)?;
-    let mut ks: Vec<_> = rt.lj_forces.keys().collect();
-    ks.sort();
-    for k in ks {
-        println!("  lj_forces  K={k:<4} ({})", rt.lj_forces[k].name);
+    for (k, exe) in &rt.lj_forces {
+        println!("  lj_forces  K={k:<4} ({})", exe.name);
     }
     println!("  integrate        ({})", rt.integrate.name);
     if let Some(r) = &rt.lj_forces_ref {

@@ -175,8 +175,10 @@ where
                 state
             }));
         }
+        // lint:allow(P-PANIC): a worker panic must propagate, not be swallowed
         handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
     });
+    // lint:allow(P-PANIC): every chunk index is claimed exactly once above
     let outs = outs.into_iter().map(|o| o.expect("chunk not produced")).collect();
     (outs, states)
 }
@@ -219,6 +221,7 @@ where
                 acc
             }));
         }
+        // lint:allow(P-PANIC): a worker panic must propagate, not be swallowed
         handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
     })
 }
@@ -293,6 +296,9 @@ impl<T> Clone for SendPtr<T> {
     }
 }
 impl<T> Copy for SendPtr<T> {}
+// SAFETY: SendPtr is only handed to scoped workers that write disjoint index
+// ranges of the pointee; the scope join supplies the happens-before edge for
+// the owner's subsequent reads, so cross-thread access is data-race free.
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 

@@ -34,7 +34,9 @@ pub fn apply_integrated(state: &mut SimState, new_pos: &[[f32; 3]], new_vel: &[[
     assert_eq!(new_vel.len(), state.n());
     let (boundary_mode, box_l) = (state.boundary, state.box_l);
     for i in 0..state.n() {
+        // lint:allow(P-INDEX-LIT): [f32; 3] rows — literal lanes always exist
         let mut p = crate::core::vec3::Vec3::new(new_pos[i][0], new_pos[i][1], new_pos[i][2]);
+        // lint:allow(P-INDEX-LIT): [f32; 3] rows — literal lanes always exist
         let mut v = crate::core::vec3::Vec3::new(new_vel[i][0], new_vel[i][1], new_vel[i][2]);
         boundary::apply(boundary_mode, box_l, &mut p, &mut v);
         state.pos[i] = p;

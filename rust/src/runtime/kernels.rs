@@ -114,6 +114,8 @@ mod pjrt {
                 literal_f32(&mask, &[c, k_bucket])?,
                 literal_f32(&scal, &[4])?,
             ])?;
+            // output tuple arity is fixed by the artifact ABI (aot.py)
+            // lint:allow(P-INDEX-LIT): tuple arity pinned by the artifact ABI
             let f = out[0].to_vec::<f32>()?;
             for i in lo..hi {
                 let row = i - lo;
@@ -136,6 +138,7 @@ mod pjrt {
         ) -> Result<Vec<Vec3>> {
             let n = state.n();
             let mut forces = vec![Vec3::ZERO; n];
+            // lint:allow(P-PANIC): K_BUCKETS is a non-empty const
             let widest = *crate::runtime::K_BUCKETS.last().unwrap();
             let mut lo = 0;
             while lo < n {
@@ -201,8 +204,8 @@ mod pjrt {
                     literal_f32(&force, &[c, 3])?,
                     literal_f32(&scal, &[2])?,
                 ])?;
-                let np = out[0].to_vec::<f32>()?;
-                let nv = out[1].to_vec::<f32>()?;
+                let np = out[0].to_vec::<f32>()?; // lint:allow(P-INDEX-LIT): tuple ABI
+                let nv = out[1].to_vec::<f32>()?; // lint:allow(P-INDEX-LIT): tuple ABI
                 for i in lo..hi {
                     let row = i - lo;
                     new_pos[i] = [np[row * 3], np[row * 3 + 1], np[row * 3 + 2]];

@@ -39,7 +39,7 @@ fn default_artifact_dir() -> PathBuf {
 
 #[cfg(feature = "xla")]
 mod pjrt {
-    use std::collections::HashMap;
+    use std::collections::BTreeMap;
     use std::path::{Path, PathBuf};
 
     use anyhow::{Context, Result};
@@ -71,8 +71,8 @@ mod pjrt {
     pub struct XlaRuntime {
         #[allow(dead_code)]
         client: xla::PjRtClient,
-        /// K-bucket → force executable.
-        pub lj_forces: HashMap<usize, Executable>,
+        /// K-bucket → force executable, iterable in ascending-K order.
+        pub lj_forces: BTreeMap<usize, Executable>,
         pub integrate: Executable,
         /// Pure-jnp variant of the K=64 bucket (cross-check tests).
         pub lj_forces_ref: Option<Executable>,
@@ -92,7 +92,7 @@ mod pjrt {
         /// Load and compile every artifact in `dir` (built by `make artifacts`).
         pub fn load(dir: &Path) -> Result<Self> {
             let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-            let mut lj_forces = HashMap::new();
+            let mut lj_forces = BTreeMap::new();
             for k in K_BUCKETS {
                 let name = format!("lj_forces_c{CHUNK}_k{k}.hlo.txt");
                 lj_forces.insert(k, load_one(&client, dir, &name)?);
@@ -119,6 +119,9 @@ mod pjrt {
     pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
         let expected: usize = dims.iter().product();
         anyhow::ensure!(data.len() == expected, "literal size {} != {:?}", data.len(), dims);
+        // SAFETY: reinterpreting an f32 slice as its raw bytes — the pointer
+        // is valid for `len * 4` bytes, u8 has no alignment requirement, and
+        // the lifetime is bounded by `data`'s borrow.
         let bytes =
             unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
         Ok(xla::Literal::create_from_shape_and_untyped_data(
@@ -152,7 +155,7 @@ pub use pjrt::{literal_f32, Executable, XlaRuntime};
 
 #[cfg(not(feature = "xla"))]
 mod stub {
-    use std::collections::HashMap;
+    use std::collections::BTreeMap;
     use std::path::{Path, PathBuf};
 
     use anyhow::{bail, Result};
@@ -166,7 +169,7 @@ mod stub {
 
     /// Stub runtime: [`XlaRuntime::load`] reports the missing feature.
     pub struct XlaRuntime {
-        pub lj_forces: HashMap<usize, Executable>,
+        pub lj_forces: BTreeMap<usize, Executable>,
         pub integrate: Executable,
         pub lj_forces_ref: Option<Executable>,
         pub artifact_dir: PathBuf,

@@ -248,6 +248,7 @@ impl ShardedEngine {
             .collect::<Result<Vec<_>>>()?;
         let owner = vec![0; state.n()];
         let n_shards = grid.count();
+        // lint:allow(P-INDEX-LIT): windows(2) yields exactly-2 slices
         let uniform_radius = state.radius.windows(2).all(|w| w[0] == w[1]);
         let injector = FaultInjector::new(&cfg.resilience.faults);
         let devices = cfg.fleet.clone();
@@ -322,6 +323,7 @@ impl ShardedEngine {
         let grid = self.grid;
         let pos_ref = &self.state.pos;
         let new_owner: Vec<u32> =
+            // lint:allow(P-CAST-NARROW): shard count is tiny (grid dims)
             crate::parallel::parallel_map(n, threads, |i| grid.owner_of(pos_ref[i]) as u32);
         let mut migrations = 0u64;
         let mut mig_in = vec![0u64; n_shards];
@@ -483,7 +485,7 @@ impl ShardedEngine {
                 seg.extend_from_slice(&items[lo..hi]);
                 seg.sort_unstable();
                 seg.dedup();
-                lens[a] = seg.len() as u32;
+                lens[a] = seg.len() as u32; // lint:allow(P-CAST-NARROW): degree < 2^32
                 items[write..write + seg.len()].copy_from_slice(&seg);
                 write += seg.len();
             }
@@ -685,6 +687,7 @@ impl ShardedEngine {
                 // injected divergence: blow up one velocity (finite, so only
                 // the kinetic-energy bound can catch it)
                 self.divergence_armed = false;
+                // lint:allow(P-INDEX-LIT): guarded by !vel.is_empty() above
                 self.state.vel[0] = self.state.vel[0] * 1e15 + Vec3::splat(1e15);
             }
 
@@ -694,7 +697,9 @@ impl ShardedEngine {
                         return Err(SimError::NumericalDivergence { detail });
                     }
                     attempt += 1;
-                    let (state, owner) = snapshot.expect("watchdog snapshot taken when enabled");
+                    let Some((state, owner)) = snapshot else {
+                        return Err(SimError::fatal("watchdog retry without a pre-step snapshot"));
+                    };
                     self.state = state;
                     self.owner = owner;
                     self.state.dt *= 0.5;
@@ -759,9 +764,12 @@ impl ShardedEngine {
 
     /// Restore from the retained checkpoint; every shard gets a fresh
     /// [`BvhManager`] (empty BVH ⇒ forced rebuild) seeded with the
-    /// checkpointed policy state. Returns the number of steps to replay.
-    fn restore_checkpoint(&mut self) -> u64 {
-        let cp = self.checkpoint.as_ref().expect("restore without a checkpoint");
+    /// checkpointed policy state. Returns the number of steps to replay,
+    /// or a fatal error when no checkpoint was retained.
+    fn restore_checkpoint(&mut self) -> SimResult<u64> {
+        let Some(cp) = self.checkpoint.as_ref() else {
+            return Err(SimError::fatal("restore without a checkpoint"));
+        };
         let replayed = self.state.step_count.saturating_sub(cp.step);
         self.state = cp.state.clone();
         self.owner = cp.owner.clone();
@@ -774,7 +782,7 @@ impl ShardedEngine {
             self.listless[i] = scp.listless;
         }
         self.watchdog.reset();
-        replayed
+        Ok(replayed)
     }
 
     /// Handle an injected device loss: drop the device from the fleet,
@@ -797,7 +805,7 @@ impl ShardedEngine {
         for (s, sh) in self.shards.iter_mut().enumerate() {
             sh.hw = self.devices[s % self.devices.len()];
         }
-        let replayed = self.restore_checkpoint();
+        let replayed = self.restore_checkpoint()?;
         self.replayed += replayed;
         let from_step = self.state.step_count;
         self.events

@@ -1,0 +1,117 @@
+//! Integration tests for `orcs lint`: every seeded fixture in
+//! `tests/lint_fixtures/<rule>/bad.rs` triggers exactly its rule (with the
+//! expected file and line), the clean twins trigger nothing, and the
+//! crate's own sources pass `--deny all` under the checked-in `lint.toml`
+//! — the same invariant the CI gate enforces.
+
+use std::path::{Path, PathBuf};
+
+use orcs::analysis::{lint_root, DenyMode, LintConfig};
+
+/// Fixture scopes: every rule applies everywhere, no allowlist.
+fn fixture_cfg() -> LintConfig {
+    let all = vec![".".to_string()];
+    LintConfig { step_path: all.clone(), det_path: all.clone(), csr_path: all, allow: Vec::new() }
+}
+
+fn fixture_root(rule_dir: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures").join(rule_dir)
+}
+
+/// Lint one fixture dir: exactly one finding, of `rule`, in bad.rs at
+/// `line`, and it denies under `--deny all` (the clean twin contributes
+/// nothing).
+fn check_fixture(rule_dir: &str, rule: &str, line: u32) {
+    let report = lint_root(&fixture_root(rule_dir), &fixture_cfg(), &DenyMode::All).unwrap();
+    assert_eq!(
+        report.findings.len(),
+        1,
+        "{rule_dir}: expected exactly one finding, got {:?}",
+        report.findings
+    );
+    let f = &report.findings[0];
+    assert_eq!(f.rule, rule, "{rule_dir}: wrong rule ({f:?})");
+    assert_eq!(f.path, "bad.rs", "{rule_dir}: finding must be in bad.rs ({f:?})");
+    assert_eq!(f.line, line, "{rule_dir}: wrong line ({f:?})");
+    assert_eq!(report.deny_count(), 1, "{rule_dir}: --deny all must make it a deny");
+}
+
+#[test]
+fn fixture_d_hash_iter() {
+    check_fixture("d_hash_iter", "D-HASH-ITER", 6);
+}
+
+#[test]
+fn fixture_d_env_threads() {
+    check_fixture("d_env_threads", "D-ENV-THREADS", 3);
+}
+
+#[test]
+fn fixture_d_wall_clock() {
+    check_fixture("d_wall_clock", "D-WALL-CLOCK", 3);
+}
+
+#[test]
+fn fixture_d_fp_parallel() {
+    check_fixture("d_fp_parallel", "D-FP-PARALLEL", 7);
+}
+
+#[test]
+fn fixture_p_panic() {
+    check_fixture("p_panic", "P-PANIC", 3);
+}
+
+#[test]
+fn fixture_p_index_lit() {
+    check_fixture("p_index_lit", "P-INDEX-LIT", 3);
+}
+
+#[test]
+fn fixture_p_cast_narrow() {
+    check_fixture("p_cast_narrow", "P-CAST-NARROW", 4);
+}
+
+#[test]
+fn fixture_u_safety() {
+    check_fixture("u_safety", "U-SAFETY", 3);
+}
+
+#[test]
+fn fixture_l_allow() {
+    check_fixture("l_allow", "L-ALLOW", 3);
+}
+
+/// The l_allow clean twin exercises a *valid* suppression: its P-PANIC
+/// finding must be absorbed (counted as suppressed), not reported.
+#[test]
+fn valid_suppression_is_counted_not_reported() {
+    let report = lint_root(&fixture_root("l_allow"), &fixture_cfg(), &DenyMode::All).unwrap();
+    assert_eq!(report.suppressed, 1, "ok.rs's lint:allow should absorb one finding");
+}
+
+/// Severity remapping: the Warn-by-default fixtures pass the gate under
+/// default deny mode and fail it under `--deny all`.
+#[test]
+fn warn_rules_only_deny_under_deny_all() {
+    for dir in ["p_index_lit", "p_cast_narrow"] {
+        let dflt = lint_root(&fixture_root(dir), &fixture_cfg(), &DenyMode::Default).unwrap();
+        assert_eq!(dflt.deny_count(), 0, "{dir}: warn by default");
+        assert_eq!(dflt.warn_count(), 1, "{dir}: still reported");
+    }
+}
+
+/// The self-clean gate: `orcs lint --deny all` over the crate's own
+/// sources, with the checked-in lint.toml, reports zero findings. This is
+/// the exact invariant CI enforces on every push.
+#[test]
+fn crate_sources_are_lint_clean_at_deny_all() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let cfg = LintConfig::load(&manifest.join("../lint.toml")).unwrap();
+    let report = lint_root(&manifest.join("src"), &cfg, &DenyMode::All).unwrap();
+    assert!(
+        report.findings.is_empty(),
+        "crate sources must be lint-clean at --deny all; findings:\n{}",
+        orcs::analysis::render_human(&report)
+    );
+    assert!(report.files > 30, "sanity: the walk saw the whole crate ({} files)", report.files);
+}

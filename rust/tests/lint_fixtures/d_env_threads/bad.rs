@@ -1,0 +1,4 @@
+// Fixture: seeded D-ENV-THREADS violation (env read outside parallel.rs).
+pub fn worker_count() -> usize {
+    std::env::var("ORCS_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
+}

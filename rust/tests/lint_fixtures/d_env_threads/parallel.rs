@@ -1,0 +1,5 @@
+// Fixture: clean twin — the same read is legal inside parallel.rs, the
+// one blessed reader of the thread-count env var.
+pub fn worker_count() -> usize {
+    std::env::var("ORCS_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
+}

@@ -1,0 +1,11 @@
+// Fixture: seeded D-FP-PARALLEL violation (unordered float accumulation
+// inside a parallel_for_chunks closure).
+pub fn sum_masses(masses: &[f32], threads: usize) -> f32 {
+    let mut total: f32 = 0.0;
+    crate::parallel::parallel_for_chunks(masses.len(), threads, |_, range| {
+        for i in range {
+            total += masses[i];
+        }
+    });
+    total
+}

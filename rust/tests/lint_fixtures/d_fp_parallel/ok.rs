@@ -1,0 +1,13 @@
+// Fixture: clean twin — integer accumulation is associative, and float
+// partials would go through a chunk-ordered merge instead.
+pub fn count_hits(flags: &[bool], threads: usize) -> u64 {
+    let mut hits = 0u64;
+    crate::parallel::parallel_for_chunks(flags.len(), threads, |_, range| {
+        for i in range {
+            if flags[i] {
+                hits += 1;
+            }
+        }
+    });
+    hits
+}

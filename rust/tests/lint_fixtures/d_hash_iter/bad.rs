@@ -1,0 +1,10 @@
+// Fixture: seeded D-HASH-ITER violation (hash-order iteration).
+use std::collections::HashMap;
+
+pub fn sum_values(map: &HashMap<u64, u32>) -> u64 {
+    let mut total = 0u64;
+    for (_k, v) in map.iter() {
+        total += *v as u64;
+    }
+    total
+}

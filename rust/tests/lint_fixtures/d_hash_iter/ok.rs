@@ -1,0 +1,14 @@
+// Fixture: clean twin — ordered iteration and point lookups only.
+use std::collections::{BTreeMap, HashMap};
+
+pub fn sum_sorted(tree: &BTreeMap<u64, u32>) -> u64 {
+    let mut total = 0u64;
+    for (_k, v) in tree.iter() {
+        total += *v as u64;
+    }
+    total
+}
+
+pub fn lookup(index: &HashMap<u64, u32>, key: u64) -> Option<u32> {
+    index.get(&key).copied()
+}

@@ -1,0 +1,5 @@
+// Fixture: seeded D-WALL-CLOCK violation (wall clock in a det path).
+pub fn stamp_nanos() -> u128 {
+    let now = std::time::Instant::now();
+    now.elapsed().as_nanos()
+}

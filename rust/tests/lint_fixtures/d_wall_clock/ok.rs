@@ -1,0 +1,5 @@
+// Fixture: clean twin — logical step counter instead of a wall clock.
+pub fn stamp_steps(counter: &mut u64) -> u64 {
+    *counter += 1;
+    *counter
+}

@@ -1,0 +1,4 @@
+// Fixture: seeded L-ALLOW violation — the suppression below names an
+// unknown rule, so it suppresses nothing and is itself flagged.
+// lint:allow(NOT-A-RULE): bogus suppression
+pub fn noop() {}

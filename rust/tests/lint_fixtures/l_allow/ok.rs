@@ -1,0 +1,6 @@
+// Fixture: clean twin — a well-formed suppression with a reason, which
+// cleanly absorbs the P-PANIC finding on the line below it.
+pub fn demand(xs: &[u32]) -> u32 {
+    // lint:allow(P-PANIC): fixture — the caller guarantees non-empty input
+    *xs.first().expect("non-empty")
+}

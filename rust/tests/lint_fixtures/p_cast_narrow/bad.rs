@@ -1,0 +1,5 @@
+// Fixture: seeded P-CAST-NARROW violation (silent truncation of a CSR
+// offset computation).
+pub fn total_bytes(lens: &[u32]) -> u32 {
+    (lens.len() * 4) as u32
+}

@@ -1,0 +1,4 @@
+// Fixture: clean twin — checked conversion surfaces overflow.
+pub fn total_bytes(lens: &[u32]) -> Option<u32> {
+    u32::try_from(lens.len() * 4).ok()
+}

@@ -1,0 +1,4 @@
+// Fixture: seeded P-INDEX-LIT violation (literal index in a step path).
+pub fn root(nodes: &[u32]) -> u32 {
+    nodes[0]
+}

@@ -1,0 +1,4 @@
+// Fixture: clean twin — non-panicking access.
+pub fn root(nodes: &[u32]) -> u32 {
+    nodes.first().copied().unwrap_or(0)
+}

@@ -1,0 +1,4 @@
+// Fixture: seeded P-PANIC violation (unwrap in a step path).
+pub fn first(xs: &[u32]) -> u32 {
+    *xs.first().unwrap()
+}

@@ -1,0 +1,4 @@
+// Fixture: clean twin — total function, no panicking construct.
+pub fn first(xs: &[u32]) -> u32 {
+    xs.first().copied().unwrap_or(0)
+}

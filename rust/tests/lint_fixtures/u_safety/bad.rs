@@ -1,0 +1,4 @@
+// Fixture: seeded U-SAFETY violation (undocumented unsafe block).
+pub fn read_first(data: &[u8]) -> u8 {
+    unsafe { *data.as_ptr() }
+}

@@ -1,0 +1,6 @@
+// Fixture: clean twin — the unsafe block carries its SAFETY contract.
+pub fn read_first(data: &[u8]) -> u8 {
+    assert!(!data.is_empty());
+    // SAFETY: asserted non-empty above, so the pointer read is in bounds.
+    unsafe { *data.as_ptr() }
+}
