@@ -81,12 +81,20 @@ fn main() -> anyhow::Result<()> {
         engine.state.dt
     );
 
+    // fault forensics: the flight recorder retained the tail of the run —
+    // the same timeline a failed run dumps automatically at the boundary
+    let dump = engine.telemetry().flight_dump();
+    println!("\nflight recorder (fault forensics timeline):");
+    println!("{dump}");
+
     // the whole point: the run completed, recovered, and stayed healthy
     anyhow::ensure!(!summary.oom, "run aborted on OOM despite the fallback ladder");
     anyhow::ensure!(engine.state.is_finite(), "divergence survived the watchdog");
     anyhow::ensure!(engine.state.step_count == steps as u64, "run fell short");
     anyhow::ensure!(summary.replayed_steps > 0, "device loss never triggered recovery");
     anyhow::ensure!(listless > 0, "squeeze never forced the listless fallback");
-    println!("\nall resilience checks passed");
+    anyhow::ensure!(dump.contains("lost"), "the recorder must show the device loss");
+    anyhow::ensure!(dump.contains("recovered"), "the recorder must show the recovery");
+    println!("all resilience checks passed");
     Ok(())
 }

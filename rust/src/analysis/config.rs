@@ -55,8 +55,9 @@ impl Default for LintConfig {
                 "resilience",
                 "runtime/kernels.rs",
                 "shard",
+                "telemetry",
             ]),
-            det_path: v(&["bvh", "frnn", "gradient", "physics", "shard"]),
+            det_path: v(&["bvh", "frnn", "gradient", "physics", "shard", "telemetry"]),
             csr_path: v(&[
                 "frnn/cell_list.rs",
                 "frnn/rt_ref.rs",

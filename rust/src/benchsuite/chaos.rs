@@ -33,7 +33,7 @@ fn chaos_run(
     n: usize,
     steps: usize,
     rate: f64,
-) -> Result<(ShardedRunSummary, Vec<crate::core::vec3::Vec3>)> {
+) -> Result<(ShardedRunSummary, Vec<crate::core::vec3::Vec3>, u64)> {
     let sim = SimConfig {
         n,
         particle_dist: ParticleDist::Disordered,
@@ -59,7 +59,10 @@ fn chaos_run(
     };
     let mut engine = ShardedEngine::new(cfg, opts.kernels.clone())?;
     let summary = engine.run(steps, false)?;
-    Ok((summary, engine.state.pos.clone()))
+    // the forensics payload a post-mortem would ship: the flight-recorder
+    // dump of the last K steps, with every fault/recovery marker inline
+    let recorder_bytes = engine.telemetry().flight_dump().len() as u64;
+    Ok((summary, engine.state.pos.clone(), recorder_bytes))
 }
 
 fn bitwise_equal(a: &[crate::core::vec3::Vec3], b: &[crate::core::vec3::Vec3]) -> bool {
@@ -77,15 +80,24 @@ pub fn run(opts: &BenchOpts) -> Result<()> {
 
     let mut csv = CsvWriter::create(
         &results_dir().join("chaos.csv"),
-        &["rate", "steps", "replayed", "events", "total_sim_ms", "overhead_pct", "bitwise_match"],
+        &[
+            "rate",
+            "steps",
+            "replayed",
+            "events",
+            "total_sim_ms",
+            "overhead_pct",
+            "bitwise_match",
+            "recorder_bytes",
+        ],
     )?;
     let mut table = TextTable::new(&[
-        "rate", "steps", "replayed", "events", "total ms", "overhead", "bitwise",
+        "rate", "steps", "replayed", "events", "total ms", "overhead", "bitwise", "recorder B",
     ]);
 
     let mut baseline: Option<(f64, Vec<crate::core::vec3::Vec3>)> = None;
     for rate in RATES {
-        let (summary, pos) = chaos_run(opts, n, steps, rate)?;
+        let (summary, pos, recorder_bytes) = chaos_run(opts, n, steps, rate)?;
         anyhow::ensure!(!summary.oom, "chaos run at rate {rate} aborted on OOM");
         let (base_ms, base_pos) = match &baseline {
             Some(b) => (b.0, b.1.as_slice()),
@@ -112,6 +124,7 @@ pub fn run(opts: &BenchOpts) -> Result<()> {
             fmt_ms(summary.total_sim_ms),
             format!("{overhead:+.1}%"),
             bitwise.to_string(),
+            recorder_bytes.to_string(),
         ]);
         csv.row(&[
             format!("{rate:.2}"),
@@ -121,6 +134,7 @@ pub fn run(opts: &BenchOpts) -> Result<()> {
             format!("{:.4}", summary.total_sim_ms),
             format!("{overhead:.2}"),
             bitwise.to_string(),
+            recorder_bytes.to_string(),
         ])?;
     }
     println!("{}", table.render());
@@ -149,15 +163,17 @@ mod tests {
     #[test]
     fn faulted_run_matches_baseline_bitwise() {
         let o = opts();
-        let (clean, clean_pos) = chaos_run(&o, 400, 10, 0.0).unwrap();
+        let (clean, clean_pos, clean_rec) = chaos_run(&o, 400, 10, 0.0).unwrap();
         assert!(!clean.oom);
         assert_eq!(clean.steps, 10);
         assert_eq!(clean.replayed_steps, 0);
+        assert!(clean_rec > 0, "the flight recorder always retains the tail");
         // a rate high enough that the seeded plan is guaranteed non-empty
-        let (chaotic, chaotic_pos) = chaos_run(&o, 400, 10, 0.5).unwrap();
+        let (chaotic, chaotic_pos, chaotic_rec) = chaos_run(&o, 400, 10, 0.5).unwrap();
         assert!(!chaotic.oom);
         assert!(!chaotic.events.is_empty(), "0.5 rate over 10 steps must fire");
         assert!(bitwise_equal(&clean_pos, &chaotic_pos), "recovery must replay bitwise");
         assert!(chaotic.total_sim_ms >= clean.total_sim_ms, "faults cannot be free");
+        assert!(chaotic_rec > 0, "faulted runs carry a forensics dump");
     }
 }

@@ -185,7 +185,10 @@ USAGE:
   orcs simulate   [scenario flags] [--approach A] [--steps N]
                   [--policy gradient|gradient-ee|avg|fixed-K]
                   [--force-path xla|rust] [--hw GPU] [--trace out.csv]
-                  [--shards S [--fleet GPU[,GPU...]]]
+                  [--shards S [--fleet GPU[,GPU...]]] [telemetry flags]
+  orcs trace      run with full tracing on, then emit the Chrome trace,
+                  Prometheus/JSON metrics, and a phase-breakdown table
+                  (same scenario/shard/resilience flags as simulate)
   orcs bench-fig8        regenerate Fig. 8 (BVH policies time series)
   orcs bench-table2      regenerate Table 2 (avg ms/step grid)
   orcs bench-fig9        regenerate Fig. 9 (speedup, wall BC)
@@ -222,6 +225,15 @@ Resilience flags:
   --watchdog           per-step finiteness + kinetic-energy-drift check;
                        diverged steps retry from the snapshot at dt/2
   --max-retries N      watchdog retry budget per step (default 4)
+Telemetry flags (see docs/OBSERVABILITY.md):
+  --trace-out F        write a chrome://tracing / Perfetto JSON trace to F
+                       (also turns on span retention for orcs simulate;
+                       orcs trace defaults to results/trace.json)
+  --metrics-out F      write the metrics registry as JSON to F, plus the
+                       Prometheus text exposition next to it as F.prom
+                       (orcs trace defaults to results/metrics.json)
+  --flight K           flight-recorder depth: keep the last K steps for
+                       the on-error forensics dump (default 32)
 Bench flags:
   --scale F            shrink paper sizes by F (default per-bench)
   --steps N            step count override

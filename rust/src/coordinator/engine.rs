@@ -2,7 +2,6 @@
 //! with full metering.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::Result;
 
@@ -19,6 +18,8 @@ use crate::resilience::{
 use crate::rtcore::power::{step_energy, StepEnergy};
 use crate::rtcore::profile::{DeviceKind, EPYC64};
 use crate::rtcore::{fleet, timing, HwProfile, OpCounts, PhaseTimes};
+use crate::telemetry::wallclock::WallTimer;
+use crate::telemetry::{Recorder, GLOBAL_LANE};
 
 /// Engine configuration: scenario + execution bindings.
 #[derive(Clone)]
@@ -124,6 +125,8 @@ pub struct Engine {
     replayed: u64,
     /// An injected divergence corrupts the state after the next step.
     divergence_armed: bool,
+    /// Per-step telemetry: spans, metrics registry, flight recorder.
+    telemetry: Recorder,
 }
 
 impl Engine {
@@ -166,6 +169,7 @@ impl Engine {
             events: Vec::new(),
             replayed: 0,
             divergence_armed: false,
+            telemetry: Recorder::new(),
         })
     }
 
@@ -187,6 +191,8 @@ impl Engine {
     /// resilient path wraps this).
     pub fn step(&mut self) -> SimResult<StepRecord> {
         let hw = self.cfg.pricing_profile();
+        let opened = self.telemetry.begin_step(self.state.step_count);
+        self.telemetry.begin_attempt();
         let mut ctx = StepCtx {
             threads: self.cfg.threads,
             kernels: self.kernels.as_ref(),
@@ -197,7 +203,18 @@ impl Engine {
         let r = self.backend.step(&mut self.state, &mut ctx)?;
         let sim_times = timing::simulate(&r.counts, hw);
         let energy = step_energy(&sim_times, &r.counts, hw);
-        Ok(StepRecord {
+        let backend_name = self.backend.name();
+        self.telemetry.name_lane(GLOBAL_LANE, format!("{} ({backend_name})", hw.name));
+        let base = self.telemetry.attempt_base_ms();
+        self.telemetry.record_phases(
+            GLOBAL_LANE,
+            base,
+            &sim_times,
+            &r.counts,
+            Some(&r.wall),
+            &[("backend", backend_name), ("device", hw.name)],
+        );
+        let rec = StepRecord {
             step: self.state.step_count,
             counts: r.counts,
             sim_times,
@@ -208,7 +225,11 @@ impl Engine {
             bvh_action: r.bvh_action,
             interactions: r.counts.interactions,
             oom_bytes: r.oom_bytes,
-        })
+        };
+        if opened {
+            self.telemetry.end_step(rec.sim_ms);
+        }
+        Ok(rec)
     }
 
     /// One step under the resilience policy: consume injected faults, walk
@@ -217,18 +238,25 @@ impl Engine {
     pub fn step_resilient(&mut self) -> SimResult<StepRecord> {
         let res = self.cfg.resilience.clone();
         let step = self.state.step_count;
+        // Open the telemetry step before consuming faults so device-loss
+        // and squeeze markers land inside the step that absorbed them.
+        let opened = self.telemetry.begin_step(step);
         let mut transient = false;
         for f in self.injector.take(step) {
             match f {
                 FaultKind::VramSqueeze { budget_bytes } => {
                     self.vram_budget = Some(budget_bytes);
                     let kind = EventKind::VramSqueeze { budget_bytes };
-                    self.events.push(ResilienceEvent { step, kind });
+                    let ev = ResilienceEvent { step, kind };
+                    self.telemetry.mark_event(&ev);
+                    self.events.push(ev);
                 }
                 FaultKind::Straggler { shard, slowdown } => {
                     self.slowdown = slowdown;
                     let kind = EventKind::Straggler { shard, slowdown };
-                    self.events.push(ResilienceEvent { step, kind });
+                    let ev = ResilienceEvent { step, kind };
+                    self.telemetry.mark_event(&ev);
+                    self.events.push(ev);
                 }
                 FaultKind::Transient => transient = true,
                 FaultKind::Divergence => self.divergence_armed = true,
@@ -279,10 +307,12 @@ impl Engine {
                     self.backend.invalidate_bvh();
                     wasted_ms += rec.sim_ms;
                     wasted_j += rec.energy.energy_j;
-                    self.events.push(ResilienceEvent {
+                    let ev = ResilienceEvent {
                         step,
                         kind: EventKind::WatchdogRetry { attempt, dt: self.state.dt, detail },
-                    });
+                    };
+                    self.telemetry.mark_event(&ev);
+                    self.events.push(ev);
                     continue;
                 }
             }
@@ -292,8 +322,9 @@ impl Engine {
                 // physics is the re-run's, the price includes the discard
                 wasted_ms += rec.sim_ms;
                 wasted_j += rec.energy.energy_j;
-                self.events
-                    .push(ResilienceEvent { step, kind: EventKind::TransientRetry { attempt: 1 } });
+                let ev = ResilienceEvent { step, kind: EventKind::TransientRetry { attempt: 1 } };
+                self.telemetry.mark_event(&ev);
+                self.events.push(ev);
             }
 
             rec.sim_ms += wasted_ms;
@@ -311,6 +342,14 @@ impl Engine {
                     step: self.state.step_count,
                     state: self.state.clone(),
                 });
+                self.telemetry.mark(
+                    GLOBAL_LANE,
+                    "checkpoint",
+                    format!("checkpoint @ step {}", self.state.step_count),
+                );
+            }
+            if opened {
+                self.telemetry.end_step(rec.sim_ms);
             }
             return Ok(rec);
         }
@@ -337,7 +376,7 @@ impl Engine {
             self.backend = backend;
             let new_hw = self.cfg.pricing_profile();
             let switch_ms = fleet::switch_time(self.state.n() as u64, new_hw) * 1e3;
-            self.events.push(ResilienceEvent {
+            let ev = ResilienceEvent {
                 step,
                 kind: EventKind::OomFallback {
                     from,
@@ -347,11 +386,15 @@ impl Engine {
                     budget_bytes,
                     switch_ms,
                 },
-            });
+            };
+            self.telemetry.mark_event(&ev);
+            self.events.push(ev);
             return Ok(Some(switch_ms));
         }
         let kind = EventKind::FallbackUnavailable { required_bytes };
-        self.events.push(ResilienceEvent { step, kind });
+        let ev = ResilienceEvent { step, kind };
+        self.telemetry.mark_event(&ev);
+        self.events.push(ev);
         Ok(None)
     }
 
@@ -370,12 +413,16 @@ impl Engine {
         self.backend = self.cfg.approach.create(&self.cfg.policy).map_err(SimError::fatal)?;
         self.watchdog.reset();
         self.replayed += replayed;
-        self.events.push(ResilienceEvent {
+        let ev = ResilienceEvent {
             step: at,
             kind: EventKind::DeviceLost { shard, device, survivors: 1 },
-        });
-        self.events
-            .push(ResilienceEvent { step: at, kind: EventKind::Recovery { from_step, replayed } });
+        };
+        self.telemetry.mark_event(&ev);
+        self.events.push(ev);
+        let ev =
+            ResilienceEvent { step: at, kind: EventKind::Recovery { from_step, replayed } };
+        self.telemetry.mark_event(&ev);
+        self.events.push(ev);
         Ok(())
     }
 
@@ -389,12 +436,21 @@ impl Engine {
         self.replayed
     }
 
+    /// The telemetry recorder: per-step spans, metrics, flight recorder.
+    pub fn telemetry(&self) -> &Recorder {
+        &self.telemetry
+    }
+
+    pub fn telemetry_mut(&mut self) -> &mut Recorder {
+        &mut self.telemetry
+    }
+
     /// Run `steps` steps; aborts early on an unhandled OOM (like the
     /// paper's runs). With an active [`ResilienceConfig`] every step goes
     /// through the resilient path; a failed step surfaces its index,
     /// backend and device in the error context.
     pub fn run(&mut self, steps: usize, keep_trace: bool) -> Result<RunSummary> {
-        let wall_start = Instant::now();
+        let wall_start = WallTimer::start();
         let mut s = RunSummary {
             approach: self.backend.name().to_string(),
             scenario: self.cfg.sim.tag(),
@@ -409,9 +465,21 @@ impl Engine {
             let backend_name = self.backend.name();
             let hw_name = self.cfg.pricing_profile().name;
             let r = if resilient { self.step_resilient() } else { self.step() };
-            let rec = r.map_err(|e| {
-                anyhow::anyhow!("step {i} failed [{backend_name} on {hw_name}]: {e}")
-            })?;
+            let rec = match r {
+                Ok(rec) => rec,
+                Err(e) => {
+                    // Fault forensics: dump the flight recorder (including
+                    // the partially-recorded failing step) before bailing.
+                    let dump = self.telemetry.flight_dump();
+                    if !dump.is_empty() {
+                        eprintln!("{dump}");
+                    }
+                    self.telemetry.abandon_step();
+                    return Err(anyhow::anyhow!(
+                        "step {i} failed [{backend_name} on {hw_name}]: {e}"
+                    ));
+                }
+            };
             s.steps += 1;
             s.total_sim_ms += rec.sim_ms;
             s.total_rt_ms += rec.rt_ms;
@@ -434,7 +502,7 @@ impl Engine {
             s.avg_power_w = s.total_energy_j / (energy_time * 1e-3);
         }
         s.ee = crate::rtcore::power::energy_efficiency(s.total_interactions, s.total_energy_j);
-        s.wall_total_s = wall_start.elapsed().as_secs_f64();
+        s.wall_total_s = wall_start.elapsed_s();
         s.events = self.events.clone();
         s.replayed_steps = self.replayed;
         debug_assert!(

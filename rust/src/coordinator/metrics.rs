@@ -8,7 +8,8 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
-/// Sample standard deviation.
+/// Sample standard deviation. A NaN in the input propagates to the result
+/// (the mean is already NaN) instead of panicking downstream.
 pub fn stddev(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
         return 0.0;
@@ -17,13 +18,18 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
 }
 
-/// Percentile via linear interpolation, `q` in [0, 100].
+/// Percentile via linear interpolation, `q` in [0, 100]. Empty input yields
+/// 0; any NaN in the input yields NaN (total_cmp would sort NaNs to one end
+/// and silently return a data value — propagating is the honest answer).
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
+    if xs.iter().any(|x| x.is_nan()) {
+        return f64::NAN;
+    }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let pos = (q / 100.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -95,6 +101,20 @@ mod tests {
         assert_eq!(percentile(&xs, 50.0), 3.0);
         assert_eq!(percentile(&xs, 100.0), 5.0);
         assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn stats_survive_nan_and_degenerate_inputs() {
+        // NaN propagates instead of panicking in the sort comparator
+        let with_nan = [1.0, f64::NAN, 3.0];
+        assert!(percentile(&with_nan, 50.0).is_nan());
+        assert!(stddev(&with_nan).is_nan());
+        // degenerate shapes stay well-defined
+        assert_eq!(percentile(&[], 95.0), 0.0);
+        assert_eq!(percentile(&[7.5], 95.0), 7.5);
+        assert_eq!(stddev(&[7.5]), 0.0);
+        // infinities sort fine under total_cmp
+        assert_eq!(percentile(&[f64::INFINITY, 1.0, 2.0], 0.0), 1.0);
     }
 
     #[test]

@@ -4,8 +4,6 @@
 //!
 //! The [`CellGrid`] here is also the substrate for [`super::gpu_cell`].
 
-use std::time::Instant;
-
 use crate::core::config::Boundary;
 use crate::core::vec3::Vec3;
 use crate::frnn::{Backend, StepCtx, StepResult, WallPhases};
@@ -13,6 +11,7 @@ use crate::parallel;
 use crate::physics::state::SimState;
 use crate::resilience::SimResult;
 use crate::rtcore::OpCounts;
+use crate::telemetry::wallclock::WallTimer;
 
 /// Uniform grid over the box with counting-sort cell buckets.
 #[derive(Clone, Debug)]
@@ -328,24 +327,24 @@ impl Backend for CpuCell {
         let mut counts = OpCounts::default();
         let mut wall = WallPhases::default();
 
-        let t0 = Instant::now();
+        let t0 = WallTimer::start();
         let grid = Grid::build(&state.pos, state.box_l, state.r_max);
         counts.grid_binned += state.n() as u64;
-        wall.search = t0.elapsed().as_secs_f64();
+        wall.search = t0.elapsed_s();
 
-        let t1 = Instant::now();
+        let t1 = WallTimer::start();
         let (forces, tests, evals, visits) = cell_forces(state, &grid, ctx.threads);
         state.force = forces;
         counts.cell_pair_tests += tests;
         counts.cell_force_evals += evals;
         counts.cell_visits += visits;
         counts.interactions += evals / 2; // each pair evaluated from both ends
-        wall.force = t1.elapsed().as_secs_f64();
+        wall.force = t1.elapsed_s();
 
-        let t2 = Instant::now();
+        let t2 = WallTimer::start();
         crate::physics::integrator::step(state);
         counts.integrate_particles += state.n() as u64;
-        wall.integrate = t2.elapsed().as_secs_f64();
+        wall.integrate = t2.elapsed_s();
 
         Ok(StepResult { counts, bvh_action: None, oom_bytes: None, wall })
     }

@@ -6,14 +6,13 @@
 //! genuinely improve sweep locality on the host too); their operation
 //! counts drive the GPU timing model.
 
-use std::time::Instant;
-
 use crate::core::vec3::Vec3;
 use crate::frnn::cell_list::{cell_forces, Grid};
 use crate::frnn::{Backend, StepCtx, StepResult, WallPhases};
 use crate::physics::state::SimState;
 use crate::resilience::SimResult;
 use crate::rtcore::OpCounts;
+use crate::telemetry::wallclock::WallTimer;
 
 /// Interleave the low 10 bits of x into every 3rd bit position.
 #[inline]
@@ -164,17 +163,17 @@ impl Backend for GpuCell {
         let n = state.n();
 
         // Phase 1: Z-order radix sort (locality for the sweep).
-        let t0 = Instant::now();
+        let t0 = WallTimer::start();
         self.zcache.compute(&state.pos, state.box_l, ctx.threads);
         counts.sort_elems += n as u64;
 
         // Phase 2: grid build (dense or compact-hashed by resolution).
         let grid = Grid::build(&state.pos, state.box_l, state.r_max);
         counts.grid_binned += n as u64;
-        wall.search = t0.elapsed().as_secs_f64();
+        wall.search = t0.elapsed_s();
 
         // Phase 3: cell sweep force kernel.
-        let t1 = Instant::now();
+        let t1 = WallTimer::start();
         let (forces, tests, evals, visits) = cell_forces(state, &grid, ctx.threads);
         state.force = forces;
         counts.cell_pair_tests += tests;
@@ -182,14 +181,14 @@ impl Backend for GpuCell {
         counts.cell_visits += visits;
         counts.interactions += evals / 2;
         counts.kernel_launches += 2;
-        wall.force = t1.elapsed().as_secs_f64();
+        wall.force = t1.elapsed_s();
 
         // Phase 4: integration kernel.
-        let t2 = Instant::now();
+        let t2 = WallTimer::start();
         crate::physics::integrator::step(state);
         counts.integrate_particles += n as u64;
         counts.kernel_launches += 1;
-        wall.integrate = t2.elapsed().as_secs_f64();
+        wall.integrate = t2.elapsed_s();
 
         Ok(StepResult { counts, bvh_action: None, oom_bytes: None, wall })
     }

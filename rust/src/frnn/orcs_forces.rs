@@ -15,8 +15,6 @@
 //! *counting* the atomics for the timing model (DESIGN.md
 //! §Hardware-Adaptation).
 
-use std::time::Instant;
-
 use crate::core::vec3::Vec3;
 use crate::frnn::rt_common::{fold_stats, gamma_trigger, launch_rays, BvhManager};
 use crate::frnn::zorder::ZOrderCache;
@@ -25,6 +23,7 @@ use crate::gradient::RebuildPolicy;
 use crate::physics::state::SimState;
 use crate::resilience::{SimError, SimResult};
 use crate::rtcore::OpCounts;
+use crate::telemetry::wallclock::WallTimer;
 
 pub struct OrcsForces {
     mgr: BvhManager,
@@ -60,13 +59,13 @@ impl Backend for OrcsForces {
 
         // Phase 0: one Morton keying + sort per step (shared by build +
         // sweep); wall time charged to the search phase below.
-        let t_sort = Instant::now();
+        let t_sort = WallTimer::start();
         self.zcache.compute(&state.pos, state.box_l, ctx.threads);
-        let sort_wall = t_sort.elapsed().as_secs_f64();
+        let sort_wall = t_sort.elapsed_s();
         debug_assert_eq!(self.zcache.order().len(), n);
 
         // Phase 1: BVH maintenance.
-        let t0 = Instant::now();
+        let t0 = WallTimer::start();
         let action = self.mgr.prepare_with(
             &state.pos,
             &state.radius,
@@ -75,7 +74,7 @@ impl Backend for OrcsForces {
             false,
             Some(self.zcache.order()),
         );
-        wall.bvh = t0.elapsed().as_secs_f64();
+        wall.bvh = t0.elapsed_s();
 
         // Phase 2: batched traversal with in-shader force scatter, swept in
         // Morton order of the ray origins (coherent rays share subtrees, so
@@ -88,7 +87,7 @@ impl Backend for OrcsForces {
         // deterministic regardless of which worker ran which chunk — the
         // race-free substitute for the GPU's atomicAdd (DESIGN.md
         // §Hardware-Adaptation).
-        let t1 = Instant::now();
+        let t1 = WallTimer::start();
         let bvh = self.mgr.bvh();
         let trigger = gamma_trigger(state);
         struct Scatter {
@@ -180,12 +179,12 @@ impl Backend for OrcsForces {
         counts.isect_force_evals += evals;
         counts.atomic_adds += 2 * pairs; // both endpoints, atomically
         counts.interactions += pairs;
-        wall.search = sort_wall + t1.elapsed().as_secs_f64();
+        wall.search = sort_wall + t1.elapsed_s();
 
         // Phase 3: the one extra compute kernel — integration.
-        let t2 = Instant::now();
+        let t2 = WallTimer::start();
         ctx.kernels.integrate(state, &mut counts).map_err(SimError::fatal)?;
-        wall.integrate = t2.elapsed().as_secs_f64();
+        wall.integrate = t2.elapsed_s();
 
         self.mgr.observe(action, &counts, ctx.hw);
         Ok(StepResult { counts, bvh_action: Some(action), oom_bytes: None, wall })

@@ -11,8 +11,6 @@
 //! while integrated outputs land in a fresh buffer (real implementations
 //! do the same to keep in-flight rays consistent).
 
-use std::time::Instant;
-
 use crate::core::vec3::Vec3;
 use crate::frnn::rt_common::{fold_stats, launch_rays, BvhManager};
 use crate::frnn::zorder::ZOrderCache;
@@ -21,6 +19,7 @@ use crate::gradient::RebuildPolicy;
 use crate::physics::{boundary, state::SimState};
 use crate::resilience::{SimError, SimResult};
 use crate::rtcore::OpCounts;
+use crate::telemetry::wallclock::WallTimer;
 
 pub struct OrcsPerse {
     mgr: BvhManager,
@@ -54,13 +53,13 @@ impl Backend for OrcsPerse {
 
         // Phase 0: one Morton keying + sort per step (shared by build +
         // sweep); wall time charged to the search phase below.
-        let t_sort = Instant::now();
+        let t_sort = WallTimer::start();
         self.zcache.compute(&state.pos, state.box_l, ctx.threads);
-        let sort_wall = t_sort.elapsed().as_secs_f64();
+        let sort_wall = t_sort.elapsed_s();
         debug_assert_eq!(self.zcache.order().len(), state.n());
 
         // Phase 1: BVH maintenance.
-        let t0 = Instant::now();
+        let t0 = WallTimer::start();
         let action = self.mgr.prepare_with(
             &state.pos,
             &state.radius,
@@ -69,7 +68,7 @@ impl Backend for OrcsPerse {
             false,
             Some(self.zcache.order()),
         );
-        wall.bvh = t0.elapsed().as_secs_f64();
+        wall.bvh = t0.elapsed_s();
 
         // Phase 2: the entire step inside the RT pipeline — batched sweep
         // in Morton order of the ray origins (coherent rays share subtrees,
@@ -78,7 +77,7 @@ impl Backend for OrcsPerse {
         // integrated (pos, vel) pairs keyed by particle id; slots are
         // disjoint so the scatter back to particle order is trivially
         // deterministic.
-        let t1 = Instant::now();
+        let t1 = WallTimer::start();
         let bvh = self.mgr.bvh();
         // uniform radius: gamma trigger is *the* radius (§3.3 fast case)
         let trigger = state.r_max;
@@ -157,7 +156,7 @@ impl Backend for OrcsPerse {
         counts.isect_force_evals += accums;
         // uniform radius: detection symmetric, each pair seen twice
         counts.interactions += accums / 2;
-        wall.search = sort_wall + t1.elapsed().as_secs_f64();
+        wall.search = sort_wall + t1.elapsed_s();
 
         self.mgr.observe(action, &counts, ctx.hw);
         Ok(StepResult { counts, bvh_action: Some(action), oom_bytes: None, wall })

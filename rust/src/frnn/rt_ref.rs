@@ -12,8 +12,6 @@
 //! discover `i`, so the detecting thread must also append itself to `j`'s
 //! list — an atomic cross-insert on real hardware, counted as such.
 
-use std::time::Instant;
-
 use crate::frnn::rt_common::{fold_stats, gamma_trigger, launch_rays, BvhManager};
 use crate::frnn::zorder::ZOrderCache;
 use crate::frnn::{Backend, NeighborLists, StepCtx, StepResult, WallPhases};
@@ -21,6 +19,7 @@ use crate::gradient::RebuildPolicy;
 use crate::physics::state::SimState;
 use crate::resilience::{SimError, SimResult};
 use crate::rtcore::OpCounts;
+use crate::telemetry::wallclock::WallTimer;
 
 pub struct RtRef {
     mgr: BvhManager,
@@ -55,13 +54,13 @@ impl Backend for RtRef {
         // Phase 0: one Morton keying + sort for the whole step, shared by
         // the (LBVH) build and the query sweep below. Its wall time is
         // charged to the search phase (it schedules the sweep).
-        let t_sort = Instant::now();
+        let t_sort = WallTimer::start();
         self.zcache.compute(&state.pos, state.box_l, ctx.threads);
-        let sort_wall = t_sort.elapsed().as_secs_f64();
+        let sort_wall = t_sort.elapsed_s();
         debug_assert_eq!(self.zcache.order().len(), n);
 
         // Phase 1: BVH maintenance under the rebuild policy.
-        let t0 = Instant::now();
+        let t0 = WallTimer::start();
         let action = self.mgr.prepare_with(
             &state.pos,
             &state.radius,
@@ -70,7 +69,7 @@ impl Backend for RtRef {
             false,
             Some(self.zcache.order()),
         );
-        wall.bvh = t0.elapsed().as_secs_f64();
+        wall.bvh = t0.elapsed_s();
 
         // Phase 2: batched ray traversal, swept in Morton order of the
         // query positions (RTNN-style coherence: consecutive rays enter the
@@ -80,7 +79,7 @@ impl Backend for RtRef {
         // directly with a count-then-fill two-pass keyed by those ids — no
         // per-particle Vec, no intermediate Vec<Vec<u32>>, and the scatter
         // lands results back in particle order.
-        let t1 = Instant::now();
+        let t1 = WallTimer::start();
         let bvh = self.mgr.bvh();
         let trigger = gamma_trigger(state);
         struct ChunkOut {
@@ -195,7 +194,7 @@ impl Backend for RtRef {
         counts.nbr_list_bytes_peak = list_bytes;
         // every interacting pair ends up in both endpoint lists exactly once
         counts.interactions += nl.total_entries() as u64 / 2;
-        wall.search = sort_wall + t1.elapsed().as_secs_f64();
+        wall.search = sort_wall + t1.elapsed_s();
 
         if ctx.check_oom && list_bytes > ctx.effective_vram() {
             self.mgr.observe(action, &counts, ctx.hw);
@@ -213,15 +212,15 @@ impl Backend for RtRef {
         // simulated cost is priced on n * k_max, not on the CSR entry
         // count. This is what makes RT-REF lose to ORCS-forces on skewed
         // (log-normal) neighbor distributions (Table 2, Figs 9-10).
-        let t2 = Instant::now();
+        let t2 = WallTimer::start();
         state.force = ctx.kernels.lj_forces(state, &nl, &mut counts).map_err(SimError::fatal)?;
         counts.force_kernel_pairs += (n as u64) * (nl.k_max() as u64);
-        wall.force = t2.elapsed().as_secs_f64();
+        wall.force = t2.elapsed_s();
 
         // Phase 4: integration kernel.
-        let t3 = Instant::now();
+        let t3 = WallTimer::start();
         ctx.kernels.integrate(state, &mut counts).map_err(SimError::fatal)?;
-        wall.integrate = t3.elapsed().as_secs_f64();
+        wall.integrate = t3.elapsed_s();
 
         self.mgr.observe(action, &counts, ctx.hw);
         Ok(StepResult { counts, bvh_action: Some(action), oom_bytes: None, wall })

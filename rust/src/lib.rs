@@ -25,7 +25,11 @@
 //!   paper's evaluation, plus the sharded-scaling study ([`benchsuite`]);
 //! * `orcs lint` — a dependency-free **static-analysis pass** enforcing the
 //!   determinism and panic-safety contracts above as machine-checked rules
-//!   ([`analysis`], `docs/LINTS.md`).
+//!   ([`analysis`], `docs/LINTS.md`);
+//! * the **telemetry subsystem**: deterministic per-step phase spans over
+//!   simulated device time, a labeled metrics registry, Chrome-trace
+//!   export and a flight recorder for fault forensics ([`telemetry`],
+//!   `docs/OBSERVABILITY.md`).
 //!
 //! See `DESIGN.md` for the system inventory and the hardware-substitution
 //! rationale, and `EXPERIMENTS.md` for paper-vs-measured results.
@@ -41,6 +45,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod resilience;
 pub mod shard;
+pub mod telemetry;
 pub mod analysis;
 pub mod benchsuite;
 pub mod cli;

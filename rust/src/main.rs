@@ -1,15 +1,20 @@
 //! `orcs` — the leader binary: CLI over the coordinator engine and the
 //! benchmark suite. See `orcs help` / [`orcs::cli::USAGE`].
 
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
 use anyhow::Result;
 
 use orcs::benchsuite::{chaos, common::BenchOpts, fig11_12, fig13, fig8, fig9_10, sharded, table2};
 use orcs::cli::{Args, USAGE};
+use orcs::coordinator::metrics::{fmt_ms, percentile};
 use orcs::coordinator::report::{results_dir, CsvWriter, TextTable};
 use orcs::coordinator::{Engine, EngineConfig};
 use orcs::core::config::{Boundary, ShardSpec};
 use orcs::frnn::ApproachKind;
 use orcs::shard::{ShardedConfig, ShardedEngine};
+use orcs::telemetry::{chrome, Recorder};
 
 fn main() {
     if let Err(e) = run() {
@@ -22,6 +27,7 @@ fn run() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     match args.subcommand.as_str() {
         "simulate" => simulate(&args),
+        "trace" => trace_cmd(&args),
         "bench-fig8" => fig8::run(&BenchOpts::from_args(&args)?),
         "bench-table2" => table2::run(&BenchOpts::from_args(&args)?),
         "bench-fig9" => fig9_10::run(&BenchOpts::from_args(&args)?, Boundary::Wall),
@@ -41,6 +47,183 @@ fn run() -> Result<()> {
             std::process::exit(2);
         }
     }
+}
+
+/// Apply the telemetry CLI flags to a recorder: full span-tree retention
+/// when a trace export is requested, flight-recorder depth from `--flight`.
+fn configure_recorder(args: &Args, rec: &mut Recorder, force_trace: bool) -> Result<()> {
+    if force_trace || args.get("trace-out").is_some() {
+        rec.enable_trace();
+    }
+    if let Some(k) = args.get("flight") {
+        rec.set_flight_len(k.parse()?);
+    }
+    Ok(())
+}
+
+/// Write the Chrome-trace JSON and metrics exports requested by
+/// `--trace-out` / `--metrics-out` (with `orcs trace` defaults under
+/// `results/` when `with_defaults` is set). The trace is validated before
+/// it is written, so a malformed export fails the run — the CI smoke leg
+/// relies on exactly that.
+fn export_telemetry(args: &Args, rec: &Recorder, with_defaults: bool) -> Result<()> {
+    let trace_path = match args.get("trace-out") {
+        Some(p) => Some(PathBuf::from(p)),
+        None if with_defaults => Some(results_dir().join("trace.json")),
+        None => None,
+    };
+    if let Some(path) = trace_path {
+        chrome::validate(rec.steps())
+            .map_err(|e| anyhow::anyhow!("recorded spans are inconsistent: {e}"))?;
+        let js = chrome::render(rec.steps(), &rec.lanes());
+        chrome::validate_json(&js)
+            .map_err(|e| anyhow::anyhow!("rendered trace JSON is malformed: {e}"))?;
+        std::fs::write(&path, &js)?;
+        println!(
+            "trace: {} ({} steps, {} lanes)",
+            path.display(),
+            rec.steps().len(),
+            rec.lanes().len()
+        );
+    }
+    let metrics_path = match args.get("metrics-out") {
+        Some(p) => Some(PathBuf::from(p)),
+        None if with_defaults => Some(results_dir().join("metrics.json")),
+        None => None,
+    };
+    if let Some(path) = metrics_path {
+        std::fs::write(&path, rec.metrics().to_json())?;
+        let prom = path.with_extension("prom");
+        std::fs::write(&prom, rec.metrics().to_prometheus())?;
+        println!("metrics: {} + {}", path.display(), prom.display());
+    }
+    Ok(())
+}
+
+/// Human phase-breakdown table (p50/p95 per phase, time share) plus
+/// per-lane straggler attribution over the recorded span tree.
+fn print_phase_breakdown(rec: &Recorder) {
+    let steps = rec.steps();
+    if steps.is_empty() {
+        println!("no recorded steps (tracing is enabled by `orcs trace` or --trace-out)");
+        return;
+    }
+    let mut by_phase: BTreeMap<&'static str, Vec<f64>> = BTreeMap::new();
+    let mut total = 0.0;
+    for st in steps {
+        for sp in &st.spans {
+            by_phase.entry(sp.phase.label()).or_default().push(sp.dur_ms);
+            total += sp.dur_ms;
+        }
+    }
+    let mut t = TextTable::new(&["phase", "spans", "total ms", "p50 ms", "p95 ms", "share"]);
+    for (label, durs) in &by_phase {
+        let sum: f64 = durs.iter().sum();
+        let share = if total > 0.0 { 100.0 * sum / total } else { 0.0 };
+        t.row(vec![
+            label.to_string(),
+            durs.len().to_string(),
+            fmt_ms(sum),
+            fmt_ms(percentile(durs, 50.0)),
+            fmt_ms(percentile(durs, 95.0)),
+            format!("{share:.1}%"),
+        ]);
+    }
+    println!("phase breakdown over {} step(s):", steps.len());
+    println!("{}", t.render());
+
+    let lanes = rec.lanes();
+    if lanes.len() > 1 {
+        let mut straggler_steps: BTreeMap<u32, u64> = BTreeMap::new();
+        let mut busy_ms: BTreeMap<u32, f64> = BTreeMap::new();
+        for st in steps {
+            let mut per_lane: BTreeMap<u32, f64> = BTreeMap::new();
+            for sp in &st.spans {
+                *per_lane.entry(sp.lane).or_insert(0.0) += sp.dur_ms;
+            }
+            let mut worst: Option<(u32, f64)> = None;
+            for (&lane, &ms) in &per_lane {
+                *busy_ms.entry(lane).or_insert(0.0) += ms;
+                let better = match worst {
+                    None => true,
+                    Some((_, w)) => ms > w,
+                };
+                if better {
+                    worst = Some((lane, ms));
+                }
+            }
+            if let Some((lane, _)) = worst {
+                *straggler_steps.entry(lane).or_insert(0) += 1;
+            }
+        }
+        let mut t = TextTable::new(&["lane", "busy ms", "straggler steps"]);
+        for (lane, name) in &lanes {
+            t.row(vec![
+                name.clone(),
+                fmt_ms(busy_ms.get(lane).copied().unwrap_or(0.0)),
+                straggler_steps.get(lane).copied().unwrap_or(0).to_string(),
+            ]);
+        }
+        println!("straggler attribution (busiest lane per step):");
+        println!("{}", t.render());
+    }
+}
+
+/// `orcs trace`: run a scenario with full tracing and emit the Chrome
+/// trace, Prometheus/JSON metrics, and a human phase-breakdown table.
+fn trace_cmd(args: &Args) -> Result<()> {
+    let quick = args.has("quick");
+    let mut sim = args.sim_config()?;
+    if quick && args.get("n").is_none() {
+        sim.n = 2_000;
+    }
+    let steps = args.get_usize("steps", if quick { 12 } else { 100 })?;
+    let policy = args.get_or("policy", "gradient").to_string();
+    if let Some(spec) = args.shards()? {
+        let fleet = match args.fleet()? {
+            Some(f) => f,
+            None => vec![args.hw()?],
+        };
+        let cfg = ShardedConfig {
+            policy,
+            fleet,
+            threads: orcs::parallel::num_threads(),
+            check_oom: !args.has("no-oom-check"),
+            resilience: args.resilience(steps as u64, spec.count())?,
+            ..ShardedConfig::new(sim.clone(), spec)
+        };
+        let kernels = Engine::kernels_for(sim.force_path, cfg.threads)?;
+        println!("trace (sharded): {} | grid {} | {} steps", cfg.sim.tag(), cfg.spec, steps);
+        let mut engine = ShardedEngine::new(cfg, kernels)?;
+        configure_recorder(args, engine.telemetry_mut(), true)?;
+        engine.run(steps, false)?;
+        export_telemetry(args, engine.telemetry(), true)?;
+        print_phase_breakdown(engine.telemetry());
+    } else {
+        let approach = args.approach(ApproachKind::OrcsForces)?;
+        let cfg = EngineConfig {
+            policy,
+            hw: args.hw()?,
+            threads: orcs::parallel::num_threads(),
+            check_oom: !args.has("no-oom-check"),
+            resilience: args.resilience(steps as u64, 1)?,
+            ..EngineConfig::new(sim.clone(), approach)
+        };
+        let kernels = Engine::kernels_for(sim.force_path, cfg.threads)?;
+        println!(
+            "trace: {} | {} | hw={} | {} steps",
+            cfg.sim.tag(),
+            approach,
+            cfg.hw.name,
+            steps
+        );
+        let mut engine = Engine::new(cfg, kernels)?;
+        configure_recorder(args, engine.telemetry_mut(), true)?;
+        engine.run(steps, false)?;
+        export_telemetry(args, engine.telemetry(), true)?;
+        print_phase_breakdown(engine.telemetry());
+    }
+    Ok(())
 }
 
 /// `orcs simulate`: run one scenario end to end with full metering.
@@ -71,6 +254,7 @@ fn simulate(args: &Args) -> Result<()> {
         steps
     );
     let mut engine = Engine::new(cfg, kernels)?;
+    configure_recorder(args, engine.telemetry_mut(), false)?;
     let resilient = engine.cfg.resilience.active();
     let trace_path = args.get("trace").map(std::path::PathBuf::from);
     let keep_trace = trace_path.is_some();
@@ -78,7 +262,17 @@ fn simulate(args: &Args) -> Result<()> {
 
     let mut records = Vec::new();
     for s in 0..steps {
-        let rec = if resilient { engine.step_resilient()? } else { engine.step()? };
+        let rec = match if resilient { engine.step_resilient() } else { engine.step() } {
+            Ok(rec) => rec,
+            Err(e) => {
+                // fault forensics: the last K steps, incl. the failing one
+                let dump = engine.telemetry().flight_dump();
+                if !dump.is_empty() {
+                    eprintln!("{dump}");
+                }
+                return Err(e.into());
+            }
+        };
         for ev in engine.take_events() {
             println!("  {ev}");
         }
@@ -133,6 +327,7 @@ fn simulate(args: &Args) -> Result<()> {
         }
         println!("trace: {}", path.display());
     }
+    export_telemetry(args, engine.telemetry(), false)?;
     let _ = results_dir();
     Ok(())
 }
@@ -177,6 +372,7 @@ fn simulate_sharded(args: &Args, spec: ShardSpec) -> Result<()> {
         steps
     );
     let mut engine = ShardedEngine::new(cfg, kernels)?;
+    configure_recorder(args, engine.telemetry_mut(), false)?;
     let summary = engine.run(steps, true)?;
     for ev in &summary.events {
         println!("  {ev}");
@@ -228,6 +424,7 @@ fn simulate_sharded(args: &Args, spec: ShardSpec) -> Result<()> {
         summary.ee,
         engine.state.is_finite()
     );
+    export_telemetry(args, engine.telemetry(), false)?;
     Ok(())
 }
 

@@ -112,6 +112,23 @@ pub enum EventKind {
     Recovery { from_step: u64, replayed: u64 },
 }
 
+impl EventKind {
+    /// Short machine-readable tag: telemetry metrics label
+    /// (`orcs_events_total{kind=...}`) and trace-marker category.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            EventKind::OomFallback { .. } => "oom_fallback",
+            EventKind::FallbackUnavailable { .. } => "fallback_unavailable",
+            EventKind::WatchdogRetry { .. } => "watchdog_retry",
+            EventKind::TransientRetry { .. } => "transient_retry",
+            EventKind::VramSqueeze { .. } => "vram_squeeze",
+            EventKind::Straggler { .. } => "straggler",
+            EventKind::DeviceLost { .. } => "device_lost",
+            EventKind::Recovery { .. } => "recovery",
+        }
+    }
+}
+
 impl fmt::Display for ResilienceEvent {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "[step {:>4}] ", self.step)?;

@@ -149,6 +149,37 @@ pub fn simulate(counts: &OpCounts, hw: &HwProfile) -> PhaseTimes {
     t
 }
 
+/// Modeled device-memory bytes moved per phase — the same byte constants
+/// [`simulate`] prices against, exposed so telemetry spans can attribute
+/// traffic to the phase that generated it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseBytes {
+    pub sort: u64,
+    pub traverse: u64,
+    pub cell: u64,
+    pub force_kernel: u64,
+    pub integrate: u64,
+}
+
+impl PhaseBytes {
+    pub fn total(&self) -> u64 {
+        self.sort + self.traverse + self.cell + self.force_kernel + self.integrate
+    }
+}
+
+/// Attribute one step's modeled memory traffic to its phases.
+pub fn phase_bytes(counts: &OpCounts) -> PhaseBytes {
+    PhaseBytes {
+        sort: (counts.sort_elems as f64 * BYTES_PER_SORT_ELEM) as u64,
+        traverse: (counts.aabb_tests as f64 * BYTES_PER_NODE_FETCH
+            + counts.sphere_tests as f64 * BYTES_PER_SPHERE_FETCH
+            + counts.nbr_list_writes as f64 * BYTES_PER_LIST_WRITE) as u64,
+        cell: (counts.cell_pair_tests as f64 * BYTES_PER_CELL_TEST) as u64,
+        force_kernel: (counts.force_kernel_pairs as f64 * BYTES_PER_FORCE_PAIR) as u64,
+        integrate: (counts.integrate_particles as f64 * BYTES_PER_INTEGRATE) as u64,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,5 +246,19 @@ mod tests {
     fn empty_counts_cost_nothing() {
         let t = simulate(&OpCounts::default(), &RTXPRO);
         assert_eq!(t.total(), 0.0);
+    }
+
+    #[test]
+    fn phase_bytes_uses_the_priced_constants() {
+        let b = phase_bytes(&rt_step_counts());
+        let want_trav = 5_000_000.0 * BYTES_PER_NODE_FETCH
+            + 800_000.0 * BYTES_PER_SPHERE_FETCH
+            + 400_000.0 * BYTES_PER_LIST_WRITE;
+        assert_eq!(b.traverse, want_trav as u64);
+        assert_eq!(b.force_kernel, (400_000.0 * BYTES_PER_FORCE_PAIR) as u64);
+        assert_eq!(b.integrate, (100_000.0 * BYTES_PER_INTEGRATE) as u64);
+        assert_eq!(b.sort, 0);
+        assert_eq!(b.cell, 0);
+        assert_eq!(phase_bytes(&OpCounts::default()).total(), 0);
     }
 }

@@ -39,7 +39,6 @@
 //!    scenes too wide for one device complete sharded.
 
 use std::sync::Arc;
-use std::time::Instant;
 
 use anyhow::Result;
 
@@ -58,6 +57,8 @@ use crate::resilience::{
 use crate::rtcore::fleet::{self, ShardCost};
 use crate::rtcore::power::step_energy;
 use crate::rtcore::{timing, HwProfile, OpCounts};
+use crate::telemetry::wallclock::WallTimer;
+use crate::telemetry::{Phase, Recorder, Span, GLOBAL_LANE};
 
 /// Sharded-engine configuration: scenario + decomposition + fleet bindings.
 #[derive(Clone)]
@@ -227,6 +228,8 @@ pub struct ShardedEngine {
     divergence_armed: bool,
     /// The listless fallback requires a uniform radius (ORCS-persé rule).
     uniform_radius: bool,
+    /// Per-step telemetry: one lane per shard, metrics, flight recorder.
+    telemetry: Recorder,
 }
 
 impl ShardedEngine {
@@ -272,6 +275,7 @@ impl ShardedEngine {
             replayed: 0,
             divergence_armed: false,
             uniform_radius,
+            telemetry: Recorder::new(),
         };
         // a step-0 checkpoint makes an early device loss recoverable
         if active {
@@ -312,6 +316,8 @@ impl ShardedEngine {
 
     /// One raw sharded step (no fault handling).
     fn step_raw(&mut self) -> SimResult<ShardedStepRecord> {
+        let opened = self.telemetry.begin_step(self.state.step_count);
+        self.telemetry.begin_attempt();
         let n = self.state.n();
         let threads = self.cfg.threads.max(1);
         let halo = self.state.r_max;
@@ -508,7 +514,7 @@ impl ShardedEngine {
                 if self.cfg.check_oom && need > budget && fallback && self.uniform_radius {
                     self.listless[s] = true;
                     switch_s = fleet::switch_time(n_local as u64, shard.hw);
-                    self.events.push(ResilienceEvent {
+                    let ev = ResilienceEvent {
                         step: self.state.step_count,
                         kind: EventKind::OomFallback {
                             from: "RT-REF",
@@ -518,7 +524,9 @@ impl ShardedEngine {
                             budget_bytes: budget,
                             switch_ms: switch_s * 1e3,
                         },
-                    });
+                    };
+                    self.telemetry.mark_event(&ev);
+                    self.events.push(ev);
                 }
             }
             let listless = self.listless[s];
@@ -565,6 +573,30 @@ impl ShardedEngine {
                 cost = cost.scaled(slow);
             }
             shard.mgr.observe(action, &counts, shard.hw);
+            // Telemetry: this shard's lane, laid from the attempt base (all
+            // shards step in parallel on their own devices). `cost` already
+            // carries any straggler scaling, so spans show the priced times.
+            let lane = s as u32;
+            let sname = s.to_string();
+            self.telemetry.name_lane(lane, format!("shard {s} ({})", shard.hw.name));
+            let labels = [("shard", sname.as_str()), ("device", shard.hw.name)];
+            let mut from = self.telemetry.attempt_base_ms();
+            if cost.exchange_s > 0.0 {
+                from = self.telemetry.record_span(
+                    Span {
+                        lane,
+                        phase: Phase::Exchange,
+                        t0_ms: from,
+                        dur_ms: cost.exchange_s * 1e3,
+                        aabb_tests: 0,
+                        isect_force_evals: 0,
+                        bytes_moved: exchange_bytes,
+                        wall_ms: None,
+                    },
+                    &labels,
+                );
+            }
+            self.telemetry.record_phases(lane, from, &cost.times, &counts, None, &labels);
             per_shard.push(ShardStepStat {
                 shard: s,
                 owned: owned_n,
@@ -583,7 +615,16 @@ impl ShardedEngine {
         }
 
         let agg = fleet::aggregate(&costs);
+        self.telemetry.name_lane(GLOBAL_LANE, "fleet".to_string());
         if let Some((shard, bytes)) = oom {
+            self.telemetry.mark(
+                GLOBAL_LANE,
+                "oom",
+                format!("shard {shard} neighbor list needs {bytes} B > device VRAM"),
+            );
+            if opened {
+                self.telemetry.end_step(agg.sim_s * 1e3);
+            }
             return Ok(ShardedStepRecord {
                 step: self.state.step_count,
                 sim_ms: agg.sim_s * 1e3,
@@ -632,6 +673,14 @@ impl ShardedEngine {
             .lj_forces(&self.state, &nl, &mut kernel_scratch)
             .map_err(SimError::fatal)?;
         self.kernels.integrate(&mut self.state, &mut kernel_scratch).map_err(SimError::fatal)?;
+        self.telemetry.mark(
+            GLOBAL_LANE,
+            "merge",
+            format!("merge: {} canonical list entries", nl.total_entries()),
+        );
+        if opened {
+            self.telemetry.end_step(agg.sim_s * 1e3);
+        }
 
         Ok(ShardedStepRecord {
             step: self.state.step_count,
@@ -653,19 +702,26 @@ impl ShardedEngine {
     fn step_resilient(&mut self) -> SimResult<ShardedStepRecord> {
         let res = self.cfg.resilience.clone();
         let step = self.state.step_count;
+        // Open the telemetry step before consuming faults so device-loss
+        // and squeeze markers land inside the step that absorbed them.
+        let opened = self.telemetry.begin_step(step);
         let mut transient = false;
         for f in self.injector.take(step) {
             match f {
                 FaultKind::VramSqueeze { budget_bytes } => {
                     self.vram_budget = Some(budget_bytes);
                     let kind = EventKind::VramSqueeze { budget_bytes };
-                    self.events.push(ResilienceEvent { step, kind });
+                    let ev = ResilienceEvent { step, kind };
+                    self.telemetry.mark_event(&ev);
+                    self.events.push(ev);
                 }
                 FaultKind::Straggler { shard, slowdown } => {
                     let s = shard % self.slowdowns.len();
                     self.slowdowns[s] = slowdown;
                     let kind = EventKind::Straggler { shard: s, slowdown };
-                    self.events.push(ResilienceEvent { step, kind });
+                    let ev = ResilienceEvent { step, kind };
+                    self.telemetry.mark_event(&ev);
+                    self.events.push(ev);
                 }
                 FaultKind::Transient => transient = true,
                 FaultKind::Divergence => self.divergence_armed = true,
@@ -708,10 +764,12 @@ impl ShardedEngine {
                     }
                     wasted_ms += rec.sim_ms;
                     wasted_j += rec.energy_j;
-                    self.events.push(ResilienceEvent {
+                    let ev = ResilienceEvent {
                         step,
                         kind: EventKind::WatchdogRetry { attempt, dt: self.state.dt, detail },
-                    });
+                    };
+                    self.telemetry.mark_event(&ev);
+                    self.events.push(ev);
                     continue;
                 }
             }
@@ -721,8 +779,9 @@ impl ShardedEngine {
                 // physics is the re-run's, the price includes the discard
                 wasted_ms += rec.sim_ms;
                 wasted_j += rec.energy_j;
-                self.events
-                    .push(ResilienceEvent { step, kind: EventKind::TransientRetry { attempt: 1 } });
+                let ev = ResilienceEvent { step, kind: EventKind::TransientRetry { attempt: 1 } };
+                self.telemetry.mark_event(&ev);
+                self.events.push(ev);
             }
 
             rec.sim_ms += wasted_ms;
@@ -735,6 +794,14 @@ impl ShardedEngine {
                 && self.state.step_count % res.checkpoint_every == 0
             {
                 self.checkpoint = Some(self.take_checkpoint());
+                self.telemetry.mark(
+                    GLOBAL_LANE,
+                    "checkpoint",
+                    format!("checkpoint @ step {}", self.state.step_count),
+                );
+            }
+            if opened {
+                self.telemetry.end_step(rec.sim_ms);
             }
             return Ok(rec);
         }
@@ -798,18 +865,22 @@ impl ShardedEngine {
         }
         self.devices.remove(idx);
         let at = self.state.step_count;
-        self.events.push(ResilienceEvent {
+        let ev = ResilienceEvent {
             step: at,
             kind: EventKind::DeviceLost { shard, device, survivors: self.devices.len() },
-        });
+        };
+        self.telemetry.mark_event(&ev);
+        self.events.push(ev);
         for (s, sh) in self.shards.iter_mut().enumerate() {
             sh.hw = self.devices[s % self.devices.len()];
         }
         let replayed = self.restore_checkpoint()?;
         self.replayed += replayed;
         let from_step = self.state.step_count;
-        self.events
-            .push(ResilienceEvent { step: at, kind: EventKind::Recovery { from_step, replayed } });
+        let ev =
+            ResilienceEvent { step: at, kind: EventKind::Recovery { from_step, replayed } };
+        self.telemetry.mark_event(&ev);
+        self.events.push(ev);
         Ok(())
     }
 
@@ -823,10 +894,19 @@ impl ShardedEngine {
         self.replayed
     }
 
+    /// The telemetry recorder: per-step spans, metrics, flight recorder.
+    pub fn telemetry(&self) -> &Recorder {
+        &self.telemetry
+    }
+
+    pub fn telemetry_mut(&mut self) -> &mut Recorder {
+        &mut self.telemetry
+    }
+
     /// Run `steps` steps; aborts early when any shard OOMs (the fleet
     /// cannot complete the step).
     pub fn run(&mut self, steps: usize, keep_trace: bool) -> Result<ShardedRunSummary> {
-        let wall_start = Instant::now();
+        let wall_start = WallTimer::start();
         let mut s = ShardedRunSummary {
             scenario: self.cfg.sim.tag(),
             grid: self.cfg.spec.to_string(),
@@ -849,9 +929,23 @@ impl ShardedEngine {
         let target = self.state.step_count + steps as u64;
         while self.state.step_count < target {
             let i = self.state.step_count;
-            let rec = self.step().map_err(|e| {
-                anyhow::anyhow!("sharded step {i} failed [grid {}, fleet {}]: {e}", s.grid, s.fleet)
-            })?;
+            let rec = match self.step() {
+                Ok(rec) => rec,
+                Err(e) => {
+                    // Fault forensics: dump the flight recorder (including
+                    // the partially-recorded failing step) before bailing.
+                    let dump = self.telemetry.flight_dump();
+                    if !dump.is_empty() {
+                        eprintln!("{dump}");
+                    }
+                    self.telemetry.abandon_step();
+                    return Err(anyhow::anyhow!(
+                        "sharded step {i} failed [grid {}, fleet {}]: {e}",
+                        s.grid,
+                        s.fleet
+                    ));
+                }
+            };
             s.steps += 1;
             s.total_sim_ms += rec.sim_ms;
             s.total_energy_j += rec.energy_j;
@@ -891,7 +985,7 @@ impl ShardedEngine {
             s.avg_sim_ms = s.total_sim_ms / s.steps as f64;
         }
         s.ee = crate::rtcore::power::energy_efficiency(s.total_interactions, s.total_energy_j);
-        s.wall_total_s = wall_start.elapsed().as_secs_f64();
+        s.wall_total_s = wall_start.elapsed_s();
         s.events = self.events.clone();
         s.replayed_steps = self.replayed;
         Ok(s)

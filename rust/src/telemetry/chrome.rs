@@ -1,0 +1,276 @@
+//! Chrome `chrome://tracing` / Perfetto JSON export plus the structural
+//! validators the CI smoke leg relies on.
+//!
+//! Layout: one lane (`tid`) per shard/device plus one global lane; each
+//! step emits an umbrella `step N` slice per active lane with the phase
+//! slices (build → refit → traverse → …) nested inside, and resilience
+//! events render as instant markers. Timestamps are microseconds of
+//! *simulated* device time, so traces are bitwise reproducible.
+
+use std::collections::BTreeMap;
+
+use super::{StepSpans, GLOBAL_LANE};
+
+/// Tolerance for span-boundary comparisons: spans are laid out by exact
+/// f64 cursor accumulation, so anything beyond a ulp-scale slack is a
+/// real overlap.
+const EPS_MS: f64 = 1e-9;
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Lane id → Chrome thread id: the global lane is tid 0, shard `s` is
+/// tid `s + 1`.
+fn tid(lane: u32) -> u64 {
+    if lane == GLOBAL_LANE {
+        0
+    } else {
+        u64::from(lane) + 1
+    }
+}
+
+/// Render the recorded steps as a Chrome-trace JSON document.
+///
+/// `lanes` names the threads (from [`super::Recorder::lanes`]); lanes
+/// that recorded spans but were never named still render, just unnamed.
+pub fn render(steps: &[StepSpans], lanes: &[(u32, String)]) -> String {
+    let mut events: Vec<String> = Vec::new();
+    for (lane, name) in lanes {
+        events.push(format!(
+            "{{\"ph\":\"M\",\"pid\":0,\"tid\":{},\"name\":\"thread_name\",\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            tid(*lane),
+            esc(name)
+        ));
+    }
+    for st in steps {
+        // one umbrella slice per lane that was active this step; the
+        // phase slices nest inside it
+        let mut active: BTreeMap<u32, ()> = BTreeMap::new();
+        for sp in &st.spans {
+            active.entry(sp.lane).or_insert(());
+        }
+        for lane in active.keys() {
+            events.push(format!(
+                "{{\"ph\":\"X\",\"pid\":0,\"tid\":{},\"ts\":{:.3},\"dur\":{:.3},\
+                 \"name\":\"step {}\",\"cat\":\"step\"}}",
+                tid(*lane),
+                st.t0_ms * 1e3,
+                st.dur_ms * 1e3,
+                st.step
+            ));
+        }
+        for sp in &st.spans {
+            let mut args = format!(
+                "\"step\":{},\"aabb_tests\":{},\"isect_force_evals\":{},\"bytes_moved\":{}",
+                st.step, sp.aabb_tests, sp.isect_force_evals, sp.bytes_moved
+            );
+            if let Some(w) = sp.wall_ms {
+                args.push_str(&format!(",\"wall_ms\":{w}"));
+            }
+            events.push(format!(
+                "{{\"ph\":\"X\",\"pid\":0,\"tid\":{},\"ts\":{:.3},\"dur\":{:.3},\
+                 \"name\":\"{}\",\"cat\":\"phase\",\"args\":{{{args}}}}}",
+                tid(sp.lane),
+                sp.t0_ms * 1e3,
+                sp.dur_ms * 1e3,
+                sp.phase.label()
+            ));
+        }
+        for m in &st.marks {
+            events.push(format!(
+                "{{\"ph\":\"i\",\"pid\":0,\"tid\":{},\"ts\":{:.3},\"s\":\"g\",\
+                 \"name\":\"{}\",\"cat\":\"{}\"}}",
+                tid(m.lane),
+                m.t_ms * 1e3,
+                esc(&m.label),
+                esc(m.tag)
+            ));
+        }
+    }
+    format!("{{\"traceEvents\":[{}]}}\n", events.join(","))
+}
+
+/// Structural validation of a recorded trace: step starts are monotone,
+/// durations are nonnegative, no span starts before its step, and spans
+/// on one lane never overlap (within float slack) — the "monotone span
+/// nesting" invariant the CI smoke leg asserts.
+pub fn validate(steps: &[StepSpans]) -> Result<(), String> {
+    let mut prev_t0 = f64::NEG_INFINITY;
+    let mut lane_end: BTreeMap<u32, f64> = BTreeMap::new();
+    for st in steps {
+        if !st.t0_ms.is_finite() || st.t0_ms < prev_t0 {
+            return Err(format!("step {}: start {} precedes {}", st.step, st.t0_ms, prev_t0));
+        }
+        prev_t0 = st.t0_ms;
+        if st.dur_ms.is_nan() || st.dur_ms < 0.0 {
+            return Err(format!("step {}: negative or NaN duration {}", st.step, st.dur_ms));
+        }
+        for sp in &st.spans {
+            if sp.dur_ms.is_nan() || sp.dur_ms < 0.0 {
+                return Err(format!(
+                    "step {} lane {} {}: bad span duration {}",
+                    st.step,
+                    sp.lane,
+                    sp.phase.label(),
+                    sp.dur_ms
+                ));
+            }
+            if sp.t0_ms + EPS_MS < st.t0_ms {
+                return Err(format!(
+                    "step {} lane {} {}: span starts before its step",
+                    st.step,
+                    sp.lane,
+                    sp.phase.label()
+                ));
+            }
+            let end = lane_end.entry(sp.lane).or_insert(f64::NEG_INFINITY);
+            if sp.t0_ms + EPS_MS < *end {
+                return Err(format!(
+                    "step {} lane {} {}: span overlaps its predecessor",
+                    st.step,
+                    sp.lane,
+                    sp.phase.label()
+                ));
+            }
+            let e = sp.t0_ms + sp.dur_ms;
+            if e > *end {
+                *end = e;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// String-aware well-formedness check of the rendered JSON text: brace
+/// and bracket balance outside string literals, non-empty, object root.
+pub fn validate_json(s: &str) -> Result<(), String> {
+    let t = s.trim();
+    if !t.starts_with('{') || !t.ends_with('}') {
+        return Err("trace JSON root must be an object".to_string());
+    }
+    let mut braces = 0i64;
+    let mut brackets = 0i64;
+    let mut in_str = false;
+    let mut escaped = false;
+    for c in t.chars() {
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == '\\' {
+                escaped = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '{' => braces += 1,
+            '}' => braces -= 1,
+            '[' => brackets += 1,
+            ']' => brackets -= 1,
+            _ => {}
+        }
+        if braces < 0 || brackets < 0 {
+            return Err("unbalanced closing brace/bracket in trace JSON".to_string());
+        }
+    }
+    if in_str {
+        return Err("unterminated string in trace JSON".to_string());
+    }
+    if braces != 0 || brackets != 0 {
+        return Err(format!("unbalanced trace JSON ({braces} braces, {brackets} brackets open)"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Mark, Phase, Span};
+    use super::*;
+
+    fn span(lane: u32, phase: Phase, t0: f64, dur: f64) -> Span {
+        Span {
+            lane,
+            phase,
+            t0_ms: t0,
+            dur_ms: dur,
+            aabb_tests: 7,
+            isect_force_evals: 0,
+            bytes_moved: 64,
+            wall_ms: Some(0.25),
+        }
+    }
+
+    fn step(n: u64, t0: f64, dur: f64, spans: Vec<Span>) -> StepSpans {
+        StepSpans {
+            step: n,
+            t0_ms: t0,
+            dur_ms: dur,
+            spans,
+            marks: vec![Mark {
+                lane: GLOBAL_LANE,
+                t_ms: t0,
+                tag: "checkpoint",
+                label: "checkpoint \"quoted\"".to_string(),
+            }],
+        }
+    }
+
+    #[test]
+    fn render_emits_lanes_slices_and_markers() {
+        let steps = vec![step(
+            0,
+            0.0,
+            2.0,
+            vec![span(0, Phase::Build, 0.0, 1.0), span(0, Phase::Traverse, 1.0, 1.0)],
+        )];
+        let lanes = vec![(0u32, "shard 0 (L40)".to_string()), (GLOBAL_LANE, "fleet".to_string())];
+        let js = render(&steps, &lanes);
+        assert!(js.contains("\"traceEvents\""), "{js}");
+        assert!(js.contains("thread_name"), "{js}");
+        assert!(js.contains("\"name\":\"build\""), "{js}");
+        assert!(js.contains("\"cat\":\"step\""), "{js}");
+        assert!(js.contains("\"ph\":\"i\""), "{js}");
+        assert!(js.contains("\"wall_ms\":0.25"), "{js}");
+        validate_json(&js).unwrap();
+    }
+
+    #[test]
+    fn validate_accepts_sequential_and_rejects_overlap() {
+        let a = span(0, Phase::Build, 0.0, 1.0);
+        let good = vec![
+            step(0, 0.0, 2.0, vec![a, span(0, Phase::Force, 1.0, 0.5)]),
+            step(1, 2.0, 1.0, vec![span(0, Phase::Refit, 2.0, 0.5)]),
+        ];
+        validate(&good).unwrap();
+        let overlap = vec![step(0, 0.0, 2.0, vec![a, span(0, Phase::Force, 0.5, 1.0)])];
+        assert!(validate(&overlap).is_err());
+        let backwards = vec![step(1, 5.0, 1.0, vec![]), step(2, 4.0, 1.0, vec![])];
+        assert!(validate(&backwards).is_err());
+        let negdur = vec![step(0, 0.0, 1.0, vec![span(0, Phase::Sort, 0.0, -1.0)])];
+        assert!(validate(&negdur).is_err());
+    }
+
+    #[test]
+    fn validate_json_catches_truncation_and_respects_strings() {
+        let ok = "{\"a\":[{\"s\":\"br{ack]et \\\" soup\"}]}";
+        validate_json(ok).unwrap();
+        assert!(validate_json("{\"a\":[1,2}").is_err());
+        assert!(validate_json("[1,2]").is_err());
+        assert!(validate_json("{\"a\":\"unterminated}").is_err());
+    }
+}

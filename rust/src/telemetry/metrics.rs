@@ -1,0 +1,262 @@
+//! The telemetry metrics registry: counters, gauges and fixed-bucket
+//! histograms keyed by `(family, labels)`, exported as Prometheus-style
+//! exposition text and as JSON.
+//!
+//! Everything is `BTreeMap`-backed so rendering order is deterministic,
+//! and every mutation is plain bookkeeping — recording metrics can never
+//! perturb simulation results. Observed values are milliseconds of
+//! *simulated* device time unless a family name says otherwise.
+
+use std::collections::BTreeMap;
+
+/// Histogram bucket upper bounds (ms of simulated time). An implicit
+/// `+Inf` overflow bucket follows the last bound.
+pub const MS_BUCKETS: &[f64] = &[0.001, 0.01, 0.1, 1.0, 10.0, 100.0, 1_000.0, 10_000.0];
+
+/// One fixed-bucket histogram.
+#[derive(Clone, Debug)]
+pub struct Hist {
+    /// Upper bounds, ascending; `buckets` has one extra overflow slot.
+    pub bounds: Vec<f64>,
+    /// Per-bucket observation counts (not cumulative).
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl Hist {
+    fn new_ms() -> Hist {
+        Hist {
+            bounds: MS_BUCKETS.to_vec(),
+            buckets: vec![0; MS_BUCKETS.len() + 1],
+            count: 0,
+            sum: 0.0,
+        }
+    }
+
+    fn observe(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        let mut idx = self.bounds.len();
+        for (i, b) in self.bounds.iter().enumerate() {
+            if v <= *b {
+                idx = i;
+                break;
+            }
+        }
+        if let Some(slot) = self.buckets.get_mut(idx) {
+            *slot += 1;
+        }
+    }
+}
+
+/// The registry. Keys are `(family name, rendered label pairs)`; label
+/// pairs are sorted by key at insert time so a family's series are
+/// contiguous and canonical regardless of call-site label order.
+#[derive(Clone, Debug, Default)]
+pub struct Registry {
+    counters: BTreeMap<(String, String), u64>,
+    gauges: BTreeMap<(String, String), f64>,
+    hists: BTreeMap<(String, String), Hist>,
+}
+
+/// Render label pairs as `k1="v1",k2="v2"` (sorted by key, no braces).
+fn render_labels(labels: &[(&str, &str)]) -> String {
+    let mut pairs: Vec<(&str, &str)> = labels.to_vec();
+    pairs.sort_by(|a, b| a.0.cmp(b.0));
+    let mut s = String::new();
+    for (k, v) in pairs {
+        if !s.is_empty() {
+            s.push(',');
+        }
+        s.push_str(&format!("{k}=\"{v}\""));
+    }
+    s
+}
+
+fn series(name: &str, labels: &str) -> String {
+    if labels.is_empty() {
+        name.to_string()
+    } else {
+        format!("{name}{{{labels}}}")
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+
+    pub fn counter_add(&mut self, name: &str, labels: &[(&str, &str)], v: u64) {
+        let key = (name.to_string(), render_labels(labels));
+        *self.counters.entry(key).or_insert(0) += v;
+    }
+
+    pub fn gauge_set(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        let key = (name.to_string(), render_labels(labels));
+        self.gauges.insert(key, v);
+    }
+
+    pub fn hist_observe(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        let key = (name.to_string(), render_labels(labels));
+        self.hists.entry(key).or_insert_with(Hist::new_ms).observe(v);
+    }
+
+    /// Prometheus text exposition: `# TYPE` per family, one line per
+    /// series; histograms expand to cumulative `_bucket`/`_sum`/`_count`.
+    pub fn to_prometheus(&self) -> String {
+        let mut s = String::new();
+        let mut prev: Option<&str> = None;
+        for ((name, labels), v) in &self.counters {
+            if prev != Some(name.as_str()) {
+                s.push_str(&format!("# TYPE {name} counter\n"));
+                prev = Some(name.as_str());
+            }
+            s.push_str(&format!("{} {v}\n", series(name, labels)));
+        }
+        prev = None;
+        for ((name, labels), v) in &self.gauges {
+            if prev != Some(name.as_str()) {
+                s.push_str(&format!("# TYPE {name} gauge\n"));
+                prev = Some(name.as_str());
+            }
+            s.push_str(&format!("{} {v}\n", series(name, labels)));
+        }
+        prev = None;
+        for ((name, labels), h) in &self.hists {
+            if prev != Some(name.as_str()) {
+                s.push_str(&format!("# TYPE {name} histogram\n"));
+                prev = Some(name.as_str());
+            }
+            let le_series = |le: &str| {
+                if labels.is_empty() {
+                    format!("{name}_bucket{{le=\"{le}\"}}")
+                } else {
+                    format!("{name}_bucket{{{labels},le=\"{le}\"}}")
+                }
+            };
+            let mut cum = 0u64;
+            for (count, bound) in h.buckets.iter().zip(h.bounds.iter()) {
+                cum += count;
+                s.push_str(&format!("{} {cum}\n", le_series(&format!("{bound}"))));
+            }
+            cum += h.buckets.last().copied().unwrap_or(0);
+            s.push_str(&format!("{} {cum}\n", le_series("+Inf")));
+            s.push_str(&format!("{} {}\n", series(&format!("{name}_sum"), labels), h.sum));
+            s.push_str(&format!("{} {}\n", series(&format!("{name}_count"), labels), h.count));
+        }
+        s
+    }
+
+    /// JSON export (hand-rolled — the vendor set has no serde). Series
+    /// keys use the same `name{labels}` form as the Prometheus text.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"counters\": {");
+        let mut first = true;
+        for ((name, labels), v) in &self.counters {
+            if !first {
+                s.push(',');
+            }
+            first = false;
+            s.push_str(&format!("\n    \"{}\": {v}", json_escape(&series(name, labels))));
+        }
+        s.push_str("\n  },\n  \"gauges\": {");
+        first = true;
+        for ((name, labels), v) in &self.gauges {
+            if !first {
+                s.push(',');
+            }
+            first = false;
+            s.push_str(&format!("\n    \"{}\": {v}", json_escape(&series(name, labels))));
+        }
+        s.push_str("\n  },\n  \"histograms\": {");
+        first = true;
+        for ((name, labels), h) in &self.hists {
+            if !first {
+                s.push(',');
+            }
+            first = false;
+            let mut le = String::new();
+            for b in &h.bounds {
+                le.push_str(&format!("{b}, "));
+            }
+            le.push_str("\"+Inf\"");
+            let counts: Vec<String> = h.buckets.iter().map(|c| format!("{c}")).collect();
+            s.push_str(&format!(
+                "\n    \"{}\": {{\"count\": {}, \"sum\": {}, \"le\": [{le}], \"buckets\": [{}]}}",
+                json_escape(&series(name, labels)),
+                h.count,
+                h.sum,
+                counts.join(", ")
+            ));
+        }
+        s.push_str("\n  }\n}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_labels_canonicalize() {
+        let mut r = Registry::new();
+        r.counter_add("orcs_steps_total", &[], 1);
+        r.counter_add("orcs_steps_total", &[], 2);
+        r.counter_add("orcs_aabb_tests_total", &[("shard", "0"), ("device", "L40")], 10);
+        // same series, label order flipped
+        r.counter_add("orcs_aabb_tests_total", &[("device", "L40"), ("shard", "0")], 5);
+        let text = r.to_prometheus();
+        assert!(text.contains("orcs_steps_total 3"), "{text}");
+        assert!(
+            text.contains("orcs_aabb_tests_total{device=\"L40\",shard=\"0\"} 15"),
+            "{text}"
+        );
+        assert!(text.contains("# TYPE orcs_steps_total counter"), "{text}");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_in_prometheus() {
+        let mut r = Registry::new();
+        r.hist_observe("orcs_phase_ms", &[("phase", "traverse")], 0.5);
+        r.hist_observe("orcs_phase_ms", &[("phase", "traverse")], 5.0);
+        r.hist_observe("orcs_phase_ms", &[("phase", "traverse")], 5e6); // overflow
+        let text = r.to_prometheus();
+        assert!(text.contains("# TYPE orcs_phase_ms histogram"), "{text}");
+        assert!(text.contains("le=\"1\"} 1"), "{text}");
+        assert!(text.contains("le=\"10\"} 2"), "{text}");
+        assert!(text.contains("le=\"+Inf\"} 3"), "{text}");
+        assert!(text.contains("orcs_phase_ms_count{phase=\"traverse\"} 3"), "{text}");
+    }
+
+    #[test]
+    fn json_export_is_balanced_and_names_series() {
+        let mut r = Registry::new();
+        r.gauge_set("orcs_sim_clock_ms", &[], 12.5);
+        r.hist_observe("orcs_phase_ms", &[("phase", "build")], 1.0);
+        let js = r.to_json();
+        assert!(js.contains("\"orcs_sim_clock_ms\": 12.5"), "{js}");
+        assert!(js.contains("orcs_phase_ms{phase=\\\"build\\\"}"), "{js}");
+        assert_eq!(js.matches('{').count(), js.matches('}').count(), "{js}");
+    }
+}

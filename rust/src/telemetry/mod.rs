@@ -1,0 +1,548 @@
+//! Deterministic telemetry: per-step phase spans over *simulated* device
+//! time, a labeled metrics registry, Chrome-trace export, and a bounded
+//! flight recorder for fault forensics.
+//!
+//! The design rule that makes tracing free of determinism hazards: a
+//! span only ever *reads* quantities the engines already computed — the
+//! [`crate::rtcore::timing`] roofline times, [`crate::rtcore::OpCounts`]
+//! deltas, and the modeled bytes moved — and recording mutates nothing
+//! but the [`Recorder`] itself. Traced runs are therefore bitwise
+//! identical to untraced runs (pinned by `tests/property_telemetry.rs`).
+//! Host wall time is report-only and is captured exclusively through the
+//! one blessed [`wallclock`] module (`D-WALL-CLOCK` lint contract); it
+//! rides along as an optional span field that determinism comparisons
+//! ignore.
+//!
+//! Three retention tiers:
+//! * **metrics** — always on; counters/gauges/histograms in [`metrics`].
+//! * **flight recorder** — always on; a ring of the last
+//!   [`DEFAULT_FLIGHT_STEPS`] steps' spans + event marks, dumped by the
+//!   engines alongside any `SimError` that surfaces at the run boundary.
+//! * **full trace** — opt-in via [`Recorder::enable_trace`] (the
+//!   `--trace-out` flag); retains every step for Chrome/Perfetto export
+//!   through [`chrome::render`].
+
+pub mod chrome;
+pub mod metrics;
+pub mod wallclock;
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::frnn::WallPhases;
+use crate::resilience::ResilienceEvent;
+use crate::rtcore::timing::{phase_bytes, PhaseTimes};
+use crate::rtcore::OpCounts;
+
+pub use metrics::Registry;
+
+/// Lane id for single-domain runs and fleet-global marks (merge,
+/// checkpoints, resilience events). Shard lanes use the shard index.
+pub const GLOBAL_LANE: u32 = u32::MAX;
+
+/// Flight-recorder depth: how many trailing steps survive for forensics.
+pub const DEFAULT_FLIGHT_STEPS: usize = 32;
+
+/// The step-phase taxonomy. `Sort` covers z-order keying/binning, `Cell`
+/// the cell-list pair sweep; checkpointing and the sharded list merge
+/// are instant [`Mark`]s (they carry no simulated device time).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    Sort,
+    Exchange,
+    Build,
+    Refit,
+    Traverse,
+    Cell,
+    Force,
+    Integrate,
+}
+
+impl Phase {
+    pub fn label(self) -> &'static str {
+        match self {
+            Phase::Sort => "sort",
+            Phase::Exchange => "exchange",
+            Phase::Build => "build",
+            Phase::Refit => "refit",
+            Phase::Traverse => "traverse",
+            Phase::Cell => "cell",
+            Phase::Force => "force",
+            Phase::Integrate => "integrate",
+        }
+    }
+}
+
+/// One phase execution on one lane. Times are milliseconds of simulated
+/// device time; `wall_ms` is the optional report-only host measurement
+/// (excluded from determinism comparisons).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Span {
+    pub lane: u32,
+    pub phase: Phase,
+    pub t0_ms: f64,
+    pub dur_ms: f64,
+    pub aabb_tests: u64,
+    pub isect_force_evals: u64,
+    pub bytes_moved: u64,
+    pub wall_ms: Option<f64>,
+}
+
+/// An instant event on a lane: resilience events, checkpoints, merges.
+#[derive(Clone, Debug)]
+pub struct Mark {
+    pub lane: u32,
+    pub t_ms: f64,
+    /// Short machine-readable category (metrics label, trace `cat`).
+    pub tag: &'static str,
+    /// The human one-liner (e.g. a `ResilienceEvent`'s display form).
+    pub label: String,
+}
+
+/// Everything recorded for one engine step.
+#[derive(Clone, Debug, Default)]
+pub struct StepSpans {
+    pub step: u64,
+    pub t0_ms: f64,
+    /// Full step duration on the simulated clock, including retry waste,
+    /// fallback switches and straggler slowdown — always covers the
+    /// extent of the contained spans.
+    pub dur_ms: f64,
+    pub spans: Vec<Span>,
+    pub marks: Vec<Mark>,
+}
+
+/// Expand one `(PhaseTimes, OpCounts)` pair into sequential spans on
+/// `lane` starting at `t0_ms`. Only phases with nonzero simulated time
+/// are emitted; counters and modeled bytes are attributed to the phase
+/// that generated them, and the optional backend wall measurements map
+/// onto their nearest phase (approximate for the cell backends, whose
+/// `search` wall covers the grid build).
+pub fn phase_spans(
+    lane: u32,
+    t0_ms: f64,
+    times: &PhaseTimes,
+    counts: &OpCounts,
+    wall: Option<&WallPhases>,
+) -> Vec<Span> {
+    let bytes = phase_bytes(counts);
+    let has_grid = times.grid > 0.0;
+    let has_trav = times.traverse > 0.0;
+    let w = |pick: fn(&WallPhases) -> f64| wall.map(|w| pick(w) * 1e3);
+    let w_sort = if has_grid { w(|w| w.search) } else { None };
+    let w_trav = if has_trav { w(|w| w.search) } else { None };
+    let w_cell = if has_grid || has_trav { w(|w| w.force) } else { w(|w| w.search + w.force) };
+    let w_build = w(|w| w.bvh);
+    let specs = [
+        (Phase::Sort, times.grid, 0u64, 0u64, bytes.sort, w_sort),
+        (Phase::Build, times.build, 0, 0, 0, w_build),
+        (Phase::Refit, times.refit, 0, 0, 0, if times.build > 0.0 { None } else { w_build }),
+        (
+            Phase::Traverse,
+            times.traverse,
+            counts.aabb_tests,
+            counts.isect_force_evals,
+            bytes.traverse,
+            w_trav,
+        ),
+        (Phase::Cell, times.cell, 0, counts.cell_force_evals, bytes.cell, w_cell),
+        (Phase::Force, times.force_kernel, 0, 0, bytes.force_kernel, w(|w| w.force)),
+        (Phase::Integrate, times.integrate, 0, 0, bytes.integrate, w(|w| w.integrate)),
+    ];
+    let mut out = Vec::new();
+    let mut cursor = t0_ms;
+    for (phase, dur_s, aabb, isect, moved, wall_ms) in specs {
+        if dur_s <= 0.0 {
+            continue;
+        }
+        let dur_ms = dur_s * 1e3;
+        out.push(Span {
+            lane,
+            phase,
+            t0_ms: cursor,
+            dur_ms,
+            aabb_tests: aabb,
+            isect_force_evals: isect,
+            bytes_moved: moved,
+            wall_ms,
+        });
+        cursor += dur_ms;
+    }
+    out
+}
+
+/// The per-engine telemetry sink. One instance lives on each engine;
+/// every method is plain bookkeeping over already-computed simulated
+/// quantities, so recording can never perturb results.
+///
+/// Step protocol: the outermost step driver calls [`Recorder::begin_step`]
+/// (which returns `false` — and changes nothing — when a step is already
+/// open, so `step()` nested inside `step_resilient()` does not restart
+/// it), attempts lay spans from [`Recorder::attempt_base_ms`], and the
+/// opener finishes with [`Recorder::end_step`].
+#[derive(Clone, Debug)]
+pub struct Recorder {
+    trace: bool,
+    flight_len: usize,
+    /// The simulated run clock: end of the last completed step.
+    clock_ms: f64,
+    /// Where the current attempt's lanes start.
+    attempt_base: f64,
+    /// High-water mark of recorded span ends within the open step.
+    hi_ms: f64,
+    cur: Option<StepSpans>,
+    trace_steps: Vec<StepSpans>,
+    flight: VecDeque<StepSpans>,
+    lanes: BTreeMap<u32, String>,
+    metrics: Registry,
+}
+
+impl Default for Recorder {
+    fn default() -> Recorder {
+        Recorder::new()
+    }
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder {
+            trace: false,
+            flight_len: DEFAULT_FLIGHT_STEPS,
+            clock_ms: 0.0,
+            attempt_base: 0.0,
+            hi_ms: 0.0,
+            cur: None,
+            trace_steps: Vec::new(),
+            flight: VecDeque::new(),
+            lanes: BTreeMap::new(),
+            metrics: Registry::new(),
+        }
+    }
+
+    /// Retain every step for Chrome export (default: flight ring only).
+    pub fn enable_trace(&mut self) {
+        self.trace = true;
+    }
+
+    pub fn trace_enabled(&self) -> bool {
+        self.trace
+    }
+
+    /// Resize the flight ring (clamped to at least 1 step).
+    pub fn set_flight_len(&mut self, len: usize) {
+        self.flight_len = len.max(1);
+        while self.flight.len() > self.flight_len {
+            self.flight.pop_front();
+        }
+    }
+
+    /// Name a lane for trace export and flight dumps (last write wins,
+    /// so a mid-run backend fallback renames its lane).
+    pub fn name_lane(&mut self, lane: u32, name: String) {
+        self.lanes.insert(lane, name);
+    }
+
+    /// `(lane, name)` pairs, shard lanes first, global lane last.
+    pub fn lanes(&self) -> Vec<(u32, String)> {
+        self.lanes.iter().map(|(l, n)| (*l, n.clone())).collect()
+    }
+
+    /// Open a step. Returns `true` if this call opened it (the caller
+    /// then owns the matching [`Recorder::end_step`]); `false` when a
+    /// step is already open (nested driver).
+    pub fn begin_step(&mut self, step: u64) -> bool {
+        if self.cur.is_some() {
+            return false;
+        }
+        self.attempt_base = self.clock_ms;
+        self.hi_ms = self.clock_ms;
+        self.cur = Some(StepSpans {
+            step,
+            t0_ms: self.clock_ms,
+            dur_ms: 0.0,
+            spans: Vec::new(),
+            marks: Vec::new(),
+        });
+        true
+    }
+
+    pub fn step_open(&self) -> bool {
+        self.cur.is_some()
+    }
+
+    /// Start a new attempt within the open step: lanes recorded next lay
+    /// out from the current high-water mark, so discarded watchdog /
+    /// transient attempts stay visible sequentially.
+    pub fn begin_attempt(&mut self) {
+        self.attempt_base = self.hi_ms;
+    }
+
+    pub fn attempt_base_ms(&self) -> f64 {
+        self.attempt_base
+    }
+
+    /// Record one span (plus its metrics); returns the span's end time.
+    pub fn record_span(&mut self, span: Span, labels: &[(&str, &str)]) -> f64 {
+        let mut lab: Vec<(&str, &str)> = Vec::with_capacity(labels.len() + 1);
+        lab.extend_from_slice(labels);
+        lab.push(("phase", span.phase.label()));
+        self.metrics.hist_observe("orcs_phase_ms", &lab, span.dur_ms);
+        if span.aabb_tests > 0 {
+            self.metrics.counter_add("orcs_aabb_tests_total", labels, span.aabb_tests);
+        }
+        if span.isect_force_evals > 0 {
+            let n = span.isect_force_evals;
+            self.metrics.counter_add("orcs_isect_force_evals_total", labels, n);
+        }
+        if span.bytes_moved > 0 {
+            self.metrics.counter_add("orcs_bytes_moved_total", &lab, span.bytes_moved);
+        }
+        let end = span.t0_ms + span.dur_ms;
+        if end > self.hi_ms {
+            self.hi_ms = end;
+        }
+        if let Some(cur) = self.cur.as_mut() {
+            cur.spans.push(span);
+        }
+        end
+    }
+
+    /// Expand a priced `(PhaseTimes, OpCounts)` pair into spans on
+    /// `lane` starting at `base_ms`; returns the lane's end time.
+    pub fn record_phases(
+        &mut self,
+        lane: u32,
+        base_ms: f64,
+        times: &PhaseTimes,
+        counts: &OpCounts,
+        wall: Option<&WallPhases>,
+        labels: &[(&str, &str)],
+    ) -> f64 {
+        let mut end = base_ms;
+        for span in phase_spans(lane, base_ms, times, counts, wall) {
+            end = self.record_span(span, labels);
+        }
+        end
+    }
+
+    /// Record an instant mark at the step's current high-water time.
+    pub fn mark(&mut self, lane: u32, tag: &'static str, label: String) {
+        self.metrics.counter_add("orcs_marks_total", &[("tag", tag)], 1);
+        let t_ms = self.hi_ms;
+        if let Some(cur) = self.cur.as_mut() {
+            cur.marks.push(Mark { lane, t_ms, tag, label });
+        }
+    }
+
+    /// Mirror a resilience event as a global-lane mark + metrics count.
+    pub fn mark_event(&mut self, ev: &ResilienceEvent) {
+        let tag = ev.kind.tag();
+        self.metrics.counter_add("orcs_events_total", &[("kind", tag)], 1);
+        let t_ms = self.hi_ms;
+        if let Some(cur) = self.cur.as_mut() {
+            cur.marks.push(Mark { lane: GLOBAL_LANE, t_ms, tag, label: ev.to_string() });
+        }
+    }
+
+    /// Close the open step: `dur_ms` is the engine's full priced step
+    /// time (never less than the recorded span extent); advances the run
+    /// clock and rotates the flight ring. No-op if no step is open.
+    pub fn end_step(&mut self, dur_ms: f64) {
+        let Some(mut cur) = self.cur.take() else {
+            return;
+        };
+        cur.dur_ms = dur_ms.max(self.hi_ms - cur.t0_ms);
+        self.clock_ms = cur.t0_ms + cur.dur_ms;
+        self.metrics.counter_add("orcs_steps_total", &[], 1);
+        self.metrics.gauge_set("orcs_sim_clock_ms", &[], self.clock_ms);
+        if self.trace {
+            self.trace_steps.push(cur.clone());
+        }
+        self.flight.push_back(cur);
+        while self.flight.len() > self.flight_len {
+            self.flight.pop_front();
+        }
+    }
+
+    /// Push an errored step's partial record into the flight ring (after
+    /// dumping) so a later step can open cleanly.
+    pub fn abandon_step(&mut self) {
+        let hi = self.hi_ms;
+        if let Some(t0) = self.cur.as_ref().map(|c| c.t0_ms) {
+            self.end_step(hi - t0);
+        }
+    }
+
+    /// Full per-step trace (empty unless [`Recorder::enable_trace`]).
+    pub fn steps(&self) -> &[StepSpans] {
+        &self.trace_steps
+    }
+
+    /// The flight ring's current contents, oldest first (completed steps
+    /// only; an open step is included by [`Recorder::flight_dump`]).
+    pub fn flight_steps(&self) -> Vec<&StepSpans> {
+        self.flight.iter().collect()
+    }
+
+    pub fn metrics(&self) -> &Registry {
+        &self.metrics
+    }
+
+    pub fn metrics_mut(&mut self) -> &mut Registry {
+        &mut self.metrics
+    }
+
+    fn lane_name(&self, lane: u32) -> String {
+        if let Some(n) = self.lanes.get(&lane) {
+            return n.clone();
+        }
+        if lane == GLOBAL_LANE {
+            "global".to_string()
+        } else {
+            format!("lane {lane}")
+        }
+    }
+
+    /// Human-readable timeline of the flight ring (plus the currently
+    /// open step, if an error left one behind) — the fault-forensics
+    /// dump the engines emit alongside a surfaced `SimError`.
+    pub fn flight_dump(&self) -> String {
+        let steps: Vec<&StepSpans> = self.flight.iter().chain(self.cur.as_ref()).collect();
+        if steps.is_empty() {
+            return String::new();
+        }
+        let mut s = format!("flight recorder — last {} step(s):\n", steps.len());
+        for st in steps {
+            s.push_str(&format!(
+                "  step {:>4} @ {:>10.3} ms (+{:.3} ms)\n",
+                st.step, st.t0_ms, st.dur_ms
+            ));
+            let mut by_lane: BTreeMap<u32, Vec<&Span>> = BTreeMap::new();
+            for sp in &st.spans {
+                by_lane.entry(sp.lane).or_default().push(sp);
+            }
+            for (lane, spans) in &by_lane {
+                let parts: Vec<String> = spans
+                    .iter()
+                    .map(|sp| format!("{} {:.3}", sp.phase.label(), sp.dur_ms))
+                    .collect();
+                s.push_str(&format!("    [{}] {} ms\n", self.lane_name(*lane), parts.join(" | ")));
+            }
+            for m in &st.marks {
+                s.push_str(&format!("    ! {}\n", m.label));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn times() -> PhaseTimes {
+        PhaseTimes {
+            build: 1e-3,
+            refit: 0.0,
+            traverse: 2e-3,
+            force_kernel: 5e-4,
+            integrate: 1e-4,
+            grid: 0.0,
+            cell: 0.0,
+        }
+    }
+
+    fn counts() -> OpCounts {
+        OpCounts { aabb_tests: 100, sphere_tests: 40, nbr_list_writes: 10, ..Default::default() }
+    }
+
+    #[test]
+    fn phase_spans_lay_out_sequentially_and_skip_zero_phases() {
+        let spans = phase_spans(3, 10.0, &times(), &counts(), None);
+        let labels: Vec<&str> = spans.iter().map(|s| s.phase.label()).collect();
+        assert_eq!(labels, vec!["build", "traverse", "force", "integrate"]);
+        let mut cursor = 10.0;
+        for s in &spans {
+            assert_eq!(s.lane, 3);
+            assert_eq!(s.t0_ms, cursor, "{}", s.phase.label());
+            assert!(s.wall_ms.is_none());
+            cursor += s.dur_ms;
+        }
+        let trav = spans.iter().find(|s| s.phase == Phase::Traverse).expect("traverse span");
+        assert_eq!(trav.aabb_tests, 100);
+        assert!(trav.bytes_moved > 0);
+    }
+
+    #[test]
+    fn wall_maps_to_build_and_traverse_for_rt_backends() {
+        let wall = WallPhases { bvh: 1.0, search: 2.0, force: 3.0, integrate: 4.0 };
+        let spans = phase_spans(0, 0.0, &times(), &counts(), Some(&wall));
+        let get = |p: Phase| spans.iter().find(|s| s.phase == p).and_then(|s| s.wall_ms);
+        assert_eq!(get(Phase::Build), Some(1.0e3));
+        assert_eq!(get(Phase::Traverse), Some(2.0e3));
+        assert_eq!(get(Phase::Force), Some(3.0e3));
+        assert_eq!(get(Phase::Integrate), Some(4.0e3));
+    }
+
+    #[test]
+    fn step_protocol_nests_and_advances_the_clock() {
+        let mut r = Recorder::new();
+        assert!(r.begin_step(0));
+        assert!(!r.begin_step(0), "nested begin must not reopen");
+        let base = r.attempt_base_ms();
+        let end = r.record_phases(GLOBAL_LANE, base, &times(), &counts(), None, &[]);
+        assert!(end > base);
+        r.end_step(end - base);
+        assert!(!r.step_open());
+        assert!(r.begin_step(1));
+        assert_eq!(r.attempt_base_ms(), end, "next step starts where the last ended");
+        r.end_step(0.5);
+        assert_eq!(r.flight_steps().len(), 2);
+        assert!(r.steps().is_empty(), "trace retention is opt-in");
+    }
+
+    #[test]
+    fn flight_ring_is_bounded_and_keeps_the_tail() {
+        let mut r = Recorder::new();
+        r.set_flight_len(4);
+        for i in 0..10u64 {
+            r.begin_step(i);
+            r.end_step(1.0);
+        }
+        let steps: Vec<u64> = r.flight_steps().iter().map(|s| s.step).collect();
+        assert_eq!(steps, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn flight_dump_includes_open_step_and_marks() {
+        let mut r = Recorder::new();
+        r.begin_step(7);
+        let base = r.attempt_base_ms();
+        r.record_phases(2, base, &times(), &counts(), None, &[("shard", "2")]);
+        r.mark(GLOBAL_LANE, "checkpoint", "checkpoint @ step 7".to_string());
+        let dump = r.flight_dump();
+        assert!(dump.contains("step    7"), "{dump}");
+        assert!(dump.contains("traverse"), "{dump}");
+        assert!(dump.contains("! checkpoint @ step 7"), "{dump}");
+        r.abandon_step();
+        assert!(!r.step_open());
+        assert_eq!(r.flight_steps().len(), 1);
+    }
+
+    #[test]
+    fn trace_mode_retains_steps_for_export() {
+        let mut r = Recorder::new();
+        r.enable_trace();
+        r.name_lane(GLOBAL_LANE, "RTXPRO (RT-REF)".to_string());
+        for i in 0..3u64 {
+            r.begin_step(i);
+            let base = r.attempt_base_ms();
+            let end = r.record_phases(GLOBAL_LANE, base, &times(), &counts(), None, &[]);
+            r.end_step(end - base);
+        }
+        assert_eq!(r.steps().len(), 3);
+        chrome::validate(r.steps()).expect("recorded trace must validate");
+        let js = chrome::render(r.steps(), &r.lanes());
+        chrome::validate_json(&js).expect("rendered trace must be balanced");
+        assert!(!r.metrics().is_empty());
+    }
+}

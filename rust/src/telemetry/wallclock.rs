@@ -1,0 +1,52 @@
+//! The crate's **single blessed wall-clock site**.
+//!
+//! Wall time is *report-only*: it never feeds a physics decision, a
+//! rebuild-policy input, or anything else that could make a traced run
+//! diverge from an untraced one. Every backend and both engines meter
+//! elapsed host time exclusively through [`WallTimer`], so the
+//! `D-WALL-CLOCK` lint rule has exactly one allowed site (this file —
+//! see the `[[allow]]` entry in `lint.toml`) and a raw clock anywhere
+//! else in a determinism-scoped path is a CI failure.
+//!
+//! The simulated device time that drives *all* decisions comes from
+//! [`crate::rtcore::timing`], not from here.
+
+// lint:allow(D-WALL-CLOCK): the single blessed wall-clock site; report-only metering
+use std::time::Instant;
+
+/// An opaque wall-clock stopwatch. The underlying clock value never
+/// escapes this module — callers only see elapsed seconds, and only for
+/// reporting.
+#[derive(Clone, Copy, Debug)]
+pub struct WallTimer {
+    // lint:allow(D-WALL-CLOCK): blessed site — the raw clock stays private to this module
+    t0: Instant,
+}
+
+impl WallTimer {
+    /// Start timing.
+    pub fn start() -> WallTimer {
+        // lint:allow(D-WALL-CLOCK): blessed site — capture for report-only metering
+        WallTimer { t0: Instant::now() }
+    }
+
+    /// Seconds elapsed since [`WallTimer::start`]. Report-only: must not
+    /// feed any decision that affects simulation results.
+    pub fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_is_nonnegative_and_monotone() {
+        let t = WallTimer::start();
+        let a = t.elapsed_s();
+        let b = t.elapsed_s();
+        assert!(a >= 0.0);
+        assert!(b >= a);
+    }
+}

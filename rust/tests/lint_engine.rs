@@ -51,6 +51,13 @@ fn fixture_d_wall_clock() {
     check_fixture("d_wall_clock", "D-WALL-CLOCK", 3);
 }
 
+/// A wall clock in a backend *step* path fires even now that the blessed
+/// `telemetry::wallclock` module exists — only that one site is allowed.
+#[test]
+fn fixture_d_wall_clock_backend() {
+    check_fixture("d_wall_clock_backend", "D-WALL-CLOCK", 3);
+}
+
 #[test]
 fn fixture_d_fp_parallel() {
     check_fixture("d_fp_parallel", "D-FP-PARALLEL", 7);

@@ -1,0 +1,8 @@
+// Fixture: a wall clock in a backend step path still fires the rule.
+pub fn step_forces(pos: &mut [f32]) -> f64 {
+    let t0 = std::time::Instant::now();
+    for p in pos.iter_mut() {
+        *p += 0.5;
+    }
+    t0.elapsed().as_secs_f64()
+}

@@ -1,0 +1,9 @@
+// Clean twin: wall metering arrives as a value produced by the blessed
+// telemetry::wallclock::WallTimer at the call boundary, so the step path
+// itself never touches a raw clock.
+pub fn step_forces(pos: &mut [f32], elapsed_s: f64) -> f64 {
+    for p in pos.iter_mut() {
+        *p += 0.5;
+    }
+    elapsed_s
+}
