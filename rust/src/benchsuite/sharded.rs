@@ -15,10 +15,17 @@
 //! 2. **OOM relief**: on a deliberately small device the single-domain
 //!    fixed-slot list allocation (`n · k_max · 4` with `k_max → n` for
 //!    log-normal clusters) exceeds VRAM, while `S = 2` sharding divides the
-//!    owned count per device and completes.
+//!    owned count per device and completes — and the same scene runs
+//!    **listless** under `--backend orcs-forces` with zero list bytes
+//!    metered on any shard.
 //! 3. **Heterogeneous fleet**: `S = 2` bound round-robin to TITAN RTX +
 //!    L40; aggregate step time is the straggler (the Turing part), energy
 //!    is the fleet sum.
+//! 4. **Sharded backend matrix**: RT-REF / ORCS-forces / ORCS-persé ×
+//!    `S ∈ {1, 2}` on a uniform-radius cluster — the listless backends
+//!    meter zero list bytes at every grid.
+//! 5. **Halo-gather scaling**: total cell-bucketed gather cost across all
+//!    `S³` shards vs `S` (the old 27-shift scan was `O(n · S³)`).
 
 use anyhow::Result;
 
@@ -26,10 +33,12 @@ use super::common::BenchOpts;
 use crate::coordinator::metrics::fmt_ms;
 use crate::coordinator::report::{results_dir, CsvWriter, TextTable};
 use crate::core::config::{Boundary, ParticleDist, RadiusDist, ShardSpec, SimConfig};
+use crate::frnn::ApproachKind;
 use crate::physics::state::SimState;
 use crate::rtcore::profile::{L40, TITANRTX};
 use crate::rtcore::HwProfile;
-use crate::shard::{ShardedConfig, ShardedEngine, ShardedRunSummary};
+use crate::shard::{decomp, ShardGrid, ShardedConfig, ShardedEngine, ShardedRunSummary};
+use crate::telemetry::wallclock::WallTimer;
 
 const N_DEFAULT: usize = 4_000;
 const STEPS_DEFAULT: usize = 24;
@@ -136,6 +145,27 @@ pub fn hot_cold_engine(opts: &BenchOpts, n: usize) -> anyhow::Result<ShardedEngi
     Ok(engine)
 }
 
+fn run_with(
+    opts: &BenchOpts,
+    sim: SimConfig,
+    s: usize,
+    fleet: Vec<&'static HwProfile>,
+    steps: usize,
+    backend: ApproachKind,
+) -> Result<ShardedRunSummary> {
+    let cfg = ShardedConfig {
+        policy: "gradient".into(),
+        fleet,
+        threads: opts.threads,
+        check_oom: true,
+        backend,
+        ..ShardedConfig::new(sim, ShardSpec::new(s))
+    };
+    let mut engine = ShardedEngine::new(cfg, opts.kernels.clone())?;
+    center_positions(&mut engine.state);
+    engine.run(steps, false)
+}
+
 fn run_sharded(
     opts: &BenchOpts,
     n: usize,
@@ -143,16 +173,7 @@ fn run_sharded(
     fleet: Vec<&'static HwProfile>,
     steps: usize,
 ) -> Result<ShardedRunSummary> {
-    let cfg = ShardedConfig {
-        policy: "gradient".into(),
-        fleet,
-        threads: opts.threads,
-        check_oom: true,
-        ..ShardedConfig::new(cluster_sim(opts, n), ShardSpec::new(s))
-    };
-    let mut engine = ShardedEngine::new(cfg, opts.kernels.clone())?;
-    center_positions(&mut engine.state);
-    engine.run(steps, false)
+    run_with(opts, cluster_sim(opts, n), s, fleet, steps, ApproachKind::RtRef)
 }
 
 pub fn run(opts: &BenchOpts) -> Result<()> {
@@ -264,6 +285,23 @@ pub fn run(opts: &BenchOpts) -> Result<()> {
     );
     write_summary(&mut csv, &single)?;
     write_summary(&mut csv, &sharded)?;
+    // the same log-normal cluster, still on the tiny device, but listless:
+    // ORCS-forces never allocates a neighbor list, so nothing can OOM
+    let listless = run_with(
+        opts,
+        cluster_sim(opts, N_OOM),
+        2,
+        vec![&SMALL_VRAM],
+        STEPS_OOM,
+        ApproachKind::OrcsForces,
+    )?;
+    let max_listless = listless.per_shard.iter().map(|t| t.max_list_bytes).max().unwrap_or(0);
+    println!(
+        "  2x2x2 ORCS-forces (listless): {} (max per-shard list {} bytes)",
+        if listless.oom { "OOM (unexpected)" } else { "completed" },
+        max_listless,
+    );
+    write_summary(&mut csv, &listless)?;
 
     // --- Part 3: heterogeneous fleet ------------------------------------
     let fleet = run_sharded(opts, n, 2, vec![&TITANRTX, &L40], steps.min(8))?;
@@ -275,6 +313,70 @@ pub fn run(opts: &BenchOpts) -> Result<()> {
         fleet.ee,
     );
     write_summary(&mut csv, &fleet)?;
+
+    // --- Part 4: sharded backend matrix ---------------------------------
+    // RT-REF / ORCS-forces / ORCS-persé × grid, on a uniform-radius cluster
+    // (persé's scenario rule). The listless backends must meter zero list
+    // bytes on every shard at every grid.
+    let (mn, msteps) = opts.size(2_000, 8);
+    let uniform = SimConfig { radius_dist: RadiusDist::Const(40.0), ..cluster_sim(opts, mn) };
+    let mut t = TextTable::new(&["backend", "grid", "avg step ms", "max list B", "EE int/J"]);
+    for backend in [ApproachKind::RtRef, ApproachKind::OrcsForces, ApproachKind::OrcsPerse] {
+        for s in [1usize, 2] {
+            let summary = run_with(opts, uniform.clone(), s, vec![opts.hw], msteps, backend)?;
+            let max_bytes = summary.per_shard.iter().map(|p| p.max_list_bytes).max().unwrap_or(0);
+            t.row(vec![
+                backend.label().to_string(),
+                summary.grid.clone(),
+                fmt_ms(summary.avg_sim_ms),
+                max_bytes.to_string(),
+                format!("{:.1}", summary.ee),
+            ]);
+            write_summary(&mut csv, &summary)?;
+        }
+    }
+    println!("\n--- sharded backend matrix (n={mn}, uniform-radius cluster) ---");
+    println!("{}", t.render());
+
+    // --- Part 5: cell-bucketed halo gather scaling ----------------------
+    // The retired 27-shift gather scanned all n particles per shard: total
+    // work O(n · S³). The bucketed gather touches only the cells
+    // overlapping each shard's halo slab, so the total across all S³
+    // shards stays near-flat as the grid refines.
+    let gn = n.min(4_000);
+    let mut gstate = SimState::from_config(&cluster_sim(opts, gn));
+    center_positions(&mut gstate);
+    let halo = gstate.r_max;
+    let mut t = TextTable::new(&["grid", "shards", "ghost entries", "gather ms (all shards)"]);
+    for s in [1usize, 2, 3, 4] {
+        let grid = ShardGrid::new(ShardSpec::new(s), gstate.box_l);
+        let owner: Vec<u32> = gstate.pos.iter().map(|&p| grid.owner_of(p) as u32).collect();
+        let timer = WallTimer::start();
+        let cells = decomp::halo_grid(&gstate.pos, gstate.box_l, halo);
+        let mut ghosts = 0u64;
+        let mut buf = Vec::new();
+        for idx in 0..grid.count() {
+            decomp::gather_ghosts(
+                &grid,
+                idx,
+                &gstate.pos,
+                &owner,
+                halo,
+                gstate.boundary,
+                &cells,
+                &mut buf,
+            );
+            ghosts += buf.len() as u64;
+        }
+        t.row(vec![
+            format!("{s}x{s}x{s}"),
+            grid.count().to_string(),
+            ghosts.to_string(),
+            fmt_ms(timer.elapsed_s() * 1e3),
+        ]);
+    }
+    println!("--- cell-bucketed halo gather (n={gn}) — total cost vs S ---");
+    println!("{}", t.render());
 
     println!("\nCSV: {}", results_dir().join("sharded_scaling.csv").display());
     Ok(())
@@ -312,6 +414,20 @@ mod tests {
         let max_shard = sharded.per_shard.iter().map(|t| t.max_list_bytes).max().unwrap();
         assert!(max_shard <= SMALL_VRAM.vram_bytes);
         assert!(max_shard * 2 < single.oom_bytes, "sharding must shrink the allocation");
+        // the same scene listless: no list allocation exists to overflow
+        let listless = run_with(
+            &o,
+            cluster_sim(&o, N_OOM),
+            2,
+            vec![&SMALL_VRAM],
+            STEPS_OOM,
+            ApproachKind::OrcsForces,
+        )
+        .unwrap();
+        assert!(!listless.oom, "listless backend must never OOM");
+        assert_eq!(listless.steps, STEPS_OOM as u64);
+        let max_listless = listless.per_shard.iter().map(|t| t.max_list_bytes).max().unwrap();
+        assert_eq!(max_listless, 0, "ORCS-forces must meter zero list bytes");
     }
 
     #[test]

@@ -111,6 +111,18 @@ impl Args {
         }
     }
 
+    /// Sharded-engine backend (`--backend`, with `--approach` accepted as
+    /// an alias): the FRNN backend every shard runs. Only the RT trio has a
+    /// shard-local traversal; the engine itself validates that.
+    pub fn backend(&self, default: ApproachKind) -> Result<ApproachKind> {
+        match self.get("backend").or_else(|| self.get("approach")) {
+            None => Ok(default),
+            Some(a) => ApproachKind::parse(a).ok_or_else(|| {
+                anyhow::anyhow!("bad --backend {a} (rt-ref|orcs-forces|orcs-perse)")
+            }),
+        }
+    }
+
     pub fn hw(&self) -> Result<&'static HwProfile> {
         match self.get("hw") {
             None => Ok(profile::DEFAULT_GPU),
@@ -185,7 +197,8 @@ USAGE:
   orcs simulate   [scenario flags] [--approach A] [--steps N]
                   [--policy gradient|gradient-ee|avg|fixed-K]
                   [--force-path xla|rust] [--hw GPU] [--trace out.csv]
-                  [--shards S [--fleet GPU[,GPU...]]] [telemetry flags]
+                  [--shards S [--backend B] [--fleet GPU[,GPU...]]]
+                  [telemetry flags]
   orcs trace      run with full tracing on, then emit the Chrome trace,
                   Prometheus/JSON metrics, and a phase-breakdown table
                   (same scenario/shard/resilience flags as simulate)
@@ -214,6 +227,9 @@ Scenario flags:
 Sharding flags:
   --shards S           decompose into an SxSxS shard grid (sharded engine)
   --fleet L            comma-separated GPU list bound round-robin to shards
+  --backend B          rt-ref|orcs-forces|orcs-perse — the backend every
+                       shard runs (default rt-ref; listless backends never
+                       allocate a neighbor list, so they cannot OOM)
 Resilience flags:
   --faults SPEC        inject faults: rand:SEED:RATE, or a scripted list of
                        transient@K, nan@K, lost@K:SHARD, squeeze@K:BYTES,
@@ -323,6 +339,18 @@ mod tests {
         assert_eq!(parse(&["x"]).shards().unwrap(), None);
         assert_eq!(parse(&["x", "--shards", "2"]).shards().unwrap(), Some(ShardSpec::new(2)));
         assert!(parse(&["x", "--shards", "2x2x3"]).shards().is_err());
+        let d = ApproachKind::RtRef;
+        assert_eq!(parse(&["x"]).backend(d).unwrap(), ApproachKind::RtRef);
+        assert_eq!(
+            parse(&["x", "--backend", "orcs-perse"]).backend(d).unwrap(),
+            ApproachKind::OrcsPerse
+        );
+        // --approach is accepted as an alias for sharded runs
+        assert_eq!(
+            parse(&["x", "--approach", "forces"]).backend(d).unwrap(),
+            ApproachKind::OrcsForces
+        );
+        assert!(parse(&["x", "--backend", "zzz"]).backend(d).is_err());
         assert!(parse(&["x"]).fleet().unwrap().is_none());
         let f = parse(&["x", "--fleet", "titanrtx,l40"]).fleet().unwrap().unwrap();
         assert_eq!(f.len(), 2);

@@ -11,11 +11,14 @@
 //!   larger sphere) and handles the pair; ties broken by id.
 //!
 //! On real hardware the scatter is `atomicAdd`; we reproduce it race-free
-//! with per-thread force buffers + a deterministic reduction, while
-//! *counting* the atomics for the timing model (DESIGN.md
-//! §Hardware-Adaptation).
+//! by routing every discovered pair into a transient canonical CSR and
+//! summing each particle's contributions in **ascending global id** order
+//! (`rt_common::canonical_force_sum`), while *counting* the atomics for the
+//! timing model (DESIGN.md §Hardware-Adaptation). The canonical order makes
+//! the listless force array byte-for-byte equal to the list pipeline's —
+//! the invariant that lets the sharded engine run this backend
+//! transparently.
 
-use crate::core::vec3::Vec3;
 use crate::frnn::rt_common::{fold_stats, gamma_trigger, launch_rays, BvhManager};
 use crate::frnn::zorder::ZOrderCache;
 use crate::frnn::{Backend, StepCtx, StepResult, WallPhases};
@@ -76,58 +79,28 @@ impl Backend for OrcsForces {
         );
         wall.bvh = t0.elapsed_s();
 
-        // Phase 2: batched traversal with in-shader force scatter, swept in
-        // Morton order of the ray origins (coherent rays share subtrees, so
-        // BVH4 node fetches stay cache-hot — and the scatter buffer is
-        // touched in spatially-local runs too). Each worker scatters into a
-        // dense thread-local buffer (epoch-stamped so it re-zeroes lazily)
-        // and flushes the touched entries as a sparse per-chunk delta list;
-        // the deltas are applied in chunk order and the Morton permutation
-        // is thread-count independent, so the reduction is bitwise
-        // deterministic regardless of which worker ran which chunk — the
-        // race-free substitute for the GPU's atomicAdd (DESIGN.md
-        // §Hardware-Adaptation).
+        // Phase 2: batched traversal, swept in Morton order of the ray
+        // origins (coherent rays share subtrees, so BVH4 node fetches stay
+        // cache-hot). Discovery emits each visited pair toward *both*
+        // endpoints — the in-shader symmetric scatter's footprint — into a
+        // transient canonical CSR (ascending global id per target, deduped).
+        // On real hardware the scatter is an unordered `atomicAdd`; the
+        // canonical-order gather below is its race-free reproduction, and
+        // because the accumulation order per target is pinned to ascending
+        // id it is byte-for-byte the sum `RustKernels::lj_forces` (and the
+        // brute min-image oracle) produces — the invariant the sharded
+        // engine's transparency contract rides on.
         let t1 = WallTimer::start();
         let bvh = self.mgr.bvh();
         let trigger = gamma_trigger(state);
-        struct Scatter {
-            buf: Vec<Vec3>,
-            stamp: Vec<u32>,
-            epoch: u32,
-            touched: Vec<u32>,
-        }
-        struct ChunkOut {
-            deltas: Vec<(u32, Vec3)>,
-            pairs: u64,
-            evals: u64,
-        }
         let (chunks, stats) = bvh.query_batch_with_order(
             self.zcache.order(),
             ctx.threads,
-            || Scatter {
-                buf: vec![Vec3::ZERO; n],
-                stamp: vec![0u32; n],
-                epoch: 0,
-                touched: Vec::new(),
-            },
-            |sc, scratch, ids| {
-                sc.epoch += 1;
-                sc.touched.clear();
-                let mut pairs = 0u64;
-                let mut evals = 0u64;
+            || (),
+            |_, scratch, ids| {
+                let mut entries: Vec<(u32, u32)> = Vec::new();
                 for &iu in ids {
                     let i = iu as usize;
-                    let r_i = state.radius[i];
-                    let (buf, stamp, touched) =
-                        (&mut sc.buf, &mut sc.stamp, &mut sc.touched);
-                    let epoch = sc.epoch;
-                    let mut add = |idx: usize, f: Vec3| {
-                        if stamp[idx] != epoch {
-                            stamp[idx] = epoch;
-                            touched.push(idx as u32);
-                        }
-                        buf[idx] += f;
-                    };
                     launch_rays(
                         bvh,
                         i,
@@ -137,45 +110,60 @@ impl Backend for OrcsForces {
                         state.box_l,
                         trigger,
                         scratch,
-                        |j, dx| {
-                            let r_j = state.radius[j];
-                            let mutual = dx.norm2() < r_i * r_i;
-                            if !handles_pair(i, r_i, j, r_j, mutual) {
-                                return;
-                            }
-                            evals += 1;
-                            if let Some(fij) = state.params.pair_force(dx, r_i, r_j) {
-                                add(i, fij);
-                                add(j, -fij); // "atomicAdd" on real hardware
-                                pairs += 1;
-                            }
+                        |j, _dx| {
+                            entries.push((iu, j as u32));
+                            entries.push((j as u32, iu)); // scatter to the other endpoint
                         },
                     );
                 }
-                // Flush touched entries (zeroing them for the next chunk).
-                let mut deltas = Vec::with_capacity(sc.touched.len());
-                for &idx in &sc.touched {
-                    let idx = idx as usize;
-                    deltas.push((idx as u32, sc.buf[idx]));
-                    sc.buf[idx] = Vec3::ZERO;
-                }
-                ChunkOut { deltas, pairs, evals }
+                entries
             },
         );
+        fold_stats(&mut counts, &stats);
 
-        // Chunk-ordered deterministic reduction.
-        let mut force = vec![Vec3::ZERO; n];
+        let csr = crate::frnn::rt_common::canonical_csr(n, ctx.threads, &chunks);
+
+        // Canonical-order force gather + in-shader metering. Each pair is
+        // *handled* by exactly one endpoint thread (see `handles_pair`); the
+        // handler recomputation below reconstructs, per canonical entry,
+        // whether this target's ray was the handler — so the metered
+        // evals/atomics match the GPU scatter even though the deterministic
+        // reproduction sums per target.
+        let per_target = crate::parallel::parallel_map(n, ctx.threads, |t| {
+            let r_t = state.radius[t];
+            let mut evals = 0u64;
+            let mut pairs = 0u64;
+            let f = crate::frnn::rt_common::canonical_force_sum(
+                &state.pos,
+                &state.radius,
+                &state.params,
+                state.boundary,
+                state.box_l,
+                t,
+                csr.sources(t),
+                |s, d2, in_range| {
+                    let r_s = state.radius[s];
+                    let t_sees = d2 < r_s * r_s;
+                    let mutual = t_sees && d2 < r_t * r_t;
+                    if t_sees && handles_pair(t, r_t, s, r_s, mutual) {
+                        evals += 1;
+                        if in_range {
+                            pairs += 1; // "atomicAdd" × 2 on real hardware
+                        }
+                    }
+                },
+            );
+            (f, evals, pairs)
+        });
         let mut pairs = 0u64;
         let mut evals = 0u64;
-        for c in chunks {
-            for (idx, f) in c.deltas {
-                force[idx as usize] += f;
-            }
-            pairs += c.pairs;
-            evals += c.evals;
+        let mut force = Vec::with_capacity(n);
+        for (f, e, p) in per_target {
+            force.push(f);
+            evals += e;
+            pairs += p;
         }
         state.force = force;
-        fold_stats(&mut counts, &stats);
         counts.isect_force_evals += evals;
         counts.atomic_adds += 2 * pairs; // both endpoints, atomically
         counts.interactions += pairs;

@@ -73,10 +73,14 @@ impl Backend for OrcsPerse {
         // Phase 2: the entire step inside the RT pipeline — batched sweep
         // in Morton order of the ray origins (coherent rays share subtrees,
         // keeping BVH4 node fetches cache-hot), one payload per ray thread,
-        // in-shader integration. Each chunk returns its particles'
-        // integrated (pos, vel) pairs keyed by particle id; slots are
-        // disjoint so the scatter back to particle order is trivially
-        // deterministic.
+        // in-shader integration. Each ray's hit set is canonicalized
+        // (ascending global id, deduped) before the payload accumulates, so
+        // the f32 sum is byte-for-byte `RustKernels::lj_forces`'s row for
+        // the particle — discovery order, thread count and (in the sharded
+        // engine) shard-local ghost layout all drop out of the result. Each
+        // chunk returns its particles' payload + integrated (pos, vel)
+        // keyed by particle id; slots are disjoint so the scatter back to
+        // particle order is trivially deterministic.
         let t1 = WallTimer::start();
         let bvh = self.mgr.bvh();
         // uniform radius: gamma trigger is *the* radius (§3.3 fast case)
@@ -86,8 +90,8 @@ impl Backend for OrcsPerse {
         struct ChunkOut {
             /// Particle ids swept by this chunk (Morton order).
             ids: Vec<u32>,
-            /// (new_pos, new_vel) per particle, parallel to `ids`.
-            moved: Vec<(Vec3, Vec3)>,
+            /// (payload, new_pos, new_vel) per particle, parallel to `ids`.
+            moved: Vec<(Vec3, Vec3, Vec3)>,
             accums: u64,
         }
         let (chunks, stats) = bvh.query_batch_with_order(
@@ -100,12 +104,10 @@ impl Backend for OrcsPerse {
                     moved: Vec::with_capacity(ids.len()),
                     accums: 0,
                 };
+                let mut hits: Vec<u32> = Vec::new();
                 for &iu in ids {
                     let i = iu as usize;
-                    // ray payload: the force accumulator
-                    let mut payload = Vec3::ZERO;
-                    let r = state.radius[i];
-                    let accums = &mut out.accums;
+                    hits.clear();
                     launch_rays(
                         bvh,
                         i,
@@ -115,11 +117,22 @@ impl Backend for OrcsPerse {
                         box_l,
                         trigger,
                         scratch,
-                        |j, dx| {
-                            if let Some(fij) =
-                                state.params.pair_force(dx, r, state.radius[j])
-                            {
-                                payload += fij;
+                        |j, _dx| hits.push(j as u32),
+                    );
+                    hits.sort_unstable();
+                    hits.dedup();
+                    // ray payload: the canonical-order force accumulator
+                    let accums = &mut out.accums;
+                    let payload = crate::frnn::rt_common::canonical_force_sum(
+                        &state.pos,
+                        &state.radius,
+                        &state.params,
+                        boundary_mode,
+                        box_l,
+                        i,
+                        &hits,
+                        |_, _, in_range| {
+                            if in_range {
                                 *accums += 1;
                             }
                         },
@@ -129,27 +142,33 @@ impl Backend for OrcsPerse {
                     let mut v = state.vel[i] + f * dt;
                     let mut p = state.pos[i] + v * dt;
                     boundary::apply(boundary_mode, box_l, &mut p, &mut v);
-                    out.moved.push((p, v));
+                    out.moved.push((payload, p, v));
                 }
                 out
             },
         );
 
         // Double-buffered positions: rays read the step's inputs above,
-        // integrated outputs land in fresh buffers here.
+        // integrated outputs land in fresh buffers here. The uncapped
+        // payload is also published as the step's force array — exactly
+        // what the list pipeline's force kernel would have stored — so
+        // listless runs stay force-bitwise comparable, not just pos/vel.
         let mut accums = 0u64;
         let mut new_pos = state.pos.clone();
         let mut new_vel = state.vel.clone();
+        let mut new_force = state.force.clone();
         for c in chunks {
             accums += c.accums;
-            for (k, (p, v)) in c.moved.into_iter().enumerate() {
+            for (k, (payload, p, v)) in c.moved.into_iter().enumerate() {
                 let i = c.ids[k] as usize;
+                new_force[i] = payload;
                 new_pos[i] = p;
                 new_vel[i] = v;
             }
         }
         state.pos = new_pos;
         state.vel = new_vel;
+        state.force = new_force;
         state.step_count += 1;
         fold_stats(&mut counts, &stats);
         counts.payload_accums += accums;

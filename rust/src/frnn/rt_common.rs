@@ -218,6 +218,119 @@ pub fn gamma_trigger(state: &SimState) -> f32 {
     state.r_max
 }
 
+/// Canonical per-target CSR assembled from unordered `(target, source)`
+/// candidate entries: count → exclusive scan → chunk-ordered fill, then each
+/// segment is sorted ascending and deduplicated in place (dedup also
+/// collapses gamma-ray double discoveries). `lens[t]` is the deduplicated
+/// segment length; the entries live at `items[offsets[t]..][..lens[t]]`.
+///
+/// This is the listless backends' substitute for a stored neighbor list: the
+/// structure exists only for the duration of the step so the canonical
+/// (ascending-global-id) accumulation order is pinned, and is never metered
+/// as a device allocation.
+pub struct CanonicalCsr {
+    pub offsets: Vec<u32>,
+    pub lens: Vec<u32>,
+    pub items: Vec<u32>,
+}
+
+impl CanonicalCsr {
+    #[inline]
+    pub fn sources(&self, t: usize) -> &[u32] {
+        let off = self.offsets[t] as usize;
+        &self.items[off..off + self.lens[t] as usize]
+    }
+}
+
+pub fn canonical_csr(n: usize, threads: usize, chunks: &[Vec<(u32, u32)>]) -> CanonicalCsr {
+    let mut raw_lens = vec![0u32; n];
+    for c in chunks {
+        for &(t, _) in c {
+            raw_lens[t as usize] += 1;
+        }
+    }
+    let offsets = crate::parallel::exclusive_scan_u32(&raw_lens, threads);
+    let total = offsets[n] as usize;
+    let mut items = vec![0u32; total];
+    let mut cursor: Vec<u32> = offsets[..n].to_vec();
+    for c in chunks {
+        for &(t, s) in c {
+            let dst = cursor[t as usize];
+            items[dst as usize] = s;
+            cursor[t as usize] = dst + 1;
+        }
+    }
+    // Canonicalize each segment in place (segments are disjoint slices, so
+    // the parallel sweep is race-free; per-target results are independent of
+    // chunk assignment).
+    let mut lens = vec![0u32; n];
+    {
+        let items_ptr = crate::parallel::SendPtr(items.as_mut_ptr());
+        let lens_ptr = crate::parallel::SendPtr(lens.as_mut_ptr());
+        let offsets_ref: &[u32] = &offsets;
+        let raw_ref: &[u32] = &raw_lens;
+        crate::parallel::parallel_for_chunks(n, threads, |_, range| {
+            let (items_p, lens_p) = (items_ptr, lens_ptr);
+            for t in range {
+                let off = offsets_ref[t] as usize;
+                let raw = raw_ref[t] as usize;
+                // SAFETY: [off, off+raw) ranges are disjoint across targets
+                // (exclusive scan of raw_lens) and lens[t] is written by
+                // exactly one chunk.
+                let seg = unsafe {
+                    std::slice::from_raw_parts_mut(items_p.0.add(off), raw)
+                };
+                seg.sort_unstable();
+                let mut w = 0usize;
+                for r in 0..raw {
+                    if r == 0 || seg[r] != seg[w - 1] {
+                        seg[w] = seg[r];
+                        w += 1;
+                    }
+                }
+                unsafe { *lens_p.0.add(t) = w as u32 };
+            }
+        });
+    }
+    CanonicalCsr { offsets, lens, items }
+}
+
+/// Canonical-order pair-force gather for one target particle: sum the pair
+/// forces over `sources` (ascending global id, deduplicated), recomputing
+/// each displacement with [`crate::physics::boundary::displacement`] — this
+/// is byte-for-byte the f32 accumulation `RustKernels::lj_forces` performs
+/// for the particle, which is what makes every listless path (single-domain
+/// ORCS, sharded ORCS, the OOM fallback rung) bitwise identical to the list
+/// pipeline and to the brute min-image oracle. `visit(source, d2, in_range)`
+/// fires per source so callers can meter the in-shader work without
+/// perturbing the sum.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn canonical_force_sum(
+    pos: &[Vec3],
+    radius: &[f32],
+    params: &crate::physics::lj::LjParams,
+    boundary: Boundary,
+    box_l: f32,
+    target: usize,
+    sources: &[u32],
+    mut visit: impl FnMut(usize, f32, bool),
+) -> Vec3 {
+    let p_t = pos[target];
+    let r_t = radius[target];
+    let mut f = Vec3::ZERO;
+    for &su in sources {
+        let s = su as usize;
+        let dx = crate::physics::boundary::displacement(p_t, pos[s], boundary, box_l);
+        let fij = params.pair_force(dx, r_t, radius[s]);
+        visit(s, dx.norm2(), fij.is_some());
+        if let Some(fij) = fij {
+            f += fij;
+        }
+    }
+    f
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

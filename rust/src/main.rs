@@ -187,13 +187,20 @@ fn trace_cmd(args: &Args) -> Result<()> {
         let cfg = ShardedConfig {
             policy,
             fleet,
+            backend: args.backend(ApproachKind::RtRef)?,
             threads: orcs::parallel::num_threads(),
             check_oom: !args.has("no-oom-check"),
             resilience: args.resilience(steps as u64, spec.count())?,
             ..ShardedConfig::new(sim.clone(), spec)
         };
         let kernels = Engine::kernels_for(sim.force_path, cfg.threads)?;
-        println!("trace (sharded): {} | grid {} | {} steps", cfg.sim.tag(), cfg.spec, steps);
+        println!(
+            "trace (sharded): {} | grid {} | backend={} | {} steps",
+            cfg.sim.tag(),
+            cfg.spec,
+            cfg.backend.label(),
+            steps
+        );
         let mut engine = ShardedEngine::new(cfg, kernels)?;
         configure_recorder(args, engine.telemetry_mut(), true)?;
         engine.run(steps, false)?;
@@ -231,9 +238,13 @@ fn simulate(args: &Args) -> Result<()> {
     if let Some(spec) = args.shards()? {
         return simulate_sharded(args, spec);
     }
-    let sim = args.sim_config()?;
+    let quick = args.has("quick");
+    let mut sim = args.sim_config()?;
+    if quick && args.get("n").is_none() {
+        sim.n = 2_000;
+    }
     let approach = args.approach(ApproachKind::OrcsForces)?;
-    let steps = args.get_usize("steps", 100)?;
+    let steps = args.get_usize("steps", if quick { 12 } else { 100 })?;
     let policy = args.get_or("policy", "gradient").to_string();
     let cfg = EngineConfig {
         policy,
@@ -335,20 +346,19 @@ fn simulate(args: &Args) -> Result<()> {
 /// `orcs simulate --shards S`: the sharded engine — per-shard BVHs and
 /// policies, halo exchange, per-shard OOM, optional heterogeneous fleet.
 fn simulate_sharded(args: &Args, spec: ShardSpec) -> Result<()> {
-    // the sharded engine implements the RT-REF list pipeline (see ROADMAP
-    // "Sharded ORCS backends") and has no per-step CSV trace yet — reject
-    // rather than silently ignore these simulate flags
-    anyhow::ensure!(
-        args.get("approach").is_none(),
-        "--approach is not supported with --shards (the sharded engine runs the RT-REF pipeline)"
-    );
+    // the sharded engine has no per-step CSV trace yet — reject rather
+    // than silently ignore the flag
     anyhow::ensure!(args.get("trace").is_none(), "--trace is not supported with --shards yet");
     anyhow::ensure!(
         args.get("fleet").is_none() || args.get("hw").is_none(),
         "--hw conflicts with --fleet (the fleet list binds per-shard devices)"
     );
-    let sim = args.sim_config()?;
-    let steps = args.get_usize("steps", 100)?;
+    let quick = args.has("quick");
+    let mut sim = args.sim_config()?;
+    if quick && args.get("n").is_none() {
+        sim.n = 2_000;
+    }
+    let steps = args.get_usize("steps", if quick { 12 } else { 100 })?;
     let policy = args.get_or("policy", "gradient").to_string();
     let fleet = match args.fleet()? {
         Some(f) => f,
@@ -357,6 +367,7 @@ fn simulate_sharded(args: &Args, spec: ShardSpec) -> Result<()> {
     let cfg = ShardedConfig {
         policy,
         fleet,
+        backend: args.backend(ApproachKind::RtRef)?,
         threads: orcs::parallel::num_threads(),
         check_oom: !args.has("no-oom-check"),
         resilience: args.resilience(steps as u64, spec.count())?,
@@ -364,9 +375,10 @@ fn simulate_sharded(args: &Args, spec: ShardSpec) -> Result<()> {
     };
     let kernels = Engine::kernels_for(sim.force_path, cfg.threads)?;
     println!(
-        "simulate (sharded): {} | grid {} | policy={} | kernels={} | {} steps",
+        "simulate (sharded): {} | grid {} | backend={} | policy={} | kernels={} | {} steps",
         cfg.sim.tag(),
         cfg.spec,
+        cfg.backend.label(),
         cfg.policy,
         kernels.name(),
         steps

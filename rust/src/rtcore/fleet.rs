@@ -18,6 +18,11 @@ pub const GHOST_ENTRY_BYTES: u64 = 20;
 /// radius + global id (8 B).
 pub const MIGRATION_BYTES: u64 = 32;
 
+/// Bytes folded back per cross-shard force contribution when a listless
+/// backend's canonical-order scatter lands in a remote owner's
+/// accumulator: force vector (12 B) + global id (4 B).
+pub const SCATTER_ENTRY_BYTES: u64 = 16;
+
 /// Effective device-to-device interconnect bandwidth as a fraction of the
 /// receiving device's memory bandwidth (NVLink-class links sustain roughly
 /// a quarter of HBM).

@@ -22,9 +22,17 @@
 //! r_max`, and `dist(image, box) ≤ |d|`, so every image that can either be
 //! discovered by an owned ray or must itself launch a discovering ray is
 //! inside the halo.
+//!
+//! Since PR 9 the gather is **cell-bucketed**: one GPU-CELL counting-sort
+//! grid over the scene ([`halo_grid`], built once per step) replaces the
+//! `O(27·n)`-per-shard full scan — each shard only sweeps the buckets its
+//! halo-expanded box overlaps, per image shift, which is what makes
+//! `S³ ≫ 1` decompositions cheap. The ghost set is bitwise identical to
+//! the old scan (kept as the `gather_ghosts_scan` test oracle).
 
 use crate::core::config::{Boundary, ShardSpec};
 use crate::core::vec3::Vec3;
+use crate::frnn::cell_list::CellGrid;
 
 /// Image-shift code `0..27`: each axis shifted by one of `{-L, 0, +L}`.
 /// [`CENTER_SHIFT`] (13) is the identity — the code carried by owned
@@ -103,15 +111,100 @@ pub fn dist2_point_box(p: Vec3, lo: Vec3, hi: Vec3) -> f32 {
     dx * dx + dy * dy + dz * dz
 }
 
+/// Build the step's halo-bucketing grid: the GPU-CELL counting-sort grid
+/// ([`CellGrid`]) over all in-box positions with halo-sized cells, built
+/// **once per step** and shared by every shard's [`gather_ghosts`] call.
+/// Buckets hold ascending particle ids (counting-sort order), so the
+/// bucketed sweep plus a final `(gid, shift)` sort reproduces the scan
+/// oracle's enumeration order exactly.
+pub fn halo_grid(pos: &[Vec3], box_l: f32, halo: f32) -> CellGrid {
+    CellGrid::build(pos, box_l, CellGrid::choose_dims(pos.len(), box_l, halo))
+}
+
 /// Collect the ghost members of shard `idx` into `out` (cleared first):
 /// every `(particle, image shift)` whose shifted position lies strictly
 /// within `halo` of the shard box and is not the shard's own owned entry.
 /// Wall boundaries have no images (only the identity shift); periodic
 /// boundaries sweep all 27 shifts, so an owned particle can reappear as its
 /// own wrapped image — exactly the pairs the single-domain gamma rays
-/// discover. Enumeration order is ascending `(gid, shift)`, so the output
-/// is deterministic and usable as a membership key.
+/// discover. Output order is ascending `(gid, shift)`, so it is
+/// deterministic and usable as a membership key.
+///
+/// Instead of testing all `27·n` images per shard, the sweep walks only the
+/// `cells` buckets overlapping the halo-expanded shard box *translated by
+/// `-shift`* (positions are always in-box, so the query box moves, never
+/// the particles — [`CellGrid`] cannot index negative coordinates). Cell
+/// ranges are conservative (±1 cell for f32 rounding); the exact
+/// [`dist2_point_box`] predicate — the same expression the scan oracle
+/// evaluates — re-filters every candidate, so the ghost set is bitwise
+/// identical to the full scan (pinned by `cell_bucketed_gather_matches_scan`
+/// below).
+#[allow(clippy::too_many_arguments)]
 pub fn gather_ghosts(
+    grid: &ShardGrid,
+    idx: usize,
+    pos: &[Vec3],
+    owner: &[u32],
+    halo: f32,
+    boundary: Boundary,
+    cells: &CellGrid,
+    out: &mut Vec<ShardMember>,
+) {
+    out.clear();
+    let (lo, hi) = grid.bounds(idx);
+    let h2 = halo * halo;
+    let codes: std::ops::Range<u8> = match boundary {
+        Boundary::Wall => CENTER_SHIFT..CENTER_SHIFT + 1,
+        Boundary::Periodic => 0..27,
+    };
+    let dims = cells.dims;
+    let cell_w = cells.cell;
+    let axis_cells = |q_lo: f32, q_hi: f32| -> Option<(usize, usize)> {
+        // The grid covers [0, box_l]; a query interval entirely outside it
+        // holds no particles.
+        if q_hi < 0.0 || q_lo > grid.box_l {
+            return None;
+        }
+        let c_lo = ((q_lo / cell_w).floor() as isize - 1).clamp(0, dims as isize - 1);
+        let c_hi = ((q_hi / cell_w).floor() as isize + 1).clamp(0, dims as isize - 1);
+        Some((c_lo as usize, c_hi as usize))
+    };
+    for code in codes {
+        let shift = shift_vec(code, grid.box_l);
+        let (Some((x0, x1)), Some((y0, y1)), Some((z0, z1))) = (
+            axis_cells(lo.x - halo - shift.x, hi.x + halo - shift.x),
+            axis_cells(lo.y - halo - shift.y, hi.y + halo - shift.y),
+            axis_cells(lo.z - halo - shift.z, hi.z + halo - shift.z),
+        ) else {
+            continue;
+        };
+        for cz in z0..=z1 {
+            for cy in y0..=y1 {
+                for cx in x0..=x1 {
+                    let c = (cz * dims + cy) * dims + cx;
+                    let bucket =
+                        &cells.items[cells.starts[c] as usize..cells.starts[c + 1] as usize];
+                    for &iu in bucket {
+                        let i = iu as usize;
+                        if code == CENTER_SHIFT && owner[i] as usize == idx {
+                            continue; // the owned entry, not a ghost
+                        }
+                        let q = pos[i] + shift;
+                        if dist2_point_box(q, lo, hi) < h2 {
+                            out.push(ShardMember { gid: iu, shift: code });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out.sort_unstable_by_key(|m| (m.gid, m.shift));
+}
+
+/// The original `O(27·n)`-per-shard full-scan gather, kept as the oracle
+/// the cell-bucketed path is pinned against.
+#[cfg(test)]
+pub fn gather_ghosts_scan(
     grid: &ShardGrid,
     idx: usize,
     pos: &[Vec3],
@@ -198,10 +291,11 @@ mod tests {
         let owner: Vec<u32> = pos.iter().map(|&p| g.owner_of(p) as u32).collect();
         assert_eq!(owner, vec![0, 0]);
         let mut out = Vec::new();
+        let cells = halo_grid(&pos, 100.0, 5.0);
         // shard 1 = x in [50, 100)
-        gather_ghosts(&g, 1, &pos, &owner, 5.0, Boundary::Wall, &mut out);
+        gather_ghosts(&g, 1, &pos, &owner, 5.0, Boundary::Wall, &cells, &mut out);
         assert_eq!(out, vec![ShardMember { gid: 0, shift: CENTER_SHIFT }]);
-        gather_ghosts(&g, 1, &pos, &owner, 5.0, Boundary::Periodic, &mut out);
+        gather_ghosts(&g, 1, &pos, &owner, 5.0, Boundary::Periodic, &cells, &mut out);
         // particle 0 via identity; particle 1 via its +L x-image (x=101,
         // within 5 of the shard's hi face at 100)
         assert_eq!(out.len(), 2);
@@ -219,14 +313,63 @@ mod tests {
         let pos = vec![Vec3::new(0.5, 5.0, 5.0), Vec3::new(5.0, 5.0, 5.0)];
         let owner = vec![0u32, 0];
         let mut out = Vec::new();
-        gather_ghosts(&g, 0, &pos, &owner, 1.0, Boundary::Periodic, &mut out);
+        let cells = halo_grid(&pos, 10.0, 1.0);
+        gather_ghosts(&g, 0, &pos, &owner, 1.0, Boundary::Periodic, &cells, &mut out);
         // particle 0 at x=0.5 reappears via the +L x-image at 10.5 (within
         // halo 1 of the box); the interior particle has no close image
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].gid, 0);
         assert_eq!(shift_vec(out[0].shift, 10.0).x, 10.0);
         // wall BC: no images at all
-        gather_ghosts(&g, 0, &pos, &owner, 1.0, Boundary::Wall, &mut out);
+        gather_ghosts(&g, 0, &pos, &owner, 1.0, Boundary::Wall, &cells, &mut out);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn cell_bucketed_gather_matches_scan() {
+        // Randomized scenes: the bucketed gather's ghost set must be
+        // bitwise identical — same (gid, shift) sequence — to the 27-shift
+        // full-scan oracle, for every shard, both boundary modes, and halos
+        // from a sliver up to wider than the whole box (degenerate case:
+        // every cell range clamps to the full grid).
+        crate::testutil::prop_check("bucketed_gather_equiv", 12, |rng| {
+            let box_l = 20.0 + rng.f32() * 180.0;
+            let n = 1 + rng.below(400) as usize;
+            let s = 1 + rng.below(4) as usize;
+            let halo = match rng.below(3) {
+                0 => 0.02 * box_l,
+                1 => 0.25 * box_l,
+                _ => 1.1 * box_l,
+            };
+            let pos: Vec<Vec3> = (0..n)
+                .map(|_| {
+                    Vec3::new(
+                        rng.f32() * box_l,
+                        rng.f32() * box_l,
+                        rng.f32() * box_l,
+                    )
+                })
+                .collect();
+            let g = ShardGrid::new(ShardSpec::new(s), box_l);
+            let owner: Vec<u32> =
+                pos.iter().map(|&p| g.owner_of(p) as u32).collect();
+            let cells = halo_grid(&pos, box_l, halo);
+            let (mut fast, mut slow) = (Vec::new(), Vec::new());
+            for boundary in [Boundary::Wall, Boundary::Periodic] {
+                for idx in 0..g.count() {
+                    gather_ghosts(&g, idx, &pos, &owner, halo, boundary, &cells, &mut fast);
+                    gather_ghosts_scan(&g, idx, &pos, &owner, halo, boundary, &mut slow);
+                    if fast != slow {
+                        return Err(format!(
+                            "shard {idx} {boundary:?} s={s} halo={halo} n={n}: \
+                             bucketed {} vs scan {} ghosts",
+                            fast.len(),
+                            slow.len()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -37,6 +37,21 @@
 //!    the RT-REF fixed-slot list allocation **per shard** against each
 //!    device's VRAM — the per-shard OOM relief that lets log-normal cluster
 //!    scenes too wide for one device complete sharded.
+//!
+//! # Backends
+//!
+//! Every shard runs the configured RT backend ([`ShardedConfig::backend`]):
+//! **RT-REF** keeps the fixed-slot neighbor list (and the per-shard OOM
+//! ladder); the **listless** ORCS-forces and ORCS-persé never allocate one
+//! and so cannot OOM. Shard-local discovery always yields the same
+//! canonical per-owned lists (ascending global id, deduped), and each
+//! backend then consumes them exactly as its single-domain twin would: the
+//! list kernels globally (RT-REF and ORCS-forces), the canonical-order
+//! payload gather per shard (persé and the RT-REF OOM rung — the same code
+//! path), in-shader integration for persé. Identical canonical sets +
+//! identical f32 operation sequences ⇒ every backend is **bitwise
+//! identical** to its single-domain engine for any shard grid, any
+//! `ORCS_THREADS`, and both boundary modes.
 
 use std::sync::Arc;
 
@@ -45,10 +60,12 @@ use anyhow::Result;
 use super::decomp::{self, ShardGrid, ShardMember, CENTER_SHIFT};
 use crate::core::config::{ShardSpec, SimConfig};
 use crate::core::vec3::Vec3;
-use crate::frnn::rt_common::BvhManager;
-use crate::frnn::{NeighborLists, PhysicsKernels, RustKernels};
+use crate::frnn::orcs_forces::handles_pair;
+use crate::frnn::rt_common::{canonical_force_sum, BvhManager};
+use crate::frnn::zorder::ZOrderCache;
+use crate::frnn::{ApproachKind, NeighborLists, PhysicsKernels, RustKernels};
 use crate::gradient::BvhAction;
-use crate::physics::state::SimState;
+use crate::physics::{boundary, state::SimState};
 use crate::resilience::checkpoint::{FleetCheckpoint, ShardCheckpoint};
 use crate::resilience::{
     EventKind, FaultInjector, FaultKind, OomPolicy, ResilienceConfig, ResilienceEvent, SimError,
@@ -78,6 +95,11 @@ pub struct ShardedConfig {
     /// Resilience knobs (faults, watchdog, checkpoints, OOM fallback).
     /// Default is inert — identical behavior to a pre-resilience engine.
     pub resilience: ResilienceConfig,
+    /// The FRNN backend every shard runs: RT-REF (the list pipeline with
+    /// the per-shard OOM story), ORCS-forces, or ORCS-persé (both listless
+    /// — no neighbor list is ever allocated, so they cannot OOM). All three
+    /// are bitwise identical to their single-domain counterparts.
+    pub backend: ApproachKind,
 }
 
 impl ShardedConfig {
@@ -90,6 +112,7 @@ impl ShardedConfig {
             threads: crate::parallel::num_threads(),
             check_oom: true,
             resilience: ResilienceConfig::default(),
+            backend: ApproachKind::RtRef,
         }
     }
 }
@@ -109,8 +132,9 @@ pub struct ShardStepStat {
     pub k_max: usize,
     /// Fixed-slot list allocation on this shard's device (0 once listless).
     pub list_bytes: u64,
-    /// The shard has degraded to the listless ORCS-persé path (no neighbor
-    /// list is materialized; forces accumulate in-shader).
+    /// The shard ran a listless path this step — a first-class ORCS
+    /// backend or the RT-REF OOM rung (no neighbor list is materialized;
+    /// forces accumulate in-shader).
     pub listless: bool,
     /// This shard's full step on its device (incl. exchange), ms.
     pub sim_ms: f64,
@@ -198,6 +222,10 @@ struct Shard {
     mgr: BvhManager,
     members_prev: Vec<ShardMember>,
     k_max_seen: usize,
+    /// Shard-local Morton cache: one keying + radix sort per step over the
+    /// local view (owned + ghosts), shared by the LBVH build and the query
+    /// sweep — the single-domain Z-order coherence win, per shard.
+    zcache: ZOrderCache,
 }
 
 /// The sharded simulation: global state + one engine-let per subdomain.
@@ -246,6 +274,7 @@ impl ShardedEngine {
                     mgr: BvhManager::new(policy),
                     members_prev: Vec::new(),
                     k_max_seen: 0,
+                    zcache: ZOrderCache::new(),
                 })
             })
             .collect::<Result<Vec<_>>>()?;
@@ -253,6 +282,16 @@ impl ShardedEngine {
         let n_shards = grid.count();
         // lint:allow(P-INDEX-LIT): windows(2) yields exactly-2 slices
         let uniform_radius = state.radius.windows(2).all(|w| w[0] == w[1]);
+        anyhow::ensure!(
+            cfg.backend.is_rt(),
+            "sharded runs support the RT backends only (rt-ref, orcs-forces, orcs-perse); \
+             {} has no shard-local traversal",
+            cfg.backend.label()
+        );
+        anyhow::ensure!(
+            cfg.backend != ApproachKind::OrcsPerse || uniform_radius,
+            "ORCS-persé requires a uniform radius across all particles"
+        );
         let injector = FaultInjector::new(&cfg.resilience.faults);
         let devices = cfg.fleet.clone();
         let active = cfg.resilience.active();
@@ -358,6 +397,24 @@ impl ShardedEngine {
         let mut oom: Option<(usize, u64)> = None;
         let mut total_ghosts = 0u64;
         let mut ghosts_buf: Vec<ShardMember> = Vec::new();
+        let backend = self.cfg.backend;
+        let dt = self.state.dt;
+
+        // One GPU-CELL bucketing grid per step, shared by every shard's
+        // halo gather — each gather then touches only the cells overlapping
+        // its (shifted) halo slab instead of scanning all n × 27 images.
+        let halo_cells = decomp::halo_grid(&self.state.pos, box_l, halo);
+
+        // Listless physics results, deferred until after the shard loop so
+        // every shard reads this step's input state (owners are disjoint, so
+        // application order is irrelevant).
+        let mut fallback_payloads: Vec<(u32, Vec3)> = Vec::new();
+        let mut perse_moves: Vec<(u32, Vec3, Vec3, Vec3)> = Vec::new();
+        // Canonical list entries / persé accumulations / forces handled
+        // pairs, summed across shards (for the step's interaction count).
+        let mut entries_total = 0u64;
+        let mut accums_total = 0u64;
+        let mut forces_pairs_total = 0u64;
 
         // One O(n) bucketing pass replaces a per-shard full-scene filter;
         // ids stay ascending within each bucket (the canonical owned order).
@@ -377,6 +434,7 @@ impl ShardedEngine {
                 &self.owner,
                 halo,
                 boundary,
+                &halo_cells,
                 &mut ghosts_buf,
             );
             members.extend_from_slice(&ghosts_buf);
@@ -396,13 +454,17 @@ impl ShardedEngine {
             let shard = &mut self.shards[s];
             let force_build = shard.members_prev != members;
             let mut counts = OpCounts::default();
+            // Shard-local Morton order over the local view (owned + ghosts;
+            // shifted ghost coordinates clamp into the grid), shared by the
+            // LBVH build and the query sweep below.
+            shard.zcache.compute(&local_pos, box_l, threads);
             let action = shard.mgr.prepare_with(
                 &local_pos,
                 &local_radius,
                 &mut counts,
                 threads,
                 force_build,
-                None,
+                Some(shard.zcache.order()),
             );
             shard.members_prev = members;
 
@@ -416,9 +478,16 @@ impl ShardedEngine {
             let (chunks, stats) = {
                 let bvh = shard.mgr.bvh();
                 let (local_pos, local_radius, local_gid) = (&local_pos, &local_radius, &local_gid);
-                bvh.query_batch(n_local, threads, || (), |_, scratch, range| {
+                // Swept in shard-local Morton order: coherent rays share
+                // subtrees, so BVH4 node fetches stay cache-hot. The chunk
+                // partition is thread-count invariant and the per-owned
+                // lists are canonicalized below, so the sweep order drops
+                // out of the physics entirely.
+                let order = shard.zcache.order();
+                bvh.query_batch_with_order(order, threads, || (), |_, scratch, ids| {
                     let mut out = ChunkOut { direct: Vec::new(), cross: Vec::new() };
-                    for a in range {
+                    for &au in ids {
+                        let a = au as usize;
                         let ga = local_gid[a];
                         let ra = local_radius[a];
                         let pa = local_pos[a];
@@ -496,19 +565,19 @@ impl ShardedEngine {
                 write += seg.len();
             }
             items.truncate(write);
+            let entries = write as u64;
 
-            // --- Phase 5: per-shard metering + OOM --------------------
-            counts.atomic_adds += cross_inserts;
+            // --- Phase 5: per-backend metering + physics --------------
             let budget = self.vram_budget.map_or(shard.hw.vram_bytes, |b| {
                 b.min(shard.hw.vram_bytes)
             });
             let mut switch_s = 0.0;
-            if !self.listless[s] {
-                // would the fixed-slot list allocation fit? If not and the
-                // policy allows it, degrade this shard to the listless
-                // ORCS-persé path *before* committing the allocation — the
-                // physics is unchanged (same canonical lists feed the global
-                // merge), only the metering and memory footprint switch.
+            if backend == ApproachKind::RtRef && !self.listless[s] {
+                // RT-REF only: would the fixed-slot list allocation fit? If
+                // not and the policy allows it, degrade this shard to the
+                // listless ORCS-persé path *before* committing the
+                // allocation. The first-class listless backends never enter
+                // here — they have no list to OOM.
                 let need = (owned_n as u64) * (shard.k_max_seen.max(k_max_raw) as u64) * 4;
                 let fallback = self.cfg.resilience.on_oom == OomPolicy::Fallback;
                 if self.cfg.check_oom && need > budget && fallback && self.uniform_radius {
@@ -529,16 +598,121 @@ impl ShardedEngine {
                     self.events.push(ev);
                 }
             }
-            let listless = self.listless[s];
+            let is_forces = backend == ApproachKind::OrcsForces;
+            let is_perse = backend == ApproachKind::OrcsPerse;
+            // The OOM rung *is* the persé code path, minus the in-shader
+            // integration (a mixed fleet still integrates globally).
+            let is_fallback = backend == ApproachKind::RtRef && self.listless[s];
+            let listless = is_forces || is_perse || is_fallback;
             let mut shard_oom = false;
             let list_bytes;
-            if listless {
-                // in-shader accumulation + integration: no list, no
-                // separate kernels, k_max_seen frozen
-                counts.isect_force_evals += raw_total as u64;
-                counts.payload_accums += raw_total as u64;
+            let mut scatter_entries = 0u64;
+            if is_forces {
+                // ORCS-forces: every intersection scatters the pair force
+                // into both endpoint accumulators — no list. Meter the
+                // in-shader evals/atomics with the single-domain handler
+                // rule (each pair handled by exactly one endpoint,
+                // attributed to the handler's owner shard), and count the
+                // entries whose source lives on another shard: those are
+                // the ghost contributions the canonical-order scatter folds
+                // back into this shard's owned accumulators.
+                let offsets_c = crate::parallel::exclusive_scan_u32(&lens, threads);
+                let st = &self.state;
+                let owner_ref = &self.owner;
+                let (items_ref, gid_ref) = (&items, &local_gid);
+                let walk = crate::parallel::parallel_map(owned_n, threads, |a| {
+                    let t = gid_ref[a] as usize;
+                    let r_t = st.radius[t];
+                    let seg = &items_ref[offsets_c[a] as usize..offsets_c[a + 1] as usize];
+                    let (mut evals, mut pairs, mut xfer) = (0u64, 0u64, 0u64);
+                    for &su in seg {
+                        let src = su as usize;
+                        let dx =
+                            boundary::displacement(st.pos[t], st.pos[src], boundary, box_l);
+                        let d2 = dx.norm2();
+                        let r_s = st.radius[src];
+                        let t_sees = d2 < r_s * r_s;
+                        let mutual = t_sees && d2 < r_t * r_t;
+                        if t_sees && handles_pair(t, r_t, src, r_s, mutual) {
+                            evals += 1;
+                            if st.params.pair_force(dx, r_t, r_s).is_some() {
+                                pairs += 1; // "atomicAdd" × 2 on real hardware
+                            }
+                        }
+                        if owner_ref[src] != s as u32 {
+                            xfer += 1;
+                        }
+                    }
+                    (evals, pairs, xfer)
+                });
+                let (mut evals, mut pairs) = (0u64, 0u64);
+                for (e, p, x) in walk {
+                    evals += e;
+                    pairs += p;
+                    scatter_entries += x;
+                }
+                counts.isect_force_evals += evals;
+                counts.atomic_adds += 2 * pairs; // both endpoints, atomically
+                counts.interactions += pairs;
+                counts.integrate_particles += owned_n as u64;
+                counts.kernel_launches += 1; // the one extra kernel: integration
+                forces_pairs_total += pairs;
+                list_bytes = 0;
+            } else if listless {
+                // ORCS-persé — first-class backend and the RT-REF OOM rung
+                // run the same code: a per-owned canonical-order payload
+                // gather over the shard's deduped lists, recomputing
+                // min-image displacements from *global* state so the f32 sum
+                // is byte-for-byte the single-domain row.
+                let offsets_c = crate::parallel::exclusive_scan_u32(&lens, threads);
+                let st = &self.state;
+                let (items_ref, gid_ref) = (&items, &local_gid);
+                let walk = crate::parallel::parallel_map(owned_n, threads, |a| {
+                    let t = gid_ref[a] as usize;
+                    let seg = &items_ref[offsets_c[a] as usize..offsets_c[a + 1] as usize];
+                    let mut accums = 0u64;
+                    let payload = canonical_force_sum(
+                        &st.pos,
+                        &st.radius,
+                        &st.params,
+                        boundary,
+                        box_l,
+                        t,
+                        seg,
+                        |_, _, in_range| {
+                            if in_range {
+                                accums += 1;
+                            }
+                        },
+                    );
+                    // in-shader integration of the ray's own particle (the
+                    // fallback rung discards this and integrates globally)
+                    let f = st.params.cap(payload);
+                    let mut v = st.vel[t] + f * dt;
+                    let mut p = st.pos[t] + v * dt;
+                    boundary::apply(boundary, box_l, &mut p, &mut v);
+                    (payload, p, v, accums)
+                });
+                let mut accums = 0u64;
+                for (a, (payload, p, v, acc)) in walk.into_iter().enumerate() {
+                    let g = local_gid[a];
+                    accums += acc;
+                    if is_perse {
+                        perse_moves.push((g, payload, p, v));
+                    } else {
+                        fallback_payloads.push((g, payload));
+                    }
+                }
+                counts.payload_accums += accums;
+                counts.isect_force_evals += accums;
+                counts.interactions += accums / 2;
+                accums_total += accums;
                 list_bytes = 0;
             } else {
+                // RT-REF list pipeline: cross-inserts are the atomic list
+                // appends; the fixed-slot allocation meters against this
+                // shard's device.
+                counts.atomic_adds += cross_inserts;
                 counts.nbr_list_writes += raw_total as u64;
                 shard.k_max_seen = shard.k_max_seen.max(k_max_raw);
                 list_bytes = (owned_n as u64) * (shard.k_max_seen as u64) * 4;
@@ -554,14 +728,20 @@ impl ShardedEngine {
                     counts.kernel_launches += 2;
                 }
             }
+            entries_total += entries;
 
-            let exchange_bytes = (ghosts as u64) * fleet::GHOST_ENTRY_BYTES
-                + mig_in[s] * fleet::MIGRATION_BYTES;
+            let gather_bytes = (ghosts as u64) * fleet::GHOST_ENTRY_BYTES;
+            let mig_bytes = mig_in[s] * fleet::MIGRATION_BYTES;
+            let scatter_bytes = scatter_entries * fleet::SCATTER_ENTRY_BYTES;
             let times = timing::simulate(&counts, shard.hw);
             let energy = step_energy(&times, &counts, shard.hw);
-            // a fallback switch re-stages the shard's primitives, priced
-            // like an exchange over the interconnect
-            let exchange_s = fleet::exchange_time(exchange_bytes, shard.hw) + switch_s;
+            // Interconnect pricing, itemized: halo ghosts in, migrations in
+            // (plus any fallback-switch re-staging), canonical force
+            // contributions folded back out to remote owners.
+            let gather_s = fleet::exchange_time(gather_bytes, shard.hw);
+            let mig_s = fleet::exchange_time(mig_bytes, shard.hw) + switch_s;
+            let scatter_s = fleet::exchange_time(scatter_bytes, shard.hw);
+            let exchange_s = gather_s + mig_s + scatter_s;
             let mut cost = ShardCost {
                 times,
                 energy,
@@ -575,28 +755,59 @@ impl ShardedEngine {
             shard.mgr.observe(action, &counts, shard.hw);
             // Telemetry: this shard's lane, laid from the attempt base (all
             // shards step in parallel on their own devices). `cost` already
-            // carries any straggler scaling, so spans show the priced times.
+            // carries any straggler scaling, so spans show the priced times:
+            // gather → exchange → compute phases → scatter.
             let lane = s as u32;
             let sname = s.to_string();
             self.telemetry.name_lane(lane, format!("shard {s} ({})", shard.hw.name));
             let labels = [("shard", sname.as_str()), ("device", shard.hw.name)];
             let mut from = self.telemetry.attempt_base_ms();
-            if cost.exchange_s > 0.0 {
+            if gather_s > 0.0 {
                 from = self.telemetry.record_span(
                     Span {
                         lane,
-                        phase: Phase::Exchange,
+                        phase: Phase::Gather,
                         t0_ms: from,
-                        dur_ms: cost.exchange_s * 1e3,
+                        dur_ms: gather_s * slow * 1e3,
                         aabb_tests: 0,
                         isect_force_evals: 0,
-                        bytes_moved: exchange_bytes,
+                        bytes_moved: gather_bytes,
                         wall_ms: None,
                     },
                     &labels,
                 );
             }
-            self.telemetry.record_phases(lane, from, &cost.times, &counts, None, &labels);
+            if mig_s > 0.0 {
+                from = self.telemetry.record_span(
+                    Span {
+                        lane,
+                        phase: Phase::Exchange,
+                        t0_ms: from,
+                        dur_ms: mig_s * slow * 1e3,
+                        aabb_tests: 0,
+                        isect_force_evals: 0,
+                        bytes_moved: mig_bytes,
+                        wall_ms: None,
+                    },
+                    &labels,
+                );
+            }
+            let end = self.telemetry.record_phases(lane, from, &cost.times, &counts, None, &labels);
+            if scatter_s > 0.0 {
+                self.telemetry.record_span(
+                    Span {
+                        lane,
+                        phase: Phase::Scatter,
+                        t0_ms: end,
+                        dur_ms: scatter_s * slow * 1e3,
+                        aabb_tests: 0,
+                        isect_force_evals: 0,
+                        bytes_moved: scatter_bytes,
+                        wall_ms: None,
+                    },
+                    &labels,
+                );
+            }
             per_shard.push(ShardStepStat {
                 shard: s,
                 owned: owned_n,
@@ -611,7 +822,19 @@ impl ShardedEngine {
                 energy_j: cost.energy.energy_j + cost.exchange_j,
             });
             costs.push(cost);
-            shard_lists.push(ShardLists { owned_gids: local_gid[..owned_n].to_vec(), lens, items });
+            // List mode and ORCS-forces feed the global merge (forces' rows
+            // come out of the same canonical CSR the list kernel reads);
+            // persé and the fallback rung never materialize their lists —
+            // their owned rows arrive via the payload gathers above.
+            shard_lists.push(if !listless || is_forces {
+                ShardLists { owned_gids: local_gid[..owned_n].to_vec(), lens, items }
+            } else {
+                ShardLists {
+                    owned_gids: local_gid[..owned_n].to_vec(),
+                    lens: vec![0; owned_n],
+                    items: Vec::new(),
+                }
+            });
         }
 
         let agg = fleet::aggregate(&costs);
@@ -638,46 +861,88 @@ impl ShardedEngine {
             });
         }
 
-        // --- Phase 6: shard-ordered merge into one canonical CSR ------
-        // Each particle has exactly one owner, so the merge is conflict-free
-        // and the result is independent of shard iteration order; lists are
-        // already in canonical ascending-gid order.
-        let mut g_lens = vec![0u32; n];
-        for sl in &shard_lists {
-            for (k, &g) in sl.owned_gids.iter().enumerate() {
-                g_lens[g as usize] = sl.lens[k];
+        let interactions;
+        if backend == ApproachKind::OrcsPerse {
+            // --- Phase 6/7 (persé): no merge, no global kernels — every
+            // particle was integrated in-shader on its owner shard. Apply
+            // the double-buffered outputs; owners are disjoint, rays read
+            // this step's inputs, so application order is irrelevant. The
+            // uncapped payload is published as the step's force array,
+            // exactly like the single-domain backend.
+            let mut new_pos = self.state.pos.clone();
+            let mut new_vel = self.state.vel.clone();
+            let mut new_force = self.state.force.clone();
+            for &(g, payload, p, v) in &perse_moves {
+                let g = g as usize;
+                new_force[g] = payload;
+                new_pos[g] = p;
+                new_vel[g] = v;
             }
-        }
-        let offsets = crate::parallel::exclusive_scan_u32(&g_lens, threads);
-        let total = offsets.last().copied().unwrap_or(0) as usize;
-        let mut g_items = vec![0u32; total];
-        for sl in &shard_lists {
-            let mut cur = 0usize;
-            for (k, &g) in sl.owned_gids.iter().enumerate() {
-                let len = sl.lens[k] as usize;
-                let dst = offsets[g as usize] as usize;
-                g_items[dst..dst + len].copy_from_slice(&sl.items[cur..cur + len]);
-                cur += len;
+            self.state.pos = new_pos;
+            self.state.vel = new_vel;
+            self.state.force = new_force;
+            self.state.step_count += 1;
+            // uniform radius: detection symmetric, each pair seen twice
+            interactions = accums_total / 2;
+            self.telemetry.mark(
+                GLOBAL_LANE,
+                "apply",
+                format!("persé apply: {} in-shader integrated particles", perse_moves.len()),
+            );
+        } else {
+            // --- Phase 6: shard-ordered merge into one canonical CSR --
+            // Each particle has exactly one owner, so the merge is
+            // conflict-free and the result is independent of shard iteration
+            // order; lists are already in canonical ascending-gid order.
+            let mut g_lens = vec![0u32; n];
+            for sl in &shard_lists {
+                for (k, &g) in sl.owned_gids.iter().enumerate() {
+                    g_lens[g as usize] = sl.lens[k];
+                }
             }
-        }
-        let nl = NeighborLists { offsets, items: g_items };
-        let interactions = nl.total_entries() as u64 / 2;
+            let offsets = crate::parallel::exclusive_scan_u32(&g_lens, threads);
+            let total = offsets.last().copied().unwrap_or(0) as usize;
+            let mut g_items = vec![0u32; total];
+            for sl in &shard_lists {
+                let mut cur = 0usize;
+                for (k, &g) in sl.owned_gids.iter().enumerate() {
+                    let len = sl.lens[k] as usize;
+                    let dst = offsets[g as usize] as usize;
+                    g_items[dst..dst + len].copy_from_slice(&sl.items[cur..cur + len]);
+                    cur += len;
+                }
+            }
+            let nl = NeighborLists { offsets, items: g_items };
 
-        // --- Phase 7: the same global kernels as the single-domain run.
-        // Identical canonical lists + identical kernel code ⇒ identical f32
-        // operation sequences ⇒ bitwise-identical forces and positions.
-        // (Per-device cost was already attributed shard by shard above.)
-        let mut kernel_scratch = OpCounts::default();
-        self.state.force = self
-            .kernels
-            .lj_forces(&self.state, &nl, &mut kernel_scratch)
-            .map_err(SimError::fatal)?;
-        self.kernels.integrate(&mut self.state, &mut kernel_scratch).map_err(SimError::fatal)?;
-        self.telemetry.mark(
-            GLOBAL_LANE,
-            "merge",
-            format!("merge: {} canonical list entries", nl.total_entries()),
-        );
+            // --- Phase 7: the same global kernels as the single-domain run.
+            // Identical canonical lists + identical kernel code ⇒ identical
+            // f32 operation sequences ⇒ bitwise-identical forces and
+            // positions. (Per-device cost was attributed shard by shard.)
+            let mut kernel_scratch = OpCounts::default();
+            self.state.force = self
+                .kernels
+                .lj_forces(&self.state, &nl, &mut kernel_scratch)
+                .map_err(SimError::fatal)?;
+            // Fallback-rung shards never fed the merge; their owned rows
+            // come from the shared canonical payload gather — byte-for-byte
+            // the row the list kernel would have produced.
+            for &(g, f) in &fallback_payloads {
+                self.state.force[g as usize] = f;
+            }
+            self.kernels.integrate(&mut self.state, &mut kernel_scratch).map_err(SimError::fatal)?;
+            interactions = if backend == ApproachKind::OrcsForces {
+                forces_pairs_total
+            } else {
+                // entries from fallback-rung shards count too, exactly as
+                // they did when their lists still reached the merge
+                entries_total / 2
+            };
+            self.telemetry.mark(
+                GLOBAL_LANE,
+                "merge",
+                format!("merge: {} canonical list entries", nl.total_entries()),
+            );
+        }
         if opened {
             self.telemetry.end_step(agg.sim_s * 1e3);
         }

@@ -19,6 +19,11 @@
 //!   canonicalized (ascending global id, deduplicated) and merged into one
 //!   global CSR, making forces and positions **bitwise identical** to the
 //!   single-domain engine for any shard count and `ORCS_THREADS`;
+//! * **first-class listless backends** — ORCS-forces and ORCS-persé run
+//!   sharded ([`ShardedConfig::backend`]): the same canonical per-owned
+//!   entries are folded in ascending-global-id order over shard-local
+//!   views instead of being materialized as lists, preserving the bitwise
+//!   contract with zero list bytes metered on any device;
 //! * **heterogeneous fleet pricing** — each shard binds its own
 //!   [`HwProfile`](crate::rtcore::HwProfile); step time aggregates as the
 //!   max over devices, energy as the sum, and the RT-REF list allocation is

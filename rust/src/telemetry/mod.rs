@@ -48,6 +48,9 @@ pub const DEFAULT_FLIGHT_STEPS: usize = 32;
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Phase {
     Sort,
+    /// Halo ghost collection (sharded only): the cell-bucketed gather's
+    /// modeled device traffic, recorded before any migration exchange.
+    Gather,
     Exchange,
     Build,
     Refit,
@@ -55,12 +58,16 @@ pub enum Phase {
     Cell,
     Force,
     Integrate,
+    /// Canonical-order force fold-back (sharded ORCS-forces only): ghost
+    /// rays' contributions returned to their owner shards.
+    Scatter,
 }
 
 impl Phase {
     pub fn label(self) -> &'static str {
         match self {
             Phase::Sort => "sort",
+            Phase::Gather => "gather",
             Phase::Exchange => "exchange",
             Phase::Build => "build",
             Phase::Refit => "refit",
@@ -68,6 +75,7 @@ impl Phase {
             Phase::Cell => "cell",
             Phase::Force => "force",
             Phase::Integrate => "integrate",
+            Phase::Scatter => "scatter",
         }
     }
 }

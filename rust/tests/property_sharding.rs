@@ -1,7 +1,9 @@
 //! Shard-invariance properties: the sharded engine must be a *transparent*
-//! decomposition — for any shard grid and any thread count, forces and
-//! positions are **bitwise identical** to the single-domain RT-REF engine,
-//! under both boundary modes, across migrations and periodic wraps.
+//! decomposition — for any shard grid, any backend and any thread count,
+//! forces and positions are **bitwise identical** to the single-domain
+//! engine on the same backend, under both boundary modes, across
+//! migrations and periodic wraps. For the ORCS backends the chain extends
+//! one link further: single-domain ≡ the brute-force min-image oracle.
 //!
 //! Why bitwise equality is attainable at all: both engines canonicalize
 //! every per-particle neighbor list to ascending global id (deduplicated),
@@ -15,7 +17,8 @@ use orcs::coordinator::{Engine, EngineConfig};
 use orcs::core::config::{Boundary, ParticleDist, RadiusDist, ShardSpec, SimConfig};
 use orcs::core::vec3::Vec3;
 use orcs::frnn::{ApproachKind, RustKernels};
-use orcs::shard::{ShardedConfig, ShardedEngine};
+use orcs::physics::state::SimState;
+use orcs::shard::{ShardedConfig, ShardedEngine, ShardedRunSummary};
 
 fn scenario(n: usize, boundary: Boundary, radius: RadiusDist, box_l: f32, seed: u64) -> SimConfig {
     SimConfig {
@@ -52,6 +55,96 @@ fn sharded(cfg: &SimConfig, s: usize, threads: usize, steps: usize) -> ShardedEn
     let mut e = ShardedEngine::new(sc, Arc::new(RustKernels { threads })).unwrap();
     e.run(steps, false).unwrap();
     e
+}
+
+/// Final (pos, vel, force) of the single-domain engine on `backend`.
+fn single_backend(
+    cfg: &SimConfig,
+    backend: ApproachKind,
+    threads: usize,
+    steps: usize,
+) -> (Vec<Vec3>, Vec<Vec3>, Vec<Vec3>) {
+    let ec = EngineConfig {
+        policy: "fixed-3".into(),
+        threads,
+        check_oom: false,
+        ..EngineConfig::new(cfg.clone(), backend)
+    };
+    let mut e = Engine::new(ec, Arc::new(RustKernels { threads })).unwrap();
+    e.run(steps, false).unwrap();
+    (e.state.pos, e.state.vel, e.state.force)
+}
+
+fn sharded_backend(
+    cfg: &SimConfig,
+    backend: ApproachKind,
+    s: usize,
+    threads: usize,
+    steps: usize,
+) -> ShardedEngine {
+    let sc = ShardedConfig {
+        policy: "fixed-3".into(),
+        threads,
+        check_oom: false,
+        backend,
+        ..ShardedConfig::new(cfg.clone(), ShardSpec::new(s))
+    };
+    let mut e = ShardedEngine::new(sc, Arc::new(RustKernels { threads })).unwrap();
+    e.run(steps, false).unwrap();
+    e
+}
+
+/// Brute-force min-image oracle: an O(n²) pair sweep plus the explicit
+/// Euler step — the physics ground truth both engines must reproduce bit
+/// for bit (valid while `r_max < L/2`, where one image per pair suffices).
+fn brute_trajectory(cfg: &SimConfig, steps: usize) -> (Vec<Vec3>, Vec<Vec3>, Vec<Vec3>) {
+    let mut state = SimState::from_config(cfg);
+    for _ in 0..steps {
+        state.force = orcs::frnn::brute::forces(&state);
+        orcs::physics::integrator::step(&mut state);
+    }
+    (state.pos, state.vel, state.force)
+}
+
+/// Run the single-domain and sharded engines on the same scene — tampered
+/// identically before the first step — and assert the decomposition is
+/// bitwise transparent. Returns the sharded engine and its summary for
+/// extra assertions.
+fn assert_transparent(
+    cfg: &SimConfig,
+    backend: ApproachKind,
+    s: usize,
+    threads: usize,
+    steps: usize,
+    tamper: &dyn Fn(&mut SimState),
+    ctx: &str,
+) -> (ShardedEngine, ShardedRunSummary) {
+    let ec = EngineConfig {
+        policy: "fixed-3".into(),
+        threads,
+        check_oom: false,
+        ..EngineConfig::new(cfg.clone(), backend)
+    };
+    let mut single = Engine::new(ec, Arc::new(RustKernels { threads })).unwrap();
+    tamper(&mut single.state);
+    single.run(steps, false).unwrap();
+
+    let sc = ShardedConfig {
+        policy: "fixed-3".into(),
+        threads,
+        check_oom: false,
+        backend,
+        ..ShardedConfig::new(cfg.clone(), ShardSpec::new(s))
+    };
+    let mut e = ShardedEngine::new(sc, Arc::new(RustKernels { threads })).unwrap();
+    tamper(&mut e.state);
+    let summary = e.run(steps, false).unwrap();
+    assert!(!summary.oom, "{ctx}: unexpected OOM");
+    assert_eq!(summary.steps, steps as u64, "{ctx}: short run");
+    assert_bits_equal(&e.state.pos, &single.state.pos, &format!("{ctx} pos"));
+    assert_bits_equal(&e.state.vel, &single.state.vel, &format!("{ctx} vel"));
+    assert_bits_equal(&e.state.force, &single.state.force, &format!("{ctx} force"));
+    (e, summary)
 }
 
 fn assert_bits_equal(got: &[Vec3], want: &[Vec3], ctx: &str) {
@@ -294,4 +387,226 @@ fn per_shard_oom_relief_on_lognormal_cluster() {
     assert!(!split.oom, "S=2 must complete (max shard {} bytes)",
         split.per_shard.iter().map(|t| t.max_list_bytes).max().unwrap_or(0));
     assert_eq!(split.steps, 3);
+}
+
+#[test]
+fn sharded_orcs_backends_match_single_domain_and_brute() {
+    // the tentpole acceptance: ORCS-forces and ORCS-persé as first-class
+    // sharded backends — for every (S, threads, boundary) the sharded run
+    // is bitwise identical to the same-backend single-domain run, which is
+    // itself bitwise identical to the brute min-image oracle (pinning the
+    // physics, not just the decomposition)
+    let steps = 3;
+    for boundary in Boundary::ALL {
+        for (backend, radius) in [
+            (ApproachKind::OrcsForces, RadiusDist::Uniform(2.0, 14.0)),
+            (ApproachKind::OrcsForces, RadiusDist::Const(8.0)),
+            (ApproachKind::OrcsPerse, RadiusDist::Const(8.0)),
+        ] {
+            let cfg = scenario(180, boundary, radius, 100.0, 7);
+            let (bp, bv, bf) = brute_trajectory(&cfg, steps);
+            let (wp, wv, wf) = single_backend(&cfg, backend, 2, steps);
+            let ctx = format!("{}/{boundary:?}/{radius:?}", backend.label());
+            assert_bits_equal(&wp, &bp, &format!("{ctx} single-vs-brute pos"));
+            assert_bits_equal(&wv, &bv, &format!("{ctx} single-vs-brute vel"));
+            assert_bits_equal(&wf, &bf, &format!("{ctx} single-vs-brute force"));
+            for s in [1usize, 2, 3] {
+                for threads in [1usize, 8] {
+                    let e = sharded_backend(&cfg, backend, s, threads, steps);
+                    let ctx = format!("{ctx} S={s} threads={threads}");
+                    assert_bits_equal(&e.state.pos, &wp, &ctx);
+                    assert_bits_equal(&e.state.vel, &wv, &ctx);
+                    assert_bits_equal(&e.state.force, &wf, &ctx);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_orcs_backends_match_in_large_radius_regime() {
+    // r_max > L/2: the 26-image periodic regime — ghosts materialize a
+    // particle's own wrap images, and the listless paths must fold them
+    // into the same canonical per-target sums as the single-domain engine
+    let cfg = scenario(60, Boundary::Periodic, RadiusDist::Const(25.0), 40.0, 17);
+    let steps = 3;
+    for backend in [ApproachKind::OrcsForces, ApproachKind::OrcsPerse] {
+        let (wp, wv, wf) = single_backend(&cfg, backend, 2, steps);
+        for s in [1usize, 2] {
+            let e = sharded_backend(&cfg, backend, s, 2, steps);
+            let ctx = format!("large-radius {} S={s}", backend.label());
+            assert_bits_equal(&e.state.pos, &wp, &ctx);
+            assert_bits_equal(&e.state.vel, &wv, &ctx);
+            assert_bits_equal(&e.state.force, &wf, &ctx);
+        }
+    }
+}
+
+#[test]
+fn prop_random_scenes_orcs_backends_shard_transparently() {
+    // randomized differential battery: sharded ORCS ≡ single-domain ORCS ≡
+    // brute oracle across random distributions, grids and thread counts
+    orcs::testutil::prop_check("sharding_orcs_transparent", 8, |rng| {
+        let mut cfg = orcs::testutil::gen::small_config(rng, 30, 90);
+        let backend = if rng.below(2) == 0 {
+            ApproachKind::OrcsForces
+        } else {
+            // persé's scenario rule: one radius for all particles
+            cfg.radius_dist = RadiusDist::Const(rng.range_f32(2.0, 12.0));
+            ApproachKind::OrcsPerse
+        };
+        let s = 1 + rng.below(3); // S in {1, 2, 3}
+        let threads = if rng.below(2) == 0 { 1 } else { 8 };
+        let steps = 2;
+        let (bp, bv, _) = brute_trajectory(&cfg, steps);
+        let (wp, wv, _) = single_backend(&cfg, backend, threads, steps);
+        let e = sharded_backend(&cfg, backend, s, threads, steps);
+        for i in 0..bp.len() {
+            if wp[i] != bp[i] || wv[i] != bv[i] {
+                return Err(format!(
+                    "single-domain {} diverged from brute at particle {i} on {}",
+                    backend.label(),
+                    cfg.tag()
+                ));
+            }
+            if e.state.pos[i] != wp[i] || e.state.vel[i] != wv[i] {
+                return Err(format!(
+                    "S={s} threads={threads} {} diverged at particle {i} on {}",
+                    backend.label(),
+                    cfg.tag()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+const ALL_BACKENDS: [ApproachKind; 3] =
+    [ApproachKind::RtRef, ApproachKind::OrcsForces, ApproachKind::OrcsPerse];
+
+#[test]
+fn degenerate_shard_occupancy_stays_transparent() {
+    // ISSUE satellite: empty shards, all particles crowded into one shard,
+    // n < S³, and exactly-one-particle shards must neither panic nor
+    // perturb bits — every backend, both boundary modes, both engines
+    let noop: &dyn Fn(&mut SimState) = &|_| {};
+    let crowd = |st: &mut SimState| {
+        // squeeze the whole scene into [2, 20)³ — one shard of a 3×3×3
+        // grid over a 90-box owns everything, 26 shards sit empty
+        for p in st.pos.iter_mut() {
+            *p = *p * 0.2 + Vec3::splat(2.0);
+        }
+    };
+    let corners = |st: &mut SimState| {
+        // one particle at each shard center of the 2×2×2 grid: every pair
+        // interaction crosses a shard face and resolves via ghosts
+        for (i, p) in st.pos.iter_mut().enumerate() {
+            *p = Vec3::new(
+                if i & 1 == 0 { 20.0 } else { 60.0 },
+                if i & 2 == 0 { 20.0 } else { 60.0 },
+                if i & 4 == 0 { 20.0 } else { 60.0 },
+            );
+        }
+    };
+    for backend in ALL_BACKENDS {
+        for boundary in Boundary::ALL {
+            let b = format!("{}/{boundary:?}", backend.label());
+            let cfg = scenario(60, boundary, RadiusDist::Const(6.0), 90.0, 11);
+            assert_transparent(&cfg, backend, 3, 2, 3, &crowd, &format!("{b} crowded"));
+            // n = 5 < S³ = 27: most shards are necessarily empty
+            let cfg = scenario(5, boundary, RadiusDist::Const(30.0), 90.0, 13);
+            assert_transparent(&cfg, backend, 3, 2, 3, noop, &format!("{b} n<S^3"));
+            // empty and singleton scenes
+            for n in [0usize, 1] {
+                let cfg = scenario(n, boundary, RadiusDist::Const(5.0), 60.0, 17);
+                assert_transparent(&cfg, backend, 2, 2, 2, noop, &format!("{b} n={n}"));
+            }
+            let cfg = scenario(8, boundary, RadiusDist::Const(45.0), 80.0, 19);
+            assert_transparent(&cfg, backend, 2, 2, 3, &corners, &format!("{b} one-per-shard"));
+        }
+    }
+}
+
+#[test]
+fn migration_emptying_a_shard_mid_run_stays_transparent() {
+    // ISSUE satellite: every particle owned by the x-high shards marches
+    // into the x-low half mid-run — the emptied shards must keep stepping
+    // (empty BVH, empty ghost set) without perturbing bits, on every
+    // backend
+    for backend in ALL_BACKENDS {
+        let cfg = scenario(24, Boundary::Wall, RadiusDist::Const(0.5), 80.0, 29);
+        let evacuate = |st: &mut SimState| {
+            let dt = st.dt;
+            for i in 0..st.n() {
+                // radii (0.5) are far below every pair distance, so forces
+                // stay exactly zero and the march is ballistic
+                st.pos[i] = Vec3::new(
+                    if i % 2 == 0 { 25.0 } else { 55.0 },
+                    10.0 + i as f32 * 1.5,
+                    30.0,
+                );
+                st.vel[i] = if i % 2 == 1 {
+                    Vec3::new(-10.0 / dt, 0.0, 0.0) // ~10 units per step
+                } else {
+                    Vec3::ZERO
+                };
+            }
+        };
+        let ctx = format!("evacuate {}", backend.label());
+        let (e, summary) = assert_transparent(&cfg, backend, 2, 2, 4, &evacuate, &ctx);
+        assert!(summary.migrations > 0, "{ctx}: the march must be metered");
+        // by the last step every mover sits below x = 40: the four x-high
+        // shards (odd indices on the 2×2×2 grid) own nothing
+        for i in 0..e.state.n() {
+            assert_eq!(e.owner(i) % 2, 0, "{ctx}: particle {i} still x-high");
+        }
+    }
+}
+
+#[test]
+fn lognormal_cluster_runs_listless_when_sharded() {
+    // ISSUE acceptance: the log-normal cluster that OOMs the single-domain
+    // RT-REF list completes *listless* at S = 2 under `--backend
+    // orcs-forces`, with no neighbor-list allocation metered on any shard —
+    // and still matches a memory-unconstrained run of the same scene
+    use orcs::rtcore::HwProfile;
+    static TINY: HwProfile = {
+        let mut p = orcs::rtcore::profile::TITANRTX;
+        p.vram_bytes = 700 * 1024; // 700 KB: OOMs the RT-REF list at S = 1
+        p
+    };
+    let cfg = SimConfig {
+        n: 600,
+        box_l: 1000.0,
+        particle_dist: ParticleDist::Cluster,
+        radius_dist: RadiusDist::LogNormal { mu: 1.0, sigma: 2.0, lo: 1.0, hi: 330.0 },
+        boundary: Boundary::Periodic,
+        seed: 31415,
+        ..SimConfig::default()
+    };
+    let run = |check_oom: bool| {
+        let sc = ShardedConfig {
+            policy: "gradient".into(),
+            threads: 2,
+            check_oom,
+            fleet: vec![&TINY],
+            backend: ApproachKind::OrcsForces,
+            ..ShardedConfig::new(cfg.clone(), ShardSpec::new(2))
+        };
+        let mut e = ShardedEngine::new(sc, Arc::new(RustKernels { threads: 2 })).unwrap();
+        orcs::benchsuite::sharded::center_positions(&mut e.state);
+        let summary = e.run(3, false).unwrap();
+        (e, summary)
+    };
+    let (e, summary) = run(true);
+    assert!(!summary.oom, "listless backend must never trip the OOM check");
+    assert_eq!(summary.steps, 3);
+    for (k, t) in summary.per_shard.iter().enumerate() {
+        assert_eq!(t.max_list_bytes, 0, "shard {k} allocated a neighbor list");
+        assert_eq!(t.listless_steps, 3, "shard {k} left the listless path");
+    }
+    let (free, _) = run(false);
+    assert_bits_equal(&e.state.pos, &free.state.pos, "listless cluster pos");
+    assert_bits_equal(&e.state.vel, &free.state.vel, "listless cluster vel");
+    assert_bits_equal(&e.state.force, &free.state.force, "listless cluster force");
 }

@@ -11,7 +11,8 @@
 //!      run, and a faulted run's dump carries the loss/recovery forensics.
 //!
 //! Properties are exercised for thread counts {1, 8} and, where the
-//! sharded engine is involved, shard grids S ∈ {1, 2}.
+//! sharded engine is involved, shard grids S ∈ {1, 2} across all three RT
+//! backends (RT-REF, ORCS-forces, ORCS-persé).
 
 use std::sync::Arc;
 
@@ -57,6 +58,7 @@ fn engine(cfg: &SimConfig, threads: usize) -> Engine {
 
 fn sharded(
     cfg: &SimConfig,
+    backend: ApproachKind,
     s: usize,
     threads: usize,
     res: ResilienceConfig,
@@ -66,10 +68,14 @@ fn sharded(
         threads,
         fleet: vec![&orcs::rtcore::profile::TITANRTX, &orcs::rtcore::profile::L40],
         resilience: res,
+        backend,
         ..orcs::shard::ShardedConfig::new(cfg.clone(), ShardSpec::new(s))
     };
     orcs::shard::ShardedEngine::new(sc, Arc::new(RustKernels { threads })).unwrap()
 }
+
+const SHARDED_BACKENDS: [ApproachKind; 3] =
+    [ApproachKind::RtRef, ApproachKind::OrcsForces, ApproachKind::OrcsPerse];
 
 /// Everything that must be deterministic about a span tree: step ids and,
 /// per span, lane/phase plus the bit patterns of the simulated times and
@@ -127,18 +133,23 @@ fn telemetry_traced_engine_run_is_bitwise_identical_to_untraced() {
 fn telemetry_traced_sharded_run_is_bitwise_identical_to_untraced() {
     let cfg = scenario(220, 99);
     let steps = 6;
-    for s in [1usize, 2] {
-        for threads in [1usize, 8] {
-            let ctx = format!("sharded traced-vs-untraced S={s} threads={threads}");
-            let mut plain = sharded(&cfg, s, threads, ResilienceConfig::default());
-            plain.run(steps, false).unwrap();
+    for backend in SHARDED_BACKENDS {
+        for s in [1usize, 2] {
+            for threads in [1usize, 8] {
+                let ctx = format!(
+                    "sharded traced-vs-untraced {} S={s} threads={threads}",
+                    backend.label()
+                );
+                let mut plain = sharded(&cfg, backend, s, threads, ResilienceConfig::default());
+                plain.run(steps, false).unwrap();
 
-            let mut traced = sharded(&cfg, s, threads, ResilienceConfig::default());
-            traced.telemetry_mut().enable_trace();
-            traced.run(steps, false).unwrap();
-            assert_eq!(traced.telemetry().steps().len(), steps, "{ctx}: retained steps");
-            assert_bits_equal(&traced.state.pos, &plain.state.pos, &ctx);
-            assert_bits_equal(&traced.state.vel, &plain.state.vel, &ctx);
+                let mut traced = sharded(&cfg, backend, s, threads, ResilienceConfig::default());
+                traced.telemetry_mut().enable_trace();
+                traced.run(steps, false).unwrap();
+                assert_eq!(traced.telemetry().steps().len(), steps, "{ctx}: retained steps");
+                assert_bits_equal(&traced.state.pos, &plain.state.pos, &ctx);
+                assert_bits_equal(&traced.state.vel, &plain.state.vel, &ctx);
+            }
         }
     }
 }
@@ -176,24 +187,58 @@ fn telemetry_span_tree_is_identical_across_thread_counts_modulo_wall() {
 fn telemetry_sharded_span_tree_is_identical_across_thread_counts() {
     let cfg = scenario(220, 99);
     let steps = 5;
-    for s in [1usize, 2] {
-        let ctx = format!("sharded span tree S={s}");
-        let run = |threads: usize| {
-            let mut e = sharded(&cfg, s, threads, ResilienceConfig::default());
-            e.telemetry_mut().enable_trace();
-            e.run(steps, false).unwrap();
-            e
-        };
-        let a = run(1);
-        let b = run(8);
-        let (ka, kb) = (span_keys(a.telemetry().steps()), span_keys(b.telemetry().steps()));
-        assert!(!ka.is_empty(), "{ctx}: spans recorded");
-        assert_eq!(ka, kb, "{ctx}: bitwise-stable across thread counts");
-        assert_eq!(mark_labels(a.telemetry().steps()), mark_labels(b.telemetry().steps()));
-        // the sharded trace must survive Chrome export end to end
-        chrome::validate(a.telemetry().steps()).expect("trace must validate");
-        let js = chrome::render(a.telemetry().steps(), &a.telemetry().lanes());
-        chrome::validate_json(&js).expect("rendered JSON must be balanced");
+    for backend in SHARDED_BACKENDS {
+        for s in [1usize, 2] {
+            let ctx = format!("sharded span tree {} S={s}", backend.label());
+            let run = |threads: usize| {
+                let mut e = sharded(&cfg, backend, s, threads, ResilienceConfig::default());
+                e.telemetry_mut().enable_trace();
+                e.run(steps, false).unwrap();
+                e
+            };
+            let a = run(1);
+            let b = run(8);
+            let (ka, kb) = (span_keys(a.telemetry().steps()), span_keys(b.telemetry().steps()));
+            assert!(!ka.is_empty(), "{ctx}: spans recorded");
+            assert_eq!(ka, kb, "{ctx}: bitwise-stable across thread counts");
+            assert_eq!(mark_labels(a.telemetry().steps()), mark_labels(b.telemetry().steps()));
+            // the sharded trace must survive Chrome export end to end
+            chrome::validate(a.telemetry().steps()).expect("trace must validate");
+            let js = chrome::render(a.telemetry().steps(), &a.telemetry().lanes());
+            chrome::validate_json(&js).expect("rendered JSON must be balanced");
+        }
+    }
+}
+
+#[test]
+fn telemetry_sharded_runs_record_gather_and_scatter_spans() {
+    // the halo exchange decomposes into phases the trace can attribute:
+    // every multi-shard run prices a `gather` span per shard with ghosts,
+    // and the listless ORCS-forces backend adds a `scatter` span on shards
+    // that fold cross-shard force contributions back to remote owners
+    let cfg = scenario(220, 99);
+    let phases = |e: &orcs::shard::ShardedEngine, label: &str| -> usize {
+        e.telemetry()
+            .steps()
+            .iter()
+            .flat_map(|st| st.spans.iter())
+            .filter(|sp| sp.phase.label() == label)
+            .count()
+    };
+    for backend in SHARDED_BACKENDS {
+        let ctx = format!("spans {}", backend.label());
+        let mut e = sharded(&cfg, backend, 2, 2, ResilienceConfig::default());
+        e.telemetry_mut().enable_trace();
+        e.run(4, false).unwrap();
+        assert!(phases(&e, "gather") > 0, "{ctx}: no gather span in a multi-shard run");
+        if backend == ApproachKind::OrcsForces {
+            assert!(phases(&e, "scatter") > 0, "{ctx}: no scatter span at S=2");
+        }
+        // a single shard owns every source: nothing to gather or fold back
+        let mut solo = sharded(&cfg, backend, 1, 2, ResilienceConfig::default());
+        solo.telemetry_mut().enable_trace();
+        solo.run(4, false).unwrap();
+        assert_eq!(phases(&solo, "scatter"), 0, "{ctx}: scatter span on a single shard");
     }
 }
 
@@ -218,7 +263,7 @@ fn telemetry_faulted_run_dump_carries_loss_and_recovery_forensics() {
         faults: FaultPlan::parse("lost@5:1").unwrap(),
         ..ResilienceConfig::default()
     };
-    let mut e = sharded(&cfg, 2, 2, res);
+    let mut e = sharded(&cfg, ApproachKind::RtRef, 2, 2, res);
     let sum = e.run(8, false).unwrap();
     assert!(sum.replayed_steps > 0, "the loss must have triggered recovery");
     let dump = e.telemetry().flight_dump();
