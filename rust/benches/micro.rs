@@ -52,13 +52,16 @@ fn write_json(
     n: usize,
     threads: usize,
     aabb_tests_per_ray: f64,
+    node_fetch_bytes_per_ray: f64,
     rows: &[BenchRow],
 ) {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str(&format!("  \"n\": {n},\n"));
     s.push_str(&format!("  \"threads\": {threads},\n"));
+    s.push_str(&format!("  \"node_bytes\": {},\n", std::mem::size_of::<orcs::bvh::Bvh4Node>()));
     s.push_str(&format!("  \"aabb_tests_per_ray\": {aabb_tests_per_ray:.4},\n"));
+    s.push_str(&format!("  \"node_fetch_bytes_per_ray\": {node_fetch_bytes_per_ray:.4},\n"));
     s.push_str("  \"benches\": {\n");
     for (k, r) in rows.iter().enumerate() {
         let comma = if k + 1 == rows.len() { "" } else { "," };
@@ -71,6 +74,113 @@ fn write_json(
     match std::fs::write(path, s) {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}
+
+/// The pre-quantization 128-byte SoA node layout, rebuilt from the
+/// quantized tree's dequantized lane boxes — the bench-local reference the
+/// "quantized vs 128 B" rows compare against (the library itself only ships
+/// the quantized layout).
+struct FatNode {
+    min_x: [f32; 4],
+    min_y: [f32; 4],
+    min_z: [f32; 4],
+    max_x: [f32; 4],
+    max_y: [f32; 4],
+    max_z: [f32; 4],
+    child: [u32; 4],
+    count: [u32; 4],
+}
+
+fn fatten(bvh: &Bvh) -> Vec<FatNode> {
+    bvh.nodes
+        .iter()
+        .map(|nd| {
+            let mut f = FatNode {
+                min_x: [f32::INFINITY; 4],
+                min_y: [f32::INFINITY; 4],
+                min_z: [f32::INFINITY; 4],
+                max_x: [f32::NEG_INFINITY; 4],
+                max_y: [f32::NEG_INFINITY; 4],
+                max_z: [f32::NEG_INFINITY; 4],
+                child: [u32::MAX; 4],
+                count: [0; 4],
+            };
+            for lane in 0..4 {
+                if !nd.lane_used(lane) {
+                    continue;
+                }
+                let bb = nd.lane_aabb(lane);
+                f.min_x[lane] = bb.lo.x;
+                f.min_y[lane] = bb.lo.y;
+                f.min_z[lane] = bb.lo.z;
+                f.max_x[lane] = bb.hi.x;
+                f.max_y[lane] = bb.hi.y;
+                f.max_z[lane] = bb.hi.z;
+                f.child[lane] = nd.child[lane];
+                f.count[lane] = nd.count[lane] as u32;
+            }
+            f
+        })
+        .collect()
+}
+
+/// The old float-compare traversal over [`FatNode`]s (empty lanes carry
+/// +inf/-inf bounds and fail automatically).
+fn fat_query<F: FnMut(usize)>(
+    nodes: &[FatNode],
+    prim_order: &[u32],
+    p: Vec3,
+    exclude: usize,
+    pos: &[Vec3],
+    radius: &[f32],
+    mut visit: F,
+) {
+    if nodes.is_empty() {
+        return;
+    }
+    let mut stack = [0u32; 96];
+    let mut sp = 0usize;
+    let mut current = 0u32;
+    loop {
+        let node = &nodes[current as usize];
+        let mut pending = [0u32; 4];
+        let mut n_pending = 0usize;
+        for lane in 0..4 {
+            let inside = p.x >= node.min_x[lane]
+                && p.y >= node.min_y[lane]
+                && p.z >= node.min_z[lane]
+                && p.x <= node.max_x[lane]
+                && p.y <= node.max_y[lane]
+                && p.z <= node.max_z[lane];
+            if !inside {
+                continue;
+            }
+            if node.count[lane] > 0 {
+                let first = node.child[lane] as usize;
+                for k in first..first + node.count[lane] as usize {
+                    let j = prim_order[k] as usize;
+                    if j != exclude {
+                        let d2 = (p - pos[j]).norm2();
+                        if d2 < radius[j] * radius[j] {
+                            visit(j);
+                        }
+                    }
+                }
+            } else {
+                pending[n_pending] = node.child[lane];
+                n_pending += 1;
+            }
+        }
+        for k in (0..n_pending).rev() {
+            stack[sp] = pending[k];
+            sp += 1;
+        }
+        if sp == 0 {
+            break;
+        }
+        sp -= 1;
+        current = stack[sp];
     }
 }
 
@@ -170,6 +280,43 @@ fn main() {
         "{:<52} {aabb_tests_per_ray:>14.2}   (1 unit = one 4-wide node test)",
         "aabb_tests / ray"
     );
+    // the acceptance metric of the quantized layout: priced node-fetch
+    // traffic per ray through the re-calibrated rtcore/timing meter
+    let node_fetch_bytes_per_ray =
+        aabb_tests_per_ray * orcs::rtcore::timing::BYTES_PER_NODE_FETCH;
+    let fetch_128 = aabb_tests_per_ray * orcs::rtcore::timing::BYTES_PER_NODE_FETCH_UNCOMPRESSED;
+    println!(
+        "{:<52} {node_fetch_bytes_per_ray:>14.2}   ({} B/node; {fetch_128:.2} at 128 B, {:.2}x less)",
+        "node-fetch bytes / ray (priced)",
+        std::mem::size_of::<orcs::bvh::Bvh4Node>(),
+        fetch_128 / node_fetch_bytes_per_ray
+    );
+
+    // --- quantized vs 128-byte nodes, SIMD vs scalar lanes ---
+    assert_eq!(std::mem::size_of::<FatNode>(), 128);
+    let fat = fatten(&bvh);
+    bench(rows, "bvh query x n (128B f32 nodes, reference)", reps, || {
+        let mut acc = 0usize;
+        for i in 0..n {
+            fat_query(&fat, &bvh.prim_order, pos[i], i, &pos, &radius, |_| acc += 1);
+        }
+        std::hint::black_box(acc);
+    });
+    let native = orcs::bvh::simd::detect_kernel();
+    for (label, kern) in
+        [("scalar lanes", orcs::bvh::simd::Kernel::Scalar), ("simd lanes", native)]
+    {
+        orcs::bvh::simd::set_kernel(kern);
+        bench(rows, &format!("bvh query x n (quantized, {label} = {kern:?})"), reps, || {
+            let mut scratch = orcs::bvh::traverse::QueryScratch::new();
+            let mut acc = 0usize;
+            for i in 0..n {
+                bvh.query_point(pos[i], i, &pos, &radius, &mut scratch, |_| acc += 1);
+            }
+            std::hint::black_box((acc, scratch.stats.aabb_tests));
+        });
+    }
+    orcs::bvh::simd::set_kernel(native);
 
     let cfg = SimConfig {
         n,
@@ -231,6 +378,6 @@ fn main() {
     }
 
     if let Some(path) = json_path {
-        write_json(&path, n, threads, aabb_tests_per_ray, rows);
+        write_json(&path, n, threads, aabb_tests_per_ray, node_fetch_bytes_per_ray, rows);
     }
 }

@@ -286,13 +286,20 @@ fn gather_lanes(bnodes: &[BinNode], b: u32) -> ([u32; BVH4_WIDTH], usize) {
 /// Collapse the binary topology into breadth-first-ordered BVH4 nodes plus
 /// the per-depth level table (see module docs). Deterministic in the input
 /// array, independent of thread count.
+///
+/// Nodes are **quantized at collapse** ([`Bvh4Node::pack`]): slots are
+/// assigned top-down (BFS order), but the node array is *filled* deepest
+/// level first so each parent's internal lane boxes are the **dequantized**
+/// unions of its already-packed children — that makes the conservative
+/// containment contract transitive through the per-node quantization
+/// frames (`check_invariants` verifies it exactly, no epsilon).
 fn collapse_bvh4(bnodes: &[BinNode]) -> (Vec<Bvh4Node>, Vec<u32>) {
     // lint:allow(P-INDEX-LIT): the binary builder always emits a root node
     if bnodes[0].is_leaf() {
         // whole scene fits one leaf: a single node with one leaf lane
-        let mut node = Bvh4Node::EMPTY;
         // lint:allow(P-INDEX-LIT): root node, guarded by the branch above
-        node.set_lane(0, &bnodes[0].aabb, bnodes[0].left_first, bnodes[0].count);
+        let root = &bnodes[0];
+        let node = Bvh4Node::pack(&[(root.aabb, root.left_first, root.count)]);
         return (vec![node], vec![0, 1]);
     }
     // BFS over binary internal nodes; every visited entry becomes one BVH4
@@ -325,20 +332,24 @@ fn collapse_bvh4(bnodes: &[BinNode]) -> (Vec<Bvh4Node>, Vec<u32>) {
         level_starts.push(acc);
     }
     let mut nodes = vec![Bvh4Node::EMPTY; total as usize];
-    for lv in &levels {
+    // Deepest level first: internal lanes of a node in level d reference
+    // nodes in level d + 1, which this order has already packed, so their
+    // dequantized `lanes_union` is available (see doc comment above).
+    for lv in levels.iter().rev() {
         for &b in lv {
             let slot = slot_of[b as usize] as usize;
             let (lanes, k) = gather_lanes(bnodes, b);
-            let mut node = Bvh4Node::EMPTY;
+            let mut entries = [(Aabb::EMPTY, 0u32, 0u32); BVH4_WIDTH];
             for (lane, &lane_bin) in lanes[..k].iter().enumerate() {
                 let bn = &bnodes[lane_bin as usize];
-                if bn.is_leaf() {
-                    node.set_lane(lane, &bn.aabb, bn.left_first, bn.count);
+                entries[lane] = if bn.is_leaf() {
+                    (bn.aabb, bn.left_first, bn.count)
                 } else {
-                    node.set_lane(lane, &bn.aabb, slot_of[lane_bin as usize], 0);
-                }
+                    let c = slot_of[lane_bin as usize];
+                    (nodes[c as usize].lanes_union(), c, 0)
+                };
             }
-            nodes[slot] = node;
+            nodes[slot] = Bvh4Node::pack(&entries[..k]);
         }
     }
     (nodes, level_starts)

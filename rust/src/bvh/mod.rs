@@ -10,18 +10,35 @@
 //! `gradient` optimizer exploits — emerges structurally: as particles move,
 //! refitted node bounds overlap more and traversal touches more nodes.
 //!
-//! # Node layout: 4-wide SoA (BVH4)
+//! # Node layout: 4-wide SoA with 8-bit quantized child boxes
 //!
 //! Nodes are **4-wide** ([`Bvh4Node`]), mirroring the wide BVHs RT silicon
-//! actually traverses: each node stores the AABBs of up to four children in
-//! transposed structure-of-arrays form (`min_x[4]; min_y[4]; …`), so one
-//! point-in-box step tests all four children from a single 128-byte node
-//! fetch. The array is laid out in **breadth-first order** — all nodes of
-//! depth `d` precede depth `d + 1` (ranges recorded in
-//! [`Bvh::level_starts`]) — which makes a reverse index sweep a valid
-//! bottom-up order *and* lets [`Bvh::refit`] process each level as an
-//! embarrassingly parallel slice (level-partitioned refit, bit-identical to
-//! the serial sweep).
+//! actually traverses, and the four child boxes are stored **quantized**
+//! (Howard et al., PAPERS.md): a per-node `anchor` plus per-axis
+//! power-of-two scales (one exponent byte each) define an integer frame,
+//! and each lane's bounds are 8-bit offsets in that frame, transposed into
+//! per-axis lanes (`qmin_x[4]; qmin_y[4]; …`). That shrinks a node from
+//! the 128 bytes of the uncompressed f32 layout to under 64 bytes — one
+//! cache line per node fetch instead of two — which is the hot-path
+//! currency for both traversal (re-fetches per ray) and refit (streams
+//! every node).
+//!
+//! Quantization uses **conservative rounding**: mins round down, maxs
+//! round up (with f32 fix-up loops, see [`Bvh4Node::requantize`]), so every
+//! dequantized lane box *contains* its exact box. Traversal therefore can
+//! widen — visit a node an exact tree would have culled — but never miss,
+//! and the exact sphere test at the leaves keeps neighbor lists bitwise
+//! identical to an uncompressed tree. The traversal hot loop never
+//! dequantizes: the query point is quantized once per node and lanes are
+//! tested with pure integer compares (see [`Bvh4Node::quantize_query`] and
+//! [`simd`], which provides explicit SSE2/NEON kernels for the 4-lane
+//! test).
+//!
+//! The array is laid out in **breadth-first order** — all nodes of depth
+//! `d` precede depth `d + 1` (ranges recorded in [`Bvh::level_starts`]) —
+//! which makes a reverse index sweep a valid bottom-up order *and* lets
+//! [`Bvh::refit`] process each level as an embarrassingly parallel slice
+//! (level-partitioned refit, bit-identical to the serial sweep).
 //!
 //! Builds collapse a binary topology into this layout (see [`builder`]) and
 //! are multi-threaded; queries run through the batched, allocation-free
@@ -31,6 +48,7 @@
 
 pub mod builder;
 pub mod quality;
+pub mod simd;
 pub mod traverse;
 
 use crate::core::aabb::Aabb;
@@ -46,42 +64,147 @@ pub const BVH4_WIDTH: usize = 4;
 /// Sentinel child value marking an unused lane.
 pub const INVALID_LANE: u32 = u32::MAX;
 
-/// One 4-wide SoA BVH node. Child AABBs are stored transposed (per-axis
-/// lanes) so a point query tests four boxes with straight-line array code.
-/// Lane `l` is:
+/// Quantized-bound sentinels for empty lanes: `qmin > qmax` by more than
+/// the traversal's ±1 integer slack, so the lane test fails for every
+/// query point and empty lanes need no special-casing on the hot path.
+const QMIN_EMPTY: u8 = 255;
+const QMAX_EMPTY: u8 = 0;
+
+/// Exponent-byte range for the per-axis power-of-two scales. The low clamp
+/// keeps the scale a normal f32 (`2^-126`); the high clamp keeps the exact
+/// reciprocal ([`exp_inv_scale`]) normal too. In practice the widen loop in
+/// [`scale_exp_for`] stops well below the cap: `255 · 2^(e-127)` overflows
+/// f32 around `e = 248`, at which point the frame trivially covers any
+/// finite extent.
+const SCALE_EXP_MIN: u8 = 1;
+const SCALE_EXP_MAX: u8 = 253;
+
+/// The power-of-two scale encoded by exponent byte `e`: `2^(e - 127)` (an
+/// f32 with exponent field `e` and zero mantissa — multiplying by it is
+/// exact).
+#[inline(always)]
+pub fn exp_scale(e: u8) -> f32 {
+    f32::from_bits((e as u32) << 23)
+}
+
+/// The exact reciprocal of [`exp_scale`]: `2^(127 - e)`. Exponent bytes
+/// are clamped to [`SCALE_EXP_MAX`] at quantization time so the reciprocal
+/// stays a normal f32.
+#[inline(always)]
+pub fn exp_inv_scale(e: u8) -> f32 {
+    f32::from_bits((254 - e.min(SCALE_EXP_MAX) as u32) << 23)
+}
+
+/// Smallest exponent byte whose frame `anchor + [0, 255]·2^(e-127)` covers
+/// `hi` *in f32 arithmetic*. The bit-level guess can be one step short of
+/// the analytic answer after rounding; the widen loop makes the cover
+/// claim exact rather than analytic, which is what the conservative
+/// containment contract rests on.
+fn scale_exp_for(anchor: f32, hi: f32) -> u8 {
+    let ext = (hi - anchor).max(0.0);
+    // ext < 2^(be - 126) by the f32 exponent bits, so 255·2^(be - 134)
+    // already exceeds it; start at `be - 7` and widen as needed.
+    let be = (ext.to_bits() >> 23) & 0xff;
+    let mut e = (be as i32 - 7).clamp(SCALE_EXP_MIN as i32, SCALE_EXP_MAX as i32) as u8;
+    while e < SCALE_EXP_MAX && anchor + 255.0 * exp_scale(e) < hi {
+        e += 1;
+    }
+    e
+}
+
+/// Largest `q` in `[0, 255]` with `anchor + q·scale <= v`: quantize a box
+/// *min* rounding down. The f32 fix-up loop (runs 0–1 iterations in
+/// practice) repairs any upward rounding of the float floor, so the
+/// dequantized min never exceeds the exact min.
+#[inline]
+fn quantize_down(v: f32, anchor: f32, e: u8) -> u8 {
+    let t = ((v - anchor) * exp_inv_scale(e)).clamp(0.0, 255.0);
+    let mut q = t as u8;
+    let scale = exp_scale(e);
+    while q > 0 && anchor + q as f32 * scale > v {
+        q -= 1;
+    }
+    q
+}
+
+/// Smallest `q` in `[0, 255]` with `anchor + q·scale >= v`: quantize a box
+/// *max* rounding up. [`scale_exp_for`] chose the exponent so `q = 255`
+/// provably covers the frame's top corner in f32 arithmetic, so the fix-up
+/// loop always terminates with the cover contract satisfied.
+#[inline]
+fn quantize_up(v: f32, anchor: f32, e: u8) -> u8 {
+    let t = ((v - anchor) * exp_inv_scale(e)).clamp(0.0, 255.0);
+    let mut q = t.ceil() as u8;
+    let scale = exp_scale(e);
+    while q < 255 && anchor + q as f32 * scale < v {
+        q += 1;
+    }
+    q
+}
+
+/// One 4-wide SoA BVH node with 8-bit quantized child boxes. A per-node
+/// frame — `anchor` (component-wise min over the used lanes' boxes) plus a
+/// power-of-two scale per axis (`scale_exp`, see [`exp_scale`]) — maps each
+/// lane's bounds to byte offsets, transposed into per-axis lanes so a point
+/// query tests four boxes with straight-line integer compares
+/// ([`simd::lane_mask`]). Lane `l` is:
 ///
 /// * **internal** when `count[l] == 0` and `child[l] != INVALID_LANE` —
 ///   `child[l]` is the node index of the subtree;
 /// * **leaf** when `count[l] > 0` — `child[l]` is the first index of a
 ///   `count[l]`-long range of [`Bvh::prim_order`];
-/// * **empty** when `child[l] == INVALID_LANE` — its bounds are
-///   `+inf/-inf`, so every point-in-box test fails and no special-casing is
-///   needed on the traversal hot path.
+/// * **empty** when `child[l] == INVALID_LANE` — its quantized bounds are
+///   the inverted sentinel (`qmin = 255 > qmax = 0`), so every lane test
+///   fails and no special-casing is needed on the traversal hot path.
+///
+/// Dequantized lane boxes ([`Bvh4Node::lane_aabb`]) *contain* the exact
+/// boxes they were quantized from (conservative rounding, see
+/// [`Bvh4Node::requantize`]); the exact sphere test at the leaves keeps
+/// query results bitwise identical to an uncompressed tree.
+///
+/// The layout is `#[repr(C)]` and must stay within one 64-byte cache line
+/// (59 B data + tail padding = 60 B; the uncompressed f32 layout was
+/// 128 B). [`crate::rtcore::timing`] prices node fetches by this size.
+#[repr(C)]
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Bvh4Node {
-    pub min_x: [f32; BVH4_WIDTH],
-    pub min_y: [f32; BVH4_WIDTH],
-    pub min_z: [f32; BVH4_WIDTH],
-    pub max_x: [f32; BVH4_WIDTH],
-    pub max_y: [f32; BVH4_WIDTH],
-    pub max_z: [f32; BVH4_WIDTH],
+    /// Quantization frame origin: component-wise min over used lane boxes.
+    pub anchor: [f32; 3],
     /// Per-lane child reference (node index or `prim_order` start).
     pub child: [u32; BVH4_WIDTH],
-    /// Per-lane primitive count (0 for internal and empty lanes).
-    pub count: [u32; BVH4_WIDTH],
+    /// Per-axis power-of-two scale exponent byte (see [`exp_scale`]).
+    pub scale_exp: [u8; 3],
+    /// Per-lane primitive count (0 for internal and empty lanes). Fits a
+    /// byte because leaves hold at most [`LEAF_SIZE`] primitives.
+    pub count: [u8; BVH4_WIDTH],
+    /// Quantized lane mins per axis (offsets from `anchor` in scale units,
+    /// rounded down).
+    pub qmin_x: [u8; BVH4_WIDTH],
+    pub qmin_y: [u8; BVH4_WIDTH],
+    pub qmin_z: [u8; BVH4_WIDTH],
+    /// Quantized lane maxs per axis (rounded up).
+    pub qmax_x: [u8; BVH4_WIDTH],
+    pub qmax_y: [u8; BVH4_WIDTH],
+    pub qmax_z: [u8; BVH4_WIDTH],
 }
 
+// The point of the quantized layout: one node per cache line. The timing
+// meter and the bench table both key off this size staying <= 64.
+const _: () = assert!(std::mem::size_of::<Bvh4Node>() <= 64);
+
 impl Bvh4Node {
-    /// A node with four empty lanes (all boxes inverted-infinite).
+    /// A node with four empty lanes (inverted quantized sentinels).
     pub const EMPTY: Bvh4Node = Bvh4Node {
-        min_x: [f32::INFINITY; BVH4_WIDTH],
-        min_y: [f32::INFINITY; BVH4_WIDTH],
-        min_z: [f32::INFINITY; BVH4_WIDTH],
-        max_x: [f32::NEG_INFINITY; BVH4_WIDTH],
-        max_y: [f32::NEG_INFINITY; BVH4_WIDTH],
-        max_z: [f32::NEG_INFINITY; BVH4_WIDTH],
+        anchor: [0.0; 3],
         child: [INVALID_LANE; BVH4_WIDTH],
+        scale_exp: [SCALE_EXP_MIN; 3],
         count: [0; BVH4_WIDTH],
+        qmin_x: [QMIN_EMPTY; BVH4_WIDTH],
+        qmin_y: [QMIN_EMPTY; BVH4_WIDTH],
+        qmin_z: [QMIN_EMPTY; BVH4_WIDTH],
+        qmax_x: [QMAX_EMPTY; BVH4_WIDTH],
+        qmax_y: [QMAX_EMPTY; BVH4_WIDTH],
+        qmax_z: [QMAX_EMPTY; BVH4_WIDTH],
     };
 
     #[inline(always)]
@@ -94,37 +217,33 @@ impl Bvh4Node {
         self.count[lane] > 0
     }
 
-    /// Reassemble one lane's box from the SoA fields.
-    #[inline(always)]
+    /// Dequantize one lane's box. The result **contains** the exact box
+    /// the lane was quantized from (conservative rounding contract);
+    /// unused lanes dequantize to [`Aabb::EMPTY`].
+    #[inline]
     pub fn lane_aabb(&self, lane: usize) -> Aabb {
+        if !self.lane_used(lane) {
+            return Aabb::EMPTY;
+        }
+        let [ax, ay, az] = self.anchor;
+        let [ex, ey, ez] = self.scale_exp;
+        let (sx, sy, sz) = (exp_scale(ex), exp_scale(ey), exp_scale(ez));
         Aabb::new(
-            Vec3::new(self.min_x[lane], self.min_y[lane], self.min_z[lane]),
-            Vec3::new(self.max_x[lane], self.max_y[lane], self.max_z[lane]),
+            Vec3::new(
+                ax + self.qmin_x[lane] as f32 * sx,
+                ay + self.qmin_y[lane] as f32 * sy,
+                az + self.qmin_z[lane] as f32 * sz,
+            ),
+            Vec3::new(
+                ax + self.qmax_x[lane] as f32 * sx,
+                ay + self.qmax_y[lane] as f32 * sy,
+                az + self.qmax_z[lane] as f32 * sz,
+            ),
         )
     }
 
-    /// Write one lane's box into the SoA fields.
-    #[inline(always)]
-    pub fn set_lane_aabb(&mut self, lane: usize, bb: &Aabb) {
-        self.min_x[lane] = bb.lo.x;
-        self.min_y[lane] = bb.lo.y;
-        self.min_z[lane] = bb.lo.z;
-        self.max_x[lane] = bb.hi.x;
-        self.max_y[lane] = bb.hi.y;
-        self.max_z[lane] = bb.hi.z;
-    }
-
-    /// Populate a lane (box + child reference + count).
-    #[inline(always)]
-    pub fn set_lane(&mut self, lane: usize, bb: &Aabb, child: u32, count: u32) {
-        self.set_lane_aabb(lane, bb);
-        self.child[lane] = child;
-        self.count[lane] = count;
-    }
-
-    /// Union of all used lane boxes = overall bounds of this node's subtree.
-    /// (Empty lanes carry inverted-infinite boxes, so growing by them is a
-    /// no-op.)
+    /// Union of all used lane boxes = overall (dequantized, conservative)
+    /// bounds of this node's subtree.
     #[inline]
     pub fn lanes_union(&self) -> Aabb {
         let mut bb = Aabb::EMPTY;
@@ -132,6 +251,99 @@ impl Bvh4Node {
             bb.grow(&self.lane_aabb(lane));
         }
         bb
+    }
+
+    /// Build a node from up to [`BVH4_WIDTH`] lane entries
+    /// `(box, child, count)`, quantizing all lanes against a shared frame
+    /// computed from them (see [`Bvh4Node::requantize`]). `count` must be
+    /// `0` for internal lanes and at most [`LEAF_SIZE`] for leaf lanes.
+    pub fn pack(lanes: &[(Aabb, u32, u32)]) -> Bvh4Node {
+        debug_assert!(lanes.len() <= BVH4_WIDTH);
+        let mut node = Bvh4Node::EMPTY;
+        let mut boxes = [Aabb::EMPTY; BVH4_WIDTH];
+        for (lane, &(bb, child, count)) in lanes.iter().enumerate() {
+            debug_assert!(count as usize <= LEAF_SIZE, "lane count exceeds LEAF_SIZE");
+            node.child[lane] = child;
+            node.count[lane] = count as u8;
+            boxes[lane] = bb;
+        }
+        node.requantize(&boxes);
+        node
+    }
+
+    /// Recompute the quantization frame from the used lanes' `boxes` and
+    /// requantize every lane with **conservative rounding** — mins round
+    /// down ([`quantize_down`]), maxs round up ([`quantize_up`]) — so each
+    /// dequantized lane box contains its exact input box. Topology
+    /// (`child`/`count`) is untouched; entries of `boxes` at unused lanes
+    /// are ignored.
+    ///
+    /// This is a pure function of `(topology, boxes)` with no ordering
+    /// freedom, and it is the *single* quantization site: the build
+    /// collapse, the serial refit and the level-parallel refit all route
+    /// through here, which is what keeps parallel refits node-for-node
+    /// bitwise identical to serial ones.
+    pub fn requantize(&mut self, boxes: &[Aabb; BVH4_WIDTH]) {
+        let mut lo = Vec3::splat(f32::INFINITY);
+        let mut hi = Vec3::splat(f32::NEG_INFINITY);
+        let mut any = false;
+        for lane in 0..BVH4_WIDTH {
+            if self.lane_used(lane) {
+                lo = lo.min(boxes[lane].lo);
+                hi = hi.max(boxes[lane].hi);
+                any = true;
+            }
+        }
+        if !any {
+            // no used lanes: reset to the always-miss sentinel frame
+            let (child, count) = (self.child, self.count);
+            *self = Bvh4Node { child, count, ..Bvh4Node::EMPTY };
+            return;
+        }
+        self.anchor = [lo.x, lo.y, lo.z];
+        let (ex, ey, ez) =
+            (scale_exp_for(lo.x, hi.x), scale_exp_for(lo.y, hi.y), scale_exp_for(lo.z, hi.z));
+        self.scale_exp = [ex, ey, ez];
+        for lane in 0..BVH4_WIDTH {
+            if !self.lane_used(lane) {
+                self.qmin_x[lane] = QMIN_EMPTY;
+                self.qmin_y[lane] = QMIN_EMPTY;
+                self.qmin_z[lane] = QMIN_EMPTY;
+                self.qmax_x[lane] = QMAX_EMPTY;
+                self.qmax_y[lane] = QMAX_EMPTY;
+                self.qmax_z[lane] = QMAX_EMPTY;
+                continue;
+            }
+            let bb = &boxes[lane];
+            self.qmin_x[lane] = quantize_down(bb.lo.x, lo.x, ex);
+            self.qmin_y[lane] = quantize_down(bb.lo.y, lo.y, ey);
+            self.qmin_z[lane] = quantize_down(bb.lo.z, lo.z, ez);
+            self.qmax_x[lane] = quantize_up(bb.hi.x, lo.x, ex);
+            self.qmax_y[lane] = quantize_up(bb.hi.y, lo.y, ey);
+            self.qmax_z[lane] = quantize_up(bb.hi.z, lo.z, ez);
+        }
+    }
+
+    /// Quantize a query point into this node's integer frame: per axis,
+    /// `trunc((p - anchor) / scale)` clamped to `[-1, 256]`. A lane test
+    /// then compares with ±1 integer slack (`qp + 1 >= qmin` and
+    /// `qp - 1 <= qmax`, see [`simd::lane_mask`]): the slack absorbs the
+    /// one unit the float product/truncation can be off by, so a point
+    /// inside a dequantized lane box **always** passes — the test can
+    /// widen (conservative) but never miss. The clamp bounds the integer
+    /// range (no overflow on the ±1) and is done in f32 *before* the cast
+    /// so scalar `as` and SIMD `cvtt` saturation can never be observed to
+    /// differ. Positions must be NaN-free (the watchdog guarantees it);
+    /// ±inf inputs clamp safely.
+    #[inline(always)]
+    pub fn quantize_query(&self, p: Vec3) -> [i32; 3] {
+        let [ax, ay, az] = self.anchor;
+        let [ex, ey, ez] = self.scale_exp;
+        [
+            ((p.x - ax) * exp_inv_scale(ex)).clamp(-1.0, 256.0) as i32,
+            ((p.y - ay) * exp_inv_scale(ey)).clamp(-1.0, 256.0) as i32,
+            ((p.z - az) * exp_inv_scale(ez)).clamp(-1.0, 256.0) as i32,
+        ]
     }
 }
 
@@ -200,8 +412,9 @@ impl Bvh {
     /// mutually independent — a leaf lane reads only primitive data and an
     /// internal lane reads only strictly deeper (already-refit) nodes — so
     /// each level fans out across threads. Every node executes the exact
-    /// same arithmetic as the serial sweep, so the result is bit-identical
-    /// for any thread count.
+    /// same arithmetic as the serial sweep — including the whole-node
+    /// requantization ([`Bvh4Node::requantize`]) — so the result is
+    /// bit-identical for any thread count.
     pub fn refit_with_threads(&mut self, pos: &[Vec3], radius: &[f32], threads: usize) {
         debug_assert_eq!(pos.len(), self.n_prims);
         let threads = threads.max(1);
@@ -269,8 +482,10 @@ impl Bvh {
         {
             return Err(format!("bad level_starts {:?}", self.level_starts));
         }
-        // every lane bounds its content; leaf lanes cover prim_order
-        // exactly once; internal lanes point strictly forward
+        // every lane bounds its content (dequantized boxes are conservative,
+        // so containment holds *exactly*, not just within EPS); leaf lanes
+        // cover prim_order exactly once; internal lanes point strictly
+        // forward
         let mut covered = vec![false; self.n_prims];
         for (i, n) in self.nodes.iter().enumerate() {
             for lane in 0..BVH4_WIDTH {
@@ -279,6 +494,9 @@ impl Bvh {
                         return Err(format!("node {i} empty lane {lane} with count"));
                     }
                     continue;
+                }
+                if n.count[lane] as usize > LEAF_SIZE {
+                    return Err(format!("node {i} lane {lane} count exceeds LEAF_SIZE"));
                 }
                 let bb = n.lane_aabb(lane);
                 if n.lane_is_leaf(lane) {
@@ -317,10 +535,14 @@ impl Bvh {
     }
 }
 
-/// Recompute the lane boxes of `nodes[slot]`: leaf lanes from current
+/// Recompute the lane boxes of `nodes[slot]` — leaf lanes from current
 /// primitive spheres, internal lanes from the (already-refit) child node's
-/// lane union. Shared by the serial and the level-parallel sweeps so both
-/// produce bit-identical results.
+/// dequantized lane union — then requantize the whole node against the
+/// fresh frame ([`Bvh4Node::requantize`]). Quantizing against the child's
+/// *dequantized* union (not an exact subtree box) keeps conservative
+/// containment transitive through the quantized frames. Shared by the
+/// serial and the level-parallel sweeps so both produce bit-identical
+/// results.
 ///
 /// # Safety
 /// `nodes` must be valid for the whole node array; `nodes[slot]` must not
@@ -334,12 +556,13 @@ unsafe fn refit_node(
     radius: &[f32],
 ) {
     let node = &mut *nodes.add(slot);
+    let mut boxes = [Aabb::EMPTY; BVH4_WIDTH];
     for lane in 0..BVH4_WIDTH {
         let c = node.child[lane];
         if c == INVALID_LANE {
             continue;
         }
-        let bb = if node.count[lane] > 0 {
+        boxes[lane] = if node.count[lane] > 0 {
             let first = c as usize;
             let mut bb = Aabb::EMPTY;
             for k in first..first + node.count[lane] as usize {
@@ -351,8 +574,8 @@ unsafe fn refit_node(
             // children live at higher indices -> already refit
             (*nodes.add(c as usize)).lanes_union()
         };
-        node.set_lane_aabb(lane, &bb);
     }
+    node.requantize(&boxes);
 }
 
 fn contains_box(outer: &Aabb, inner: &Aabb) -> bool {
@@ -384,6 +607,84 @@ mod tests {
             .collect();
         let radius = (0..n).map(|_| rng.range_f32(0.5, 5.0)).collect();
         (pos, radius)
+    }
+
+    #[test]
+    fn node_fits_one_cache_line() {
+        // the acceptance gate of the quantized layout (also asserted at
+        // compile time above)
+        assert!(std::mem::size_of::<Bvh4Node>() <= 64);
+    }
+
+    #[test]
+    fn pack_roundtrip_is_conservative() {
+        let mut rng = Rng::new(41);
+        for _ in 0..200 {
+            let mut lanes = Vec::new();
+            let k = 1 + rng.below(BVH4_WIDTH);
+            for lane in 0..k {
+                let lo = Vec3::new(
+                    rng.range_f32(-50.0, 50.0),
+                    rng.range_f32(-50.0, 50.0),
+                    rng.range_f32(-50.0, 50.0),
+                );
+                let ext = Vec3::new(
+                    rng.range_f32(0.0, 30.0),
+                    rng.range_f32(0.0, 30.0),
+                    rng.range_f32(0.0, 30.0),
+                );
+                lanes.push((Aabb::new(lo, lo + ext), lane as u32, 0u32));
+            }
+            let node = Bvh4Node::pack(&lanes);
+            for (lane, (bb, _, _)) in lanes.iter().enumerate() {
+                let got = node.lane_aabb(lane);
+                assert!(
+                    got.lo.x <= bb.lo.x
+                        && got.lo.y <= bb.lo.y
+                        && got.lo.z <= bb.lo.z
+                        && got.hi.x >= bb.hi.x
+                        && got.hi.y >= bb.hi.y
+                        && got.hi.z >= bb.hi.z,
+                    "lane {lane}: dequantized {got:?} does not contain exact {bb:?}"
+                );
+            }
+            for lane in k..BVH4_WIDTH {
+                assert!(!node.lane_used(lane));
+                assert!(node.lane_aabb(lane).is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_helpers_bracket_the_value() {
+        let mut rng = Rng::new(42);
+        for _ in 0..500 {
+            let anchor = rng.range_f32(-1e6, 1e6);
+            let hi = anchor + rng.range_f32(0.0, 1e6);
+            let e = scale_exp_for(anchor, hi);
+            let scale = exp_scale(e);
+            // the frame covers the top corner
+            assert!(anchor + 255.0 * scale >= hi, "e={e} anchor={anchor} hi={hi}");
+            let v = anchor + (hi - anchor) * rng.f32();
+            let qd = quantize_down(v, anchor, e);
+            let qu = quantize_up(v, anchor, e);
+            assert!(anchor + qd as f32 * scale <= v, "down e={e} v={v}");
+            assert!(anchor + qu as f32 * scale >= v, "up e={e} v={v}");
+        }
+    }
+
+    #[test]
+    fn zero_extent_frames_are_valid() {
+        // coincident content: extent 0 on every axis
+        let at = Vec3::new(3.5, -7.25, 1e-3);
+        let node = Bvh4Node::pack(&[(Aabb::new(at, at), 0, 2)]);
+        let bb = node.lane_aabb(0);
+        assert!(bb.lo.x <= at.x && bb.hi.x >= at.x);
+        assert!(bb.lo.y <= at.y && bb.hi.y >= at.y);
+        assert!(bb.lo.z <= at.z && bb.hi.z >= at.z);
+        // a query at the point must pass the integer lane test
+        let qp = node.quantize_query(at);
+        assert_eq!(simd::lane_mask_with(simd::Kernel::Scalar, &node, qp), 1);
     }
 
     #[test]
@@ -454,7 +755,10 @@ mod tests {
 
     #[test]
     fn parallel_refit_equals_serial_node_for_node() {
-        // large enough that leaf levels clear REFIT_PARALLEL_MIN
+        // large enough that leaf levels clear REFIT_PARALLEL_MIN; node
+        // equality is bitwise over the whole quantized layout (anchor,
+        // exponents, offsets), so parallel requantization must execute the
+        // exact serial arithmetic
         let (mut pos, radius) = random_scene(20_000, 12);
         let base = Bvh::build_with_threads(&pos, &radius, BuildKind::BinnedSah, 1);
         let mut rng = Rng::new(13);

@@ -1,0 +1,407 @@
+//! Explicit SIMD kernels for the 4-lane quantized point-in-box test.
+//!
+//! The quantized SoA node ([`Bvh4Node`]) stores each axis's lane bounds as
+//! `[u8; 4]` arrays, so the traversal hot loop's lane test is four
+//! independent integer interval checks — exactly one 128-bit vector op per
+//! compare once the bytes are widened. This module provides that test three
+//! ways:
+//!
+//! * [`lane_mask_scalar`] — the portable reference: plain integer compares,
+//!   auto-vectorized at best;
+//! * `SSE2` (x86_64) and `NEON` (aarch64) kernels via `core::arch`
+//!   intrinsics.
+//!
+//! All kernels compute the *same pure integer function* of
+//! `(node bounds, quantized query point)` — no floating point, no rounding
+//! modes — so their lane masks are **bit-identical by construction**; the
+//! property suite (`tests/property_quantized.rs`) and the unit tests below
+//! assert it lane-for-lane over edge-pattern nodes. The query point is
+//! quantized *once, in scalar code* ([`Bvh4Node::quantize_query`], which
+//! clamps in f32 before the cast precisely so no saturation behavior
+//! difference between scalar `as` and vector conversions can ever be
+//! observed) and shared by every kernel.
+//!
+//! # The test
+//!
+//! A lane passes iff, per axis, `qp + 1 >= qmin && qp - 1 <= qmax` — the ±1
+//! slack absorbs the one unit the float quantization of the query point can
+//! be off by, keeping the test conservative (may widen, never misses; see
+//! `quantize_query`). Empty lanes carry inverted sentinel bounds
+//! (`qmin = 255 > qmax = 0`), which no `qp` in the clamped `[-1, 256]`
+//! range can satisfy on *both* sides of an axis, so they fail with no
+//! special-casing.
+//!
+//! # Selection
+//!
+//! The kernel is picked once per process ([`active_kernel`], cached in an
+//! atomic): runtime feature detection chooses the widest supported kernel,
+//! and the `ORCS_SIMD=scalar` escape hatch (read through the blessed env
+//! site [`crate::parallel::simd_force_scalar`]) forces the fallback — the
+//! CI matrix runs a leg with it set so the scalar path stays exercised.
+//! [`set_kernel`] overrides the cache for benches and differential tests.
+
+use super::{Bvh4Node, BVH4_WIDTH};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// A lane-test kernel. Variants only exist on architectures where the
+/// corresponding intrinsics do, so constructing one is always safe:
+/// `Sse2` requires SSE2, which is baseline for the x86_64 ABI, and `Neon`
+/// is baseline for aarch64.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// Portable integer compares — the reference all kernels must match.
+    Scalar,
+    /// `core::arch::x86_64` 128-bit integer SIMD.
+    #[cfg(target_arch = "x86_64")]
+    Sse2,
+    /// `core::arch::aarch64` Advanced SIMD.
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+/// Cached selection: 0 = undecided, then `encode(kernel)`.
+static KERNEL: AtomicU8 = AtomicU8::new(0);
+
+fn encode(k: Kernel) -> u8 {
+    match k {
+        Kernel::Scalar => 1,
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Sse2 => 2,
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => 3,
+    }
+}
+
+/// Detect the widest kernel supported at runtime, honoring the
+/// `ORCS_SIMD=scalar` escape hatch. Pure detection — does not touch the
+/// cached selection.
+pub fn detect_kernel() -> Kernel {
+    if crate::parallel::simd_force_scalar() {
+        return Kernel::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        // SSE2 is ABI-baseline on x86_64; the check is defense in depth.
+        if is_x86_feature_detected!("sse2") {
+            return Kernel::Sse2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return Kernel::Neon;
+    }
+    #[cfg_attr(target_arch = "aarch64", allow(unreachable_code))]
+    Kernel::Scalar
+}
+
+/// The kernel the traversal hot loop uses: detected on first call, then a
+/// single relaxed atomic load.
+#[inline]
+pub fn active_kernel() -> Kernel {
+    match KERNEL.load(Ordering::Relaxed) {
+        1 => Kernel::Scalar,
+        #[cfg(target_arch = "x86_64")]
+        2 => Kernel::Sse2,
+        #[cfg(target_arch = "aarch64")]
+        3 => Kernel::Neon,
+        _ => {
+            let k = detect_kernel();
+            KERNEL.store(encode(k), Ordering::Relaxed);
+            k
+        }
+    }
+}
+
+/// Override the cached selection (benches and differential tests; results
+/// are bit-identical whichever kernel is active, so this is a perf knob,
+/// never a correctness one).
+pub fn set_kernel(k: Kernel) {
+    KERNEL.store(encode(k), Ordering::Relaxed);
+}
+
+/// Lane mask of `node` for quantized query point `qp` (bit `l` set = lane
+/// `l` passes), using the process-wide active kernel.
+#[inline(always)]
+pub fn lane_mask(node: &Bvh4Node, qp: [i32; 3]) -> u32 {
+    lane_mask_with(active_kernel(), node, qp)
+}
+
+/// [`lane_mask`] with an explicit kernel.
+#[inline(always)]
+pub fn lane_mask_with(kern: Kernel, node: &Bvh4Node, qp: [i32; 3]) -> u32 {
+    match kern {
+        Kernel::Scalar => lane_mask_scalar(node, qp),
+        // SAFETY: the Sse2 variant only exists on x86_64, where SSE2 is
+        // ABI-baseline (and detect_kernel re-verified it at selection).
+        #[cfg(target_arch = "x86_64")]
+        Kernel::Sse2 => unsafe { lane_mask_sse2(node, qp) },
+        // SAFETY: NEON is baseline on aarch64.
+        #[cfg(target_arch = "aarch64")]
+        Kernel::Neon => unsafe { lane_mask_neon(node, qp) },
+    }
+}
+
+/// Portable reference kernel: the pure integer function every SIMD kernel
+/// must reproduce bit-for-bit. `qp` comes from
+/// [`Bvh4Node::quantize_query`], clamped to `[-1, 256]`, so the ±1 slack
+/// arithmetic cannot overflow.
+pub fn lane_mask_scalar(node: &Bvh4Node, qp: [i32; 3]) -> u32 {
+    let [qx, qy, qz] = qp;
+    let mut mask = 0u32;
+    for lane in 0..BVH4_WIDTH {
+        let pass = qx + 1 >= node.qmin_x[lane] as i32
+            && qx - 1 <= node.qmax_x[lane] as i32
+            && qy + 1 >= node.qmin_y[lane] as i32
+            && qy - 1 <= node.qmax_y[lane] as i32
+            && qz + 1 >= node.qmin_z[lane] as i32
+            && qz - 1 <= node.qmax_z[lane] as i32;
+        mask |= (pass as u32) << lane;
+    }
+    mask
+}
+
+/// SSE2 kernel: per axis, widen the four `u8` bounds to `i32x4`, form
+/// `miss = (qmin > qp+1) | (qp-1 > qmax)` with `_mm_cmpgt_epi32`, OR the
+/// three axes, and movemask-invert into the pass mask. Identical integer
+/// arithmetic to [`lane_mask_scalar`], so identical results.
+///
+/// # Safety
+/// Requires SSE2 (ABI-baseline on x86_64; the dispatcher only selects this
+/// after runtime detection). All operations are value-only vector ops —
+/// the only memory read is the safe `[u8; 4]` field copies.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn lane_mask_sse2(node: &Bvh4Node, qp: [i32; 3]) -> u32 {
+    use core::arch::x86_64::{
+        __m128i, _mm_castsi128_ps, _mm_cmpgt_epi32, _mm_cvtsi32_si128, _mm_movemask_ps,
+        _mm_or_si128, _mm_set1_epi32, _mm_setzero_si128, _mm_unpacklo_epi16, _mm_unpacklo_epi8,
+    };
+
+    /// Zero-extend a `[u8; 4]` lane array into `i32x4`.
+    ///
+    /// # Safety
+    /// Value-only vector ops on a 32-bit scalar moved into a register; no
+    /// memory access. Caller provides SSE2 (enforced by the outer kernel's
+    /// target_feature).
+    #[inline(always)]
+    unsafe fn widen(b: [u8; 4]) -> __m128i {
+        // SAFETY: value-only intrinsics, SSE2 guaranteed by the caller.
+        unsafe {
+            let v = _mm_cvtsi32_si128(i32::from_ne_bytes(b));
+            let z = _mm_setzero_si128();
+            _mm_unpacklo_epi16(_mm_unpacklo_epi8(v, z), z)
+        }
+    }
+
+    let [qx, qy, qz] = qp;
+    // SAFETY: value-only SSE2 intrinsics; see the function-level contract.
+    unsafe {
+        let mut miss = _mm_setzero_si128();
+        for (qmin, qmax, q) in [
+            (node.qmin_x, node.qmax_x, qx),
+            (node.qmin_y, node.qmax_y, qy),
+            (node.qmin_z, node.qmax_z, qz),
+        ] {
+            let lo = widen(qmin);
+            let hi = widen(qmax);
+            miss = _mm_or_si128(miss, _mm_cmpgt_epi32(lo, _mm_set1_epi32(q + 1)));
+            miss = _mm_or_si128(miss, _mm_cmpgt_epi32(_mm_set1_epi32(q - 1), hi));
+        }
+        // cmp results are all-ones per missing lane -> sign bits -> bitmask
+        let miss_bits = _mm_movemask_ps(_mm_castsi128_ps(miss)) as u32;
+        !miss_bits & 0xF
+    }
+}
+
+/// NEON kernel: same structure as the SSE2 one — widen `u8x4` to `i32x4`,
+/// OR per-axis `(qmin > qp+1) | (qp-1 > qmax)` misses, invert. Identical
+/// integer arithmetic to [`lane_mask_scalar`], so identical results.
+///
+/// # Safety
+/// Requires NEON, which is baseline on aarch64. Value-only vector ops; the
+/// only memory read is the safe `[u8; 4]` field copies.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn lane_mask_neon(node: &Bvh4Node, qp: [i32; 3]) -> u32 {
+    use core::arch::aarch64::{
+        int32x4_t, vcgtq_s32, vcreate_u8, vdupq_n_s32, vdupq_n_u32, vget_low_u16,
+        vgetq_lane_u32, vmovl_u16, vmovl_u8, vorrq_u32, vreinterpretq_s32_u32,
+    };
+
+    /// Zero-extend a `[u8; 4]` lane array into `i32x4`.
+    ///
+    /// # Safety
+    /// Value-only NEON intrinsics (baseline on aarch64); no memory access.
+    #[inline(always)]
+    unsafe fn widen(b: [u8; 4]) -> int32x4_t {
+        // SAFETY: value-only intrinsics, NEON is aarch64 baseline.
+        unsafe {
+            let v8 = vcreate_u8(u32::from_ne_bytes(b) as u64);
+            vreinterpretq_s32_u32(vmovl_u16(vget_low_u16(vmovl_u8(v8))))
+        }
+    }
+
+    let [qx, qy, qz] = qp;
+    // SAFETY: value-only NEON intrinsics; see the function-level contract.
+    unsafe {
+        let mut miss = vdupq_n_u32(0);
+        for (qmin, qmax, q) in [
+            (node.qmin_x, node.qmax_x, qx),
+            (node.qmin_y, node.qmax_y, qy),
+            (node.qmin_z, node.qmax_z, qz),
+        ] {
+            let lo = widen(qmin);
+            let hi = widen(qmax);
+            miss = vorrq_u32(miss, vcgtq_s32(lo, vdupq_n_s32(q + 1)));
+            miss = vorrq_u32(miss, vcgtq_s32(vdupq_n_s32(q - 1), hi));
+        }
+        let m0 = vgetq_lane_u32::<0>(miss) & 1;
+        let m1 = vgetq_lane_u32::<1>(miss) & 1;
+        let m2 = vgetq_lane_u32::<2>(miss) & 1;
+        let m3 = vgetq_lane_u32::<3>(miss) & 1;
+        !(m0 | (m1 << 1) | (m2 << 2) | (m3 << 3)) & 0xF
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::aabb::Aabb;
+    use crate::core::rng::Rng;
+    use crate::core::vec3::Vec3;
+
+    /// Every kernel available on this architecture (always includes the
+    /// scalar reference).
+    fn all_kernels() -> Vec<Kernel> {
+        let mut ks = vec![Kernel::Scalar];
+        #[cfg(target_arch = "x86_64")]
+        if is_x86_feature_detected!("sse2") {
+            ks.push(Kernel::Sse2);
+        }
+        #[cfg(target_arch = "aarch64")]
+        ks.push(Kernel::Neon);
+        ks
+    }
+
+    fn random_node(rng: &mut Rng) -> Bvh4Node {
+        let mut lanes = Vec::new();
+        let k = 1 + rng.below(BVH4_WIDTH);
+        for lane in 0..k {
+            let lo = Vec3::new(
+                rng.range_f32(-100.0, 100.0),
+                rng.range_f32(-100.0, 100.0),
+                rng.range_f32(-100.0, 100.0),
+            );
+            let ext = Vec3::new(
+                rng.range_f32(0.0, 40.0),
+                rng.range_f32(0.0, 40.0),
+                rng.range_f32(0.0, 40.0),
+            );
+            lanes.push((Aabb::new(lo, lo + ext), lane as u32, 0u32));
+        }
+        Bvh4Node::pack(&lanes)
+    }
+
+    #[test]
+    fn kernels_agree_on_random_nodes_exhaustive_grid() {
+        // every kernel, every lane pattern, the full clamped qp range on
+        // each axis (crossed with two fixed values on the others)
+        let mut rng = Rng::new(97);
+        for case in 0..100 {
+            let node = random_node(&mut rng);
+            for qx in -1..=256 {
+                for &(qy, qz) in &[(0, 128), (-1, 256), (255, 1)] {
+                    let qp = [qx, qy, qz];
+                    let want = lane_mask_scalar(&node, qp);
+                    for &k in &all_kernels() {
+                        assert_eq!(
+                            lane_mask_with(k, &node, qp),
+                            want,
+                            "case={case} kernel={k:?} qp={qp:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_lanes_never_pass() {
+        // the EMPTY node (all lanes sentinel) fails for every qp, under
+        // every kernel — including the clamp endpoints
+        let node = Bvh4Node::EMPTY;
+        for qx in -1..=256 {
+            for qy in [-1, 0, 1, 128, 255, 256] {
+                for qz in [-1, 0, 1, 128, 255, 256] {
+                    for &k in &all_kernels() {
+                        assert_eq!(lane_mask_with(k, &node, [qx, qy, qz]), 0, "kernel={k:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn infinite_positions_clamp_into_valid_masks() {
+        // ±inf query coordinates clamp to the qp endpoints (quantize_query);
+        // all kernels must agree there too (the NaN-free guarantee is the
+        // caller's: the watchdog rejects non-finite states)
+        let mut rng = Rng::new(98);
+        for _ in 0..50 {
+            let node = random_node(&mut rng);
+            for p in [
+                Vec3::splat(f32::INFINITY),
+                Vec3::splat(f32::NEG_INFINITY),
+                Vec3::new(f32::INFINITY, 0.0, f32::NEG_INFINITY),
+            ] {
+                let qp = node.quantize_query(p);
+                for a in qp {
+                    assert!((-1..=256).contains(&a), "qp axis out of clamp range");
+                }
+                let want = lane_mask_scalar(&node, qp);
+                for &k in &all_kernels() {
+                    assert_eq!(lane_mask_with(k, &node, qp), want, "kernel={k:?} p={p:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn points_inside_lane_boxes_always_pass() {
+        // conservative contract at the kernel level: a point inside a
+        // dequantized lane box passes that lane under every kernel
+        let mut rng = Rng::new(99);
+        for _ in 0..200 {
+            let node = random_node(&mut rng);
+            for lane in 0..BVH4_WIDTH {
+                if !node.lane_used(lane) {
+                    continue;
+                }
+                let bb = node.lane_aabb(lane);
+                let p = Vec3::new(
+                    bb.lo.x + (bb.hi.x - bb.lo.x) * rng.f32(),
+                    bb.lo.y + (bb.hi.y - bb.lo.y) * rng.f32(),
+                    bb.lo.z + (bb.hi.z - bb.lo.z) * rng.f32(),
+                );
+                let qp = node.quantize_query(p);
+                for &k in &all_kernels() {
+                    assert_eq!(
+                        lane_mask_with(k, &node, qp) >> lane & 1,
+                        1,
+                        "kernel={k:?} lane={lane} p={p:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn detection_is_cached_and_overridable() {
+        let first = active_kernel();
+        assert_eq!(active_kernel(), first);
+        set_kernel(Kernel::Scalar);
+        assert_eq!(active_kernel(), Kernel::Scalar);
+        set_kernel(first);
+        assert_eq!(active_kernel(), first);
+    }
+}

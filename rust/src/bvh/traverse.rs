@@ -9,17 +9,26 @@
 //!
 //! # The 4-wide hot loop and counter semantics
 //!
-//! Nodes are 4-wide SoA ([`crate::bvh::Bvh4Node`]): one traversal step
-//! loads a single 128-byte node and tests the query point against **all
-//! four child boxes** with branch-free per-axis array compares — the wide
-//! sweep RT silicon performs per node fetch. Counters mirror that:
+//! Nodes are 4-wide SoA with 8-bit quantized child boxes
+//! ([`crate::bvh::Bvh4Node`]): one traversal step loads a single node —
+//! under 64 bytes, one cache line, versus 128 B for the uncompressed f32
+//! layout — quantizes the query point into the node's integer frame once
+//! ([`crate::bvh::Bvh4Node::quantize_query`]) and tests **all four child
+//! boxes** with pure integer compares, no dequantization
+//! ([`crate::bvh::simd::lane_mask`], explicit SSE2/NEON kernels with a
+//! bit-identical scalar fallback). Quantized bounds are conservative, so a
+//! lane test can pass where the exact box would have culled (never the
+//! reverse); the exact sphere test at the leaves keeps hit sets bitwise
+//! identical to an uncompressed tree. Counters mirror the wide sweep:
 //!
 //! * `aabb_tests` — **one unit per 4-wide node test**, *not* per child box.
 //!   The [`crate::rtcore::timing`] model multiplies by
 //!   [`crate::bvh::BVH4_WIDTH`] to price the box units and charges one
-//!   (wider) node fetch per unit, so simulated GPU time stays calibrated
-//!   against the seed's binary-BVH traversal (see
-//!   `timing::BOX_TESTS_PER_AABB_UNIT`).
+//!   (quantized-size) node fetch per unit, so simulated GPU time stays
+//!   calibrated against the seed's binary-BVH traversal (see
+//!   `timing::BOX_TESTS_PER_AABB_UNIT`). Quantized trees may visit *more*
+//!   nodes than exact trees (conservative widening); the counter charges
+//!   every one of them honestly.
 //! * `sphere_tests` — intersection-shader invocations (unchanged).
 //! * `hits`, `rays` — unchanged.
 //!
@@ -172,6 +181,9 @@ impl Bvh {
         let mut sp = 0usize;
         debug_assert!(spill.is_empty());
 
+        // resolve the lane kernel once per ray, not per node (the selection
+        // is an atomic load; see `bvh::simd`)
+        let kern = super::simd::active_kernel();
         let mut current = 0u32;
         loop {
             // SAFETY: `current` is always a node slot produced by the
@@ -183,18 +195,16 @@ impl Bvh {
             stats.aabb_tests += 1; // one 4-wide SoA node test
             let mut pending = [0u32; BVH4_WIDTH];
             let mut n_pending = 0usize;
-            for lane in 0..BVH4_WIDTH {
-                // empty lanes carry +inf/-inf bounds and fail automatically;
-                // all-mins-then-all-maxs mirrors the SIMD compare grouping
-                let inside = p.x >= node.min_x[lane]
-                    && p.y >= node.min_y[lane]
-                    && p.z >= node.min_z[lane]
-                    && p.x <= node.max_x[lane]
-                    && p.y <= node.max_y[lane]
-                    && p.z <= node.max_z[lane];
-                if !inside {
-                    continue;
-                }
+            // quantize the query point into this node's integer frame once,
+            // then test all four lanes with pure integer compares (empty
+            // lanes carry inverted sentinel bounds and fail automatically;
+            // every kernel returns bit-identical masks, so the hit set is
+            // independent of the selected kernel)
+            let qp = node.quantize_query(p);
+            let mut mask = super::simd::lane_mask_with(kern, node, qp);
+            while mask != 0 {
+                let lane = mask.trailing_zeros() as usize;
+                mask &= mask - 1;
                 let cnt = node.count[lane];
                 if cnt > 0 {
                     let first = node.child[lane] as usize;

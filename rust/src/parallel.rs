@@ -21,6 +21,17 @@ pub fn num_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// `ORCS_SIMD=scalar` escape hatch for the BVH lane kernels
+/// ([`crate::bvh::simd`]): force the portable scalar kernel even where
+/// SSE2/NEON is available (the CI matrix runs a leg with it set so the
+/// fallback stays exercised). Lives here with [`num_threads`] — this module
+/// is the one blessed site for runtime-tuning env reads, so determinism
+/// lint scope stays a single file. Results are bit-identical whichever
+/// kernel runs; this knob only changes *how* the lane test is computed.
+pub fn simd_force_scalar() -> bool {
+    matches!(std::env::var("ORCS_SIMD").as_deref(), Ok("scalar"))
+}
+
 /// Run `body(thread_id, start..end)` over `0..n` split into `threads`
 /// contiguous chunks. Blocks until all workers finish.
 pub fn parallel_for_chunks<F>(n: usize, threads: usize, body: F)

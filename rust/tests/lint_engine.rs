@@ -83,6 +83,14 @@ fn fixture_u_safety() {
     check_fixture("u_safety", "U-SAFETY", 3);
 }
 
+/// U-SAFETY also fires on undocumented `core::arch` SIMD intrinsic call
+/// sites (the unsafe surface the quantized-BVH lane kernels added) — the
+/// attribute line above the fn does not count as a SAFETY comment.
+#[test]
+fn fixture_u_safety_simd() {
+    check_fixture("u_safety_simd", "U-SAFETY", 4);
+}
+
 #[test]
 fn fixture_l_allow() {
     check_fixture("l_allow", "L-ALLOW", 3);

@@ -1,0 +1,5 @@
+// Fixture: seeded U-SAFETY violation — undocumented `core::arch` intrinsic call.
+#[cfg(target_arch = "x86_64")]
+pub fn spin_hint() {
+    unsafe { core::arch::x86_64::_mm_pause() }
+}

@@ -1,0 +1,7 @@
+// Fixture: clean twin — the intrinsic call carries its SAFETY contract.
+#[cfg(target_arch = "x86_64")]
+pub fn spin_hint() {
+    // SAFETY: `_mm_pause` is a scheduling hint with no memory effects, and
+    // it exists on every x86_64 (SSE2 is the ABI baseline).
+    unsafe { core::arch::x86_64::_mm_pause() }
+}

@@ -1,0 +1,506 @@
+//! Quantized-BVH property battery (PR 10): the conservative-rounding
+//! contract and the bitwise-transparency chain it protects.
+//!
+//! * **Containment (never-miss)**: every dequantized lane box contains the
+//!   *exact* content box of what the lane bounds — leaf sphere unions and,
+//!   transitively, whole subtrees — with strict f32 compares, no epsilon.
+//! * **Bitwise identity**: neighbor lists equal the brute oracle (and each
+//!   other) across `BuildKind` × threads {1, 8}, and engine trajectories
+//!   are bitwise identical single-domain vs sharded (S {1, 2}) under both
+//!   boundary modes — quantization widens traversal but the exact sphere
+//!   filter at the leaves keeps every downstream f32 sequence unchanged.
+//! * **Degenerate anchors**: coincident particles (zero-extent frames),
+//!   coordinates near f32 extremes, scale-underflow extents, and
+//!   refit-degraded trees.
+//! * **Kernel equivalence**: SIMD lane kernels ≡ the scalar reference,
+//!   lane-for-lane, over edge-pattern lanes and the full clamped query
+//!   grid (±inf inputs clamp; positions are NaN-free by the watchdog
+//!   contract).
+
+use std::sync::Arc;
+
+use orcs::bvh::simd::{self, Kernel};
+use orcs::bvh::traverse::QueryScratch;
+use orcs::bvh::{BuildKind, Bvh, Bvh4Node, BVH4_WIDTH};
+use orcs::coordinator::{Engine, EngineConfig};
+use orcs::core::aabb::Aabb;
+use orcs::core::config::{Boundary, ParticleDist, RadiusDist, ShardSpec, SimConfig};
+use orcs::core::rng::Rng;
+use orcs::core::vec3::Vec3;
+use orcs::frnn::{ApproachKind, RustKernels};
+use orcs::shard::{ShardedConfig, ShardedEngine};
+use orcs::testutil::prop_check;
+
+fn brute(p: Vec3, exclude: usize, pos: &[Vec3], radius: &[f32]) -> Vec<usize> {
+    (0..pos.len())
+        .filter(|&j| j != exclude && (p - pos[j]).norm2() < radius[j] * radius[j])
+        .collect()
+}
+
+fn build_kind(rng: &mut Rng) -> BuildKind {
+    match rng.below(3) {
+        0 => BuildKind::Median,
+        1 => BuildKind::BinnedSah,
+        _ => BuildKind::Lbvh,
+    }
+}
+
+/// Strict (no-epsilon) box containment; empty inner boxes are contained in
+/// anything.
+fn contains(outer: &Aabb, inner: &Aabb) -> bool {
+    inner.is_empty()
+        || (outer.lo.x <= inner.lo.x
+            && outer.lo.y <= inner.lo.y
+            && outer.lo.z <= inner.lo.z
+            && outer.hi.x >= inner.hi.x
+            && outer.hi.y >= inner.hi.y
+            && outer.hi.z >= inner.hi.z)
+}
+
+/// Assert every dequantized lane box contains the **exact** box of its
+/// content, computed bottom-up from the primitive spheres only (tighter
+/// than the dequantized child unions the builder quantized against — this
+/// checks the transitive conservative contract end to end).
+fn assert_quantized_contains_exact(bvh: &Bvh, pos: &[Vec3], radius: &[f32]) -> Result<(), String> {
+    let mut exact = vec![Aabb::EMPTY; bvh.nodes.len()];
+    for slot in (0..bvh.nodes.len()).rev() {
+        let n = &bvh.nodes[slot];
+        let mut node_box = Aabb::EMPTY;
+        for lane in 0..BVH4_WIDTH {
+            if !n.lane_used(lane) {
+                continue;
+            }
+            let lane_exact = if n.lane_is_leaf(lane) {
+                let first = n.child[lane] as usize;
+                let mut bb = Aabb::EMPTY;
+                for k in first..first + n.count[lane] as usize {
+                    let p = bvh.prim_order[k] as usize;
+                    bb.grow(&Aabb::of_sphere(pos[p], radius[p]));
+                }
+                bb
+            } else {
+                exact[n.child[lane] as usize]
+            };
+            if !contains(&n.lane_aabb(lane), &lane_exact) {
+                return Err(format!(
+                    "node {slot} lane {lane}: dequantized {:?} does not contain exact {:?}",
+                    n.lane_aabb(lane),
+                    lane_exact
+                ));
+            }
+            node_box.grow(&lane_exact);
+        }
+        exact[slot] = node_box;
+    }
+    Ok(())
+}
+
+fn random_scene(rng: &mut Rng, n: usize, span: f32) -> (Vec<Vec3>, Vec<f32>) {
+    let pos = (0..n)
+        .map(|_| {
+            Vec3::new(
+                rng.range_f32(0.0, span),
+                rng.range_f32(0.0, span),
+                rng.range_f32(0.0, span),
+            )
+        })
+        .collect();
+    let radius = (0..n).map(|_| rng.range_f32(0.01 * span, 0.08 * span)).collect();
+    (pos, radius)
+}
+
+#[test]
+fn prop_quantized_lanes_contain_exact_boxes() {
+    prop_check("quantized-containment", 25, |rng| {
+        let n = 50 + rng.below(800);
+        let (mut pos, radius) = random_scene(rng, n, 100.0);
+        let kind = build_kind(rng);
+        let mut bvh = Bvh::build(&pos, &radius, kind);
+        assert_quantized_contains_exact(&bvh, &pos, &radius)?;
+        bvh.check_invariants(&pos, &radius).map_err(|e| e.to_string())?;
+        // containment must survive refits (whole-node requantization)
+        for _ in 0..3 {
+            for p in pos.iter_mut() {
+                *p += Vec3::new(
+                    rng.range_f32(-2.0, 2.0),
+                    rng.range_f32(-2.0, 2.0),
+                    rng.range_f32(-2.0, 2.0),
+                );
+            }
+            bvh.refit(&pos, &radius);
+            assert_quantized_contains_exact(&bvh, &pos, &radius)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_neighbor_lists_identical_across_buildkind_and_threads() {
+    // the never-miss contract, end to end: quantized traversal produces
+    // the brute oracle's neighbor lists exactly, for every build kind and
+    // thread count (quantization may widen which NODES are visited, never
+    // which NEIGHBORS are reported)
+    prop_check("quantized-lists-oracle", 12, |rng| {
+        let n = 100 + rng.below(500);
+        let (pos, radius) = random_scene(rng, n, 80.0);
+        let want: Vec<Vec<usize>> =
+            (0..n).map(|i| brute(pos[i], i, &pos, &radius)).collect();
+        for kind in [BuildKind::Median, BuildKind::BinnedSah, BuildKind::Lbvh] {
+            for threads in [1, 8] {
+                let bvh = Bvh::build_with_threads(&pos, &radius, kind, threads);
+                let mut scratch = QueryScratch::new();
+                for i in 0..n {
+                    let mut got =
+                        bvh.query_point_collect(pos[i], i, &pos, &radius, &mut scratch);
+                    got.sort_unstable();
+                    if got != want[i] {
+                        return Err(format!(
+                            "{kind:?} threads={threads} i={i}: {got:?} != {:?}",
+                            want[i]
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+fn assert_bits_equal(got: &[Vec3], want: &[Vec3], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: length");
+    for i in 0..want.len() {
+        // bitwise, not PartialEq: a -0.0 vs +0.0 discrepancy must fail too
+        let (a, b) = (got[i], want[i]);
+        assert_eq!(
+            (a.x.to_bits(), a.y.to_bits(), a.z.to_bits()),
+            (b.x.to_bits(), b.y.to_bits(), b.z.to_bits()),
+            "{ctx}: particle {i} diverged: {a:?} vs {b:?}"
+        );
+    }
+}
+
+/// Final (pos, vel, force) of the single-domain engine on `backend`.
+fn single_backend(
+    cfg: &SimConfig,
+    backend: ApproachKind,
+    threads: usize,
+    steps: usize,
+) -> (Vec<Vec3>, Vec<Vec3>, Vec<Vec3>) {
+    let ec = EngineConfig {
+        policy: "fixed-3".into(),
+        threads,
+        check_oom: false,
+        ..EngineConfig::new(cfg.clone(), backend)
+    };
+    let mut e = Engine::new(ec, Arc::new(RustKernels { threads })).unwrap();
+    e.run(steps, false).unwrap();
+    (e.state.pos, e.state.vel, e.state.force)
+}
+
+fn sharded_backend(
+    cfg: &SimConfig,
+    backend: ApproachKind,
+    s: usize,
+    threads: usize,
+    steps: usize,
+) -> ShardedEngine {
+    let sc = ShardedConfig {
+        policy: "fixed-3".into(),
+        threads,
+        check_oom: false,
+        backend,
+        ..ShardedConfig::new(cfg.clone(), ShardSpec::new(s))
+    };
+    let mut e = ShardedEngine::new(sc, Arc::new(RustKernels { threads })).unwrap();
+    e.run(steps, false).unwrap();
+    e
+}
+
+#[test]
+fn engine_trajectories_bitwise_identical_across_shards_threads_boundaries() {
+    // the re-pinned differential battery: quantized per-shard BVHs must
+    // leave the sharded ≡ single-domain transparency chain bitwise intact
+    // for S {1, 2} × threads {1, 8} × both boundary modes
+    for boundary in [Boundary::Periodic, Boundary::Wall] {
+        let cfg = SimConfig {
+            n: 600,
+            box_l: 100.0,
+            particle_dist: ParticleDist::Disordered,
+            radius_dist: RadiusDist::Uniform(2.0, 8.0),
+            boundary,
+            seed: 77,
+            ..SimConfig::default()
+        };
+        let (pos1, vel1, force1) = single_backend(&cfg, ApproachKind::RtRef, 1, 5);
+        for threads in [1, 8] {
+            let (p, v, f) = single_backend(&cfg, ApproachKind::RtRef, threads, 5);
+            assert_bits_equal(&p, &pos1, &format!("single {boundary:?} t={threads} pos"));
+            assert_bits_equal(&v, &vel1, &format!("single {boundary:?} t={threads} vel"));
+            assert_bits_equal(&f, &force1, &format!("single {boundary:?} t={threads} force"));
+            for s in [1, 2] {
+                let e = sharded_backend(&cfg, ApproachKind::RtRef, s, threads, 5);
+                let ctx = format!("S={s} {boundary:?} t={threads}");
+                assert_bits_equal(&e.state.pos, &pos1, &format!("{ctx} pos"));
+                assert_bits_equal(&e.state.vel, &vel1, &format!("{ctx} vel"));
+                assert_bits_equal(&e.state.force, &force1, &format!("{ctx} force"));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_degenerate_anchors() {
+    // (c) of the battery: zero-extent frames, f32-extreme coordinates,
+    // scale-underflow extents — queries must still match the oracle and
+    // invariants must hold exactly
+    prop_check("quantized-degenerate-anchors", 15, |rng| {
+        // coincident particles: every node frame has zero extent
+        let n = 1 + rng.below(40);
+        let at = Vec3::new(
+            rng.range_f32(-50.0, 50.0),
+            rng.range_f32(-50.0, 50.0),
+            rng.range_f32(-50.0, 50.0),
+        );
+        let pos = vec![at; n];
+        let radius: Vec<f32> = (0..n).map(|_| rng.range_f32(0.1, 5.0)).collect();
+        let kind = build_kind(rng);
+        let bvh = Bvh::build(&pos, &radius, kind);
+        bvh.check_invariants(&pos, &radius).map_err(|e| e.to_string())?;
+        assert_quantized_contains_exact(&bvh, &pos, &radius)?;
+        let mut scratch = QueryScratch::new();
+        for i in 0..n {
+            let mut got = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut scratch);
+            got.sort_unstable();
+            if got != brute(pos[i], i, &pos, &radius) {
+                return Err(format!("{kind:?} coincident mismatch at {i}"));
+            }
+        }
+
+        // f32-extreme coordinates: anchors near ±1e37 with (relatively)
+        // tiny boxes — catastrophic cancellation territory for the frame
+        // arithmetic; conservative rounding must absorb it
+        let n = 20 + rng.below(80);
+        let huge = 1e37;
+        let pos: Vec<Vec3> = (0..n)
+            .map(|_| {
+                Vec3::new(
+                    rng.range_f32(-huge, huge),
+                    rng.range_f32(-huge, huge),
+                    rng.range_f32(-huge, huge),
+                )
+            })
+            .collect();
+        let radius: Vec<f32> = (0..n).map(|_| rng.range_f32(1e30, 1e33)).collect();
+        let kind = build_kind(rng);
+        let bvh = Bvh::build(&pos, &radius, kind);
+        bvh.check_invariants(&pos, &radius).map_err(|e| e.to_string())?;
+        assert_quantized_contains_exact(&bvh, &pos, &radius)?;
+        for i in 0..n {
+            let mut got = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut scratch);
+            got.sort_unstable();
+            if got != brute(pos[i], i, &pos, &radius) {
+                return Err(format!("{kind:?} extreme-coords mismatch at {i}"));
+            }
+        }
+
+        // scale underflow: extents so small the per-axis scale clamps at
+        // the minimum normal exponent — frames stay valid and conservative
+        let n = 10 + rng.below(30);
+        let base = Vec3::new(
+            rng.range_f32(-1.0, 1.0),
+            rng.range_f32(-1.0, 1.0),
+            rng.range_f32(-1.0, 1.0),
+        );
+        let pos: Vec<Vec3> = (0..n)
+            .map(|_| {
+                base + Vec3::new(
+                    rng.range_f32(0.0, 1e-40),
+                    rng.range_f32(0.0, 1e-40),
+                    rng.range_f32(0.0, 1e-40),
+                )
+            })
+            .collect();
+        let radius: Vec<f32> = (0..n).map(|_| rng.range_f32(1e-42, 1e-38)).collect();
+        let kind = build_kind(rng);
+        let bvh = Bvh::build(&pos, &radius, kind);
+        bvh.check_invariants(&pos, &radius).map_err(|e| e.to_string())?;
+        assert_quantized_contains_exact(&bvh, &pos, &radius)?;
+        for i in 0..n {
+            let mut got = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut scratch);
+            got.sort_unstable();
+            if got != brute(pos[i], i, &pos, &radius) {
+                return Err(format!("{kind:?} underflow-extent mismatch at {i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_refit_degraded_trees_stay_conservative() {
+    // refit-degraded trees (the regime the gradient optimizer lives in)
+    // requantize every node each sweep; containment and oracle equality
+    // must survive arbitrarily long refit chains
+    prop_check("quantized-refit-degraded", 8, |rng| {
+        let n = 150 + rng.below(400);
+        let (mut pos, radius) = random_scene(rng, n, 60.0);
+        let kind = build_kind(rng);
+        let mut bvh = Bvh::build(&pos, &radius, kind);
+        for round in 0..8 {
+            for p in pos.iter_mut() {
+                *p += Vec3::new(
+                    rng.range_f32(-3.0, 3.0),
+                    rng.range_f32(-3.0, 3.0),
+                    rng.range_f32(-3.0, 3.0),
+                );
+            }
+            bvh.refit(&pos, &radius);
+            bvh.check_invariants(&pos, &radius).map_err(|e| e.to_string())?;
+            assert_quantized_contains_exact(&bvh, &pos, &radius)?;
+            let mut scratch = QueryScratch::new();
+            for i in (0..n).step_by(7) {
+                let mut got = bvh.query_point_collect(pos[i], i, &pos, &radius, &mut scratch);
+                got.sort_unstable();
+                if got != brute(pos[i], i, &pos, &radius) {
+                    return Err(format!("{kind:?} round={round} mismatch at {i}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_parallel_refit_requantizes_bit_identically() {
+    // serial ≡ parallel node-for-node over the whole quantized layout
+    // (anchor, scale exponents, offsets) — the assertion the level-parallel
+    // refit's determinism contract rests on, re-pinned post-quantization
+    prop_check("quantized-refit-parallel", 5, |rng| {
+        let n = 6000 + rng.below(4000);
+        let (mut pos, radius) = random_scene(rng, n, 120.0);
+        let kind = build_kind(rng);
+        let base = Bvh::build_with_threads(&pos, &radius, kind, 1);
+        let mut serial = base.clone();
+        let mut par = base;
+        for _ in 0..2 {
+            for p in pos.iter_mut() {
+                *p += Vec3::new(
+                    rng.range_f32(-2.0, 2.0),
+                    rng.range_f32(-2.0, 2.0),
+                    rng.range_f32(-2.0, 2.0),
+                );
+            }
+            serial.refit_with_threads(&pos, &radius, 1);
+            par.refit_with_threads(&pos, &radius, 8);
+            if serial.nodes != par.nodes {
+                return Err(format!("{kind:?}: parallel refit diverged from serial"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Every kernel available on this architecture (scalar always included).
+fn all_kernels() -> Vec<Kernel> {
+    let mut ks = vec![Kernel::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    ks.push(Kernel::Sse2);
+    #[cfg(target_arch = "aarch64")]
+    ks.push(Kernel::Neon);
+    ks
+}
+
+fn random_packed_node(rng: &mut Rng) -> Bvh4Node {
+    // 0..=4 used lanes (0 = the EMPTY edge pattern), mixed extents
+    let k = rng.below(BVH4_WIDTH + 1);
+    let mut lanes = Vec::new();
+    for lane in 0..k {
+        let lo = Vec3::new(
+            rng.range_f32(-200.0, 200.0),
+            rng.range_f32(-200.0, 200.0),
+            rng.range_f32(-200.0, 200.0),
+        );
+        let ext = Vec3::new(
+            rng.range_f32(0.0, 100.0),
+            rng.range_f32(0.0, 100.0),
+            rng.range_f32(0.0, 100.0),
+        );
+        lanes.push((Aabb::new(lo, lo + ext), lane as u32, 0u32));
+    }
+    Bvh4Node::pack(&lanes)
+}
+
+#[test]
+fn prop_simd_kernels_equal_scalar_exhaustively() {
+    // (d) of the battery: every kernel ≡ the scalar reference over random
+    // edge-pattern nodes (including empty lanes / the all-empty node) and
+    // the full clamped query range on one axis crossed with the endpoints
+    // on the others
+    prop_check("simd-equals-scalar", 40, |rng| {
+        let node = random_packed_node(rng);
+        let kernels = all_kernels();
+        for qx in -1..=256 {
+            for &(qy, qz) in &[(-1, 256), (0, 255), (128, 1), (256, -1)] {
+                let qp = [qx, qy, qz];
+                let want = simd::lane_mask_scalar(&node, qp);
+                for &k in &kernels {
+                    let got = simd::lane_mask_with(k, &node, qp);
+                    if got != want {
+                        return Err(format!("{k:?} qp={qp:?}: {got:#06b} != {want:#06b}"));
+                    }
+                }
+            }
+        }
+        // ±inf positions (empty-lane / out-of-frame patterns) clamp into
+        // the valid range; kernels must agree there too (NaN is excluded
+        // by the watchdog's finite-state guarantee)
+        for p in [
+            Vec3::splat(f32::INFINITY),
+            Vec3::splat(f32::NEG_INFINITY),
+            Vec3::new(f32::INFINITY, -1e38, f32::NEG_INFINITY),
+        ] {
+            let qp = node.quantize_query(p);
+            for a in qp {
+                if !(-1..=256).contains(&a) {
+                    return Err(format!("qp {qp:?} escaped the clamp range"));
+                }
+            }
+            let want = simd::lane_mask_scalar(&node, qp);
+            for &k in &kernels {
+                if simd::lane_mask_with(k, &node, qp) != want {
+                    return Err(format!("{k:?} diverged on p={p:?}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn kernel_selection_does_not_change_query_results() {
+    // flipping the process-wide kernel (the ORCS_SIMD escape hatch / bench
+    // knob) must not change hit sets or traversal stats — lane masks are
+    // bit-identical, so the traversal is too
+    let mut rng = Rng::new(2024);
+    let (pos, radius) = random_scene(&mut rng, 800, 90.0);
+    let bvh = Bvh::build(&pos, &radius, BuildKind::BinnedSah);
+    let before = simd::active_kernel();
+    let mut reference: Vec<Vec<usize>> = Vec::new();
+    let mut ref_stats = None;
+    for k in all_kernels() {
+        simd::set_kernel(k);
+        let mut scratch = QueryScratch::new();
+        let lists: Vec<Vec<usize>> = (0..pos.len())
+            .map(|i| bvh.query_point_collect(pos[i], i, &pos, &radius, &mut scratch))
+            .collect();
+        let stats = scratch.take_stats();
+        if reference.is_empty() {
+            reference = lists;
+            ref_stats = Some(stats);
+        } else {
+            assert_eq!(lists, reference, "kernel {k:?} changed hit sets");
+            assert_eq!(Some(stats), ref_stats, "kernel {k:?} changed traversal stats");
+        }
+    }
+    simd::set_kernel(before);
+}
